@@ -1,0 +1,34 @@
+"""Paper Table 2: graph algorithms (PR, WCC, CDLP, LCC, BFS) on a
+Graph500-style RMAT graph."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, graph500_lake, make_engine, timed
+from repro.core.algorithms import bfs, cdlp, lcc, pagerank, wcc
+
+
+def run(scale: int = 12) -> None:
+    store, schema = graph500_lake("graph500", scale)
+    eng = make_engine(store, schema)
+    eng.startup()
+    n = eng.topology.n_vertices("Node")
+    n_edges = eng.topology.n_edges("Edge")
+
+    _, t = timed(pagerank, eng, "Edge", max_iters=20, repeats=2)
+    emit("table2_pagerank_us", t * 1e6, f"n={n};m={n_edges};iters=20")
+
+    _, t = timed(wcc, eng, "Edge", repeats=2)
+    emit("table2_wcc_us", t * 1e6, "")
+
+    _, t = timed(cdlp, eng, "Edge", iterations=10)
+    emit("table2_cdlp_us", t * 1e6, "iters=10")
+
+    _, t = timed(lcc, eng, "Edge")
+    emit("table2_lcc_us", t * 1e6, "")
+
+    src, _ = eng.concat_edges("Edge")
+    _, t = timed(bfs, eng, "Edge", int(src[0]), repeats=2)
+    emit("table2_bfs_us", t * 1e6, "")
+    eng.close()

@@ -1,0 +1,39 @@
+"""Paper Fig. 16: graph-aware cache units (decoded value arrays) vs naive
+column chunks (re-decode per access) across vertex-access selectivities."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, ldbc_lake, make_engine, timed
+from repro.core.types import VSet
+
+
+def run(sf: float = 0.02) -> None:
+    store, schema = ldbc_lake("fig16", sf)
+
+    for mode, naive in (("graph_aware", False), ("naive", True)):
+        eng = make_engine(store, schema, naive=naive)
+        eng.startup()
+        n = eng.topology.n_vertices("Comment")
+        rng = np.random.default_rng(1)
+        for sel in (0.001, 0.01, 0.1):
+            ids = rng.choice(eng.topology.n_real_vertices("Comment"),
+                             size=max(1, int(n * sel)), replace=False)
+            vset = VSet.from_dense_ids("Comment", n, ids)
+
+            def q():
+                out, _ = eng.vertex_map(
+                    vset, columns=["length"],
+                    filter_fn=lambda fr: fr["length"] > 1000,
+                )
+                return out
+
+            q()  # admit cache units
+            _, t = timed(q, repeats=3)
+            decode_ops = sum(
+                getattr(u, "decode_ops", 0)
+                for u in eng.cache._units.values())
+            emit(f"fig16_{mode}_sel{sel}_us", t * 1e6,
+                 f"decode_ops={decode_ops}")
+        eng.close()

@@ -1,0 +1,46 @@
+"""Paper Fig. 15: edge-centric EdgeScan (edge lists) vs vertex-centric
+EdgeMap (CSR) across input-set selectivities.  Reproduces the paper's
+crossover: CSR wins at low selectivity (prunes whole adjacency ranges),
+edge lists win at high selectivity (sequential scan locality)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, graph500_lake, make_engine, timed
+from repro.core.baselines import CSRTopology, csr_edge_map, edge_list_edge_map
+
+
+def run(scale: int = 14) -> None:
+    store, schema = graph500_lake("fig15", scale)
+    eng = make_engine(store, schema)
+    eng.startup()
+    src, dst = eng.concat_edges("Edge")
+    n = eng.topology.n_vertices("Node")
+
+    csr = CSRTopology(src, dst, n)
+    el_build = eng.topology.timings.get(      # second connections load instead
+        "edge_list_build_s", eng.topology.timings.get("load_topology_s", 0.0))
+    emit("fig15_csr_build_us", csr.build_seconds * 1e6,
+         f"edge_list_build_or_load={el_build*1e6:.0f}us")
+
+    rng = np.random.default_rng(0)
+    crossover = None
+    prev = None
+    for sel in (0.0001, 0.001, 0.01, 0.1, 0.5, 1.0):
+        k = max(1, int(n * sel))
+        active = rng.choice(n, size=k, replace=False)
+        mask = np.zeros(n, dtype=bool)
+        mask[active] = True
+
+        _, t_csr = timed(csr_edge_map, csr, active, repeats=3)
+        _, t_el = timed(edge_list_edge_map, src, dst, mask, repeats=3)
+        emit(f"fig15_sel{sel}_csr_us", t_csr * 1e6, "")
+        emit(f"fig15_sel{sel}_edgelist_us", t_el * 1e6,
+             f"speedup_vs_csr={t_csr / t_el:.2f}x")
+        if prev is not None and prev < 1.0 <= t_csr / t_el and crossover is None:
+            crossover = sel
+        prev = t_csr / t_el
+    if crossover:
+        emit("fig15_crossover_selectivity", crossover * 1e6, f"~{crossover}")
+    eng.close()

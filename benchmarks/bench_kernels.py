@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks: jnp reference path wall-time on CPU (the Pallas
+TPU kernels are validated in interpret mode by tests; wall-clock here
+measures the dispatchable reference path the CPU backend runs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops, ref
+
+
+def _bench_jit(fn, *args, repeats=5):
+    jitted = jax.jit(fn)
+    jitted(*args)[0].block_until_ready() if isinstance(jitted(*args), tuple) \
+        else jitted(*args).block_until_ready()
+    _, t = timed(lambda: jax.block_until_ready(jitted(*args)), repeats=repeats)
+    return t
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    e, n, d = 200_000, 20_000, 64
+    values = jnp.asarray(rng.standard_normal((e, d)), jnp.float32)
+    dstv = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    t = _bench_jit(lambda v, s: ops.edge_segment_sum(v, s, n), values, dstv)
+    emit("kernel_edge_segment_sum_us", t * 1e6,
+         f"E={e};D={d};GB/s={(e*d*4*2)/t/1e9:.1f}")
+
+    v, b, l, dd = 100_000, 4096, 8, 32
+    table = jnp.asarray(rng.standard_normal((v, dd)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, v, (b, l)), jnp.int32)
+    w = jnp.asarray(rng.random((b, l)), jnp.float32)
+    t = _bench_jit(lambda tb, i, ww: ops.embedding_bag(tb, i, ww), table, idx, w)
+    emit("kernel_embedding_bag_us", t * 1e6, f"B={b};L={l};D={dd}")
+
+    bq, h, s, dh = 2, 8, 1024, 64
+    q = jnp.asarray(rng.standard_normal((bq, h, s, dh)), jnp.bfloat16)
+    t = _bench_jit(lambda a, b2, c: ref.attention_blockwise(a, b2, c), q, q, q)
+    flops = 4 * bq * h * s * s * dh
+    emit("kernel_flash_attention_us", t * 1e6,
+         f"S={s};GFLOP/s={flops/t/1e9:.1f}")

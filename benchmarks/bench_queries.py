@@ -1,0 +1,42 @@
+"""Paper Fig. 10/11: BI query time — hot vs disk-cold vs S3-cold, GraphLake
+vs the in-situ naive baseline (PuppyGraph-style: no decoded cache, no
+prefetch, no materialized topology)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, ldbc_lake, make_engine, timed
+from repro.core.bi_queries import BI_QUERIES
+
+
+def run(sf: float = 0.02) -> None:
+    store, schema = ldbc_lake("queries", sf)
+
+    # --- GraphLake engine ------------------------------------------------------
+    eng = make_engine(store, schema)
+    eng.startup()
+    for name, fn in BI_QUERIES.items():
+        # cold: empty cache tiers
+        eng.cache.drop_all()
+        _, t_cold = timed(fn, eng)
+        # disk-cold: encoded chunks on local disk, decoded state gone
+        eng.cache.drop_memory()
+        _, t_disk = timed(fn, eng)
+        # hot: everything warmed
+        _, t_hot = timed(fn, eng, repeats=3)
+        emit(f"fig10_{name}_hot_us", t_hot * 1e6,
+             f"cold={t_cold*1e6:.0f}us;disk={t_disk*1e6:.0f}us")
+    gl_stats = dict(eng.cache.stats)
+    eng.close()
+
+    # --- naive in-situ baseline --------------------------------------------------
+    naive = make_engine(store, schema, naive=True, prefetch=False,
+                        materialize=False)
+    naive.startup()
+    for name, fn in BI_QUERIES.items():
+        naive.cache.drop_memory()
+        _, t_naive = timed(fn, naive)
+        emit(f"fig10_{name}_naive_us", t_naive * 1e6, "")
+    naive.close()
+    emit("fig10_cache_stats", 0.0,
+         f"hits={gl_stats['hits']};misses={gl_stats['misses']};"
+         f"lake_fetches={gl_stats['lake_fetches']}")

@@ -1,0 +1,65 @@
+"""Deliverable (g): emit the roofline table from the dry-run artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+OPT_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun_opt")
+
+
+def load_records(directory: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+            rec["_file"] = os.path.basename(path)
+            recs.append(rec)
+    return recs
+
+
+def run() -> None:
+    recs = load_records()
+    if not recs:
+        emit("roofline_no_dryrun_results", 0.0, "run repro.launch.dryrun first")
+        return
+    n_ok = n_skip = n_err = 0
+    for rec in recs:
+        if rec["status"] == "skipped":
+            n_skip += 1
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            emit(f"roofline_ERROR_{rec['arch']}_{rec['cell']}_{rec['mesh']}",
+                 0.0, rec.get("error", "")[:80])
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        emit(
+            f"roofline_{rec['arch']}_{rec['cell']}_{rec['mesh']}",
+            r["compute_s"] * 1e6,
+            f"dom={r['dominant']};mem_s={r['memory_s']:.3e};"
+            f"coll_s={r['collective_s']:.3e};"
+            f"useful={r['useful_flop_fraction']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.4f};"
+            f"perdev_gb={rec['per_device_bytes']/1e9:.2f};"
+            f"fits={rec['fits_hbm']}",
+        )
+    emit("roofline_summary", 0.0, f"ok={n_ok};skipped={n_skip};errors={n_err}")
+    # perf-variant records (EXPERIMENTS.md §Perf before/after)
+    for rec in load_records(OPT_DIR):
+        if rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        variant = rec["_file"].rsplit("__", 1)[-1].replace(".json", "")
+        emit(
+            f"perf_{rec['arch']}_{rec['cell']}_{variant}",
+            r["compute_s"] * 1e6,
+            f"dom={r['dominant']};mem_s={r['memory_s']:.3e};"
+            f"coll_s={r['collective_s']:.3e};"
+            f"roofline_frac={r['roofline_fraction']:.4f}",
+        )

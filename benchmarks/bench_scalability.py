@@ -1,0 +1,68 @@
+"""Paper Fig. 12/13/14: scalability — throughput vs scale factor (single
+node), startup vs node count, and query throughput vs node count (the
+partitioned DistributedGraphLake with its two-pass EdgeScan)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_store, ldbc_lake, make_engine, timed
+from repro.core.bi_queries import BI_QUERIES
+from repro.core.distributed import DistributedGraphLake
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.serving.server import QueryServer, ServerConfig
+
+
+def run() -> None:
+    # --- Fig 12: single-node throughput vs scale factor -----------------------
+    for sf in (0.002, 0.008, 0.03):
+        store, schema = ldbc_lake(f"scal_sf{sf}", sf)
+        eng = make_engine(store, schema)
+        eng.startup()
+        BI_QUERIES["bi1"](eng)  # warm
+        t0 = time.perf_counter()
+        n = 6
+        for i in range(n):
+            BI_QUERIES["bi1"](eng, date=20090101 + i)
+        thr = n / (time.perf_counter() - t0)
+        emit(f"fig12_bi1_sf{sf}_qps", 1e6 / max(thr, 1e-9),
+             f"throughput={thr:.2f}q/s;edges={eng.topology.n_edges()}")
+        eng.close()
+
+    # --- Fig 13: startup scaling with partitions (distributed build) ----------
+    store, schema = ldbc_lake("scal_dist", 0.02, n_files=8)
+    single = make_engine(store, schema, materialize=False)
+    _, t1 = timed(single.startup)
+    single.close()
+    emit("fig13_startup_1node_s", t1 * 1e6, "")
+    for p in (2, 4):
+        dist = DistributedGraphLake(store, ldbc_graph_schema(), n_partitions=p)
+        _, tp = timed(dist.startup)
+        dist.close()
+        emit(f"fig13_startup_{p}node_s", tp * 1e6,
+             f"scaling={t1 / tp:.2f}x")
+
+    # --- Fig 14: distributed query throughput ---------------------------------
+    for p in (1, 2, 4):
+        dist = DistributedGraphLake(store, ldbc_graph_schema(), n_partitions=p)
+        dist.startup()
+        frontier = dist.engines[0].all_vertices("Comment")
+
+        def q():
+            return dist.edge_scan_accumulate(
+                frontier, "HasCreator", "out",
+                edge_columns=["creationDate"],
+                v_columns=["gender"],
+                edge_filter=lambda fr: fr["e.creationDate"] > 20150101,
+                v_filter=lambda fr: np.asarray(
+                    [g == "Female" for g in fr["v.gender"]]),
+            )
+
+        q()  # warm
+        _, tq = timed(q, repeats=2)
+        emit(f"fig14_twopass_query_{p}node_us", tq * 1e6,
+             f"net_requests={dist.net.requests};"
+             f"rows_shipped={dist.net.vertex_rows_shipped}")
+        dist.close()

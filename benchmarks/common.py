@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: lake setup, timing, CSV emission."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import time
+
+from repro.core.engine import GraphLakeEngine
+from repro.core.cache.manager import CacheConfig
+from repro.data.graph500 import generate_graph500, graph500_schema
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+
+BENCH_ROOT = os.environ.get("REPRO_BENCH_ROOT", "/tmp/repro_bench")
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kwargs):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def fresh_store(name: str, latency_scale: float = 0.0) -> ObjectStore:
+    root = os.path.join(BENCH_ROOT, name)
+    shutil.rmtree(root, ignore_errors=True)
+    return ObjectStore(StoreConfig(root=root, latency_scale=latency_scale))
+
+
+def reuse_store(name: str, latency_scale: float = 0.0) -> ObjectStore:
+    root = os.path.join(BENCH_ROOT, name)
+    return ObjectStore(StoreConfig(root=root, latency_scale=latency_scale))
+
+
+def ldbc_lake(name: str, sf: float, latency_scale: float = 0.0,
+              n_files: int = 4, shuffle_edges: bool = False):
+    """Create (once) an LDBC lake; returns (store, schema)."""
+    store = reuse_store(name, latency_scale)
+    if not store.exists(f"tables/Person/metadata/VERSION"):
+        generate_ldbc(store, scale_factor=sf, n_files=n_files,
+                      shuffle_edges=shuffle_edges)
+    return store, ldbc_graph_schema()
+
+
+def graph500_lake(name: str, scale: int, latency_scale: float = 0.0):
+    store = reuse_store(name, latency_scale)
+    if not store.exists("tables/Node/metadata/VERSION"):
+        generate_graph500(store, scale=scale)
+    return store, graph500_schema()
+
+
+def make_engine(store, schema, naive: bool = False, prefetch: bool = True,
+                materialize: bool = True, memory_mb: int = 256) -> GraphLakeEngine:
+    return GraphLakeEngine(
+        store, schema,
+        cache_config=CacheConfig(
+            memory_budget_bytes=memory_mb * 1024 * 1024, naive_mode=naive),
+        enable_prefetch=prefetch,
+        materialize_topology=materialize,
+    )

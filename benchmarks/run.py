@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Scale knobs are environment-tuned
+for the CPU container; see each module for the paper figure it reproduces.
+
+    PYTHONPATH=src python -m benchmarks.run [--only startup,queries,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("startup", "benchmarks.bench_startup"),           # Fig 8 + 9
+    ("queries", "benchmarks.bench_queries"),           # Fig 10 + 11
+    ("algorithms", "benchmarks.bench_algorithms"),     # Table 2
+    ("scalability", "benchmarks.bench_scalability"),   # Fig 12-14
+    ("edgelist_vs_csr", "benchmarks.bench_edgelist_vs_csr"),  # Fig 15
+    ("cache_units", "benchmarks.bench_cache_units"),   # Fig 16
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),         # deliverable (g)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"# suite {name} done in {time.perf_counter()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures.append(name)
+            print(f"# suite {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

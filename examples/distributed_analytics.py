@@ -1,0 +1,66 @@
+"""Distributed graph analytics: file-based sharding + two-pass EdgeScan.
+
+Runs the same aggregation on 1-node and 3-node partitioned engines (threads
+stand in for compute nodes) and verifies they agree, printing the network
+accounting the paper's §6.2 design minimizes (batched remote fetches with
+filter pushdown, accumulator push-back).
+
+    PYTHONPATH=src python examples/distributed_analytics.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core.distributed import DistributedGraphLake
+from repro.core.engine import GraphLakeEngine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="graphlake_dist_")
+    store = ObjectStore(StoreConfig(root=root))
+    ds = generate_ldbc(store, scale_factor=0.01, n_files=6)
+    print(f"lake: {ds.n_comments} comments, {ds.n_edges} edges in 6 files/table")
+
+    # single-node reference
+    with GraphLakeEngine(store, ldbc_graph_schema(),
+                         materialize_topology=False) as ref:
+        ref.startup()
+        frontier = ref.all_vertices("Comment")
+        frame = ref.edge_scan(
+            frontier, "HasCreator", "out",
+            edge_columns=["creationDate"], v_columns=["gender"],
+            edge_filter=lambda fr: (fr["e.creationDate"] > 20150101)
+            & np.asarray([g == "Female" for g in fr["v.gender"]]),
+        )
+        ref_counts = np.bincount(frame.v, minlength=ref.topology.n_vertices("Person"))
+        print(f"single node: {len(frame)} qualifying edges")
+
+    # 3-node partitioned engine: every node owns 1/3 of the edge files
+    dist = DistributedGraphLake(store, ldbc_graph_schema(), n_partitions=3)
+    try:
+        dist.startup()
+        print(f"distributed startup: {dist.startup_seconds:.3f}s; per-node edges:",
+              [e.topology.n_edges("HasCreator") for e in dist.engines])
+        frontier = dist.engines[0].all_vertices("Comment")
+        nxt, accum = dist.edge_scan_accumulate(
+            frontier, "HasCreator", "out",
+            edge_columns=["creationDate"], v_columns=["gender"],
+            edge_filter=lambda fr: fr["e.creationDate"] > 20150101,
+            v_filter=lambda fr: np.asarray([g == "Female" for g in fr["v.gender"]]),
+        )
+        assert np.allclose(accum, ref_counts), "distributed != single-node!"
+        print(f"two-pass EdgeScan matches single node exactly "
+              f"({int(accum.sum())} edges to {nxt.size()} persons)")
+        print(f"network: {dist.net.requests} batched remote requests, "
+              f"{dist.net.vertex_rows_shipped} vertex rows shipped "
+              f"(filter pushdown dropped the rest), "
+              f"{dist.net.accum_updates_shipped} accumulator partials")
+    finally:
+        dist.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Train GIN (reduced config) for a few hundred steps with the full
+fault-tolerant stack: stateless pipeline, async checkpointing, resume.
+
+    PYTHONPATH=src python examples/train_gnn.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.pipeline import StatelessPipeline
+from repro.train.loop import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    arch = get_arch("gin-tu")
+    cell = [c for c in arch.shapes() if c.name == "molecule"][0]
+    ckpt_dir = tempfile.mkdtemp(prefix="gin_ckpt_")
+
+    def make_batch(seed, step, shard, n_shards):
+        # fixed dataset of 8 graph batches, cycled (so the model can overfit
+        # and the loss visibly decreases)
+        batch = arch.example_batch(cell, seed=step % 8, reduced=True)
+        batch.pop("n_graphs", None)
+        return batch
+
+    step_fn = arch.make_step(cell, reduced=True)
+    init = lambda: arch.init_state(jax.random.PRNGKey(0), cell, reduced=True)
+
+    pipeline = StatelessPipeline(make_batch)
+    result = run_training(init, step_fn, pipeline, TrainLoopConfig(
+        total_steps=200, checkpoint_every=100, checkpoint_dir=ckpt_dir))
+    pipeline.close()
+    print(f"trained {result.steps_run} steps; "
+          f"loss {np.mean(result.losses[:10]):.4f} -> "
+          f"{np.mean(result.losses[-10:]):.4f}")
+
+    # resume from the checkpoint and train 100 more steps
+    pipeline2 = StatelessPipeline(make_batch)
+    result2 = run_training(init, step_fn, pipeline2, TrainLoopConfig(
+        total_steps=300, checkpoint_every=100, checkpoint_dir=ckpt_dir))
+    pipeline2.close()
+    print(f"resumed from step {result2.resumed_from}, ran "
+          f"{result2.steps_run} more; final loss "
+          f"{np.mean(result2.losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: GraphLake (graph compute engine for Lakehouse) on JAX/TPU."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned arch + the paper's own
+GraphLake/LDBC config.  ``registry.get_arch(arch_id)`` is the public entry."""
+
+from repro.configs.registry import ARCH_IDS, get_arch
+
+__all__ = ["ARCH_IDS", "get_arch"]

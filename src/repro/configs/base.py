@@ -1,0 +1,550 @@
+"""Arch protocol: uniform wrapper the launcher, dry-run and smoke tests use.
+
+Every architecture exposes:
+
+- ``shapes()``                 — its assigned ShapeCells (with skip reasons),
+- ``init_state(rng)``          — train state (params + optimizer) or serve state,
+- ``make_step(cell)``          — the jit-able step function for a cell,
+- ``state_specs(cell)``        — ShapeDtypeStructs for the state argument,
+- ``batch_specs(cell)``        — ShapeDtypeStructs for the data argument,
+- ``example_batch(cell, rng)`` — a real (reduced-size) batch for smoke tests,
+- ``shardings(mesh, cell)``    — (state, batch) NamedShardings,
+- ``model_flops(cell)``        — analytic MODEL_FLOPS for the roofline.
+
+``reduced=True`` swaps in a small same-family config (smoke tests on CPU);
+the FULL configs are only ever touched abstractly (eval_shape / dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.gnn.common import GNNDist, local_dist, sharded_dist
+from repro.train.optimizer import AdamW, OptimizerConfig
+
+
+@dataclasses.dataclass
+class ShapeCell:
+    name: str
+    kind: str                    # train | prefill | decode | serve | retrieval
+    dims: dict
+    skip: Optional[str] = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+LM_SHAPE_DIMS = {
+    "train_4k": dict(seq=4096, batch=256),
+    "prefill_32k": dict(seq=32768, batch=32),
+    "decode_32k": dict(seq=32768, batch=128),
+    "long_500k": dict(seq=524288, batch=1),
+}
+
+LONG_SKIP = (
+    "long_500k skipped: pure full-softmax-attention arch (GQA/MLA); the pool "
+    "instructions require sub-quadratic attention for this cell (DESIGN.md §4)"
+)
+
+
+class LMArch:
+    family = "lm"
+
+    def __init__(self, arch_id: str, full: tf.LMConfig, reduced: tf.LMConfig):
+        self.arch_id = arch_id
+        self._full = full
+        self._reduced = reduced
+        self.optimizer = AdamW(OptimizerConfig())
+
+    def config(self, reduced: bool = False) -> tf.LMConfig:
+        return self._reduced if reduced else self._full
+
+    def shapes(self) -> list[ShapeCell]:
+        return [
+            ShapeCell("train_4k", "train", LM_SHAPE_DIMS["train_4k"]),
+            ShapeCell("prefill_32k", "prefill", LM_SHAPE_DIMS["prefill_32k"]),
+            ShapeCell("decode_32k", "decode", LM_SHAPE_DIMS["decode_32k"]),
+            ShapeCell("long_500k", "decode", LM_SHAPE_DIMS["long_500k"],
+                      skip=LONG_SKIP),
+        ]
+
+    # -- state -----------------------------------------------------------------
+
+    def init_state(self, rng, cell: ShapeCell, reduced: bool = False):
+        cfg = self.config(reduced)
+        if cell.kind == "train":
+            params = tf.init_params(rng, cfg)
+            return {"params": params, "opt": self.optimizer.init(params),
+                    "step": jnp.zeros((), jnp.int32)}
+        params = tf.init_params(rng, cfg)
+        if cell.kind == "decode":
+            dims = self._dims(cell, reduced)
+            caches = tf.init_caches(cfg, dims["batch"], dims["seq"])
+            return {"params": params, "caches": caches}
+        return {"params": params}
+
+    def state_specs(self, cell: ShapeCell, reduced: bool = False):
+        rng = jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda: self.init_state(rng, cell, reduced))
+
+    # -- batches -----------------------------------------------------------------
+
+    def _dims(self, cell: ShapeCell, reduced: bool) -> dict:
+        if not reduced:
+            return cell.dims
+        return dict(seq=max(32, cell.dims["seq"] // 512),
+                    batch=max(2, cell.dims["batch"] // 64))
+
+    def batch_specs(self, cell: ShapeCell, reduced: bool = False):
+        d = self._dims(cell, reduced)
+        if cell.kind == "train":
+            return {"tokens": _sds((d["batch"], d["seq"]), jnp.int32),
+                    "labels": _sds((d["batch"], d["seq"]), jnp.int32)}
+        if cell.kind == "prefill":
+            return {"tokens": _sds((d["batch"], d["seq"]), jnp.int32)}
+        return {"token": _sds((d["batch"], 1), jnp.int32),
+                "index": _sds((), jnp.int32)}
+
+    def example_batch(self, cell: ShapeCell, seed: int = 0, reduced: bool = True):
+        cfg = self.config(reduced)
+        rng = np.random.default_rng(seed)
+        specs = self.batch_specs(cell, reduced)
+        out = {}
+        for k, s in specs.items():
+            if k == "index":
+                out[k] = jnp.asarray(self._dims(cell, reduced)["seq"] // 2,
+                                     jnp.int32)
+            else:
+                out[k] = jnp.asarray(rng.integers(0, cfg.vocab, size=s.shape),
+                                     s.dtype)
+        return out
+
+    # -- steps -----------------------------------------------------------------
+
+    def make_step(self, cell: ShapeCell, reduced: bool = False) -> Callable:
+        cfg = self.config(reduced)
+        if cell.kind == "train":
+            return tf.make_train_step(cfg, self.optimizer)
+        if cell.kind == "prefill":
+            def prefill(state, batch):
+                b, s = batch["tokens"].shape
+                caches = tf.init_caches(cfg, b, s)
+                return tf.prefill_step(cfg, state["params"], batch["tokens"], caches)
+            return prefill
+        def decode(state, batch):
+            logits, caches = tf.decode_step(
+                cfg, state["params"], state["caches"], batch["token"],
+                batch["index"],
+            )
+            return logits, {"params": state["params"], "caches": caches}
+        return decode
+
+    # -- shardings ----------------------------------------------------------------
+
+    def shardings(self, mesh, cell: ShapeCell, reduced: bool = False):
+        state_specs = self.state_specs(cell, reduced)
+        cfg = self.config(reduced)
+        if cell.kind == "train":
+            state_sh = shd.lm_state_shardings(mesh, state_specs)
+        else:
+            state_sh = {"params": shd.lm_param_shardings(mesh, state_specs["params"])}
+            if "caches" in state_specs:
+                state_sh["caches"] = shd.lm_cache_shardings(
+                    mesh, state_specs["caches"], mla=cfg.mla is not None
+                )
+        batch_sh = {}
+        for k, s in self.batch_specs(cell, reduced).items():
+            if k == "index":
+                batch_sh[k] = shd.named(mesh)
+            else:
+                batch_sh[k] = shd.named(mesh, shd.dp_axes(mesh),
+                                        *([None] * (len(s.shape) - 1)))
+        return state_sh, batch_sh
+
+    # -- roofline ----------------------------------------------------------------
+
+    def model_flops(self, cell: ShapeCell) -> float:
+        cfg = self.config(False)
+        d = cell.dims
+        n_active = cfg.active_param_count()
+        if cell.kind == "train":
+            return 6.0 * n_active * d["batch"] * d["seq"]
+        if cell.kind == "prefill":
+            return 2.0 * n_active * d["batch"] * d["seq"]
+        return 2.0 * n_active * d["batch"]
+
+    def cost_variant(self, n_layers: int) -> "LMArch":
+        """Same arch with n_layers layers, fully unrolled scans — used by the
+        dry-run's exact-cost compiles (cost_analysis counts loop bodies once;
+        per-layer costs extrapolate exactly for layer-homogeneous models)."""
+        cfg = dataclasses.replace(
+            self._full, n_layers=n_layers, scan_unroll=True,
+            name=f"{self._full.name}-cost{n_layers}",
+        )
+        return LMArch(f"{self.arch_id}-cost{n_layers}", cfg, self._reduced)
+
+
+# ===========================================================================
+# GNN family
+# ===========================================================================
+
+GNN_SHAPE_DIMS = {
+    # padded to multiples of 512 (total devices) for shard_map collectives
+    "full_graph_sm": dict(n_nodes=3072, n_edges=10752, d_feat=1433,
+                          n_classes=7, n_graphs=1, real_nodes=2708,
+                          real_edges=10556),
+    "minibatch_lg": dict(n_nodes=169_984, n_edges=168_960, d_feat=602,
+                         n_classes=41, n_graphs=1, seeds=1024,
+                         fanout=(15, 10), real_nodes=232_965,
+                         real_edges=114_615_892),
+    "ogb_products": dict(n_nodes=2_449_408, n_edges=61_859_328, d_feat=100,
+                         n_classes=47, n_graphs=1, real_nodes=2_449_029,
+                         real_edges=61_859_140),
+    "molecule": dict(n_nodes=4096, n_edges=8192, d_feat=16, n_classes=10,
+                     n_graphs=128, real_nodes=3840, real_edges=8192),
+}
+
+TRIPLET_CAP = 8  # max incoming edges per target edge for DimeNet triplets
+
+_REDUCED_GRAPH = dict(n_nodes=96, n_edges=320, d_feat=12, n_classes=5,
+                      n_graphs=4, real_nodes=90, real_edges=300)
+
+
+class GNNArch:
+    family = "gnn"
+
+    def __init__(self, arch_id: str, model_ctor: Callable, full_cfg, reduced_cfg,
+                 needs: tuple[str, ...]):
+        """``needs``: subset of {x, pos, z, edge_feat, triplets}."""
+        self.arch_id = arch_id
+        self.model_ctor = model_ctor
+        self._full = full_cfg
+        self._reduced = reduced_cfg
+        self.needs = needs
+        self.optimizer = AdamW(OptimizerConfig())
+
+    def config(self, reduced: bool = False):
+        return self._reduced if reduced else self._full
+
+    def shapes(self) -> list[ShapeCell]:
+        return [ShapeCell(name, "train", dims)
+                for name, dims in GNN_SHAPE_DIMS.items()]
+
+    def _graph_dims(self, cell: ShapeCell, reduced: bool) -> dict:
+        return _REDUCED_GRAPH if reduced else cell.dims
+
+    def _model(self, mesh, reduced: bool):
+        dist = local_dist() if mesh is None else sharded_dist(mesh)
+        cfg = self.config(reduced)
+        cfg = dataclasses.replace(cfg)  # copy
+        return self.model_ctor(cfg, dist)
+
+    # -- batches -----------------------------------------------------------------
+
+    def _task(self, cell: ShapeCell) -> str:
+        return "graph" if cell.name == "molecule" else "node"
+
+    def batch_specs(self, cell: ShapeCell, reduced: bool = False):
+        g = self._graph_dims(cell, reduced)
+        n, e, gg = g["n_nodes"], g["n_edges"], g["n_graphs"]
+        spec = {
+            "src": _sds((e,), jnp.int32),
+            "dst": _sds((e,), jnp.int32),
+            "edge_mask": _sds((e,), jnp.bool_),
+            "node_mask": _sds((n,), jnp.bool_),
+            "graph_ids": _sds((n,), jnp.int32),
+            "graph_mask": _sds((gg,), jnp.bool_),
+        }
+        if "x" in self.needs:
+            spec["x"] = _sds((n, g["d_feat"]), jnp.float32)
+        if "z" in self.needs:
+            spec["z"] = _sds((n,), jnp.int32)
+        if "pos" in self.needs:
+            spec["pos"] = _sds((n, 3), jnp.float32)
+        if "edge_feat" in self.needs:
+            spec["edge_feat"] = _sds((e, 4), jnp.float32)
+        if "triplets" in self.needs:
+            t = _pad_to(e * TRIPLET_CAP, 512)
+            spec["t_in"] = _sds((t,), jnp.int32)
+            spec["t_out"] = _sds((t,), jnp.int32)
+            spec["triplet_mask"] = _sds((t,), jnp.bool_)
+        # labels / targets
+        if self.arch_id in ("gin-tu",):
+            if self._task(cell) == "graph":
+                spec["labels"] = _sds((gg,), jnp.int32)
+            else:
+                spec["labels"] = _sds((n,), jnp.int32)
+                spec["label_mask"] = _sds((n,), jnp.bool_)
+        elif self.arch_id == "meshgraphnet":
+            spec["targets"] = _sds((n, self.config(reduced).d_out), jnp.float32)
+        else:  # schnet / dimenet: per-graph regression
+            spec["targets"] = _sds((gg,), jnp.float32)
+        return spec
+
+    def example_batch(self, cell: ShapeCell, seed: int = 0, reduced: bool = True):
+        g = self._graph_dims(cell, reduced)
+        rng = np.random.default_rng(seed)
+        n, e, gg = g["n_nodes"], g["n_edges"], g["n_graphs"]
+        rn, re = g["real_nodes"], min(g["real_edges"], e)
+        specs = self.batch_specs(cell, reduced)
+        src = rng.integers(0, rn, e)
+        dst = rng.integers(0, rn, e)
+        out = {
+            "src": src.astype(np.int32),
+            "dst": dst.astype(np.int32),
+            "edge_mask": (np.arange(e) < re),
+            "node_mask": (np.arange(n) < rn),
+            "graph_ids": (rng.integers(0, gg, n)).astype(np.int32),
+            "graph_mask": np.ones(gg, bool),
+        }
+        if "x" in specs:
+            out["x"] = rng.standard_normal((n, g["d_feat"])).astype(np.float32)
+        if "z" in specs:
+            out["z"] = rng.integers(0, 20, n).astype(np.int32)
+        if "pos" in specs:
+            out["pos"] = (rng.standard_normal((n, 3)) * 3).astype(np.float32)
+        if "edge_feat" in specs:
+            out["edge_feat"] = rng.standard_normal((e, 4)).astype(np.float32)
+        if "t_in" in specs:
+            t = specs["t_in"].shape[0]
+            out["t_in"] = rng.integers(0, re, t).astype(np.int32)
+            out["t_out"] = rng.integers(0, re, t).astype(np.int32)
+            out["triplet_mask"] = np.ones(t, bool)
+        if "labels" in specs:
+            out["labels"] = rng.integers(
+                0, g["n_classes"], specs["labels"].shape
+            ).astype(np.int32)
+        if "label_mask" in specs:
+            out["label_mask"] = out["node_mask"]
+        if "targets" in specs:
+            out["targets"] = rng.standard_normal(specs["targets"].shape).astype(np.float32)
+        out["n_graphs"] = gg
+        return {k: (jnp.asarray(v) if not isinstance(v, int) else v)
+                for k, v in out.items()}
+
+    # -- state / steps ------------------------------------------------------------
+
+    def init_state(self, rng, cell: ShapeCell, reduced: bool = False, mesh=None):
+        model = self._model(mesh, reduced)
+        if self.arch_id == "gin-tu":
+            model.cfg.task = self._task(cell)
+        params = model.init(rng)
+        return {"params": params, "opt": self.optimizer.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def state_specs(self, cell: ShapeCell, reduced: bool = False, mesh=None):
+        rng = jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda: self.init_state(rng, cell, reduced, mesh))
+
+    def make_step(self, cell: ShapeCell, reduced: bool = False, mesh=None) -> Callable:
+        model = self._model(mesh, reduced)
+        if self.arch_id == "gin-tu":
+            model.cfg.task = self._task(cell)
+        n_graphs = self._graph_dims(cell, reduced)["n_graphs"]
+        opt = self.optimizer
+
+        def train_step(state, batch):
+            batch = dict(batch, n_graphs=n_graphs)
+            loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+            new_params, new_opt = opt.update(state["params"], grads,
+                                             state["opt"], state["step"])
+            return ({"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1},
+                    {"loss": loss, "grad_norm": opt.last_grad_norm(grads)})
+
+        return train_step
+
+    def shardings(self, mesh, cell: ShapeCell, reduced: bool = False):
+        state_specs = self.state_specs(cell, reduced, mesh)
+        state_sh = shd.gnn_state_shardings(mesh, state_specs)
+        batch_sh = shd.gnn_batch_shardings(mesh, self.batch_specs(cell, reduced))
+        return state_sh, batch_sh
+
+    def model_flops(self, cell: ShapeCell) -> float:
+        cfg = self.config(False)
+        g = cell.dims
+        n, e = g["n_nodes"], g["n_edges"]
+        h = getattr(cfg, "d_hidden", 64)
+        layers = getattr(cfg, "n_layers", None) or getattr(
+            cfg, "n_interactions", None) or getattr(cfg, "n_blocks", 6)
+        flops = 0.0
+        if self.arch_id == "gin-tu":
+            # messages are raw gathers (no per-edge matmul); cost = node MLPs
+            # (first layer d_feat -> h) + E*h aggregation adds
+            d_in = g["d_feat"]
+            flops += 2.0 * n * d_in * h + e * h
+            flops += (layers - 1) * (2.0 * n * h * h * 2 + e * h)
+        elif self.arch_id == "meshgraphnet":
+            # per-edge MLP(3h -> h -> h) + per-node MLP(2h -> h -> h)
+            per_edge = 2.0 * e * (3 * h * h + h * h)
+            per_node = 2.0 * n * (2 * h * h + h * h)
+            flops += layers * (per_edge + per_node)
+        elif self.arch_id == "schnet":
+            n_rbf = getattr(cfg, "n_rbf", 300)
+            per_edge = 2.0 * e * (n_rbf * h + h * h + h)   # filter MLP + modulate
+            per_node = 2.0 * n * (3 * h * h)               # in/mid/out denses
+            flops += layers * (per_edge + per_node)
+        else:  # dimenet: triplet bilinear dominates
+            t = e * TRIPLET_CAP
+            nb = getattr(cfg, "n_bilinear", 8)
+            per_block = 2.0 * t * (nb * h + nb * h * h / nb) + 2.0 * e * (3 * h * h)
+            flops += layers * per_block + 2.0 * e * 3 * h * h
+        # 3x for fwd+bwd
+        return 3.0 * flops
+
+
+# ===========================================================================
+# RecSys family
+# ===========================================================================
+
+RECSYS_SHAPE_DIMS = {
+    "train_batch": dict(batch=65_536),
+    "serve_p99": dict(batch=512),
+    "serve_bulk": dict(batch=262_144),
+    "retrieval_cand": dict(batch=1, n_candidates=1_048_576),
+}
+
+
+class RecSysArch:
+    family = "recsys"
+
+    def __init__(self, arch_id: str, full_cfg, reduced_cfg):
+        from repro.models.recsys import XDeepFM  # local import to avoid cycles
+        self.arch_id = arch_id
+        self._full = full_cfg
+        self._reduced = reduced_cfg
+        self._ctor = XDeepFM
+        self.optimizer = AdamW(OptimizerConfig(lr=1e-3))
+
+    def config(self, reduced: bool = False):
+        return self._reduced if reduced else self._full
+
+    def shapes(self) -> list[ShapeCell]:
+        return [
+            ShapeCell("train_batch", "train", RECSYS_SHAPE_DIMS["train_batch"]),
+            ShapeCell("serve_p99", "serve", RECSYS_SHAPE_DIMS["serve_p99"]),
+            ShapeCell("serve_bulk", "serve", RECSYS_SHAPE_DIMS["serve_bulk"]),
+            ShapeCell("retrieval_cand", "retrieval",
+                      RECSYS_SHAPE_DIMS["retrieval_cand"]),
+        ]
+
+    def _model(self, mesh, reduced: bool):
+        return self._ctor(self.config(reduced), mesh=mesh)
+
+    def _batch_size(self, cell: ShapeCell, reduced: bool) -> int:
+        if cell.kind == "retrieval":
+            b = cell.dims["n_candidates"]
+        else:
+            b = cell.dims["batch"]
+        return max(4, b // 1024) if reduced else b
+
+    def batch_specs(self, cell: ShapeCell, reduced: bool = False):
+        cfg = self.config(reduced)
+        b = self._batch_size(cell, reduced)
+        f_single = cfg.n_fields - cfg.n_multihot
+        spec = {
+            "idx_single": _sds((b, f_single), jnp.int32),
+            "idx_multi": _sds((b, cfg.n_multihot, cfg.bag_size), jnp.int32),
+            "w_multi": _sds((b, cfg.n_multihot, cfg.bag_size), jnp.float32),
+        }
+        if cell.kind == "train":
+            spec["labels"] = _sds((b,), jnp.int32)
+        return spec
+
+    def example_batch(self, cell: ShapeCell, seed: int = 0, reduced: bool = True):
+        cfg = self.config(reduced)
+        rng = np.random.default_rng(seed)
+        b = self._batch_size(cell, reduced)
+        f_single = cfg.n_fields - cfg.n_multihot
+        offs = cfg.field_offsets
+        idx_single = np.stack(
+            [rng.integers(0, cfg.vocab_sizes[f], b) + offs[f]
+             for f in range(f_single)], axis=1,
+        ).astype(np.int32)
+        idx_multi = np.stack(
+            [rng.integers(0, cfg.vocab_sizes[f_single + f],
+                          (b, cfg.bag_size)) + offs[f_single + f]
+             for f in range(cfg.n_multihot)], axis=1,
+        ).astype(np.int32)
+        out = {
+            "idx_single": jnp.asarray(idx_single),
+            "idx_multi": jnp.asarray(idx_multi),
+            "w_multi": jnp.asarray(
+                (rng.random((b, cfg.n_multihot, cfg.bag_size)) < 0.7)
+                .astype(np.float32)),
+        }
+        if cell.kind == "train":
+            out["labels"] = jnp.asarray(rng.integers(0, 2, b), jnp.int32)
+        return out
+
+    def init_state(self, rng, cell: ShapeCell, reduced: bool = False, mesh=None):
+        model = self._model(mesh, reduced)
+        params = model.init(rng)
+        if cell.kind == "train":
+            return {"params": params, "opt": self.optimizer.init(params),
+                    "step": jnp.zeros((), jnp.int32)}
+        return {"params": params}
+
+    def state_specs(self, cell: ShapeCell, reduced: bool = False, mesh=None):
+        rng = jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda: self.init_state(rng, cell, reduced, mesh))
+
+    def make_step(self, cell: ShapeCell, reduced: bool = False, mesh=None) -> Callable:
+        model = self._model(mesh, reduced)
+        opt = self.optimizer
+        if cell.kind == "train":
+            def train_step(state, batch):
+                loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+                new_params, new_opt = opt.update(state["params"], grads,
+                                                 state["opt"], state["step"])
+                return ({"params": new_params, "opt": new_opt,
+                         "step": state["step"] + 1},
+                        {"loss": loss, "grad_norm": opt.last_grad_norm(grads)})
+            return train_step
+
+        def serve(state, batch):
+            return model.serve_step(state["params"], batch)
+        return serve
+
+    def shardings(self, mesh, cell: ShapeCell, reduced: bool = False):
+        state_specs = self.state_specs(cell, reduced, mesh)
+        if cell.kind == "train":
+            state_sh = shd.recsys_state_shardings(mesh, state_specs)
+        else:
+            state_sh = {"params": shd.recsys_param_shardings(
+                mesh, state_specs["params"])}
+        batch_sh = shd.recsys_batch_shardings(
+            mesh, self.batch_specs(cell, reduced))
+        return state_sh, batch_sh
+
+    def model_flops(self, cell: ShapeCell) -> float:
+        cfg = self.config(False)
+        b = self._batch_size(cell, False)
+        f, d = cfg.n_fields, cfg.embed_dim
+        flops = 0.0
+        h_prev = f
+        for h in cfg.cin_layers:
+            flops += 2.0 * b * h * h_prev * f * d
+            h_prev = h
+        dims = [f * d] + list(cfg.mlp_dims) + [1]
+        for i in range(len(dims) - 1):
+            flops += 2.0 * b * dims[i] * dims[i + 1]
+        mult = 3.0 if cell.kind == "train" else 1.0
+        return mult * flops

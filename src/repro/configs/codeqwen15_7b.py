@@ -1,0 +1,20 @@
+"""codeqwen1.5-7b [dense]: 32L d_model=4096 32H (GQA kv=32 = MHA)
+d_ff=13440 vocab=92416, QKV bias (qwen1.5 arch)
+[hf:Qwen/CodeQwen1.5-7B; hf]."""
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="codeqwen1.5-7b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=13440, vocab=92416, qkv_bias=True,
+)
+
+REDUCED = LMConfig(
+    name="codeqwen-reduced",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+    qkv_bias=True, remat=False,
+)
+
+ARCH = LMArch("codeqwen1.5-7b", FULL, REDUCED)

@@ -1,0 +1,34 @@
+"""deepseek-v2-lite-16b [moe]: 27L d_model=2048 16H d_ff(expert)=1408
+vocab=102400, MLA kv_lora=512, 64 routed experts top-6 + 2 shared
+[arXiv:2405.04434; hf].
+
+The assignment line also mentions "160 routed" (the 236B V2-full config);
+we follow the published V2-Lite values consistent with "16b" and
+"64e top-6" (DESIGN.md §4).
+"""
+
+from repro.configs.base import LMArch
+from repro.models.layers import MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="deepseek-v2-lite-16b",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=102400,
+    mla=MLAConfig(d_model=2048, n_heads=16, kv_lora_rank=512,
+                  qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(d_model=2048, d_ff_expert=1408, n_experts=64, top_k=6,
+                  n_shared=2),
+)
+
+REDUCED = LMConfig(
+    name="deepseek-v2-lite-16b-reduced",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96, vocab=512,
+    remat=False,
+    mla=MLAConfig(d_model=64, n_heads=4, kv_lora_rank=32,
+                  qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+    moe=MoEConfig(d_model=64, d_ff_expert=48, n_experts=8, top_k=2, n_shared=2),
+)
+
+ARCH = LMArch("deepseek-v2-lite-16b", FULL, REDUCED)

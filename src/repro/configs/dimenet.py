@@ -1,0 +1,22 @@
+"""dimenet [gnn]: 6 blocks, hidden 128, 8 bilinear, 7 spherical x 6 radial
+[arXiv:2003.03123; pool-marked unverified — listed values used].
+
+Large-graph shapes cap triplets at K=8 incoming edges per target edge
+(DESIGN.md §4); the ogb_products cell uses the ring edge-gather.
+"""
+
+from repro.configs.base import GNNArch
+from repro.models.gnn import DimeNet, DimeNetConfig
+
+
+def _ctor(cfg, dist):
+    return DimeNet(cfg, dist)
+
+
+FULL = DimeNetConfig(name="dimenet", n_blocks=6, d_hidden=128, n_bilinear=8,
+                     n_spherical=7, n_radial=6, cutoff=5.0)
+REDUCED = DimeNetConfig(name="dimenet-reduced", n_blocks=2, d_hidden=16,
+                        n_bilinear=4, n_spherical=3, n_radial=4, cutoff=5.0)
+
+ARCH = GNNArch("dimenet", _ctor, FULL, REDUCED,
+               needs=("z", "pos", "triplets"))

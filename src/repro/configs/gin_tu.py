@@ -1,0 +1,43 @@
+"""gin-tu [gnn]: 5 layers, hidden 64, sum aggregator, learnable eps
+[arXiv:1810.00826; paper]."""
+
+import dataclasses
+
+from repro.configs.base import GNNArch, GNN_SHAPE_DIMS
+from repro.models.gnn import GIN, GINConfig
+
+
+def _ctor(cfg, dist):
+    return GIN(cfg, dist)
+
+
+FULL = GINConfig(name="gin-tu", n_layers=5, d_hidden=64, d_in=1433,
+                 n_classes=47, task="node")
+REDUCED = GINConfig(name="gin-tu-reduced", n_layers=2, d_hidden=16, d_in=12,
+                    n_classes=5, task="node")
+
+
+class GINArch(GNNArch):
+    """GIN's input dim / classes track the dataset shape cell."""
+
+    def make_step(self, cell, reduced=False, mesh=None):
+        # adapt d_in / n_classes to the cell's dataset before building
+        g = self._graph_dims(cell, reduced)
+        self._full = dataclasses.replace(
+            self._full, d_in=g["d_feat"], n_classes=g["n_classes"],
+            task=self._task(cell))
+        self._reduced = dataclasses.replace(
+            self._reduced, task=self._task(cell))
+        return super().make_step(cell, reduced, mesh)
+
+    def init_state(self, rng, cell, reduced=False, mesh=None):
+        g = self._graph_dims(cell, reduced)
+        self._full = dataclasses.replace(
+            self._full, d_in=g["d_feat"], n_classes=g["n_classes"],
+            task=self._task(cell))
+        self._reduced = dataclasses.replace(
+            self._reduced, task=self._task(cell))
+        return super().init_state(rng, cell, reduced, mesh)
+
+
+ARCH = GINArch("gin-tu", _ctor, FULL, REDUCED, needs=("x",))

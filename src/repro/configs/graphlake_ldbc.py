@@ -1,0 +1,26 @@
+"""The paper's own workload configuration: GraphLake over LDBC_SNB tables.
+
+Not one of the 10 assigned architectures — this is the engine-side config
+the benchmarks and examples consume (scale factors, cache budgets, file
+counts), mirroring the paper's §7.1 experimental setup at container scale.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class GraphLakeConfig:
+    scale_factor: float = 0.01
+    n_files_per_table: int = 4        # paper uses 32 (one per vCPU)
+    row_group_rows: int = 16384
+    memory_budget_mb: int = 256
+    disk_budget_mb: int = 2048
+    edge_window: int = 4096
+    n_io_threads: int = 8
+    enable_prefetch: bool = True
+    materialize_topology: bool = True
+    store_latency_scale: float = 0.0  # 1.0 = simulate S3 latency
+
+
+DEFAULT = GraphLakeConfig()
+BENCH = GraphLakeConfig(scale_factor=0.03, store_latency_scale=1.0)

@@ -1,0 +1,20 @@
+"""llama3.2-3b [dense]: 28L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=128256 [hf:meta-llama/Llama-3.2-1B; pool-marked UNVERIFIED — the
+assignment's listed values are used verbatim]."""
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="llama3.2-3b",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=8192, vocab=128256, rope_theta=500000.0,
+)
+
+REDUCED = LMConfig(
+    name="llama32-reduced",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    remat=False,
+)
+
+ARCH = LMArch("llama3.2-3b", FULL, REDUCED)

@@ -1,0 +1,33 @@
+"""meshgraphnet [gnn]: 15 layers, hidden 128, sum aggregator, 2-layer MLPs
+[arXiv:2010.03409; pool-marked unverified — listed values used]."""
+
+import dataclasses
+
+from repro.configs.base import GNNArch
+from repro.models.gnn import MeshGraphNet, MGNConfig
+
+
+def _ctor(cfg, dist):
+    return MeshGraphNet(cfg, dist)
+
+
+FULL = MGNConfig(name="meshgraphnet", n_layers=15, d_hidden=128, d_in=16,
+                 d_edge_in=4, d_out=3, mlp_layers=2)
+REDUCED = MGNConfig(name="meshgraphnet-reduced", n_layers=3, d_hidden=24,
+                    d_in=12, d_edge_in=4, d_out=3, mlp_layers=2)
+
+
+class MGNArch(GNNArch):
+    def make_step(self, cell, reduced=False, mesh=None):
+        g = self._graph_dims(cell, reduced)
+        self._full = dataclasses.replace(self._full, d_in=g["d_feat"])
+        return super().make_step(cell, reduced, mesh)
+
+    def init_state(self, rng, cell, reduced=False, mesh=None):
+        g = self._graph_dims(cell, reduced)
+        self._full = dataclasses.replace(self._full, d_in=g["d_feat"])
+        return super().init_state(rng, cell, reduced, mesh)
+
+
+ARCH = MGNArch("meshgraphnet", _ctor, FULL, REDUCED,
+               needs=("x", "pos", "edge_feat"))

@@ -1,0 +1,22 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=6400
+vocab=32064, 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf]."""
+
+from repro.configs.base import LMArch
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=6400, vocab=32064,
+    moe=MoEConfig(d_model=4096, d_ff_expert=6400, n_experts=16, top_k=2),
+)
+
+REDUCED = LMConfig(
+    name="phi3.5-moe-reduced",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96, vocab=512,
+    remat=False,
+    moe=MoEConfig(d_model=64, d_ff_expert=96, n_experts=4, top_k=2),
+)
+
+ARCH = LMArch("phi3.5-moe-42b-a6.6b", FULL, REDUCED)

@@ -1,0 +1,19 @@
+"""qwen2-1.5b [dense]: 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936, QKV bias [arXiv:2407.10671; hf]."""
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="qwen2-1.5b",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+    d_ff=8960, vocab=151936, qkv_bias=True, tie_embeddings=True,
+)
+
+REDUCED = LMConfig(
+    name="qwen2-reduced",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    qkv_bias=True, tie_embeddings=True, remat=False,
+)
+
+ARCH = LMArch("qwen2-1.5b", FULL, REDUCED)

@@ -1,0 +1,26 @@
+"""Registry of the 10 assigned architectures (+ the paper's own config)."""
+
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "llama3.2-3b": "repro.configs.llama32_3b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "gin-tu": "repro.configs.gin_tu",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "schnet": "repro.configs.schnet",
+    "dimenet": "repro.configs.dimenet",
+    "xdeepfm": "repro.configs.xdeepfm",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH

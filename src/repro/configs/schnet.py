@@ -1,0 +1,17 @@
+"""schnet [gnn]: 3 interactions, hidden 64, 300 RBF, cutoff 10
+[arXiv:1706.08566; paper]."""
+
+from repro.configs.base import GNNArch
+from repro.models.gnn import SchNet, SchNetConfig
+
+
+def _ctor(cfg, dist):
+    return SchNet(cfg, dist)
+
+
+FULL = SchNetConfig(name="schnet", n_interactions=3, d_hidden=64,
+                    n_rbf=300, cutoff=10.0)
+REDUCED = SchNetConfig(name="schnet-reduced", n_interactions=2, d_hidden=16,
+                       n_rbf=24, cutoff=10.0)
+
+ARCH = GNNArch("schnet", _ctor, FULL, REDUCED, needs=("z", "pos"))

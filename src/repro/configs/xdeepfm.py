@@ -1,0 +1,22 @@
+"""xdeepfm [recsys]: 39 sparse fields, embed_dim 10, CIN 200-200-200,
+MLP 400-400 [arXiv:1803.05170; paper].  Vocab sizes are criteo-skewed
+(8 x 2^21 + 10 x 2^17 + 10 x 2^13 + 11 x 2^9 = 18.2M rows); 4 fields are
+multi-hot (bag 8) to exercise the EmbeddingBag kernel."""
+
+from repro.configs.base import RecSysArch
+from repro.models.recsys import XDeepFMConfig
+
+FULL = XDeepFMConfig(
+    name="xdeepfm", embed_dim=10, cin_layers=(200, 200, 200),
+    mlp_dims=(400, 400),
+    vocab_sizes=tuple([2 ** 21] * 8 + [2 ** 17] * 10 + [2 ** 13] * 10
+                      + [2 ** 9] * 11),
+    n_multihot=4, bag_size=8,
+)
+
+REDUCED = XDeepFMConfig(
+    name="xdeepfm-reduced", embed_dim=4, cin_layers=(8, 8), mlp_dims=(16, 16),
+    vocab_sizes=tuple([256] * 4 + [64] * 4), n_multihot=2, bag_size=4,
+)
+
+ARCH = RecSysArch("xdeepfm", FULL, REDUCED)

@@ -1,0 +1,22 @@
+"""GraphLake core: the paper's primary contribution.
+
+Topology-only startup loading (edge lists + transformed vertex IDs),
+graph-aware columnar caching, Lakehouse-optimized parallel primitives
+(VertexMap / EdgeScan), the accumulator-based BSP compute framework, the
+GSQL-like query layer, and the Table-2 graph algorithms.
+"""
+
+from repro.core.types import GraphSchema, VSet, make_transformed, split_transformed
+from repro.core.engine import GraphLakeEngine
+from repro.core.topology import GraphTopology
+from repro.core.vertex_idm import VertexIDM
+
+__all__ = [
+    "GraphSchema",
+    "VSet",
+    "make_transformed",
+    "split_transformed",
+    "GraphLakeEngine",
+    "GraphTopology",
+    "VertexIDM",
+]

@@ -1,0 +1,120 @@
+"""Accumulators — GSQL-style per-vertex runtime state (paper §2.2/§6).
+
+Accumulators are mutable containers attached to vertices, updated in parallel
+during traversal and combined between BSP supersteps.  We implement the
+containers used by the paper's workloads:
+
+- ``SumAccum`` / ``MaxAccum`` / ``MinAccum`` / ``OrAccum`` — combine via the
+  obvious monoid, vectorized with ``np.bincount`` / ``np.maximum.at`` etc.
+- snapshots + deltas so the distributed engine can ship *partial* updates and
+  combine them at the owner (paper §6.2's push-back step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+_COMBINERS: dict[str, Callable] = {}
+
+
+def _register(name):
+    def deco(fn):
+        _COMBINERS[name] = fn
+        return fn
+    return deco
+
+
+@_register("sum")
+def _combine_sum(arr: np.ndarray, ids: np.ndarray, values: np.ndarray) -> None:
+    # bincount is the fastest vectorized scatter-add on CPU numpy
+    upd = np.bincount(ids, weights=values, minlength=len(arr))
+    arr += upd.astype(arr.dtype, copy=False)
+
+
+@_register("max")
+def _combine_max(arr: np.ndarray, ids: np.ndarray, values: np.ndarray) -> None:
+    np.maximum.at(arr, ids, values.astype(arr.dtype, copy=False))
+
+
+@_register("min")
+def _combine_min(arr: np.ndarray, ids: np.ndarray, values: np.ndarray) -> None:
+    np.minimum.at(arr, ids, values.astype(arr.dtype, copy=False))
+
+
+@_register("or")
+def _combine_or(arr: np.ndarray, ids: np.ndarray, values: np.ndarray) -> None:
+    np.logical_or.at(arr, ids, values.astype(bool))
+
+
+_IDENTITY = {"sum": 0.0, "max": -np.inf, "min": np.inf, "or": False}
+
+
+@dataclasses.dataclass
+class AccumSpec:
+    vertex_type: str
+    name: str
+    op: str = "sum"
+    dtype: str = "float64"
+    init: float | bool | None = None
+
+
+class Accumulators:
+    """Per-vertex accumulator storage over the dense index space."""
+
+    def __init__(self, topology):
+        self.topology = topology
+        self._arrays: dict[tuple[str, str], np.ndarray] = {}
+        self._specs: dict[tuple[str, str], AccumSpec] = {}
+
+    def register(self, spec: AccumSpec) -> np.ndarray:
+        key = (spec.vertex_type, spec.name)
+        if spec.op not in _COMBINERS:
+            raise ValueError(f"unknown accumulator op {spec.op!r}")
+        n = self.topology.n_vertices(spec.vertex_type)
+        init = spec.init if spec.init is not None else _IDENTITY[spec.op]
+        if spec.op == "or":
+            arr = np.full(n, bool(init), dtype=bool)
+        else:
+            arr = np.full(n, init, dtype=np.dtype(spec.dtype))
+        self._arrays[key] = arr
+        self._specs[key] = spec
+        return arr
+
+    def array(self, vertex_type: str, name: str) -> np.ndarray:
+        return self._arrays[(vertex_type, name)]
+
+    def update(
+        self, vertex_type: str, name: str, dense_ids: np.ndarray, values
+    ) -> None:
+        """Parallel accumulator update: @name op= values at dense_ids."""
+        key = (vertex_type, name)
+        arr = self._arrays[key]
+        ids = np.asarray(dense_ids, dtype=np.int64)
+        if len(ids) == 0:
+            return
+        vals = np.broadcast_to(np.asarray(values), ids.shape)
+        _COMBINERS[self._specs[key].op](arr, ids, vals)
+
+    def reset(self, vertex_type: str, name: str) -> None:
+        spec = self._specs[(vertex_type, name)]
+        self._arrays[(vertex_type, name)][:] = (
+            spec.init if spec.init is not None else _IDENTITY[spec.op]
+        )
+
+    # -- distributed combine (paper §6.2) ------------------------------------
+
+    def export_delta(self, vertex_type: str, name: str) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, values) of non-identity entries — a shippable partial update."""
+        spec = self._specs[(vertex_type, name)]
+        arr = self._arrays[(vertex_type, name)]
+        identity = spec.init if spec.init is not None else _IDENTITY[spec.op]
+        ids = np.flatnonzero(arr != identity)
+        return ids, arr[ids]
+
+    def combine_delta(
+        self, vertex_type: str, name: str, ids: np.ndarray, values: np.ndarray
+    ) -> None:
+        self.update(vertex_type, name, ids, values)

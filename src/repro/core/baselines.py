@@ -1,0 +1,110 @@
+"""Architectural stand-ins for the paper's (closed-source) baselines.
+
+- ``CSRTopology`` + ``csr_edge_map``: TigerGraph-style vertex-centric CSR
+  EdgeMap — used by the Fig. 15 selectivity-crossover reproduction.  Building
+  it requires grouping all edges by source vertex (the expensive step the
+  paper avoids with edge lists).
+- ``FullLoadEngine``: loads *all* columns of *all* tables at startup into
+  dense in-memory arrays (TigerGraph-style proprietary load).  Fast queries,
+  slow startup — the left end of the paper's Fig. 1 trade-off.
+- The PuppyGraph-style in-situ baseline is a configuration of the real engine
+  (``CacheConfig(naive_mode=True)`` + ``materialize_topology=False`` +
+  ``enable_prefetch=False``), so the comparison isolates the paper's
+  techniques on identical substrate.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.lakehouse.columnfile import read_columns, read_footer
+from repro.lakehouse.objectstore import ObjectStore
+from repro.lakehouse.table import LakeCatalog
+from repro.core.types import GraphSchema
+
+
+class CSRTopology:
+    """Vertex-centric CSR built from (src, dst) dense edge arrays."""
+
+    def __init__(self, src: np.ndarray, dst: np.ndarray, n: int):
+        t0 = time.perf_counter()
+        order = np.argsort(src, kind="stable")   # group edges by source vertex
+        self.dst_sorted = np.ascontiguousarray(dst[order])
+        counts = np.bincount(src, minlength=n)
+        self.indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(counts, out=self.indptr[1:])
+        self.n = n
+        self.build_seconds = time.perf_counter() - t0
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.dst_sorted[self.indptr[v]: self.indptr[v + 1]]
+
+
+def csr_edge_map(csr: CSRTopology, active_ids: np.ndarray):
+    """Vertex-centric EdgeMap: visit only edges of active vertices.
+
+    Returns (u_repeated, v) edge endpoints — the CSR engine prunes whole
+    adjacency ranges per inactive vertex (why it wins at low selectivity).
+    """
+    active_ids = np.asarray(active_ids, dtype=np.int64)
+    starts = csr.indptr[active_ids]
+    stops = csr.indptr[active_ids + 1]
+    lengths = stops - starts
+    total = int(lengths.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+    # vectorized ragged gather of adjacency ranges: within-range offsets are
+    # arange(total) minus each range's cumulative start, shifted to `starts`
+    cumstarts = np.concatenate(([0], np.cumsum(lengths)[:-1]))
+    out_idx = np.arange(total) - np.repeat(cumstarts, lengths) + np.repeat(starts, lengths)
+    v = csr.dst_sorted[out_idx]
+    u = np.repeat(active_ids, lengths)
+    return u, v
+
+
+def edge_list_edge_map(src: np.ndarray, dst: np.ndarray, active_mask: np.ndarray):
+    """Edge-centric EdgeScan over a contiguous edge list (GraphLake side of
+    Fig. 15): sequential scan + membership mask."""
+    hit = active_mask[src]
+    return src[hit], dst[hit]
+
+
+class FullLoadEngine:
+    """Loads the complete graph (topology + every property column) upfront."""
+
+    def __init__(self, store: ObjectStore, schema: GraphSchema):
+        self.store = store
+        self.schema = schema
+        self.lake = LakeCatalog(store)
+        self.vertex_columns: dict[str, dict[str, np.ndarray]] = {}
+        self.edge_columns: dict[str, dict[str, np.ndarray]] = {}
+        self.startup_seconds = 0.0
+
+    def startup(self) -> float:
+        t0 = time.perf_counter()
+        for name, vt in self.schema.vertex_types.items():
+            table = self.lake.table(vt.table)
+            metas = [read_footer(self.store, k) for k in table.data_files()]
+            cols: dict[str, list[np.ndarray]] = {}
+            for meta in metas:
+                got = read_columns(self.store, meta, meta.columns)
+                for c, arr in got.items():
+                    cols.setdefault(c, []).append(arr)
+            self.vertex_columns[name] = {
+                c: np.concatenate(parts) for c, parts in cols.items()
+            }
+        for ename, et in self.schema.edge_types.items():
+            table = self.lake.table(et.table)
+            metas = [read_footer(self.store, k) for k in table.data_files()]
+            cols = {}
+            for meta in metas:
+                got = read_columns(self.store, meta, meta.columns)
+                for c, arr in got.items():
+                    cols.setdefault(c, []).append(arr)
+            self.edge_columns[ename] = {
+                c: np.concatenate(parts) for c, parts in cols.items()
+            }
+        self.startup_seconds = time.perf_counter() - t0
+        return self.startup_seconds

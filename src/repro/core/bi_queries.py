@@ -1,0 +1,134 @@
+"""Five LDBC_SNB-BI-style graph-aggregation queries (paper §7.3).
+
+Expressed in the declarative Query layer (GSQL-block analogue).  Each returns
+a small summary dict so the serving layer can ship results cheaply.  BI1 is
+the paper's §6 running example verbatim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.query import Query, accum_max, accum_sum, eq, ge, gt, le
+
+
+def bi1_music_women(engine, tag_name: str = "Music", date: int = 20100101):
+    """Women who created comments tagged `tag_name` after `date`; count per
+    person (the paper's running example)."""
+    res = (
+        Query(engine)
+        .vertices("Tag", where=eq("name", tag_name))
+        .hop("HasTag", direction="in")
+        .hop("HasCreator", direction="out",
+             edge_where=gt("creationDate", date),
+             target_where=eq("gender", "Female"),
+             accum=accum_sum("cnt", 1.0))
+        .run()
+    )
+    counts = res.accumulators.get("cnt", np.zeros(1))
+    return {
+        "n_persons": int(res.vset.size()),
+        "total_comments": float(counts.sum()),
+        "max_per_person": float(counts.max()) if len(counts) else 0.0,
+        "edges_scanned": res.n_edges_scanned,
+    }
+
+
+def bi2_tag_activity(engine, date_lo: int = 20120101, date_hi: int = 20151231):
+    """Comment volume per tag inside a date window."""
+    res = (
+        Query(engine)
+        .vertices("Comment")
+        .hop("HasCreator", direction="out",
+             edge_where=ge("creationDate", date_lo) & le("creationDate", date_hi))
+        .run()
+    )
+    active = res.frames[0].u_set(engine.topology.n_vertices("Comment"))
+    # count tags only over the date-active comments
+    frame = engine.edge_scan(active, "HasTag", "out")
+    engine.register_accum("Tag", "tag_cnt", op="sum")
+    engine.accums.update("Tag", "tag_cnt", frame.v, 1.0)
+    counts = engine.accums.array("Tag", "tag_cnt")
+    out = {
+        "n_active_comments": int(active.size()),
+        "n_tags_touched": int((counts > 0).sum()),
+        "top_tag_count": float(counts.max()) if len(counts) else 0.0,
+    }
+    engine.accums.reset("Tag", "tag_cnt")
+    return out
+
+
+def bi3_person_engagement(engine, min_len: int = 500):
+    """Per-person total length of their long comments (cross-entity ACCUM)."""
+    res = (
+        Query(engine)
+        .vertices("Comment")
+        .hop("HasCreator", direction="out",
+             source_where=gt("length", min_len),
+             accum=accum_sum("tot_len", "u.length"))
+        .run()
+    )
+    tot = res.accumulators["tot_len"]
+    return {
+        "n_persons": int((tot > 0).sum()),
+        "total_length": float(tot.sum()),
+    }
+
+
+def bi4_city_social(engine, city: str = "city_1"):
+    """Friend counts of persons in one city (1-hop Knows aggregation)."""
+    res = (
+        Query(engine)
+        .vertices("Person", where=eq("locationCity", city))
+        .hop("Knows", direction="out", accum=accum_sum("deg", 1.0, target="u"))
+        .run()
+    )
+    deg = res.accumulators["deg"]
+    return {
+        "n_friend_edges": float(deg.sum()),
+        "max_degree": float(deg.max()) if len(deg) else 0.0,
+    }
+
+
+def bi5_influencer_tags(engine, min_degree: int = 10, date: int = 20140101):
+    """Tags used by comments of well-connected persons (3 hops with
+    accumulator-driven filtering)."""
+    # hop 1: find high-out-degree persons via Knows aggregation
+    res = (
+        Query(engine)
+        .vertices("Person")
+        .hop("Knows", direction="out", accum=accum_sum("deg", 1.0, target="u"))
+        .run()
+    )
+    deg = res.accumulators["deg"]
+    n_p = engine.topology.n_vertices("Person")
+    from repro.core.types import VSet
+    influencers = VSet.from_dense_ids("Person", n_p, np.flatnonzero(deg >= min_degree))
+    # hop 2: their recent comments
+    frame = engine.edge_scan(
+        influencers, "HasCreator", "in",
+        edge_columns=["creationDate"],
+        edge_filter=lambda fr: fr["e.creationDate"] > date,
+    )
+    comments = frame.v_set(engine.topology.n_vertices("Comment"))
+    # hop 3: tags of those comments
+    frame2 = engine.edge_scan(comments, "HasTag", "out")
+    engine.register_accum("Tag", "inf_cnt", op="sum")
+    engine.accums.update("Tag", "inf_cnt", frame2.v, 1.0)
+    counts = engine.accums.array("Tag", "inf_cnt")
+    out = {
+        "n_influencers": int(influencers.size()),
+        "n_comments": int(comments.size()),
+        "n_tags": int((counts > 0).sum()),
+    }
+    engine.accums.reset("Tag", "inf_cnt")
+    return out
+
+
+BI_QUERIES = {
+    "bi1": bi1_music_women,
+    "bi2": bi2_tag_activity,
+    "bi3": bi3_person_engagement,
+    "bi4": bi4_city_social,
+    "bi5": bi5_influencer_tags,
+}

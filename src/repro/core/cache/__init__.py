@@ -1,0 +1,12 @@
+from repro.core.cache.units import VertexCacheUnit, EdgeCacheUnit, ChunkRef
+from repro.core.cache.manager import CacheManager, CacheConfig
+from repro.core.cache.prefetch import Prefetcher
+
+__all__ = [
+    "VertexCacheUnit",
+    "EdgeCacheUnit",
+    "ChunkRef",
+    "CacheManager",
+    "CacheConfig",
+    "Prefetcher",
+]

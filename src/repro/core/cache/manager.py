@@ -1,0 +1,210 @@
+"""Two-tier cache with priority sweep-clock replacement (paper §5.2).
+
+Memory tier holds live cache units; the disk tier holds (a) raw encoded
+chunks and (b) decoded vertex value arrays flushed on eviction.  Eviction
+policy is the paper's priority-aware sweep clock (PostgreSQL-style):
+
+- on access, a unit's usage count resets to its priority (vertex 3, edge 1),
+- the clock hand decrements counts and evicts the first unpinned unit at 0,
+- evicted **edge** units are discarded (raw chunk persists on disk),
+- evicted **vertex** units flush their decoded arrays to the disk tier so a
+  later re-admission skips re-decoding,
+- disk-tier entries are deleted outright when the disk budget is exceeded
+  (never written back to the data lake — §5.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cache.units import ChunkRef, EdgeCacheUnit, NaiveChunkReader, VertexCacheUnit
+from repro.lakehouse.columnfile import ColumnFileMeta
+from repro.lakehouse.objectstore import ObjectStore
+
+
+@dataclasses.dataclass
+class CacheConfig:
+    memory_budget_bytes: int = 256 * 1024 * 1024
+    disk_budget_bytes: int = 2 * 1024 * 1024 * 1024
+    disk_dir: Optional[str] = None          # None -> memory-backed "disk" dict
+    edge_window: int = 4096
+    naive_mode: bool = False                # Fig. 16 baseline: no decoded caching
+
+
+class CacheManager:
+    def __init__(self, store: ObjectStore, config: Optional[CacheConfig] = None):
+        self.store = store
+        self.config = config or CacheConfig()
+        self._units: dict[str, object] = {}       # cache key -> unit (memory tier)
+        self._clock_keys: list[str] = []           # circular buffer of keys
+        self._clock_counts: dict[str, int] = {}
+        self._hand = 0
+        self._mem_bytes = 0
+        self._lock = threading.RLock()
+        # disk tier: raw chunks and spilled decoded arrays
+        self._disk_raw: dict[str, bytes] = {}
+        self._disk_decoded: dict[str, tuple[np.ndarray, int]] = {}
+        self._disk_bytes = 0
+        self._disk_order: list[str] = []
+        if self.config.disk_dir:
+            os.makedirs(self.config.disk_dir, exist_ok=True)
+        self.stats = {
+            "hits": 0, "misses": 0, "evictions": 0,
+            "vertex_flushes": 0, "disk_hits": 0, "lake_fetches": 0,
+        }
+
+    # ------------------------------------------------------------------ fetch
+
+    def get_unit(
+        self,
+        ref: ChunkRef,
+        meta: ColumnFileMeta,
+        kind: str,
+        pin: bool = False,
+    ):
+        """Return the cache unit for a chunk, admitting it if necessary."""
+        key = ref.cache_key()
+        with self._lock:
+            unit = self._units.get(key)
+            if unit is not None:
+                self.stats["hits"] += 1
+                self._clock_counts[key] = unit.priority
+                if pin:
+                    unit.pinned += 1
+                return unit
+            self.stats["misses"] += 1
+            raw = self._load_raw(ref, meta)
+            chunk_meta = meta.chunk(ref.column, ref.row_group)
+            if self.config.naive_mode:
+                unit = NaiveChunkReader(ref, raw, chunk_meta.n_rows)
+            elif kind == "vertex":
+                unit = VertexCacheUnit(ref, raw, chunk_meta.n_rows)
+                spilled = self._disk_decoded.pop(key, None)
+                if spilled is not None:
+                    unit.import_decoded(*spilled)
+                    self.stats["disk_hits"] += 1
+            else:
+                unit = EdgeCacheUnit(ref, raw, chunk_meta.n_rows, window=self.config.edge_window)
+            self._admit(key, unit)
+            if pin:
+                unit.pinned += 1
+            return unit
+
+    def unpin(self, unit) -> None:
+        with self._lock:
+            unit.pinned = max(0, unit.pinned - 1)
+
+    def _load_raw(self, ref: ChunkRef, meta: ColumnFileMeta) -> bytes:
+        key = ref.cache_key()
+        raw = self._disk_raw.get(key)
+        if raw is not None:
+            self.stats["disk_hits"] += 1
+            return raw
+        chunk = meta.chunk(ref.column, ref.row_group)
+        raw = self.store.get(meta.key, offset=chunk.offset, length=chunk.length)
+        self.stats["lake_fetches"] += 1
+        self._disk_put_raw(key, raw)
+        return raw
+
+    # ----------------------------------------------------------------- memory tier
+
+    def _admit(self, key: str, unit) -> None:
+        self._units[key] = unit
+        self._clock_keys.append(key)
+        self._clock_counts[key] = unit.priority
+        self._mem_bytes += unit.nbytes()
+        self._maybe_evict()
+
+    def _maybe_evict(self) -> None:
+        # refresh byte accounting lazily: decoded arrays grow after admission
+        budget = self.config.memory_budget_bytes
+        if self.mem_bytes() <= budget:
+            return
+        sweeps = 0
+        max_sweeps = 8 * max(1, len(self._clock_keys))
+        while self.mem_bytes() > budget and self._clock_keys and sweeps < max_sweeps:
+            sweeps += 1
+            self._hand %= len(self._clock_keys)
+            key = self._clock_keys[self._hand]
+            unit = self._units[key]
+            count = self._clock_counts.get(key, 0)
+            if unit.pinned > 0:
+                self._hand += 1
+                continue
+            if count > 0:
+                self._clock_counts[key] = count - 1
+                self._hand += 1
+                continue
+            self._evict(key)
+            # hand stays: list shrank at this position
+
+    def _evict(self, key: str) -> None:
+        unit = self._units.pop(key)
+        self._clock_keys.remove(key)
+        self._clock_counts.pop(key, None)
+        self.stats["evictions"] += 1
+        if unit.kind == "vertex":
+            values, upto = unit.export_decoded()
+            if values is not None and upto > 0:
+                self._disk_put_decoded(key, values, upto)
+                self.stats["vertex_flushes"] += 1
+        # edge units: discard (raw chunk already lives on the disk tier)
+
+    def mem_bytes(self) -> int:
+        return sum(u.nbytes() for u in self._units.values())
+
+    # ----------------------------------------------------------------- disk tier
+
+    def _disk_put_raw(self, key: str, raw: bytes) -> None:
+        if key in self._disk_raw:
+            return
+        self._disk_raw[key] = raw
+        self._disk_bytes += len(raw)
+        self._disk_order.append(key)
+        self._disk_trim()
+
+    def _disk_put_decoded(self, key: str, values: np.ndarray, upto: int) -> None:
+        nbytes = values.nbytes if values.dtype != object else len(pickle.dumps(values[:upto]))
+        self._disk_decoded[key] = (values, upto)
+        self._disk_bytes += nbytes
+        self._disk_order.append("D:" + key)
+        self._disk_trim()
+
+    def _disk_trim(self) -> None:
+        while self._disk_bytes > self.config.disk_budget_bytes and self._disk_order:
+            victim = self._disk_order.pop(0)
+            if victim.startswith("D:"):
+                values, upto = self._disk_decoded.pop(victim[2:], (None, 0))
+                if values is not None:
+                    self._disk_bytes -= values.nbytes if values.dtype != object else 0
+            else:
+                raw = self._disk_raw.pop(victim, b"")
+                self._disk_bytes -= len(raw)
+
+    # ----------------------------------------------------------------- misc
+
+    def drop_memory(self) -> None:
+        """Simulate a cold restart: clear the memory tier, keep disk tier."""
+        with self._lock:
+            self._units.clear()
+            self._clock_keys.clear()
+            self._clock_counts.clear()
+            self._hand = 0
+            self._mem_bytes = 0
+
+    def drop_all(self) -> None:
+        with self._lock:
+            self.drop_memory()
+            self._disk_raw.clear()
+            self._disk_decoded.clear()
+            self._disk_bytes = 0
+            self._disk_order.clear()
+
+    def resident_keys(self) -> list[str]:
+        return list(self._units.keys())

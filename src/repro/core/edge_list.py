@@ -1,0 +1,180 @@
+"""Edge lists — GraphLake's topology representation (paper §4.1).
+
+One ``EdgeList`` per edge *file*: a pair of int64 arrays holding transformed
+(source, target) vertex IDs in the file's original row order.  Row-level
+alignment with the underlying edge table is the load-bearing property — edge
+attribute chunk row ``i`` describes edge-list entry ``i`` — so OLAP scans walk
+the list and the attribute chunks in tandem.
+
+Per-portion statistics: the list is logically split by the edge file's row
+groups; for every portion we record Min/Max of the source and target IDs
+(in dense index space).  These drive the §5.3 frontier pruning: a portion (and
+its attribute chunks) is skipped when its ID range misses the frontier's
+Min-Max envelope.
+
+Edge lists serialize to a compact binary blob and persist to the data lake
+(topology materialization, §4.2): restarted engines load blobs instead of
+rebuilding, which is the paper's fast "second connection" path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import struct
+
+import numpy as np
+
+_MAGIC = b"REL1"
+
+
+@dataclasses.dataclass
+class PortionStats:
+    row_group: int
+    first_row: int
+    n_rows: int
+    src_min: int
+    src_max: int
+    dst_min: int
+    dst_max: int
+
+
+class EdgeList:
+    """Topology of one edge file: transformed-ID pairs + portion statistics."""
+
+    def __init__(
+        self,
+        edge_type: str,
+        file_key: str,
+        src_tids: np.ndarray,
+        dst_tids: np.ndarray,
+        src_dense: np.ndarray,
+        dst_dense: np.ndarray,
+        row_group_rows: list[int],
+    ):
+        assert len(src_tids) == len(dst_tids) == len(src_dense) == len(dst_dense)
+        self.edge_type = edge_type
+        self.file_key = file_key
+        self.src_tids = np.asarray(src_tids, dtype=np.int64)
+        self.dst_tids = np.asarray(dst_tids, dtype=np.int64)
+        # dense indices are a derived, cache-friendly addressing of the same
+        # endpoints (see core.types); kept alongside so hot scans avoid the
+        # shift/mask + file-offset translation per query.
+        self.src_dense = np.asarray(src_dense, dtype=np.int64)
+        self.dst_dense = np.asarray(dst_dense, dtype=np.int64)
+        self.row_group_rows = list(row_group_rows)
+        self.portions = self._compute_portions()
+
+    # -- stats -------------------------------------------------------------------
+
+    def _compute_portions(self) -> list[PortionStats]:
+        portions = []
+        first = 0
+        for g, rows in enumerate(self.row_group_rows):
+            if rows == 0:
+                portions.append(PortionStats(g, first, 0, 0, -1, 0, -1))
+                continue
+            s = self.src_dense[first : first + rows]
+            d = self.dst_dense[first : first + rows]
+            portions.append(
+                PortionStats(
+                    row_group=g,
+                    first_row=first,
+                    n_rows=rows,
+                    src_min=int(s.min()),
+                    src_max=int(s.max()),
+                    dst_min=int(d.min()),
+                    dst_max=int(d.max()),
+                )
+            )
+            first += rows
+        return portions
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.src_tids)
+
+    def nbytes(self) -> int:
+        return (
+            self.src_tids.nbytes
+            + self.dst_tids.nbytes
+            + self.src_dense.nbytes
+            + self.dst_dense.nbytes
+        )
+
+    def portions_overlapping(
+        self, lo: int, hi: int, direction: str = "out"
+    ) -> list[PortionStats]:
+        """Portions whose source (out) / target (in) range hits [lo, hi]."""
+        out = []
+        for p in self.portions:
+            if p.n_rows == 0:
+                continue
+            pmin, pmax = (p.src_min, p.src_max) if direction == "out" else (p.dst_min, p.dst_max)
+            if pmax >= lo and pmin <= hi:
+                out.append(p)
+        return out
+
+    # -- serialization (topology materialization) ---------------------------------
+
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        ft = self.file_key.encode()
+        et = self.edge_type.encode()
+        buf.write(_MAGIC)
+        buf.write(struct.pack("<iiq", len(et), len(ft), self.n_edges))
+        buf.write(struct.pack("<i", len(self.row_group_rows)))
+        buf.write(et)
+        buf.write(ft)
+        buf.write(np.asarray(self.row_group_rows, dtype=np.int64).tobytes())
+        for arr in (self.src_tids, self.dst_tids, self.src_dense, self.dst_dense):
+            buf.write(arr.tobytes())
+        return buf.getvalue()
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "EdgeList":
+        if blob[:4] != _MAGIC:
+            raise ValueError("bad edge list magic")
+        et_len, ft_len, n_edges = struct.unpack_from("<iiq", blob, 4)
+        (n_groups,) = struct.unpack_from("<i", blob, 20)
+        off = 24
+        edge_type = blob[off : off + et_len].decode(); off += et_len
+        file_key = blob[off : off + ft_len].decode(); off += ft_len
+        rows = np.frombuffer(blob, dtype=np.int64, count=n_groups, offset=off)
+        off += n_groups * 8
+        arrays = []
+        for _ in range(4):
+            arrays.append(np.frombuffer(blob, dtype=np.int64, count=n_edges, offset=off).copy())
+            off += n_edges * 8
+        return EdgeList(edge_type, file_key, arrays[0], arrays[1], arrays[2], arrays[3], rows.tolist())
+
+
+def build_edge_list(
+    edge_type: str,
+    file_key: str,
+    src_raw: np.ndarray,
+    dst_raw: np.ndarray,
+    row_group_rows: list[int],
+    idm,
+    src_type: str,
+    dst_type: str,
+    tid_to_dense,
+) -> EdgeList:
+    """Translate one edge file's FK columns into an EdgeList (paper §4.3).
+
+    ``idm`` is the (frozen) VertexIDM; ``tid_to_dense(vertex_type, tids)``
+    converts transformed IDs to dense indices (provided by the topology, which
+    owns the file registry).  Each call is independent -> edge files build in
+    parallel, lock-free on the primary path.
+    """
+    src_tids = idm.translate(src_type, src_raw)
+    dst_tids = idm.translate(dst_type, dst_raw)
+    return EdgeList(
+        edge_type=edge_type,
+        file_key=file_key,
+        src_tids=src_tids,
+        dst_tids=dst_tids,
+        src_dense=tid_to_dense(src_type, src_tids),
+        dst_dense=tid_to_dense(dst_type, dst_tids),
+        row_group_rows=row_group_rows,
+    )

@@ -1,0 +1,237 @@
+"""Lakehouse-optimized parallel primitives: VertexMap and EdgeScan (paper §6.1).
+
+Both primitives materialize rows through graph-aware cache units and run
+vectorized UDFs.  The paper's per-thread loops become block-vectorized numpy
+over (file x row-group) tasks — the TPU-idiomatic masking formulation of the
+same computation (see DESIGN.md §2).
+
+``EdgeScan`` is edge-centric: it scans edge lists sequentially, keeps
+row-level alignment with edge-attribute chunks, prunes portions by frontier
+Min-Max, supports bidirectional traversal with no extra storage (swap the
+roles of the two stored endpoints), and fully materializes the (u, v, edge)
+rows that survive the frontier test before applying UDFs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cache.manager import CacheManager
+from repro.core.cache.units import ChunkRef
+from repro.core.types import VSet
+
+
+# ---------------------------------------------------------------------------
+# value-reader helpers
+# ---------------------------------------------------------------------------
+
+def read_vertex_values(
+    topology, cache: CacheManager, vertex_type: str, dense_ids: np.ndarray, column: str
+) -> np.ndarray:
+    """Materialize one vertex column for arbitrary dense IDs (point lookups).
+
+    Groups the request by (file, row group) and reads each group through its
+    VertexCacheUnit, then scatters results back into request order.
+    """
+    dense_ids = np.asarray(dense_ids, dtype=np.int64)
+    out: Optional[np.ndarray] = None
+    if len(dense_ids) == 0:
+        return np.empty(0, dtype=np.float64)
+    file_ids, rows = topology.dense_to_file_row(vertex_type, dense_ids)
+    for fid in np.unique(file_ids):
+        finfo = topology.file_registry.get(int(fid))
+        if finfo is None:  # dangling vertices have no attributes
+            continue
+        meta = topology.vertex_file_metas[finfo.key]
+        sel_f = file_ids == fid
+        rows_f = rows[sel_f]
+        idx_f = np.flatnonzero(sel_f)
+        for g in meta.row_groups:
+            in_g = (rows_f >= g.first_row) & (rows_f < g.first_row + g.n_rows)
+            if not in_g.any():
+                continue
+            unit = cache.get_unit(ChunkRef(finfo.key, column, g.index), meta, "vertex")
+            vals = unit.read(rows_f[in_g] - g.first_row)
+            if out is None:
+                out = np.empty(len(dense_ids), dtype=vals.dtype)
+                if vals.dtype == object:
+                    out[:] = ""
+                else:
+                    out[:] = 0
+            out[idx_f[in_g]] = vals
+    if out is None:
+        out = np.zeros(len(dense_ids), dtype=np.float64)
+    return out
+
+
+def read_edge_values(
+    topology, cache: CacheManager, edge_list, local_rows: np.ndarray, column: str
+) -> np.ndarray:
+    """Materialize one edge column for rows of one edge file (scan-aligned)."""
+    meta = topology.edge_file_metas[edge_list.file_key]
+    local_rows = np.asarray(local_rows, dtype=np.int64)
+    out: Optional[np.ndarray] = None
+    first = 0
+    for g in meta.row_groups:
+        in_g = (local_rows >= g.first_row) & (local_rows < g.first_row + g.n_rows)
+        if in_g.any():
+            unit = cache.get_unit(ChunkRef(edge_list.file_key, column, g.index), meta, "edge")
+            vals = unit.read(local_rows[in_g] - g.first_row)
+            if out is None:
+                out = np.empty(len(local_rows), dtype=vals.dtype)
+                if vals.dtype == object:
+                    out[:] = ""
+                else:
+                    out[:] = 0
+            out[np.flatnonzero(in_g)] = vals
+        first += g.n_rows
+    if out is None:
+        out = np.zeros(len(local_rows), dtype=np.float64)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# VertexMap
+# ---------------------------------------------------------------------------
+
+def vertex_map(
+    topology,
+    cache: CacheManager,
+    vset: VSet,
+    columns: Sequence[str] = (),
+    filter_fn: Optional[Callable[[dict], np.ndarray]] = None,
+    map_fn: Optional[Callable[[dict], np.ndarray]] = None,
+    prefetcher=None,
+):
+    """Apply a UDF over an active vertex set (paper §6.1).
+
+    Returns ``(VSet, values)``: the filtered subset (if ``filter_fn``) and the
+    per-active-vertex ``map_fn`` output (if given).  The UDF receives a dict
+    ``{"id": dense ids, <col>: values...}`` — fully materialized vertex rows.
+    """
+    if prefetcher is not None:
+        prefetcher.prefetch_vertices(vset, columns)
+    ids = vset.ids()
+    frame = {"id": ids}
+    for col in columns:
+        frame[col] = read_vertex_values(topology, cache, vset.vertex_type, ids, col)
+    out_vals = map_fn(frame) if map_fn is not None else None
+    if filter_fn is not None:
+        keep = np.asarray(filter_fn(frame), dtype=bool)
+        new = VSet.from_dense_ids(vset.vertex_type, len(vset.mask), ids[keep])
+        if out_vals is not None:
+            out_vals = out_vals[keep]
+        return new, out_vals
+    return vset, out_vals
+
+
+# ---------------------------------------------------------------------------
+# EdgeScan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EdgeFrame:
+    """Materialized, filtered edge rows from one EdgeScan."""
+
+    u: np.ndarray                 # frontier-side dense endpoint IDs
+    v: np.ndarray                 # far-side dense endpoint IDs
+    u_type: str
+    v_type: str
+    columns: dict[str, np.ndarray]  # "e.X" / "u.X" / "v.X"
+
+    def __len__(self) -> int:
+        return len(self.u)
+
+    def v_set(self, n: int) -> VSet:
+        return VSet.from_dense_ids(self.v_type, n, np.unique(self.v))
+
+    def u_set(self, n: int) -> VSet:
+        return VSet.from_dense_ids(self.u_type, n, np.unique(self.u))
+
+
+def edge_scan(
+    topology,
+    cache: CacheManager,
+    frontier: VSet,
+    edge_type: str,
+    direction: str = "out",
+    edge_columns: Sequence[str] = (),
+    u_columns: Sequence[str] = (),
+    v_columns: Sequence[str] = (),
+    edge_filter: Optional[Callable[[dict], np.ndarray]] = None,
+    prefetcher=None,
+    read_v_values: Optional[Callable[[str, np.ndarray, str], np.ndarray]] = None,
+) -> EdgeFrame:
+    """Edge-centric scan over edge lists incident to ``frontier`` (paper §6.1).
+
+    ``direction="out"`` treats stored (first, second) IDs as (u=src, v=dst);
+    ``direction="in"`` swaps roles — bidirectional traversal without storing
+    reverse edges.  ``edge_filter`` sees the full materialized frame and
+    returns a keep-mask (cross-entity predicates welcome).
+
+    ``read_v_values`` overrides far-side attribute reads — the distributed
+    engine injects the two-pass remote fetch here (paper §6.2).
+    """
+    et = topology.schema.edge_types[edge_type]
+    if direction == "out":
+        u_type, v_type = et.src_type, et.dst_type
+    else:
+        u_type, v_type = et.dst_type, et.src_type
+
+    if prefetcher is not None:
+        prefetcher.prefetch_edges(frontier, edge_type, edge_columns, direction=direction)
+        prefetcher.prefetch_vertices(frontier, u_columns)
+
+    lo, hi = frontier.min_max()
+    mask_arr = frontier.mask
+
+    parts_u, parts_v, parts_cols = [], [], {f"e.{c}": [] for c in edge_columns}
+    for el in topology.all_edge_lists(edge_type):
+        u_dense_all = el.src_dense if direction == "out" else el.dst_dense
+        v_dense_all = el.dst_dense if direction == "out" else el.src_dense
+        # Min-Max portion pruning (paper §5.3): skip portions that cannot
+        # intersect the frontier envelope.
+        for p in el.portions_overlapping(lo, hi, direction=direction):
+            sl = slice(p.first_row, p.first_row + p.n_rows)
+            u_dense = u_dense_all[sl]
+            hit = mask_arr[u_dense]
+            if not hit.any():
+                continue
+            rows_local = p.first_row + np.flatnonzero(hit)
+            parts_u.append(u_dense[hit])
+            parts_v.append(v_dense_all[sl][hit])
+            for c in edge_columns:
+                parts_cols[f"e.{c}"].append(
+                    read_edge_values(topology, cache, el, rows_local, c)
+                )
+
+    if parts_u:
+        u = np.concatenate(parts_u)
+        v = np.concatenate(parts_v)
+        columns = {k: np.concatenate(vs) for k, vs in parts_cols.items()}
+    else:
+        u = np.empty(0, dtype=np.int64)
+        v = np.empty(0, dtype=np.int64)
+        columns = {k: np.empty(0) for k in parts_cols}
+
+    # endpoint materialization (vertex rows via graph-aware cache units)
+    for c in u_columns:
+        columns[f"u.{c}"] = read_vertex_values(topology, cache, u_type, u, c)
+    for c in v_columns:
+        if read_v_values is not None:
+            columns[f"v.{c}"] = read_v_values(v_type, v, c)
+        else:
+            columns[f"v.{c}"] = read_vertex_values(topology, cache, v_type, v, c)
+
+    frame = dict(columns)
+    frame["u"] = u
+    frame["v"] = v
+    if edge_filter is not None and len(u):
+        keep = np.asarray(edge_filter(frame), dtype=bool)
+        u, v = u[keep], v[keep]
+        columns = {k: vals[keep] for k, vals in columns.items()}
+
+    return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns)

@@ -1,0 +1,278 @@
+"""Declarative multi-hop pattern queries — the GSQL-block analogue (paper §6).
+
+A query is a sequence of blocks; each block takes an input vertex set,
+traverses one edge type (VertexMap + EdgeScan underneath), applies WHERE
+predicates over edge/endpoint columns, optionally updates ACCUM state on an
+endpoint, and yields the next vertex set.  The paper's running example
+
+    SELECT p FROM (t:Tag) <-[e1:HasTag]- (c:Comment) -[e2:HasCreator]-> (p:Person)
+    WHERE t.name == "Music" AND e2.date > ... AND p.gender == "Female"
+    ACCUM p.@sum += 1
+
+is expressed as::
+
+    q = (Query(engine)
+         .vertices("Tag", where=eq("name", "Music"))
+         .hop("HasTag", direction="in")
+         .hop("HasCreator", direction="out",
+              edge_where=gt("date", d), target_where=eq("gender", "Female"),
+              accum=accum_sum("cnt", 1.0)))
+    result = q.run()
+
+Predicates compose with ``&`` / ``|``; they compile to vectorized masks over
+materialized frames.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.types import VSet
+
+
+# ---------------------------------------------------------------------------
+# predicates
+# ---------------------------------------------------------------------------
+
+class Predicate:
+    """Vectorized predicate over a named column of a materialized frame."""
+
+    def __init__(self, fn: Callable[[dict, str], np.ndarray], columns: tuple[str, ...]):
+        self._fn = fn
+        self.columns = columns  # bare column names this predicate touches
+
+    def evaluate(self, frame: dict, prefix: str) -> np.ndarray:
+        return self._fn(frame, prefix)
+
+    def __and__(self, other: "Predicate") -> "Predicate":
+        return Predicate(
+            lambda f, p: self.evaluate(f, p) & other.evaluate(f, p),
+            self.columns + other.columns,
+        )
+
+    def __or__(self, other: "Predicate") -> "Predicate":
+        return Predicate(
+            lambda f, p: self.evaluate(f, p) | other.evaluate(f, p),
+            self.columns + other.columns,
+        )
+
+
+def _col(frame: dict, prefix: str, column: str) -> np.ndarray:
+    key = f"{prefix}.{column}" if prefix else column
+    if key in frame:
+        return frame[key]
+    return frame[column]
+
+
+def _cmp(column: str, op: Callable) -> Callable[..., Predicate]:
+    def make(value) -> Predicate:
+        def fn(frame, prefix):
+            col = _col(frame, prefix, column)
+            if col.dtype == object:
+                col = np.asarray([str(x) for x in col])
+                return op(col, str(value))
+            return op(col, value)
+        return Predicate(fn, (column,))
+    return make
+
+
+def eq(column: str, value) -> Predicate:
+    return _cmp(column, np.equal)(value)
+
+
+def ne(column: str, value) -> Predicate:
+    return _cmp(column, np.not_equal)(value)
+
+
+def gt(column: str, value) -> Predicate:
+    return _cmp(column, np.greater)(value)
+
+
+def ge(column: str, value) -> Predicate:
+    return _cmp(column, np.greater_equal)(value)
+
+
+def lt(column: str, value) -> Predicate:
+    return _cmp(column, np.less)(value)
+
+
+def le(column: str, value) -> Predicate:
+    return _cmp(column, np.less_equal)(value)
+
+
+def isin(column: str, values) -> Predicate:
+    values = set(values)
+
+    def fn(frame, prefix):
+        col = _col(frame, prefix, column)
+        return np.asarray([x in values for x in col.tolist()])
+
+    return Predicate(fn, (column,))
+
+
+# ---------------------------------------------------------------------------
+# accumulate specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AccumUpdate:
+    name: str
+    op: str                     # sum | max | min | or
+    value: object               # constant, or "e.col"/"u.col"/"v.col" reference
+    target: str = "v"           # which endpoint receives the update ("u"|"v")
+    dtype: str = "float64"
+
+
+def accum_sum(name: str, value=1.0, target: str = "v") -> AccumUpdate:
+    return AccumUpdate(name=name, op="sum", value=value, target=target)
+
+
+def accum_max(name: str, value, target: str = "v") -> AccumUpdate:
+    return AccumUpdate(name=name, op="max", value=value, target=target)
+
+
+def accum_min(name: str, value, target: str = "v") -> AccumUpdate:
+    return AccumUpdate(name=name, op="min", value=value, target=target)
+
+
+# ---------------------------------------------------------------------------
+# query blocks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SeedBlock:
+    vertex_type: str
+    where: Optional[Predicate]
+    raw_ids: Optional[np.ndarray]
+
+
+@dataclasses.dataclass
+class _HopBlock:
+    edge_type: str
+    direction: str
+    edge_where: Optional[Predicate]
+    source_where: Optional[Predicate]
+    target_where: Optional[Predicate]
+    accum: Optional[AccumUpdate]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    vset: VSet
+    accumulators: dict[str, np.ndarray]
+    n_edges_scanned: int
+    frames: list
+
+
+class Query:
+    def __init__(self, engine):
+        self.engine = engine
+        self._seed: Optional[_SeedBlock] = None
+        self._hops: list[_HopBlock] = []
+
+    # -- builders ---------------------------------------------------------------
+
+    def vertices(self, vertex_type: str, where: Optional[Predicate] = None,
+                 raw_ids=None) -> "Query":
+        self._seed = _SeedBlock(vertex_type, where,
+                                None if raw_ids is None else np.asarray(raw_ids))
+        return self
+
+    def hop(
+        self,
+        edge_type: str,
+        direction: str = "out",
+        edge_where: Optional[Predicate] = None,
+        source_where: Optional[Predicate] = None,
+        target_where: Optional[Predicate] = None,
+        accum: Optional[AccumUpdate] = None,
+    ) -> "Query":
+        self._hops.append(
+            _HopBlock(edge_type, direction, edge_where, source_where, target_where, accum)
+        )
+        return self
+
+    # -- execution ----------------------------------------------------------------
+
+    def run(self) -> QueryResult:
+        eng = self.engine
+        seed = self._seed
+        if seed is None:
+            raise ValueError("query has no seed block")
+
+        if seed.raw_ids is not None:
+            vset = eng.vset_from_raw_ids(seed.vertex_type, seed.raw_ids)
+        else:
+            vset = eng.all_vertices(seed.vertex_type)
+        if seed.where is not None:
+            vset, _ = eng.vertex_map(
+                vset,
+                columns=list(dict.fromkeys(seed.where.columns)),
+                filter_fn=lambda fr: seed.where.evaluate(fr, ""),
+            )
+
+        accum_out: dict[str, np.ndarray] = {}
+        frames = []
+        n_scanned = 0
+        for hop_i, hop in enumerate(self._hops):
+            et = eng.schema.edge_types[hop.edge_type]
+            u_type = et.src_type if hop.direction == "out" else et.dst_type
+            v_type = et.dst_type if hop.direction == "out" else et.src_type
+
+            edge_cols, u_cols, v_cols = set(), set(), set()
+            if hop.edge_where is not None:
+                edge_cols.update(hop.edge_where.columns)
+            if hop.source_where is not None:
+                u_cols.update(hop.source_where.columns)
+            if hop.target_where is not None:
+                v_cols.update(hop.target_where.columns)
+            if hop.accum is not None and isinstance(hop.accum.value, str):
+                pfx, col = hop.accum.value.split(".", 1)
+                {"e": edge_cols, "u": u_cols, "v": v_cols}[pfx].add(col)
+
+            def _filter(frame, hop=hop):
+                n = len(frame["u"])
+                keep = np.ones(n, dtype=bool)
+                if hop.edge_where is not None:
+                    keep &= hop.edge_where.evaluate(frame, "e")
+                if hop.source_where is not None:
+                    keep &= hop.source_where.evaluate(frame, "u")
+                if hop.target_where is not None:
+                    keep &= hop.target_where.evaluate(frame, "v")
+                return keep
+
+            frame = eng.edge_scan(
+                vset, hop.edge_type, hop.direction,
+                edge_columns=sorted(edge_cols),
+                u_columns=sorted(u_cols),
+                v_columns=sorted(v_cols),
+                edge_filter=_filter,
+            )
+            n_scanned += len(frame)
+            frames.append(frame)
+
+            if hop.accum is not None:
+                a = hop.accum
+                if a.target == "v":
+                    tgt_type, tgt_ids = v_type, frame.v
+                else:
+                    tgt_type, tgt_ids = u_type, frame.u
+                if (tgt_type, a.name) not in eng.accums._arrays:
+                    eng.register_accum(tgt_type, a.name, op=a.op, dtype=a.dtype)
+                if isinstance(a.value, str):
+                    pfx, col = a.value.split(".", 1)
+                    vals = frame.columns[f"{pfx}.{col}"]
+                else:
+                    vals = a.value
+                eng.accums.update(tgt_type, a.name, tgt_ids, vals)
+                accum_out[a.name] = eng.accums.array(tgt_type, a.name)
+
+            n_v = eng.topology.n_vertices(v_type)
+            vset = frame.v_set(n_v)
+
+        return QueryResult(
+            vset=vset, accumulators=accum_out, n_edges_scanned=n_scanned, frames=frames
+        )

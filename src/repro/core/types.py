@@ -1,0 +1,182 @@
+"""Core types for the GraphLake engine.
+
+Transformed vertex IDs (paper §4.1): 64-bit integers whose upper 32 bits hold
+a globally unique *file ID* and whose lower 32 bits hold the row index inside
+that file.  They make vertex-attribute lookup a direct (file, row) address —
+no scan over vertex files — and they are what edge lists store.
+
+The *dense index space* is a derived convenience this implementation adds:
+each vertex type lays its files out contiguously (file registration order), so
+``dense = file_offset[file] + row``.  Dense indices are what accumulators,
+frontier bitmaps and the JAX kernels use (TPU-friendly contiguous addressing);
+transformed IDs remain the on-disk / in-edge-list representation exactly as in
+the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# reserved file ID for dangling raw IDs (paper §4.3)
+DANGLING_FILE_ID = 0
+ROW_BITS = 32
+ROW_MASK = (1 << ROW_BITS) - 1
+
+
+def make_transformed(file_id, row_index):
+    """(file_id, row) -> transformed 64-bit ID.  Vectorized over numpy inputs."""
+    return (np.asarray(file_id, dtype=np.int64) << ROW_BITS) | np.asarray(
+        row_index, dtype=np.int64
+    )
+
+
+def split_transformed(tid):
+    """transformed ID -> (file_id, row).  Vectorized."""
+    tid = np.asarray(tid, dtype=np.int64)
+    return (tid >> ROW_BITS).astype(np.int64), (tid & ROW_MASK).astype(np.int64)
+
+
+@dataclasses.dataclass
+class VertexFileInfo:
+    """Registry entry for one vertex data file."""
+
+    file_id: int           # globally unique (upper 32 bits of transformed IDs)
+    vertex_type: str
+    key: str               # object-store key of the data file
+    ordinal: int           # position within the vertex type's file list
+    n_rows: int
+    dense_offset: int      # first dense index of this file within the type
+
+
+@dataclasses.dataclass
+class VertexTypeInfo:
+    name: str
+    table: str
+    primary_key: str
+    files: list[VertexFileInfo] = dataclasses.field(default_factory=list)
+    n_vertices: int = 0     # includes implicit (dangling) vertices
+
+    def file_by_id(self, file_id: int) -> VertexFileInfo:
+        for f in self.files:
+            if f.file_id == file_id:
+                return f
+        raise KeyError(file_id)
+
+
+@dataclasses.dataclass
+class EdgeTypeInfo:
+    name: str
+    table: str
+    src_type: str
+    dst_type: str
+    src_column: str         # FK column holding raw source-vertex IDs
+    dst_column: str         # FK column holding raw target-vertex IDs
+
+
+@dataclasses.dataclass
+class GraphSchema:
+    """Mapping of Lakehouse tables to a labeled property graph (paper §3)."""
+
+    vertex_types: dict[str, EdgeTypeInfo | VertexTypeInfo] | dict
+    edge_types: dict[str, EdgeTypeInfo]
+
+    def __init__(
+        self,
+        vertex_types: Optional[dict[str, VertexTypeInfo]] = None,
+        edge_types: Optional[dict[str, EdgeTypeInfo]] = None,
+    ):
+        self.vertex_types = vertex_types or {}
+        self.edge_types = edge_types or {}
+
+    def add_vertex_type(self, name: str, table: str, primary_key: str) -> VertexTypeInfo:
+        info = VertexTypeInfo(name=name, table=table, primary_key=primary_key)
+        self.vertex_types[name] = info
+        return info
+
+    def add_edge_type(
+        self,
+        name: str,
+        table: str,
+        src_type: str,
+        dst_type: str,
+        src_column: str,
+        dst_column: str,
+    ) -> EdgeTypeInfo:
+        info = EdgeTypeInfo(
+            name=name,
+            table=table,
+            src_type=src_type,
+            dst_type=dst_type,
+            src_column=src_column,
+            dst_column=dst_column,
+        )
+        self.edge_types[name] = info
+        return info
+
+
+class VSet:
+    """An active vertex set: per-type dense bitmap, segmented by vertex file.
+
+    The paper stores these as compressed per-file bitmaps; we hold one boolean
+    array per vertex type over the dense index space (files are contiguous
+    slices of it, so per-file segmentation is a view, not a copy).
+    """
+
+    def __init__(self, vertex_type: str, mask: np.ndarray):
+        self.vertex_type = vertex_type
+        self.mask = np.asarray(mask, dtype=bool)
+
+    @staticmethod
+    def empty(vertex_type: str, n: int) -> "VSet":
+        return VSet(vertex_type, np.zeros(n, dtype=bool))
+
+    @staticmethod
+    def full(vertex_type: str, n: int) -> "VSet":
+        return VSet(vertex_type, np.ones(n, dtype=bool))
+
+    @staticmethod
+    def from_dense_ids(vertex_type: str, n: int, ids: np.ndarray) -> "VSet":
+        m = np.zeros(n, dtype=bool)
+        m[np.asarray(ids, dtype=np.int64)] = True
+        return VSet(vertex_type, m)
+
+    # -- set algebra (GSQL UNION / INTERSECT / MINUS) -------------------------
+
+    def union(self, other: "VSet") -> "VSet":
+        self._check(other)
+        return VSet(self.vertex_type, self.mask | other.mask)
+
+    def intersect(self, other: "VSet") -> "VSet":
+        self._check(other)
+        return VSet(self.vertex_type, self.mask & other.mask)
+
+    def minus(self, other: "VSet") -> "VSet":
+        self._check(other)
+        return VSet(self.vertex_type, self.mask & ~other.mask)
+
+    def _check(self, other: "VSet") -> None:
+        if other.vertex_type != self.vertex_type:
+            raise ValueError(
+                f"vertex set type mismatch: {self.vertex_type} vs {other.vertex_type}"
+            )
+
+    # -- helpers ---------------------------------------------------------------
+
+    def ids(self) -> np.ndarray:
+        return np.flatnonzero(self.mask)
+
+    def size(self) -> int:
+        return int(self.mask.sum())
+
+    def __len__(self) -> int:
+        return self.size()
+
+    def min_max(self) -> tuple[int, int]:
+        """Dense-index Min-Max of the frontier (drives prefetch pruning)."""
+        ids = self.ids()
+        if len(ids) == 0:
+            return (0, -1)
+        return int(ids[0]), int(ids[-1])

@@ -1,0 +1,9 @@
+"""Dataset generation + input pipelines.
+
+- ``ldbc``     — LDBC_SNB-style social network generator (scale-factor param),
+                 written into Lakehouse tables (the paper's primary workload),
+- ``graph500`` — RMAT generator (Graph500/Graphalytics-style, Table 2),
+- ``synthetic``— token/recsys/molecule data for the assigned architectures,
+- ``sampler``  — fanout neighbor sampler (minibatch GNN training),
+- ``pipeline`` — deterministic, resumable, sharded training data pipeline.
+"""

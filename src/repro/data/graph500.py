@@ -1,0 +1,78 @@
+"""RMAT graph generator (Graph500 / LDBC Graphalytics style, paper §7.4).
+
+Kronecker R-MAT with the Graph500 parameters (A=0.57, B=0.19, C=0.19), edge
+factor 16 (the paper's Graph500-22 has 2.4M vertices / 64.2M edges; we scale
+down with the same proportions).  Written as a single-vertex-type graph:
+
+    Node(id)
+    Node_Edge_Node(src, dst, weight)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import GraphSchema
+from repro.lakehouse.objectstore import ObjectStore
+from repro.lakehouse.table import ColumnSpec, TableSchema
+from repro.lakehouse.writer import write_table
+
+
+def rmat_edges(scale: int, edge_factor: int = 16, seed: int = 1,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19) -> tuple[np.ndarray, np.ndarray]:
+    """Generate 2^scale vertices, edge_factor * 2^scale edges (vectorized)."""
+    rng = np.random.default_rng(seed)
+    n_edges = edge_factor * (1 << scale)
+    src = np.zeros(n_edges, dtype=np.int64)
+    dst = np.zeros(n_edges, dtype=np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(n_edges)
+        right = (r >= a) & (r < ab)          # quadrant B: dst bit set
+        down = (r >= ab) & (r < abc)         # quadrant C: src bit set
+        both = r >= abc                      # quadrant D: both bits set
+        src |= ((down | both).astype(np.int64)) << bit
+        dst |= ((right | both).astype(np.int64)) << bit
+    return src, dst
+
+
+def graph500_schema() -> GraphSchema:
+    g = GraphSchema()
+    g.add_vertex_type("Node", table="Node", primary_key="id")
+    g.add_edge_type("Edge", table="Node_Edge_Node", src_type="Node",
+                    dst_type="Node", src_column="src", dst_column="dst")
+    return g
+
+
+def generate_graph500(
+    store: ObjectStore,
+    scale: int = 12,
+    edge_factor: int = 16,
+    n_files: int = 4,
+    row_group_rows: int = 65536,
+    seed: int = 1,
+    sort_by_src: bool = True,
+) -> GraphSchema:
+    src, dst = rmat_edges(scale, edge_factor, seed)
+    n = 1 << scale
+    node_ids = np.arange(n, dtype=np.int64)
+    write_table(
+        store,
+        TableSchema("Node", [ColumnSpec("id", "int64", role="primary_key")]),
+        {"id": node_ids}, n_files=max(1, n_files // 2), row_group_rows=row_group_rows,
+    )
+    if sort_by_src:
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+    rng = np.random.default_rng(seed + 1)
+    write_table(
+        store,
+        TableSchema("Node_Edge_Node", [
+            ColumnSpec("src", "int64", role="foreign_key"),
+            ColumnSpec("dst", "int64", role="foreign_key"),
+            ColumnSpec("weight", "float64"),
+        ]),
+        {"src": src, "dst": dst, "weight": rng.random(len(src))},
+        n_files=n_files, row_group_rows=row_group_rows,
+    )
+    return graph500_schema()

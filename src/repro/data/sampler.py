@@ -1,0 +1,101 @@
+"""Fanout neighbor sampler for minibatch GNN training (minibatch_lg shape).
+
+GraphSAGE-style layered sampling over a CSR adjacency: for each seed batch,
+sample up to ``fanout[l]`` neighbors per node at hop ``l``, relabel to a
+compact padded subgraph (fixed shapes for jit), and emit the batch dict the
+GNN archs consume.  The sampler is deterministic in (seed, step) — the
+stateless-pipeline contract — and runs on hosts (it is part of the data
+pipeline, exactly where real systems put it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SampledSubgraph:
+    src: np.ndarray            # (E_pad,) compact edge endpoints
+    dst: np.ndarray
+    edge_mask: np.ndarray      # (E_pad,)
+    node_ids: np.ndarray       # (N_pad,) original ids of compact nodes (-1 pad)
+    node_mask: np.ndarray      # (N_pad,)
+    seed_rows: np.ndarray      # (B,) compact indices of the seed nodes
+
+
+class NeighborSampler:
+    def __init__(self, src: np.ndarray, dst: np.ndarray, n_nodes: int):
+        """Builds CSR over (src -> dst) once; sampling reuses it."""
+        order = np.argsort(src, kind="stable")
+        self.dst_sorted = np.ascontiguousarray(dst[order]).astype(np.int64)
+        counts = np.bincount(src, minlength=n_nodes)
+        self.indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.cumsum(counts, out=self.indptr[1:])
+        self.n_nodes = n_nodes
+
+    def _sample_neighbors(self, rng, nodes: np.ndarray, fanout: int):
+        """For each node, sample up to `fanout` out-neighbors (vectorized)."""
+        starts = self.indptr[nodes]
+        degs = self.indptr[nodes + 1] - starts
+        take = np.minimum(degs, fanout)
+        total = int(take.sum())
+        if total == 0:
+            return (np.empty(0, np.int64),) * 2
+        # random offsets within each adjacency range
+        reps = np.repeat(np.arange(len(nodes)), take)
+        offs = (rng.random(total) * degs[reps]).astype(np.int64)
+        nbrs = self.dst_sorted[starts[reps] + offs]
+        return np.repeat(nodes, take), nbrs
+
+    def sample(
+        self,
+        seeds: np.ndarray,
+        fanout: tuple[int, ...],
+        n_pad: int,
+        e_pad: int,
+        seed: int = 0,
+    ) -> SampledSubgraph:
+        rng = np.random.default_rng(seed)
+        frontier = np.unique(seeds)
+        all_nodes = [frontier]
+        all_src, all_dst = [], []
+        for f in fanout:
+            u, v = self._sample_neighbors(rng, frontier, f)
+            all_src.append(v)   # message flows neighbor -> node
+            all_dst.append(u)
+            frontier = np.unique(v)
+            all_nodes.append(frontier)
+
+        nodes = np.unique(np.concatenate(all_nodes))
+        src = np.concatenate(all_src) if all_src else np.empty(0, np.int64)
+        dst = np.concatenate(all_dst) if all_dst else np.empty(0, np.int64)
+        if len(nodes) > n_pad:
+            # cap: keep seeds + earliest-sampled nodes; drop edges touching cut
+            keep = set(nodes[:n_pad].tolist()) | set(seeds.tolist())
+            nodes = np.array(sorted(keep))[:n_pad]
+            in_keep = np.isin(src, nodes) & np.isin(dst, nodes)
+            src, dst = src[in_keep], dst[in_keep]
+        if len(src) > e_pad:
+            src, dst = src[:e_pad], dst[:e_pad]
+
+        # relabel to compact ids
+        lut = {int(n): i for i, n in enumerate(nodes)}
+        c_src = np.fromiter((lut[int(s)] for s in src), np.int64, len(src))
+        c_dst = np.fromiter((lut[int(d)] for d in dst), np.int64, len(dst))
+
+        node_ids = np.full(n_pad, -1, dtype=np.int64)
+        node_ids[: len(nodes)] = nodes
+        node_mask = node_ids >= 0
+        out_src = np.zeros(e_pad, dtype=np.int32)
+        out_dst = np.zeros(e_pad, dtype=np.int32)
+        out_src[: len(c_src)] = c_src
+        out_dst[: len(c_dst)] = c_dst
+        edge_mask = np.zeros(e_pad, dtype=bool)
+        edge_mask[: len(c_src)] = True
+        seed_rows = np.fromiter((lut[int(s)] for s in seeds), np.int64, len(seeds))
+        return SampledSubgraph(
+            src=out_src, dst=out_dst, edge_mask=edge_mask,
+            node_ids=node_ids, node_mask=node_mask, seed_rows=seed_rows,
+        )

@@ -1,0 +1,36 @@
+"""Synthetic dataset helpers (tokens / clicks / molecules).
+
+Token and recsys batch makers live in ``repro.data.pipeline`` (the stateless
+pipeline contract); this module adds the batched-small-graph (molecule)
+generator used by examples and re-exports the others for a single entry point.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.pipeline import lm_batch_maker, recsys_batch_maker  # noqa: F401
+
+
+def molecule_batch(n_graphs: int = 32, nodes_per: int = 24, edges_per: int = 52,
+                   n_atom_types: int = 20, seed: int = 0) -> dict:
+    """A batch of disjoint random molecules in block-diagonal layout."""
+    rng = np.random.default_rng(seed)
+    n = n_graphs * nodes_per
+    e = n_graphs * edges_per
+    src = np.empty(e, np.int32)
+    dst = np.empty(e, np.int32)
+    for g in range(n_graphs):
+        lo = g * nodes_per
+        src[g * edges_per:(g + 1) * edges_per] = lo + rng.integers(0, nodes_per, edges_per)
+        dst[g * edges_per:(g + 1) * edges_per] = lo + rng.integers(0, nodes_per, edges_per)
+    return {
+        "z": rng.integers(0, n_atom_types, n).astype(np.int32),
+        "pos": (rng.standard_normal((n, 3)) * 2).astype(np.float32),
+        "x": rng.standard_normal((n, 16)).astype(np.float32),
+        "src": src, "dst": dst,
+        "edge_mask": np.ones(e, bool), "node_mask": np.ones(n, bool),
+        "graph_ids": np.repeat(np.arange(n_graphs), nodes_per).astype(np.int32),
+        "graph_mask": np.ones(n_graphs, bool),
+        "targets": rng.standard_normal(n_graphs).astype(np.float32),
+    }

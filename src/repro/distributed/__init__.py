@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, collectives, compression, fault
+tolerance, and the elastic mesh helpers."""

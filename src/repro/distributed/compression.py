@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback (DESIGN.md §6).
+
+Int8 uniform quantization per-leaf with max-abs scaling, plus an error-
+feedback residual so compression noise is unbiased across steps (1-bit
+Adam / EF-SGD family).  Intended for the cross-pod gradient reduction where
+links are scarce: quantize -> all-reduce int8 payload -> dequantize.  In
+single-process runs the quantize/dequantize pair is applied to the gradient
+tree (the all-reduce is implicit in data-parallel pjit), which preserves the
+numerics the multi-pod deployment would see.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedbackCompressor:
+    """Stateful gradient-tree compressor with error feedback.
+
+    Usage: ``grads, self.residual = compressor(grads, residual)`` — the
+    returned grads are the dequantized (what every pod would see after the
+    compressed all-reduce); the residual carries the quantization error into
+    the next step.
+    """
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+
+    def init_residual(self, grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads)
+
+    def __call__(self, grads: Any, residual: Optional[Any] = None):
+        if not self.enabled:
+            return grads, residual
+
+        def _one(g, r):
+            g32 = g.astype(jnp.float32) + (0.0 if r is None else r)
+            q, scale = quantize_int8(g32)
+            deq = dequantize_int8(q, scale)
+            return deq.astype(g.dtype), g32 - deq
+
+        if residual is None:
+            residual = self.init_residual(grads)
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = treedef.flatten_up_to(residual)
+        pairs = [_one(g, r) for g, r in zip(flat_g, flat_r)]
+        new_g = treedef.unflatten([p[0] for p in pairs])
+        new_r = treedef.unflatten([p[1] for p in pairs])
+        return new_g, new_r
+
+
+def compression_ratio(grads: Any) -> float:
+    """Bytes saved by int8 vs the native dtype (for logging)."""
+    native = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    compressed = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    return native / max(compressed, 1)

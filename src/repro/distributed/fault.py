@@ -1,0 +1,95 @@
+"""Fault tolerance: heartbeats, straggler detection, preemption handling
+(DESIGN.md §6).
+
+On a real cluster these hooks bind to the coordination service; here they are
+fully functional in-process implementations driven by the training loop:
+
+- ``HeartbeatRegistry`` — workers (threads/hosts) tick; a monitor flags
+  workers whose last tick is older than the timeout (failure detection).
+- ``StragglerDetector``  — per-step duration statistics; steps slower than
+  ``threshold x median`` are flagged; the data pipeline responds by issuing
+  backup fetches (see ``lakehouse.io_pool.fetch_with_backup``).
+- ``PreemptionGuard``    — converts SIGTERM/SIGINT into a "save and exit
+  cleanly at the next step boundary" flag (how TPU preemptions are handled).
+"""
+
+from __future__ import annotations
+
+import signal
+import statistics
+import threading
+import time
+from typing import Optional
+
+
+class HeartbeatRegistry:
+    def __init__(self, timeout_s: float = 30.0):
+        self.timeout_s = timeout_s
+        self._last: dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def tick(self, worker: str) -> None:
+        with self._lock:
+            self._last[worker] = time.monotonic()
+
+    def dead_workers(self) -> list[str]:
+        now = time.monotonic()
+        with self._lock:
+            return [w for w, t in self._last.items() if now - t > self.timeout_s]
+
+    def healthy(self) -> bool:
+        return not self.dead_workers()
+
+
+class StragglerDetector:
+    def __init__(self, threshold: float = 2.0, window: int = 50):
+        self.threshold = threshold
+        self.window = window
+        self._durations: list[float] = []
+        self.flagged_steps: list[int] = []
+
+    def record(self, step: int, duration_s: float) -> bool:
+        """Record a step duration; returns True if it's a straggler step."""
+        self._durations.append(duration_s)
+        if len(self._durations) > self.window:
+            self._durations.pop(0)
+        if len(self._durations) < 5:
+            return False
+        med = statistics.median(self._durations)
+        if duration_s > self.threshold * med:
+            self.flagged_steps.append(step)
+            return True
+        return False
+
+    @property
+    def median_s(self) -> float:
+        return statistics.median(self._durations) if self._durations else 0.0
+
+
+class PreemptionGuard:
+    """Turns termination signals into a clean save-and-exit request."""
+
+    def __init__(self, install: bool = True):
+        self.requested = threading.Event()
+        self._installed = []
+        if install:
+            try:
+                for sig in (signal.SIGTERM, signal.SIGINT):
+                    prev = signal.signal(sig, self._handler)
+                    self._installed.append((sig, prev))
+            except ValueError:
+                pass  # not on the main thread (tests)
+
+    def _handler(self, _sig, _frame) -> None:
+        self.requested.set()
+
+    def request(self) -> None:  # programmatic preemption (tests, scheduler)
+        self.requested.set()
+
+    def should_stop(self) -> bool:
+        return self.requested.is_set()
+
+    def uninstall(self) -> None:
+        for sig, prev in self._installed:
+            signal.signal(sig, prev)
+        self._installed.clear()

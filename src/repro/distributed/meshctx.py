@@ -1,0 +1,67 @@
+"""Ambient mesh context for activation sharding constraints.
+
+Model code calls ``constrain(x, "dp", None, "model", ...)`` with *role* names;
+when a mesh context is active the roles resolve to actual mesh axes and a
+``with_sharding_constraint`` is emitted; with no context it is a no-op (smoke
+tests, single-device runs).  Roles:
+
+- ``"dp"``    -> the data-parallel axes (("pod","data") on multi-pod meshes),
+- ``"model"`` -> the tensor/expert-parallel axis,
+- ``None``    -> unsharded dimension.
+
+Without these constraints GSPMD replicates attention/FFN activations across
+the idle model axis (measured 16x FLOP inflation on the 16x16 mesh — see
+EXPERIMENTS.md §Perf), so they are part of the baseline parallelization, not
+an optimization.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _resolve(mesh: Mesh, role):
+    if role is None:
+        return None
+    if role == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    if role == "fsdp":
+        return "data" if "data" in mesh.axis_names else None
+    if role == "model":
+        return "model" if "model" in mesh.axis_names else None
+    if role == "all":
+        return tuple(mesh.axis_names)
+    return role
+
+
+def constrain(x: jax.Array, *roles):
+    """Apply a sharding constraint by role names; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(roles) != x.ndim:
+        raise ValueError(f"{len(roles)} roles for rank-{x.ndim} array")
+    spec = P(*[_resolve(mesh, r) for r in roles])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

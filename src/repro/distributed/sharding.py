@@ -1,0 +1,225 @@
+"""Sharding rules per architecture family (DESIGN.md §5).
+
+Production mesh: ``(data=16, model=16)`` per pod, with an outer ``pod`` axis
+(pure data parallelism) for multi-pod.  Rules:
+
+- **LM params** — FSDP over ``data`` + Megatron TP over ``model``: matmul
+  weights shard (in_dim -> data, out_dim -> model) or transposed for the
+  row-parallel projections; MoE expert stacks shard experts over ``model``
+  (EP) and d_model over ``data``; vocab shards over ``model``.  Non-divisible
+  head counts rely on GSPMD uneven-sharding padding (verified; DESIGN.md §5).
+- **LM batch** — (B, S) over (pod, data).
+- **KV caches** — batch over (pod, data), kv-heads over model (GQA); the MLA
+  latent cache is head-less so it shards batch-only.
+- **GNN** — nodes/edges/triplets shard over *all* mesh axes (file-based
+  sharding, paper §4.1); small MLP params replicate.
+- **RecSys** — embedding tables row-shard over ``model``; dense params
+  replicate; batch shards over (pod, data).
+
+Optimizer state inherits parameter specs (same tree structure).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: ('pod', 'data') on multi-pod, ('data',) otherwise."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def all_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# LM parameter rules
+# ---------------------------------------------------------------------------
+
+_LM_RULES: list[tuple[str, tuple]] = [
+    # (path-substring, spec for the param's own dims — layer axis prepended
+    #  automatically for stacked layer params)
+    ("embed", ("model", "data")),
+    ("lm_head", ("data", "model")),
+    ("ln_", (None,)),
+    ("norm_ckv", (None,)),
+    # attention
+    ("attn/wq", ("data", "model")),
+    ("attn/wk", ("data", "model")),
+    ("attn/wv", ("data", "model")),
+    ("attn/wo", ("model", "data")),
+    ("attn/bq", ("model",)),
+    ("attn/bk", ("model",)),
+    ("attn/bv", ("model",)),
+    ("attn/w_dkv", ("data", None)),
+    ("attn/w_krope", ("data", None)),
+    ("attn/w_uk", (None, "model")),
+    ("attn/w_uv", (None, "model")),
+    # dense FFN
+    ("ffn/w_gate", ("data", "model")),
+    ("ffn/w_up", ("data", "model")),
+    ("ffn/w_down", ("model", "data")),
+    # MoE
+    ("moe/router", ("data", None)),
+    ("moe/w_gate", ("model", "data", None)),
+    ("moe/w_up", ("model", "data", None)),
+    ("moe/w_down", ("model", None, "data")),
+    ("moe/shared/w_gate", ("data", "model")),
+    ("moe/shared/w_up", ("data", "model")),
+    ("moe/shared/w_down", ("model", "data")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def lm_param_spec(path, leaf) -> P:
+    s = _path_str(path)
+    in_layer_stack = s.startswith("layers/") or "/layers/" in s
+    for pattern, spec in _LM_RULES:
+        if pattern in s:
+            spec = tuple(spec)
+            if in_layer_stack:
+                spec = (None,) + spec      # leading stacked-layer axis
+            spec = spec[: leaf.ndim] if len(spec) > leaf.ndim else spec
+            spec = spec + (None,) * (leaf.ndim - len(spec))
+            return P(*spec)
+    return P()  # replicate by default (norms, scalars)
+
+
+def lm_param_shardings(mesh: Mesh, params) -> dict:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: named(mesh, *lm_param_spec(path, leaf)), params
+    )
+
+
+def lm_state_shardings(mesh: Mesh, state) -> dict:
+    p_sh = lm_param_shardings(mesh, state["params"])
+    return {
+        "params": p_sh,
+        "opt": {
+            "m": lm_param_shardings(mesh, state["opt"]["m"]),
+            "v": lm_param_shardings(mesh, state["opt"]["v"]),
+        },
+        "step": named(mesh),
+    }
+
+
+def lm_batch_shardings(mesh: Mesh, batch) -> dict:
+    dp = dp_axes(mesh)
+    return jax.tree.map(
+        lambda leaf: named(mesh, dp, *([None] * (leaf.ndim - 1))), batch
+    )
+
+
+def lm_cache_shardings(mesh: Mesh, caches, mla: bool) -> object:
+    dp = dp_axes(mesh)
+    if mla:
+        # (L, B, S, C): batch over dp only
+        return jax.tree.map(lambda _: named(mesh, None, dp, None, None), caches)
+
+    # (L, B, S, Hk, Dh): batch over dp; kv heads over model when divisible,
+    # else the head dim (flash-decoding-style Dh split) — input shardings
+    # require divisibility, unlike internal constraints
+    def spec(leaf):
+        if leaf.ndim == 4:   # MLA int8 scale (L, B, S, 1) rides batch-only
+            return named(mesh, None, dp, None, None)
+        n_kv, d_head = leaf.shape[3], leaf.shape[4]
+        m = mesh.shape["model"]
+        if n_kv % m == 0:
+            return named(mesh, None, dp, None, "model", None)
+        if d_head % m == 0:
+            return named(mesh, None, dp, None, None, "model")
+        return named(mesh, None, dp, None, None, None)
+
+    return jax.tree.map(spec, caches)
+
+
+# ---------------------------------------------------------------------------
+# GNN rules
+# ---------------------------------------------------------------------------
+
+def gnn_param_shardings(mesh: Mesh, params):
+    return jax.tree.map(lambda _: named(mesh), params)  # replicate
+
+
+def gnn_batch_shardings(mesh: Mesh, batch):
+    ax = all_axes(mesh)
+    world = int(np.prod([mesh.shape[a] for a in ax]))
+
+    def spec(leaf):
+        # node/edge/triplet arrays shard over every axis (file-based
+        # sharding); small per-graph arrays (graph_mask, molecule targets)
+        # replicate — input shardings require divisibility
+        if leaf.ndim == 0 or leaf.shape[0] % world != 0:
+            return named(mesh)
+        return named(mesh, ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def gnn_state_shardings(mesh: Mesh, state):
+    return {
+        "params": gnn_param_shardings(mesh, state["params"]),
+        "opt": {
+            "m": gnn_param_shardings(mesh, state["opt"]["m"]),
+            "v": gnn_param_shardings(mesh, state["opt"]["v"]),
+        },
+        "step": named(mesh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RecSys rules
+# ---------------------------------------------------------------------------
+
+def recsys_param_spec(path, leaf) -> P:
+    s = _path_str(path)
+    if s.startswith("embed") or s.startswith("linear"):
+        return P("model", *([None] * (leaf.ndim - 1)))
+    return P()
+
+
+def recsys_param_shardings(mesh: Mesh, params):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: named(mesh, *recsys_param_spec(path, leaf)), params
+    )
+
+
+def recsys_batch_shardings(mesh: Mesh, batch):
+    dp = dp_axes(mesh)
+    return jax.tree.map(
+        lambda leaf: named(mesh, dp, *([None] * (leaf.ndim - 1)))
+        if leaf.ndim else named(mesh),
+        batch,
+    )
+
+
+def recsys_state_shardings(mesh: Mesh, state):
+    p_sh = recsys_param_shardings(mesh, state["params"])
+    return {
+        "params": p_sh,
+        "opt": {
+            "m": recsys_param_shardings(mesh, state["opt"]["m"]),
+            "v": recsys_param_shardings(mesh, state["opt"]["v"]),
+        },
+        "step": named(mesh),
+    }

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot spots, with jnp reference oracles.
+
+- ``edge_scan``       -- EdgeScan segment aggregation (block one-hot matmul
+                         with Min-Max block pruning),
+- ``embedding_bag``   -- recsys table lookup (gather + weighted segment-sum),
+- ``flash_attention`` -- streaming-softmax attention for LM prefill,
+- ``ops``             -- public dispatching API (TPU -> Pallas, else jnp ref),
+- ``ref``             -- pure-jnp oracles (also the CPU dry-run path).
+"""

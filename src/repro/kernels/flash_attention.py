@@ -1,0 +1,146 @@
+"""Pallas TPU flash attention (streaming softmax, no (S, S) materialization).
+
+The LM-side compute hot spot (prefill_32k shapes).  Standard FlashAttention
+tiling adapted to the TPU memory hierarchy: q blocks stay resident in VMEM
+with f32 scratch (running max / denominator / accumulator) while kv blocks
+stream HBM->VMEM; the causal upper triangle is skipped at block granularity
+(never scheduled, not just masked).
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks), kv innermost.
+GQA is handled in ops.py by expanding kv heads before the call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 512
+
+
+def _kernel(
+    kv_len_ref, q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, block_q: int, block_kv: int,
+    n_kv_blocks: int, q_offset: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block skip: kv block strictly above the diagonal never runs
+    q_hi = q_offset + (qi + 1) * block_q - 1        # max absolute q position
+    kv_lo = kj * block_kv
+    live = (kv_lo <= q_hi) if causal else True
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)            # (block_q, dh)
+        k = k_ref[0].astype(jnp.float32)            # (block_kv, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                    # (block_q, block_kv)
+        kpos_row = kv_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        s = jnp.where(kpos_row < kv_len_ref[0], s, -jnp.inf)
+        if causal:
+            qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0
+            )
+            kpos = kv_lo + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1
+            )
+            s = jnp.where(qpos >= kpos, s, -jnp.inf)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+    kv_len_mask: jax.Array | None = None,
+) -> jax.Array:
+    """q,k,v: (B, H, S_q, Dh) / (B, H, S_kv, Dh) with H already expanded
+    (GQA handled by the wrapper).  Returns (B, H, S_q, Dh).
+
+    ``kv_len_mask``: optional traced scalar; key positions >= it are masked
+    (decode against a partially-filled cache)."""
+    b, h, q_len, dh = q.shape
+    kv_len = k.shape[2]
+    scale = dh ** -0.5
+    block_q = min(block_q, q_len)
+    block_kv = min(block_kv, kv_len)
+    if q_len % block_q or kv_len % block_kv:
+        raise ValueError("sequence lengths must divide block sizes")
+    qr = q.reshape(b * h, q_len, dh)
+    kr = k.reshape(b * h, kv_len, dh)
+    vr = v.reshape(b * h, kv_len, dh)
+    n_q = q_len // block_q
+    n_kv = kv_len // block_kv
+    q_offset = kv_len - q_len  # decode-style alignment (q tail of kv)
+    if kv_len_mask is None:
+        kv_len_arr = jnp.full((1,), kv_len, dtype=jnp.int32)
+    else:
+        kv_len_arr = jnp.asarray(kv_len_mask, dtype=jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, block_q=block_q,
+            block_kv=block_kv, n_kv_blocks=n_kv, q_offset=q_offset,
+        ),
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda g, i, j: (0,)),   # kv length mask
+            pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, q_len, dh), q.dtype),
+        scratch_shapes=[
+            # running max / denominator / accumulator, f32 resident in VMEM
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr, qr, kr, vr)
+    return out.reshape(b, h, q_len, dh)

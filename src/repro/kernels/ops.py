@@ -1,0 +1,156 @@
+"""Public kernel API with backend dispatch.
+
+Every op has a pure-jnp reference path (``ref.py``) — used on CPU/GPU and for
+the 512-device SPMD dry-run — and a Pallas TPU kernel selected when running
+on TPU (or when forced for testing).  The dispatch contract:
+
+    backend == tpu  and shapes suitable  -> Pallas kernel
+    REPRO_PALLAS=interpret                -> Pallas kernel in interpret mode
+                                            (CPU execution of the kernel body;
+                                            how kernels are validated here)
+    otherwise                             -> jnp reference
+
+All ops are shape-polymorphic jit-stable functions safe to call inside
+pjit/shard_map-traced code.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.edge_scan import edge_segment_sum_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _mode() -> str:
+    forced = os.environ.get("REPRO_PALLAS", "").lower()
+    if forced in ("interpret", "force", "off"):
+        return forced
+    return "tpu" if jax.default_backend() == "tpu" else "off"
+
+
+def use_pallas() -> bool:
+    return _mode() in ("tpu", "force", "interpret")
+
+
+def _interpret() -> bool:
+    return _mode() == "interpret"
+
+
+# When True, the jnp attention path unrolls its kv-block scan so that
+# compiled-cost analysis counts every block (cost_analysis counts loop bodies
+# once).  Set by the dry-run's cost-variant compiles only.
+_ATTN_UNROLL = False
+
+
+class attention_unroll:
+    """Context manager: unroll attention kv scans for exact cost analysis."""
+
+    def __enter__(self):
+        global _ATTN_UNROLL
+        self._prev = _ATTN_UNROLL
+        _ATTN_UNROLL = True
+
+    def __exit__(self, *exc):
+        global _ATTN_UNROLL
+        _ATTN_UNROLL = self._prev
+
+
+# ---------------------------------------------------------------------------
+# segment reductions
+# ---------------------------------------------------------------------------
+
+def segment_sum(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    """1-D or 2-D segment sum. Dispatches the 2-D case to the Pallas kernel."""
+    if values.ndim == 2 and use_pallas():
+        return edge_segment_sum_pallas(
+            values, segment_ids, num_segments, interpret=_interpret()
+        )
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+
+
+def segment_min(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_min(values, segment_ids, num_segments=num_segments)
+
+
+def segment_max(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    ones = jnp.ones(values.shape[:1], dtype=values.dtype)
+    counts = jax.ops.segment_sum(ones, segment_ids, num_segments=num_segments)
+    total = segment_sum(values, segment_ids, num_segments)
+    denom = jnp.maximum(counts, 1)
+    return total / (denom[:, None] if values.ndim == 2 else denom)
+
+
+def edge_segment_sum(values: jax.Array, dst: jax.Array, num_segments: int) -> jax.Array:
+    """(E, D) edge values scattered-added to (N, D). The EdgeScan hot path."""
+    if use_pallas():
+        return edge_segment_sum_pallas(values, dst, num_segments, interpret=_interpret())
+    return _ref.edge_segment_sum(values, dst, num_segments)
+
+
+def masked_edge_segment_sum(values, src, dst, frontier, num_segments: int) -> jax.Array:
+    mask = frontier[src].astype(values.dtype)
+    return edge_segment_sum(values * mask[:, None], dst, num_segments)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag
+# ---------------------------------------------------------------------------
+
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array | None = None,
+    mode: str = "sum",
+) -> jax.Array:
+    """EmbeddingBag: (V, D) table, (B, L) indices -> (B, D)."""
+    if weights is None:
+        weights = jnp.ones(indices.shape, dtype=table.dtype)
+    if use_pallas():
+        out = embedding_bag_pallas(
+            table, indices, weights, interpret=_interpret()
+        )
+        if mode == "mean":
+            denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+            out = out / denom.astype(out.dtype)
+        return out
+    return _ref.embedding_bag(table, indices, weights, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+    block_q: int = 512, block_kv: int = 512, kv_len_mask=None,
+) -> jax.Array:
+    """Memory-safe attention. q,k,v: (B, H, S, Dh), H pre-expanded for GQA.
+    ``kv_len_mask``: optional traced scalar masking keys >= it."""
+    q_len, kv_len = q.shape[2], k.shape[2]
+    if use_pallas() and q_len % min(block_q, q_len) == 0 and kv_len % min(block_kv, kv_len) == 0:
+        return flash_attention_pallas(
+            q, k, v, causal=causal,
+            block_q=min(block_q, q_len), block_kv=min(block_kv, kv_len),
+            interpret=_interpret(), kv_len_mask=kv_len_mask,
+        )
+    from repro.perf_flags import enabled
+    if (enabled("tri") and causal and kv_len_mask is None
+            and q_len == kv_len and q_len % min(block_kv, kv_len) == 0
+            and q_len // min(block_kv, kv_len) >= 2):
+        return _ref.attention_triangular(q, k, v, causal=True,
+                                         block=min(block_kv, kv_len),
+                                         unroll=_ATTN_UNROLL)
+    return _ref.attention_blockwise(q, k, v, causal=causal,
+                                    block_kv=min(block_kv, kv_len),
+                                    kv_len_mask=kv_len_mask,
+                                    unroll=_ATTN_UNROLL)

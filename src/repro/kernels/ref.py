@@ -1,0 +1,161 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: kernels must match them (allclose) across
+shape/dtype sweeps in interpret mode.  They are also the non-TPU execution
+path used by the 512-device CPU dry-run, so they are written to compile
+efficiently under SPMD (no materialized (S, S) score matrices, etc.).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# edge segment-sum (the EdgeScan aggregation hot path)
+# ---------------------------------------------------------------------------
+
+def edge_segment_sum(values: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    """out[s] = sum over edges e with segment_ids[e]==s of values[e].
+
+    values: (E, D) float; segment_ids: (E,) int; returns (N, D).
+    """
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)
+
+
+def masked_edge_segment_sum(
+    values: jax.Array, src: jax.Array, dst: jax.Array, frontier: jax.Array, num_segments: int
+) -> jax.Array:
+    """EdgeScan semantics: accumulate values of edges whose src is active."""
+    mask = frontier[src].astype(values.dtype)
+    return edge_segment_sum(values * mask[:, None], dst, num_segments)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag (gather + segment-sum; recsys lookup)
+# ---------------------------------------------------------------------------
+
+def embedding_bag(
+    table: jax.Array, indices: jax.Array, weights: jax.Array | None = None,
+    mode: str = "sum",
+) -> jax.Array:
+    """out[b] = reduce_l table[indices[b, l]] * weights[b, l].
+
+    table: (V, D); indices: (B, L) int; weights: (B, L) or None (all ones,
+    padding handled by zero weights).  mode: "sum" | "mean".
+    """
+    gathered = table[indices]                      # (B, L, D)
+    if weights is None:
+        weights = jnp.ones(indices.shape, dtype=table.dtype)
+    w = weights.astype(table.dtype)[..., None]
+    summed = (gathered * w).sum(axis=1)
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        return summed / denom.astype(table.dtype)
+    return summed
+
+
+# ---------------------------------------------------------------------------
+# flash attention (streaming softmax; no (S, S) materialization)
+# ---------------------------------------------------------------------------
+
+def _attention_naive(q, k, v, causal, scale, kv_len=None):
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qlen, klen = q.shape[2], k.shape[2]
+    kpos = jnp.arange(klen)[None, :]
+    mask = jnp.ones((qlen, klen), dtype=bool)
+    if causal:
+        qpos = jnp.arange(qlen)[:, None] + (klen - qlen)
+        mask = mask & (qpos >= kpos)
+    if kv_len is not None:
+        mask = mask & (kpos < kv_len)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def attention(q, k, v, causal: bool = True, scale: float | None = None,
+              kv_len=None):
+    """Oracle multi-head attention. q,k,v: (B, H, S, Dh). ``kv_len`` masks
+    key positions >= kv_len (partially-filled caches)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return _attention_naive(q, k, v, causal, scale, kv_len)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_kv", "unroll"))
+def attention_blockwise(q, k, v, causal: bool = True, block_kv: int = 512,
+                        kv_len_mask=None, unroll: bool = False):
+    """Streaming-softmax attention in pure lax.scan — flash semantics without
+    Pallas.  This is the memory-safe path the dry-run compiles on any backend.
+    q,k,v: (B, H, S, Dh); returns (B, H, S, Dh).  ``kv_len_mask`` (traced
+    scalar) masks key positions >= it (partially-filled caches).
+    """
+    scale = q.shape[-1] ** -0.5
+    b, h, q_len, dh = q.shape
+    kv_len = k.shape[2]
+    n_blocks = -(-kv_len // block_kv)
+    pad = n_blocks * block_kv - kv_len
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, h, n_blocks, block_kv, dh).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h, n_blocks, block_kv, dh).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(q_len) + (kv_len - q_len)  # align causal offsets
+    valid_len = kv_len if kv_len_mask is None else kv_len_mask
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k_j, v_j, j = blk
+        kpos = j * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k_j).astype(jnp.float32) * scale
+        valid = kpos[None, :] < valid_len
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(q.dtype), v_j
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, q_len), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((b, h, q_len), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, h, q_len, dh), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb, vb, jnp.arange(n_blocks)),
+        unroll=n_blocks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention_triangular(q, k, v, causal: bool = True, block: int = 512,
+                         unroll: bool = False):
+    """Causal attention with schedule-time triangular block skipping: q block
+    i only visits kv blocks 0..i (2x less work than the rectangle for
+    q_len == kv_len).  Mirrors the Pallas kernel's @pl.when causal skip so
+    compiled-cost numbers reflect the TPU schedule (§Perf 'tri').
+
+    Requires q_len == kv_len and both divisible by ``block``.
+    """
+    b, h, s, dh = q.shape
+    assert causal and k.shape[2] == s and s % block == 0
+    n_blocks = s // block
+    outs = []
+    for i in range(n_blocks):  # static python loop: straight-line schedule
+        q_i = q[:, :, i * block:(i + 1) * block, :]
+        k_i = k[:, :, : (i + 1) * block, :]
+        v_i = v[:, :, : (i + 1) * block, :]
+        outs.append(attention_blockwise(q_i, k_i, v_i, causal=True,
+                                        block_kv=block, unroll=unroll))
+    return jnp.concatenate(outs, axis=2)

@@ -1,0 +1,48 @@
+"""Simulated Lakehouse substrate: columnar open-format files on an object store.
+
+This package implements the storage layer GraphLake reads from:
+
+- ``encoding``    — column-chunk encodings (PLAIN / RLE / DICTIONARY / BITPACK),
+- ``columnfile``  — Parquet-like files: row groups -> column chunks -> pages,
+                    footer metadata with min/max statistics,
+- ``table``       — Iceberg-like table format: schema, snapshots, manifests,
+                    immutable data files, ACID-ish commits via metadata swap,
+- ``objectstore`` — object store with a configurable latency/bandwidth model
+                    (stands in for S3) plus a local-disk tier,
+- ``io_pool``     — async I/O thread pool used to pipeline downloads with compute,
+- ``writer``      — bulk table writer used by the dataset generators.
+"""
+
+from repro.lakehouse.encoding import Encoding, encode_column, decode_column
+from repro.lakehouse.columnfile import (
+    ColumnChunkMeta,
+    ColumnFileMeta,
+    RowGroupMeta,
+    read_column_chunk,
+    read_footer,
+    write_column_file,
+)
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.table import LakeTable, TableSchema, ColumnSpec, LakeCatalog
+from repro.lakehouse.io_pool import IOPool
+from repro.lakehouse.writer import write_table
+
+__all__ = [
+    "Encoding",
+    "encode_column",
+    "decode_column",
+    "ColumnChunkMeta",
+    "ColumnFileMeta",
+    "RowGroupMeta",
+    "read_column_chunk",
+    "read_footer",
+    "write_column_file",
+    "ObjectStore",
+    "StoreConfig",
+    "LakeTable",
+    "TableSchema",
+    "ColumnSpec",
+    "LakeCatalog",
+    "IOPool",
+    "write_table",
+]

@@ -1,0 +1,197 @@
+"""Parquet-like column file format.
+
+Layout (all little-endian):
+
+    [chunk bytes...] [footer json] [footer_len uint32] [MAGIC 4B]
+
+A file holds ``n_row_groups`` horizontal slices; within a row group each
+column's values form one *column chunk* (the unit GraphLake caches).  The
+footer carries, per chunk: byte offset/length, row count, encoding, and
+min/max statistics for numeric columns — the statistics drive the paper's
+frontier Min-Max prefetch pruning (§5.3).
+
+Readers follow the S3 access pattern the paper describes in §4.2:
+  1. suffix request for (footer_len, magic),
+  2. request for the footer bytes,
+  3. ranged requests for the column chunks actually needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.lakehouse.encoding import Encoding, choose_encoding, decode_column, encode_column
+from repro.lakehouse.objectstore import ObjectStore
+
+MAGIC = b"RPF1"
+
+
+@dataclasses.dataclass
+class ColumnChunkMeta:
+    column: str
+    row_group: int
+    offset: int
+    length: int
+    n_rows: int
+    encoding: int
+    min_value: Optional[float] = None
+    max_value: Optional[float] = None
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ColumnChunkMeta":
+        return ColumnChunkMeta(**d)
+
+
+@dataclasses.dataclass
+class RowGroupMeta:
+    index: int
+    n_rows: int
+    first_row: int  # global row offset of this group within the file
+
+
+@dataclasses.dataclass
+class ColumnFileMeta:
+    key: str
+    n_rows: int
+    columns: list[str]
+    row_groups: list[RowGroupMeta]
+    chunks: list[ColumnChunkMeta]
+
+    def chunks_for(self, column: str) -> list[ColumnChunkMeta]:
+        return [c for c in self.chunks if c.column == column]
+
+    def chunk(self, column: str, row_group: int) -> ColumnChunkMeta:
+        for c in self.chunks:
+            if c.column == column and c.row_group == row_group:
+                return c
+        raise KeyError((column, row_group))
+
+    def to_json(self) -> dict:
+        return {
+            "key": self.key,
+            "n_rows": self.n_rows,
+            "columns": self.columns,
+            "row_groups": [dataclasses.asdict(g) for g in self.row_groups],
+            "chunks": [c.to_json() for c in self.chunks],
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "ColumnFileMeta":
+        return ColumnFileMeta(
+            key=d["key"],
+            n_rows=d["n_rows"],
+            columns=list(d["columns"]),
+            row_groups=[RowGroupMeta(**g) for g in d["row_groups"]],
+            chunks=[ColumnChunkMeta.from_json(c) for c in d["chunks"]],
+        )
+
+
+def _stats(arr: np.ndarray) -> tuple[Optional[float], Optional[float]]:
+    if arr.size == 0 or arr.dtype.kind not in ("i", "u", "f"):
+        return None, None
+    return float(arr.min()), float(arr.max())
+
+
+def write_column_file(
+    store: ObjectStore,
+    key: str,
+    columns: dict[str, np.ndarray],
+    row_group_rows: int = 65536,
+    encodings: Optional[dict[str, Encoding]] = None,
+) -> ColumnFileMeta:
+    """Write a dict of equal-length 1-D columns as one column file."""
+    names = list(columns.keys())
+    if not names:
+        raise ValueError("no columns")
+    n_rows = len(columns[names[0]])
+    for name in names:
+        if len(columns[name]) != n_rows:
+            raise ValueError("ragged columns")
+
+    body = bytearray()
+    chunk_metas: list[ColumnChunkMeta] = []
+    group_metas: list[RowGroupMeta] = []
+    n_groups = max(1, -(-n_rows // row_group_rows))
+    for g in range(n_groups):
+        lo = g * row_group_rows
+        hi = min(n_rows, lo + row_group_rows)
+        group_metas.append(RowGroupMeta(index=g, n_rows=hi - lo, first_row=lo))
+        for name in names:
+            sl = np.asarray(columns[name])[lo:hi]
+            enc = (encodings or {}).get(name) or choose_encoding(sl)
+            payload = encode_column(sl, enc)
+            mn, mx = _stats(sl)
+            chunk_metas.append(
+                ColumnChunkMeta(
+                    column=name,
+                    row_group=g,
+                    offset=len(body),
+                    length=len(payload),
+                    n_rows=hi - lo,
+                    encoding=int(enc),
+                    min_value=mn,
+                    max_value=mx,
+                )
+            )
+            body.extend(payload)
+
+    meta = ColumnFileMeta(
+        key=key, n_rows=n_rows, columns=names, row_groups=group_metas, chunks=chunk_metas
+    )
+    footer = json.dumps(meta.to_json()).encode("utf-8")
+    blob = bytes(body) + footer + struct.pack("<I", len(footer)) + MAGIC
+    store.put(key, blob)
+    return meta
+
+
+def read_footer(store: ObjectStore, key: str) -> ColumnFileMeta:
+    """Read footer via the 2-request suffix pattern (paper §4.2)."""
+    tail = store.get(key, offset=-8)  # footer_len + magic
+    (footer_len,) = struct.unpack_from("<I", tail, 0)
+    if tail[4:] != MAGIC:
+        raise ValueError(f"bad column file magic in {key}")
+    total = store.size(key)
+    footer = store.get(key, offset=total - 8 - footer_len, length=footer_len)
+    return ColumnFileMeta.from_json(json.loads(footer.decode("utf-8")))
+
+
+def read_column_chunk(
+    store: ObjectStore,
+    meta: ColumnFileMeta,
+    column: str,
+    row_group: int,
+    row_limit: Optional[int] = None,
+) -> np.ndarray:
+    """Ranged-read one column chunk and decode it (optionally a prefix)."""
+    c = meta.chunk(column, row_group)
+    raw = store.get(meta.key, offset=c.offset, length=c.length)
+    return decode_column(raw, row_limit=row_limit)
+
+
+def read_column_chunk_raw(
+    store: ObjectStore, meta: ColumnFileMeta, column: str, row_group: int
+) -> bytes:
+    """Fetch the encoded bytes of a chunk without decoding (disk-tier cache)."""
+    c = meta.chunk(column, row_group)
+    return store.get(meta.key, offset=c.offset, length=c.length)
+
+
+def read_columns(
+    store: ObjectStore, meta: ColumnFileMeta, columns: Sequence[str]
+) -> dict[str, np.ndarray]:
+    """Read full columns (all row groups concatenated)."""
+    out: dict[str, np.ndarray] = {}
+    for col in columns:
+        parts = [
+            read_column_chunk(store, meta, col, g.index) for g in meta.row_groups
+        ]
+        out[col] = np.concatenate(parts) if len(parts) > 1 else parts[0]
+    return out

@@ -1,0 +1,124 @@
+"""Simulated object store (stands in for S3) plus a local-disk cache tier.
+
+The container has no network, so remote latency is *modeled*: every GET pays a
+configurable per-request latency plus bytes/bandwidth transfer time (defaults
+loosely match the paper's platform: ~30 ms first-byte latency to S3 and
+1.1 GB/s sustained throughput).  Range reads are supported because the column
+file reader fetches (footer-length, footer, column chunks) as separate ranged
+requests exactly like a Parquet reader over S3 — this is what the paper's
+pipelined startup (§4.2) overlaps.
+
+The latency model can be disabled (``latency_scale=0``) for unit tests and
+enabled for the startup/cold-run benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StoreConfig:
+    root: str
+    request_latency_s: float = 0.030     # per-request first-byte latency
+    bandwidth_bytes_per_s: float = 1.1e9  # sustained transfer rate
+    latency_scale: float = 0.0            # 0 => latency model off (unit tests)
+    parallel_streams: int = 8             # concurrent streams the link sustains
+
+
+class ObjectStore:
+    """Flat key -> bytes store on the local filesystem with a latency model.
+
+    Thread-safe; the I/O pool issues many concurrent GETs against it.  A
+    counters dict tracks requests/bytes so benchmarks can report I/O volume.
+    """
+
+    def __init__(self, config: StoreConfig):
+        self.config = config
+        os.makedirs(config.root, exist_ok=True)
+        self._lock = threading.Lock()
+        self.counters = {
+            "get_requests": 0,
+            "put_requests": 0,
+            "bytes_read": 0,
+            "bytes_written": 0,
+            "simulated_wait_s": 0.0,
+        }
+
+    # -- internals ---------------------------------------------------------
+
+    def _path(self, key: str) -> str:
+        if ".." in key or key.startswith("/"):
+            raise ValueError(f"bad key {key!r}")
+        return os.path.join(self.config.root, key)
+
+    def _simulate(self, n_bytes: int) -> None:
+        cfg = self.config
+        if cfg.latency_scale <= 0:
+            return
+        wait = cfg.latency_scale * (
+            cfg.request_latency_s
+            + n_bytes / (cfg.bandwidth_bytes_per_s / max(1, cfg.parallel_streams))
+        )
+        with self._lock:
+            self.counters["simulated_wait_s"] += wait
+        time.sleep(wait)
+
+    def _count(self, **deltas) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                self.counters[k] += v
+
+    # -- API ----------------------------------------------------------------
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic publish, like S3 PUT visibility
+        self._count(put_requests=1, bytes_written=len(data))
+        self._simulate(len(data))
+
+    def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        path = self._path(key)
+        with open(path, "rb") as f:
+            if offset < 0:  # suffix read, like HTTP Range: bytes=-N
+                f.seek(offset, os.SEEK_END)
+            else:
+                f.seek(offset)
+            data = f.read() if length is None else f.read(length)
+        self._count(get_requests=1, bytes_read=len(data))
+        self._simulate(len(data))
+        return data
+
+    def size(self, key: str) -> int:
+        return os.path.getsize(self._path(key))
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def delete(self, key: str) -> None:
+        path = self._path(key)
+        if os.path.exists(path):
+            os.remove(path)
+
+    def list(self, prefix: str = "") -> list[str]:
+        out = []
+        for dirpath, _dirnames, filenames in os.walk(self.config.root):
+            for fn in filenames:
+                full = os.path.join(dirpath, fn)
+                key = os.path.relpath(full, self.config.root)
+                if key.startswith(prefix) and not fn.startswith("."):
+                    out.append(key)
+        return sorted(out)
+
+    def reset_counters(self) -> None:
+        with self._lock:
+            for k in self.counters:
+                self.counters[k] = 0 if not isinstance(self.counters[k], float) else 0.0

@@ -1,0 +1,238 @@
+"""Iceberg-like open table format on top of the object store.
+
+A table is a directory of immutable column files plus a metadata layer:
+
+    <table>/metadata/v<N>.json      -- table metadata (schema + snapshot log)
+    <table>/metadata/snap-<id>.json -- manifest: the data files of a snapshot
+    <table>/metadata/VERSION        -- pointer to the current metadata version
+    <table>/data/part-<k>.col       -- immutable data files (columnfile format)
+
+Commits follow Iceberg's optimistic metadata-swap protocol: write new data
+files, write a new manifest + metadata version, then atomically swap the
+VERSION pointer.  Readers resolve VERSION -> metadata -> manifest -> files,
+which gives snapshot isolation and lets GraphLake's catalog watch for
+added/removed files (the paper's incremental edge-list maintenance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.lakehouse.columnfile import ColumnFileMeta, read_footer, write_column_file
+from repro.lakehouse.encoding import Encoding
+from repro.lakehouse.objectstore import ObjectStore
+
+
+@dataclasses.dataclass
+class ColumnSpec:
+    name: str
+    dtype: str                      # "int64" | "float32" | "str" | ...
+    role: str = "property"         # "primary_key" | "foreign_key" | "property"
+    references: Optional[str] = None  # vertex-table name for FK columns
+
+
+@dataclasses.dataclass
+class TableSchema:
+    name: str
+    columns: list[ColumnSpec]
+
+    @property
+    def primary_key(self) -> Optional[str]:
+        for c in self.columns:
+            if c.role == "primary_key":
+                return c.name
+        return None
+
+    @property
+    def foreign_keys(self) -> list[ColumnSpec]:
+        return [c for c in self.columns if c.role == "foreign_key"]
+
+    @property
+    def property_columns(self) -> list[str]:
+        return [c.name for c in self.columns if c.role == "property"]
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "columns": [dataclasses.asdict(c) for c in self.columns],
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "TableSchema":
+        return TableSchema(
+            name=d["name"], columns=[ColumnSpec(**c) for c in d["columns"]]
+        )
+
+
+@dataclasses.dataclass
+class Snapshot:
+    snapshot_id: int
+    timestamp: float
+    manifest_key: str
+    n_files: int
+    n_rows: int
+
+
+class LakeTable:
+    """Handle to one Iceberg-like table."""
+
+    def __init__(self, store: ObjectStore, name: str):
+        self.store = store
+        self.name = name
+        self._prefix = f"tables/{name}"
+
+    # -- paths ---------------------------------------------------------------
+
+    def _meta_key(self, version: int) -> str:
+        return f"{self._prefix}/metadata/v{version}.json"
+
+    def _version_key(self) -> str:
+        return f"{self._prefix}/metadata/VERSION"
+
+    def _manifest_key(self, snapshot_id: int) -> str:
+        return f"{self._prefix}/metadata/snap-{snapshot_id}.json"
+
+    def data_key(self, file_index: int) -> str:
+        return f"{self._prefix}/data/part-{file_index:05d}.col"
+
+    # -- metadata ------------------------------------------------------------
+
+    def exists(self) -> bool:
+        return self.store.exists(self._version_key())
+
+    def current_version(self) -> int:
+        return int(self.store.get(self._version_key()).decode())
+
+    def _read_meta(self) -> dict:
+        return json.loads(self.store.get(self._meta_key(self.current_version())))
+
+    def schema(self) -> TableSchema:
+        return TableSchema.from_json(self._read_meta()["schema"])
+
+    def snapshots(self) -> list[Snapshot]:
+        return [Snapshot(**s) for s in self._read_meta()["snapshots"]]
+
+    def current_snapshot(self) -> Snapshot:
+        snaps = self.snapshots()
+        if not snaps:
+            raise RuntimeError(f"table {self.name} has no snapshots")
+        return snaps[-1]
+
+    def data_files(self, snapshot_id: Optional[int] = None) -> list[str]:
+        """Data-file keys of a snapshot (default: current)."""
+        if snapshot_id is None:
+            snap = self.current_snapshot()
+        else:
+            snap = next(s for s in self.snapshots() if s.snapshot_id == snapshot_id)
+        manifest = json.loads(self.store.get(snap.manifest_key))
+        return list(manifest["files"])
+
+    def file_metas(self) -> list[ColumnFileMeta]:
+        return [read_footer(self.store, k) for k in self.data_files()]
+
+    # -- writes ---------------------------------------------------------------
+
+    def create(self, schema: TableSchema) -> None:
+        if self.exists():
+            raise RuntimeError(f"table {self.name} already exists")
+        meta = {"schema": schema.to_json(), "snapshots": [], "next_file_index": 0}
+        self.store.put(self._meta_key(1), json.dumps(meta).encode())
+        self.store.put(self._version_key(), b"1")
+
+    def append_files(
+        self,
+        file_columns: list[dict[str, np.ndarray]],
+        row_group_rows: int = 65536,
+        encodings: Optional[dict[str, Encoding]] = None,
+        replace: bool = False,
+    ) -> Snapshot:
+        """Write data files and commit a new snapshot (append or replace)."""
+        meta = self._read_meta()
+        version = self.current_version()
+        next_idx = meta["next_file_index"]
+
+        new_keys: list[str] = []
+        n_new_rows = 0
+        for cols in file_columns:
+            key = self.data_key(next_idx)
+            fm = write_column_file(
+                self.store, key, cols, row_group_rows=row_group_rows, encodings=encodings
+            )
+            n_new_rows += fm.n_rows
+            new_keys.append(key)
+            next_idx += 1
+
+        if replace or not meta["snapshots"]:
+            base_files: list[str] = []
+            base_rows = 0
+        else:
+            prev = Snapshot(**meta["snapshots"][-1])
+            base_files = self.data_files(prev.snapshot_id)
+            base_rows = prev.n_rows
+
+        snapshot_id = len(meta["snapshots"]) + 1
+        manifest_key = self._manifest_key(snapshot_id)
+        self.store.put(manifest_key, json.dumps({"files": base_files + new_keys}).encode())
+        snap = Snapshot(
+            snapshot_id=snapshot_id,
+            timestamp=time.time(),
+            manifest_key=manifest_key,
+            n_files=len(base_files) + len(new_keys),
+            n_rows=base_rows + n_new_rows,
+        )
+        meta["snapshots"].append(dataclasses.asdict(snap))
+        meta["next_file_index"] = next_idx
+        self.store.put(self._meta_key(version + 1), json.dumps(meta).encode())
+        self.store.put(self._version_key(), str(version + 1).encode())  # atomic swap
+        return snap
+
+    def delete_file(self, key: str) -> Snapshot:
+        """Commit a snapshot with one data file removed (logical delete)."""
+        meta = self._read_meta()
+        version = self.current_version()
+        prev = Snapshot(**meta["snapshots"][-1])
+        files = [f for f in self.data_files(prev.snapshot_id) if f != key]
+        removed_rows = read_footer(self.store, key).n_rows
+        snapshot_id = len(meta["snapshots"]) + 1
+        manifest_key = self._manifest_key(snapshot_id)
+        self.store.put(manifest_key, json.dumps({"files": files}).encode())
+        snap = Snapshot(
+            snapshot_id=snapshot_id,
+            timestamp=time.time(),
+            manifest_key=manifest_key,
+            n_files=len(files),
+            n_rows=prev.n_rows - removed_rows,
+        )
+        meta["snapshots"].append(dataclasses.asdict(snap))
+        self.store.put(self._meta_key(version + 1), json.dumps(meta).encode())
+        self.store.put(self._version_key(), str(version + 1).encode())
+        return snap
+
+
+class LakeCatalog:
+    """Hive-metastore-ish catalog: name -> LakeTable, plus change detection."""
+
+    def __init__(self, store: ObjectStore):
+        self.store = store
+
+    def table(self, name: str) -> LakeTable:
+        return LakeTable(self.store, name)
+
+    def list_tables(self) -> list[str]:
+        names = set()
+        for key in self.store.list("tables/"):
+            parts = key.split("/")
+            if len(parts) >= 2:
+                names.add(parts[1])
+        return sorted(names)
+
+    def table_state(self, name: str) -> tuple[int, list[str]]:
+        """(snapshot_id, data files) — what the graph catalog polls."""
+        t = self.table(name)
+        snap = t.current_snapshot()
+        return snap.snapshot_id, t.data_files(snap.snapshot_id)

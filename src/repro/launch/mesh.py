@@ -1,0 +1,39 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state, so library imports stay side-effect-free (the dry-run sets
+its placeholder-device XLA flag before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod's worth of chips) or 2x16x16 (two pods).
+
+    ``pod`` is an outer pure-DP axis: gradient all-reduce crosses pods once
+    per step; every other collective stays intra-pod.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_elastic_mesh(n_devices: int | None = None, model_parallel: int = 16):
+    """Build the largest (data, model) mesh the available devices support —
+    the elastic-scaling path: checkpoints restore onto any such mesh."""
+    devices = jax.devices()
+    n = n_devices or len(devices)
+    model = min(model_parallel, n)
+    while n % model:
+        model //= 2
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,82 @@
+"""Serving driver: GraphLake engine + batched BI query serving.
+
+Generates (or reuses) an LDBC-style lakehouse, starts the engine (first or
+second connection), and drives randomized batched queries through the
+QueryServer, reporting startup time and latency percentiles — the in-process
+equivalent of the paper's wrk2 evaluation (§7.5).
+
+    PYTHONPATH=src python -m repro.launch.serve --sf 0.01 --requests 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import time
+
+from repro.core.bi_queries import BI_QUERIES
+from repro.core.engine import GraphLakeEngine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.serving.server import QueryServer, ServerConfig, latency_stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="/tmp/graphlake_serve")
+    ap.add_argument("--sf", type=float, default=0.01)
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--latency-scale", type=float, default=0.0,
+                    help="1.0 simulates S3 latency on lake reads")
+    ap.add_argument("--fresh", action="store_true", help="regenerate the lake")
+    args = ap.parse_args()
+
+    if args.fresh and os.path.exists(args.root):
+        import shutil
+        shutil.rmtree(args.root)
+    store = ObjectStore(StoreConfig(root=args.root,
+                                    latency_scale=args.latency_scale))
+    if not os.path.exists(os.path.join(args.root, "tables")):
+        print(f"generating LDBC SF={args.sf} ...")
+        ds = generate_ldbc(store, scale_factor=args.sf)
+        print(f"  {ds.n_persons} persons, {ds.n_comments} comments, "
+              f"{ds.n_edges} edges")
+
+    engine = GraphLakeEngine(store, ldbc_graph_schema())
+    t0 = time.perf_counter()
+    timings = engine.startup()
+    print(f"startup ({engine.startup_mode}): {time.perf_counter()-t0:.3f}s  "
+          f"breakdown={json.dumps({k: round(v, 3) for k, v in timings.items()})}")
+
+    server = QueryServer(engine, BI_QUERIES,
+                         ServerConfig(n_workers=args.workers))
+    rng = random.Random(0)
+    reqs = []
+    for _ in range(args.requests):
+        name = rng.choice(list(BI_QUERIES))
+        params = {}
+        if name == "bi1":
+            params = {"date": rng.choice([20090101, 20120101, 20150101])}
+        elif name == "bi4":
+            params = {"city": f"city_{rng.randrange(50)}"}
+        reqs.append((name, params))
+
+    t1 = time.perf_counter()
+    results = server.run_batch(reqs)
+    wall = time.perf_counter() - t1
+    server.close()
+    engine.close()
+
+    ok = [r for r in results if r.ok]
+    stats = latency_stats(results)
+    print(f"{len(ok)}/{len(results)} ok, throughput "
+          f"{len(ok)/wall:.2f} q/s over {wall:.2f}s")
+    print("latency:", json.dumps({k: round(v, 4) for k, v in stats.items()}))
+    print("cache:", engine.cache.stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model definitions for the assigned architectures.
+
+- ``layers``      — RMSNorm / RoPE / GQA / MLA / SwiGLU primitives (pure JAX,
+                    params as pytrees; attention dispatches to kernels.ops),
+- ``moe``         — GShard-style top-k expert dispatch (EP over the model axis),
+- ``transformer`` — dense + MoE decoder LMs (train/prefill/decode steps),
+- ``gnn``         — GIN / MeshGraphNet / SchNet / DimeNet on the edge-sharded
+                    two-pass EdgeScan pattern (shard_map),
+- ``recsys``      — xDeepFM with sharded EmbeddingBag tables + CIN,
+- ``api``         — the Arch protocol the launcher and dry-run consume.
+"""

@@ -1,0 +1,13 @@
+"""GNN architectures on the edge-sharded two-pass EdgeScan pattern."""
+
+from repro.models.gnn.common import GNNDist, local_dist, sharded_dist
+from repro.models.gnn.gin import GIN, GINConfig
+from repro.models.gnn.meshgraphnet import MeshGraphNet, MGNConfig
+from repro.models.gnn.schnet import SchNet, SchNetConfig
+from repro.models.gnn.dimenet import DimeNet, DimeNetConfig
+
+__all__ = [
+    "GNNDist", "local_dist", "sharded_dist",
+    "GIN", "GINConfig", "MeshGraphNet", "MGNConfig",
+    "SchNet", "SchNetConfig", "DimeNet", "DimeNetConfig",
+]

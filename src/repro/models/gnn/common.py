@@ -1,0 +1,244 @@
+"""Distributed message-passing primitives — the per-device realization of
+GraphLake's two-pass distributed EdgeScan (paper §6.2, DESIGN.md §2/§5).
+
+File-based sharding maps to mesh sharding: every device owns E/P edges and
+N/P vertex rows (a "file").  One message-passing step is:
+
+  pass 1  ``gather_nodes``  — ``all_gather`` the (projected) node features
+          over the edge-owning axis = the batched remote-vertex fetch with
+          projection pushdown (only the columns the UDF touches move);
+  UDF     vectorized edge function on materialized (u, v, edge) rows;
+  pass 2  ``edge_aggregate`` — local segment-sum partials (the per-node
+          combine) + ``psum_scatter`` back to the vertex owners = the
+          accumulator push-back-and-combine.
+
+``GNNDist`` carries the mesh/axis context; ``local_dist()`` is the
+single-device variant used by smoke tests and examples.  Both share exact
+semantics — tested against each other.
+
+The segment-sum inside pass 2 dispatches to the Pallas ``edge_scan`` kernel
+on TPU (kernels/edge_scan.py) — min-max block pruning included.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class GNNDist:
+    """Distribution context for message passing."""
+
+    mesh: Optional[Mesh] = None
+    axes: tuple[str, ...] = ()          # mesh axes flattened for edge parallelism
+
+    @property
+    def n_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        import numpy as np
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    # ------------------------------------------------------------- pass 1
+
+    def gather_nodes(self, h: jax.Array, idx: jax.Array) -> jax.Array:
+        """Materialize far-side rows: h (N, D) node-sharded, idx (E,) edge-
+        sharded -> (E, D) edge-sharded."""
+        if self.mesh is None:
+            return h[idx]
+        from repro.perf_flags import enabled
+        bf16_wire = enabled("gnnbf16") and h.dtype == jnp.float32
+
+        def _gather(h_local, idx_local):
+            if bf16_wire:
+                # barriers pin the half-width wire format: without them
+                # XLA's convert-mover rewrites the pattern back to an f32
+                # all-gather (verified in the lowered HLO)
+                wire = jax.lax.optimization_barrier(h_local.astype(jnp.bfloat16))
+                h_full = jax.lax.optimization_barrier(
+                    jax.lax.all_gather(wire, self.axes, axis=0, tiled=True))
+                return h_full[idx_local].astype(h_local.dtype)
+            h_full = jax.lax.all_gather(h_local, self.axes, axis=0, tiled=True)
+            return h_full[idx_local]
+
+        return jax.shard_map(
+            _gather, mesh=self.mesh,
+            in_specs=(P(self.axes, None), P(self.axes)),
+            out_specs=P(self.axes, None),
+            check_vma=False,
+        )(h, idx)
+
+    def gather_rows(self, table: jax.Array, idx: jax.Array,
+                    mode: str = "allgather") -> jax.Array:
+        """Generic distributed row gather (edges-by-triplet etc.).
+
+        ``mode="ring"`` streams the table around the device ring with
+        ``ppermute`` instead of all-gathering it — O(rows/P) resident memory,
+        for tables too large to replicate (dimenet @ ogb_products: the 62M-row
+        edge-message table).  Communication volume is identical (each device
+        sees every block once); peak memory drops by P.
+        """
+        if self.mesh is None:
+            return table[idx]
+        if mode != "ring":
+            return self.gather_nodes(table, idx)
+
+        p = self.n_shards
+        ep = table.shape[0] // p
+        axes = self.axes
+        perm_down = [(i, (i - 1) % p) for i in range(p)]
+
+        @jax.custom_vjp
+        def _ring(tl, il):
+            return _ring_fwd(tl, il)[0]
+
+        def _ring_fwd(tl, il):
+            me = jax.lax.axis_index(axes)
+
+            def body(s, carry):
+                block, out = carry
+                owner = (me + s) % p
+                lo = owner * ep
+                sel = (il >= lo) & (il < lo + ep)
+                rows = jnp.clip(il - lo, 0, ep - 1)
+                out = out + jnp.where(sel[:, None], block[rows], 0.0)
+                block = jax.lax.ppermute(block, axes, perm_down)
+                return block, out
+
+            out0 = jnp.zeros((il.shape[0], tl.shape[1]), tl.dtype)
+            _, out = jax.lax.fori_loop(0, p, body, (tl, out0))
+            return out, (il,)
+
+        def _ring_bwd(res, g):
+            """Ring-reduce: owner o's grad buffer circulates the ring; every
+            device adds its scatter-contribution for o exactly once; after P
+            rotations the buffer is home with the complete row gradients."""
+            (il,) = res
+            me = jax.lax.axis_index(axes)
+
+            def body(s, buf):
+                owner = (me + s) % p
+                lo = owner * ep
+                sel = (il >= lo) & (il < lo + ep)
+                rows = jnp.where(sel, il - lo, ep)  # ep = drop row
+                contrib = jax.ops.segment_sum(
+                    g * sel[:, None].astype(g.dtype), rows, num_segments=ep + 1
+                )[:ep]
+                buf = buf + contrib
+                return jax.lax.ppermute(buf, axes, perm_down)
+
+            buf0 = jnp.zeros((ep, g.shape[1]), g.dtype)
+            grad_tl = jax.lax.fori_loop(0, p, body, buf0)
+            return grad_tl, None
+
+        _ring.defvjp(_ring_fwd, _ring_bwd)
+
+        return jax.shard_map(
+            _ring, mesh=self.mesh,
+            in_specs=(P(axes, None), P(axes)),
+            out_specs=P(axes, None),
+            check_vma=False,
+        )(table, idx)
+
+    # ------------------------------------------------------------- pass 2
+
+    def edge_aggregate(self, values: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+        """Combine edge values at their target vertices: values (E, D) edge-
+        sharded, dst (E,) -> (N, D) node-sharded."""
+        if self.mesh is None:
+            return kops.edge_segment_sum(values, dst, n)
+
+        def _agg(values_local, dst_local):
+            partial_out = kops.edge_segment_sum(values_local, dst_local, n)
+            return jax.lax.psum_scatter(
+                partial_out, self.axes, scatter_dimension=0, tiled=True
+            )
+
+        return jax.shard_map(
+            _agg, mesh=self.mesh,
+            in_specs=(P(self.axes, None), P(self.axes)),
+            out_specs=P(self.axes, None),
+            check_vma=False,
+        )(values, dst)
+
+    # ------------------------------------------------------------- helpers
+
+    def constrain_nodes(self, x: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = P(self.axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec)
+        )
+
+    def constrain_edges(self, x: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = P(self.axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec)
+        )
+
+
+def local_dist() -> GNNDist:
+    return GNNDist(mesh=None, axes=())
+
+
+def sharded_dist(mesh: Mesh, axes: Optional[tuple[str, ...]] = None) -> GNNDist:
+    return GNNDist(mesh=mesh, axes=axes or tuple(mesh.axis_names))
+
+
+# ---------------------------------------------------------------------------
+# shared batch utilities
+# ---------------------------------------------------------------------------
+
+def masked_mean(values: jax.Array, mask: jax.Array) -> jax.Array:
+    m = mask.astype(jnp.float32)
+    return (values * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return masked_mean(nll, mask)
+
+
+def graph_pool(node_values: jax.Array, graph_ids: jax.Array, n_graphs: int,
+               dist: GNNDist) -> jax.Array:
+    """Per-graph sum pooling (batched small graphs) via segment-sum.
+
+    The segment target is padded to the shard count for psum_scatter, then
+    sliced back to the true graph count."""
+    pooled = dist.edge_aggregate(node_values, graph_ids,
+                                 _pad_graphs(n_graphs, dist))
+    return pooled[:n_graphs]
+
+
+def _pad_graphs(n_graphs: int, dist: GNNDist) -> int:
+    p = dist.n_shards
+    return -(-n_graphs // p) * p
+
+
+def rbf_expand(dist_vals: jax.Array, n_rbf: int, cutoff: float) -> jax.Array:
+    """Gaussian radial basis (SchNet-style). dist_vals (E,) -> (E, n_rbf)."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 10.0 / cutoff
+    return jnp.exp(-gamma * (dist_vals[:, None] - centers[None, :]) ** 2)
+
+
+def edge_distances(pos: jax.Array, src: jax.Array, dst: jax.Array,
+                   dist: GNNDist) -> tuple[jax.Array, jax.Array]:
+    """Returns (d_ij (E,), unit vectors (E, 3)) from positions."""
+    p_src = dist.gather_nodes(pos, src)
+    p_dst = dist.gather_nodes(pos, dst)
+    diff = p_dst - p_src
+    d = jnp.sqrt(jnp.maximum((diff ** 2).sum(-1), 1e-12))
+    return d, diff / d[:, None]

@@ -1,0 +1,168 @@
+"""DimeNet (arXiv:2003.03123) — directional message passing with triplet
+interactions: 6 blocks, hidden 128, 8 bilinear, 7 spherical x 6 radial basis.
+
+Messages live on directed edges m_ji; interaction blocks couple each edge
+(j->i) with its incoming triplets (k->j, j->i) through a spherical-harmonic
+angular basis and a bilinear layer — the triplet-gather kernel regime of the
+taxonomy (§B.3), NOT expressible as SpMM.
+
+Faithful structure kept: RBF/SBF bases with envelope, embedding block,
+bilinear triplet interaction, per-edge aggregation to atoms in every block
+(output blocks), summed per-molecule readout.  Simplified vs the release
+code: residual-stack depths are 1 MLP each (documented in DESIGN.md §4);
+large-graph shapes cap triplets at K=8 incoming edges per target edge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common
+from repro.models.gnn.common import GNNDist
+from repro.models.layers import dense_init, mlp_init, mlp_apply
+
+
+@dataclasses.dataclass
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_atom_types: int = 100
+    envelope_p: int = 6
+    # triplet gathers: "allgather" replicates the edge-message table per
+    # device; "ring" streams it (dimenet @ ogb_products); "auto" picks by size
+    triplet_gather: str = "auto"
+
+
+def _envelope(x: jax.Array, p: int) -> jax.Array:
+    """DimeNet polynomial envelope u(d) with u(1)=0, smooth at 1."""
+    a = -(p + 1) * (p + 2) / 2
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2
+    return jnp.where(x < 1.0, 1 / jnp.maximum(x, 1e-6) + a * x ** (p - 1)
+                     + b * x ** p + c * x ** (p + 1), 0.0)
+
+
+class DimeNet:
+    def __init__(self, cfg: DimeNetConfig, dist: GNNDist):
+        self.cfg = cfg
+        self.dist = dist
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        h = cfg.d_hidden
+        n_sbf = cfg.n_spherical * cfg.n_radial
+        ks = jax.random.split(rng, 4 + 4 * cfg.n_blocks)
+        params = {
+            "embed": jax.random.normal(ks[0], (cfg.n_atom_types, h)) * 0.1,
+            "rbf_proj": dense_init(ks[1], cfg.n_radial, h),
+            "emb_mlp": mlp_init(ks[2], [3 * h, h, h]),
+            "out_final": mlp_init(ks[3], [h, h, 1]),
+            "blocks": [],
+        }
+        for b in range(cfg.n_blocks):
+            params["blocks"].append({
+                "sbf_proj": dense_init(ks[4 + 4 * b], n_sbf, cfg.n_bilinear),
+                "w_kj": dense_init(ks[5 + 4 * b], h, h),
+                # bilinear: (n_bilinear, h, h)
+                "w_bil": jax.random.normal(ks[6 + 4 * b],
+                                           (cfg.n_bilinear, h, h)) * (1.0 / h),
+                "upd_mlp": mlp_init(ks[7 + 4 * b], [h, h, h]),
+                "out_proj": dense_init(jax.random.fold_in(ks[7 + 4 * b], 1), h, h),
+            })
+        return params
+
+    # -- bases -----------------------------------------------------------------
+
+    def _rbf(self, d: jax.Array) -> jax.Array:
+        """Bessel-style radial basis (E, n_radial) with envelope."""
+        cfg = self.cfg
+        x = d / cfg.cutoff
+        n = jnp.arange(1, cfg.n_radial + 1, dtype=jnp.float32)
+        # env(x) ~ 1/x as x->0 and sin(n pi x) ~ n pi x cancel: finite limit
+        basis = jnp.sqrt(2.0 / cfg.cutoff) * jnp.sin(n[None, :] * jnp.pi * x[:, None])
+        return basis * _envelope(x, cfg.envelope_p)[:, None]
+
+    def _sbf(self, d_kj: jax.Array, angle: jax.Array) -> jax.Array:
+        """Angular-radial basis (T, n_spherical * n_radial)."""
+        cfg = self.cfg
+        ls = jnp.arange(cfg.n_spherical, dtype=jnp.float32)
+        ang = jnp.cos(angle[:, None] * (ls[None, :] + 1.0))          # (T, S)
+        x = d_kj / cfg.cutoff
+        n = jnp.arange(1, cfg.n_radial + 1, dtype=jnp.float32)
+        rad = jnp.sin(n[None, :] * jnp.pi * x[:, None]) * _envelope(
+            x, cfg.envelope_p
+        )[:, None]                                                    # (T, R)
+        return (ang[:, :, None] * rad[:, None, :]).reshape(len(d_kj), -1)
+
+    # -- forward -----------------------------------------------------------------
+
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        """batch: z (N,), pos (N, 3), src/dst (E,), edge_mask (E,),
+        t_in/t_out (T,) triplet edge indices (k->j = t_in, j->i = t_out),
+        triplet_mask (T,), graph_ids (N,), n_graphs."""
+        cfg, dist = self.cfg, self.dist
+        pos = dist.constrain_nodes(batch["pos"].astype(jnp.float32))
+        src, dst = batch["src"], batch["dst"]
+        emask = batch["edge_mask"].astype(jnp.float32)[:, None]
+        n = pos.shape[0]
+        n_edges = src.shape[0]
+
+        h = params["embed"][batch["z"]]
+        d, unit = common.edge_distances(pos, src, dst, dist)
+        rbf_e = self._rbf(d) * emask[:, : 1]
+        rbf_h = rbf_e @ params["rbf_proj"]
+
+        # embedding block: m_ji = MLP([h_j, h_i, rbf])
+        h_src = dist.gather_nodes(h, src)
+        h_dst = dist.gather_nodes(h, dst)
+        m = mlp_apply(params["emb_mlp"],
+                      jnp.concatenate([h_src, h_dst, rbf_h], -1)) * emask
+
+        # triplet geometry: angle between (k->j) and (j->i)
+        t_in, t_out = batch["t_in"], batch["t_out"]
+        tmask = batch["triplet_mask"].astype(jnp.float32)[:, None]
+        mode = cfg.triplet_gather
+        if mode == "auto":
+            mode = "ring" if (dist.mesh is not None and n_edges > 4_000_000) \
+                else "allgather"
+        geo = jnp.concatenate([unit, d[:, None]], axis=-1)         # (E, 4)
+        geo_in = dist.gather_rows(geo, t_in, mode)
+        geo_out = dist.gather_rows(geo, t_out, mode)
+        u_in = -geo_in[:, :3]       # vector j->k reversed = k->j incoming at j
+        u_out = geo_out[:, :3]
+        cos_a = jnp.clip((u_in * u_out).sum(-1), -1.0, 1.0)
+        angle = jnp.arccos(cos_a)
+        sbf = self._sbf(geo_in[:, 3], angle) * tmask              # (T, S*R)
+
+        atom_out = jnp.zeros((n, cfg.d_hidden), jnp.float32)
+        for bp in params["blocks"]:
+            # triplet interaction: gather m_kj, modulate by angular basis,
+            # bilinear-project, aggregate back to the target edge (j->i)
+            m_kj = dist.gather_rows(m @ bp["w_kj"], t_in, mode)   # (T, H)
+            sbf_b = sbf @ bp["sbf_proj"]                          # (T, B)
+            inter = jnp.einsum("tb,bhf,th->tf", sbf_b, bp["w_bil"], m_kj)
+            agg_e = dist.edge_aggregate(inter * tmask, t_out, n_edges)  # (E, H)
+            m = m + mlp_apply(bp["upd_mlp"], m + agg_e) * emask
+            # output block: aggregate edge messages at target atoms
+            contrib = dist.edge_aggregate((m * emask) @ bp["out_proj"], dst, n)
+            atom_out = atom_out + contrib
+
+        atom_e = mlp_apply(params["out_final"], atom_out)
+        atom_e = atom_e * batch["node_mask"][:, None].astype(jnp.float32)
+        pooled = common.graph_pool(atom_e, batch["graph_ids"], batch["n_graphs"], dist)
+        return pooled[:, 0]
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        pred = self.forward(params, batch)
+        err = (pred - batch["targets"].astype(jnp.float32)) ** 2
+        return common.masked_mean(err, batch["graph_mask"])
+
+

@@ -1,0 +1,103 @@
+"""GIN (Graph Isomorphism Network, arXiv:1810.00826) — the gin-tu config:
+5 layers, hidden 64, sum aggregator, learnable eps.
+
+    h_i^{l+1} = MLP_l( (1 + eps_l) * h_i^l  +  sum_{j in N(i)} h_j^l )
+
+Supports node classification (full-graph shapes) and graph classification
+(molecule shape, sum readout over every layer's representation — the paper's
+jumping-knowledge readout).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common
+from repro.models.gnn.common import GNNDist
+from repro.models.layers import mlp_init, mlp_apply, dense_init
+
+
+@dataclasses.dataclass
+class GINConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 64
+    n_classes: int = 16
+    task: str = "node"          # "node" | "graph"
+    mlp_layers: int = 2
+
+
+class GIN:
+    def __init__(self, cfg: GINConfig, dist: GNNDist):
+        self.cfg = cfg
+        self.dist = dist
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, cfg.n_layers + 2)
+        layers = []
+        d_prev = cfg.d_in
+        for l in range(cfg.n_layers):
+            dims = [d_prev] + [cfg.d_hidden] * cfg.mlp_layers
+            layers.append({
+                "mlp": mlp_init(ks[l], dims),
+                "eps": jnp.zeros((), jnp.float32),
+            })
+            d_prev = cfg.d_hidden
+        return {
+            "layers": layers,
+            "head": dense_init(ks[-1], cfg.d_hidden, cfg.n_classes),
+        }
+
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        """batch: x (N, d_in), src/dst (E,), node_mask (N,), [graph_ids]."""
+        cfg, dist = self.cfg, self.dist
+        from repro.perf_flags import enabled
+
+        h = dist.constrain_nodes(batch["x"].astype(jnp.float32))
+        src = dist.constrain_edges(batch["src"])
+        dst = dist.constrain_edges(batch["dst"])
+        n = h.shape[0]
+        readout = None
+        pushdown = enabled("pushdown")
+        for lp in params["layers"]:
+            if pushdown:
+                # projection pushdown (§Perf): the first MLP linear commutes
+                # with the sum aggregation, so project to d_hidden BEFORE the
+                # remote gather — the all_gather ships d_hidden-wide rows
+                # instead of d_in-wide (22x narrower on full_graph_sm).
+                h1 = h @ lp["mlp"]["w0"]                          # (N, hidden)
+                msgs = dist.gather_nodes(h1, src)                 # pass 1
+                agg = dist.edge_aggregate(msgs, dst, n)           # pass 2
+                z = jax.nn.relu((1.0 + lp["eps"]) * h1 + agg + lp["mlp"]["b0"])
+                n_lin = len([k for k in lp["mlp"] if k.startswith("w")])
+                for i in range(1, n_lin):
+                    z = jax.nn.relu(z @ lp["mlp"][f"w{i}"] + lp["mlp"][f"b{i}"])
+                h = z
+            else:
+                msgs = dist.gather_nodes(h, src)                  # pass 1
+                agg = dist.edge_aggregate(msgs, dst, n)           # pass 2
+                h = mlp_apply(lp["mlp"], (1.0 + lp["eps"]) * h + agg,
+                              act=jax.nn.relu, final_act=True)
+            h = dist.constrain_nodes(h)
+            if cfg.task == "graph":
+                pooled = common.graph_pool(
+                    h * batch["node_mask"][:, None].astype(h.dtype),
+                    batch["graph_ids"], batch["n_graphs"], dist,
+                )
+                readout = pooled if readout is None else readout + pooled
+        if cfg.task == "graph":
+            return readout @ params["head"]
+        return h @ params["head"]
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        logits = self.forward(params, batch)
+        if self.cfg.task == "graph":
+            mask = batch["graph_mask"]
+        else:
+            mask = batch["label_mask"]
+        return common.cross_entropy(logits, batch["labels"], mask)

@@ -1,0 +1,91 @@
+"""MeshGraphNet (arXiv:2010.03409) — encode-process-decode mesh simulation:
+15 message-passing layers, hidden 128, 2-layer MLPs, sum aggregation.
+
+    encode:  v_i = MLP_v(x_i);  e_ij = MLP_e([edge_feat_ij, |u_ij|, u_ij])
+    process: e'_ij = e_ij + MLP([e_ij, v_i, v_j])
+             v'_i  = v_i  + MLP([v_i, sum_j e'_ji])
+    decode:  y_i = MLP_d(v_i)            (per-node regression targets)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common
+from repro.models.gnn.common import GNNDist
+from repro.models.layers import mlp_init, mlp_apply
+
+
+@dataclasses.dataclass
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    d_in: int = 16              # node input features
+    d_edge_in: int = 4          # edge input features (+ 4 derived from pos)
+    d_out: int = 3              # per-node regression targets
+    mlp_layers: int = 2
+
+
+def _mlp_dims(d_in, d_hidden, n):
+    return [d_in] + [d_hidden] * n
+
+
+class MeshGraphNet:
+    def __init__(self, cfg: MGNConfig, dist: GNNDist):
+        self.cfg = cfg
+        self.dist = dist
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 3 + 2 * cfg.n_layers)
+        h = cfg.d_hidden
+        params = {
+            "enc_v": mlp_init(ks[0], _mlp_dims(cfg.d_in, h, cfg.mlp_layers)),
+            "enc_e": mlp_init(ks[1], _mlp_dims(cfg.d_edge_in + 4, h, cfg.mlp_layers)),
+            "dec": mlp_init(ks[2], [h, h, cfg.d_out]),
+            "layers": [],
+        }
+        for l in range(cfg.n_layers):
+            params["layers"].append({
+                "edge_mlp": mlp_init(ks[3 + 2 * l], _mlp_dims(3 * h, h, cfg.mlp_layers)),
+                "node_mlp": mlp_init(ks[4 + 2 * l], _mlp_dims(2 * h, h, cfg.mlp_layers)),
+            })
+        return params
+
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        """batch: x (N, d_in), pos (N, 3), edge_feat (E, d_edge_in),
+        src/dst (E,), edge_mask (E,)."""
+        cfg, dist = self.cfg, self.dist
+        x = dist.constrain_nodes(batch["x"].astype(jnp.float32))
+        pos = dist.constrain_nodes(batch["pos"].astype(jnp.float32))
+        src = dist.constrain_edges(batch["src"])
+        dst = dist.constrain_edges(batch["dst"])
+        emask = batch["edge_mask"].astype(jnp.float32)[:, None]
+        n = x.shape[0]
+
+        d, unit = common.edge_distances(pos, src, dst, dist)
+        e_in = jnp.concatenate(
+            [batch["edge_feat"].astype(jnp.float32), unit, d[:, None]], axis=-1
+        )
+        v = mlp_apply(params["enc_v"], x)
+        e = mlp_apply(params["enc_e"], e_in) * emask
+
+        for lp in params["layers"]:
+            v_src = dist.gather_nodes(v, src)                      # pass 1
+            v_dst = dist.gather_nodes(v, dst)
+            e = e + mlp_apply(lp["edge_mlp"],
+                              jnp.concatenate([e, v_src, v_dst], -1)) * emask
+            agg = dist.edge_aggregate(e, dst, n)                   # pass 2
+            v = v + mlp_apply(lp["node_mlp"], jnp.concatenate([v, agg], -1))
+            v = dist.constrain_nodes(v)
+
+        return mlp_apply(params["dec"], v)
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        pred = self.forward(params, batch)
+        err = ((pred - batch["targets"].astype(jnp.float32)) ** 2).mean(-1)
+        return common.masked_mean(err, batch["node_mask"])

@@ -1,0 +1,395 @@
+"""Transformer building blocks (pure JAX; params are plain pytrees).
+
+Conventions:
+- params are nested dicts of jnp arrays; layer stacks carry a leading layer
+  axis and run under ``lax.scan`` (small HLO -> fast 512-way SPMD compiles);
+- activations default to bfloat16, parameters/optimizer to float32;
+- attention dispatches through ``repro.kernels.ops.flash_attention`` (Pallas
+  on TPU, blockwise-scan reference elsewhere).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.meshctx import constrain
+from repro.kernels import ops as kops
+
+
+def _uniform(rng, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(rng, shape, dtype, -scale, scale)
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = (6.0 / (d_in + d_out)) ** 0.5
+    return _uniform(rng, (d_in, d_out), scale, dtype)
+
+
+def wuse(w: jax.Array, compute, *roles):
+    """Weight-at-use cast.  With the ``bf16gather`` flag, the bf16 cast is
+    sharding-constrained to the weight's own (FSDP) layout so XLA all-gathers
+    the HALF-width tensor instead of gathering f32 then converting —
+    the f32 master stays sharded (§Perf)."""
+    from repro.perf_flags import enabled
+    if (enabled("bf16gather") and w.dtype == jnp.float32
+            and jnp.dtype(compute) != jnp.float32 and roles):
+        # barrier: pin the cast to the sharded layout so the (GSPMD-inserted)
+        # unshard all-gather runs on the half-width tensor
+        return jax.lax.optimization_barrier(constrain(w.astype(compute), *roles))
+    return w.astype(compute)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """positions: (...,) int -> (…, dim/2) angles."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, S, H, Dh); sin/cos: (B, S, Dh/2) or (S, Dh/2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if sin.ndim == 2:
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantization (perf flag kv_int8)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array):
+    """Per-vector (last-dim) symmetric int8: returns (q int8, scale bf16)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                                keepdims=True), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# grouped-query attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GQAConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+
+
+def gqa_init(rng, cfg: GQAConfig) -> dict:
+    ks = jax.random.split(rng, 5)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.d_head),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.d_head),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.d_head),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.d_head, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(cfg.n_heads * cfg.d_head, jnp.float32)
+        p["bk"] = jnp.zeros(cfg.n_kv_heads * cfg.d_head, jnp.float32)
+        p["bv"] = jnp.zeros(cfg.n_kv_heads * cfg.d_head, jnp.float32)
+    return p
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, Hk, S, Dh) -> (B, H, S, Dh) by group broadcast."""
+    b, hk, s, dh = k.shape
+    groups = n_heads // hk
+    return jnp.repeat(k, groups, axis=1)
+
+
+def gqa_project_qkv(p: dict, cfg: GQAConfig, x: jax.Array, positions: jax.Array):
+    """x: (B, S, D) -> q (B,S,H,Dh), k/v (B,S,Hk,Dh) with RoPE applied."""
+    b, s, _ = x.shape
+    compute = x.dtype
+    q = x @ wuse(p["wq"], compute, "fsdp", "model")
+    k = x @ wuse(p["wk"], compute, "fsdp", "model")
+    v = x @ wuse(p["wv"], compute, "fsdp", "model")
+    if "bq" in p:
+        q = q + p["bq"].astype(compute)
+        k = k + p["bk"].astype(compute)
+        v = v + p["bv"].astype(compute)
+    q = constrain(q.reshape(b, s, cfg.n_heads, cfg.d_head),
+                  "dp", None, "model", None)
+    k = constrain(k.reshape(b, s, cfg.n_kv_heads, cfg.d_head),
+                  "dp", None, "model", None)
+    v = constrain(v.reshape(b, s, cfg.n_kv_heads, cfg.d_head),
+                  "dp", None, "model", None)
+    sin, cos = rope_angles(positions, cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def gqa_attention(
+    p: dict, cfg: GQAConfig, x: jax.Array, positions: jax.Array,
+    kv_cache: Optional[tuple[jax.Array, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    """Returns (out (B,S,D), new_kv_cache or None).
+
+    kv_cache: (k, v) each (B, S_max, Hk, Dh); cache_index = current length.
+    Prefill (S > 1) attends over the fresh prompt keys only; decode (S == 1)
+    attends over the cache masked to the live length.
+    """
+    b, s, _ = x.shape
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    kv_len_mask = None
+    if kv_cache is not None:
+        quantized = isinstance(kv_cache[0], tuple)
+        if quantized:  # int8 cache: ((k_q, k_s), (v_q, v_s))
+            (kq, ks), (vq, vs) = kv_cache
+            nkq, nks = quantize_kv(k)
+            nvq, nvs = quantize_kv(v)
+            kq = jax.lax.dynamic_update_slice(kq, nkq, (0, cache_index, 0, 0))
+            ks = jax.lax.dynamic_update_slice(ks, nks, (0, cache_index, 0, 0))
+            vq = jax.lax.dynamic_update_slice(vq, nvq, (0, cache_index, 0, 0))
+            vs = jax.lax.dynamic_update_slice(vs, nvs, (0, cache_index, 0, 0))
+            new_cache = ((kq, ks), (vq, vs))
+            if s > 1:
+                k_all, v_all = k, v
+            else:
+                k_all = dequantize_kv(kq, ks, k.dtype)
+                v_all = dequantize_kv(vq, vs, v.dtype)
+                kv_len_mask = cache_index + s
+                causal = False
+        else:
+            ck, cv = kv_cache
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cache_index, 0, 0))
+            new_cache = (ck, cv)
+            if s > 1:  # prefill: prompt attends only the prompt
+                k_all, v_all = k, v
+            else:      # decode: attend the cache up to the live length
+                k_all, v_all = ck, cv
+                kv_len_mask = cache_index + s
+                causal = False
+    else:
+        k_all, v_all = k, v
+        new_cache = None
+    # (B, H, S, Dh) layout for the attention kernel
+    qh = constrain(q.transpose(0, 2, 1, 3), "dp", "model", None, None)
+    kh = constrain(
+        _expand_kv(k_all.transpose(0, 2, 1, 3).astype(q.dtype), cfg.n_heads),
+        "dp", "model", None, None)
+    vh = constrain(
+        _expand_kv(v_all.transpose(0, 2, 1, 3).astype(q.dtype), cfg.n_heads),
+        "dp", "model", None, None)
+    out = kops.flash_attention(qh, kh, vh, causal=causal, kv_len_mask=kv_len_mask)
+    out = constrain(out, "dp", "model", None, None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.d_head)
+    out = constrain(out, "dp", None, "model")
+    return constrain(out @ wuse(p["wo"], out.dtype, "model", "fsdp"),
+                     "dp", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# multi-head latent attention (MLA, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    @property
+    def cache_dim(self) -> int:
+        return self.kv_lora_rank + self.qk_rope_dim
+
+
+def mla_init(rng, cfg: MLAConfig) -> dict:
+    ks = jax.random.split(rng, 6)
+    return {
+        # queries: full-rank projection (V2-Lite has no q-LoRA)
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.qk_dim),
+        # latent kv down-projection + shared rope key
+        "w_dkv": dense_init(ks[1], cfg.d_model, cfg.kv_lora_rank),
+        "w_krope": dense_init(ks[2], cfg.d_model, cfg.qk_rope_dim),
+        # up-projections from the latent
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank, cfg.n_heads * cfg.qk_nope_dim),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank, cfg.n_heads * cfg.v_head_dim),
+        "wo": dense_init(ks[5], cfg.n_heads * cfg.v_head_dim, cfg.d_model),
+        "norm_ckv": jnp.ones(cfg.kv_lora_rank, jnp.float32),
+    }
+
+
+def mla_attention(
+    p: dict, cfg: MLAConfig, x: jax.Array, positions: jax.Array,
+    latent_cache: Optional[jax.Array] = None,
+    cache_index: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    """MLA with the compressed latent as the cached state (paper-exact cache:
+    c_kv (kv_lora) + shared rope key). Returns (out, new_latent_cache).
+
+    latent_cache: (B, S_max, kv_lora + qk_rope).
+    """
+    b, s, _ = x.shape
+    compute = x.dtype
+    q = (x @ wuse(p["wq"], compute, "fsdp", "model")).reshape(
+        b, s, cfg.n_heads, cfg.qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    sin, cos = rope_angles(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    c_kv = rms_norm(x @ p["w_dkv"].astype(compute), p["norm_ckv"])
+    k_rope = (x @ p["w_krope"].astype(compute)).reshape(b, s, 1, cfg.qk_rope_dim)
+    k_rope = apply_rope(k_rope, sin, cos)
+    latent = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)  # (B,S,cache_dim)
+
+    kv_len_mask = None
+    if latent_cache is not None:
+        quantized = isinstance(latent_cache, tuple)
+        if quantized:  # int8 latent cache: (c_q, c_s)
+            cq, cs = latent_cache
+            nq, nscale = quantize_kv(latent)
+            cq = jax.lax.dynamic_update_slice(cq, nq, (0, cache_index, 0))
+            cs = jax.lax.dynamic_update_slice(cs, nscale, (0, cache_index, 0))
+            new_cache = (cq, cs)
+            if s > 1:
+                lat_all = latent
+            else:
+                lat_all = dequantize_kv(cq, cs, compute)
+                kv_len_mask = cache_index + s
+                causal = False
+        else:
+            latent_cache = jax.lax.dynamic_update_slice(
+                latent_cache, latent.astype(latent_cache.dtype),
+                (0, cache_index, 0)
+            )
+            new_cache = latent_cache
+            if s > 1:  # prefill: prompt attends only the prompt
+                lat_all = latent
+            else:      # decode: attend the full latent cache up to live length
+                lat_all = latent_cache.astype(compute)
+                kv_len_mask = cache_index + s
+                causal = False
+    else:
+        lat_all = latent
+        new_cache = None
+    c_all, krope_all = jnp.split(lat_all, [cfg.kv_lora_rank], axis=-1)
+    s_kv = c_all.shape[1]
+
+    # expand keys/values from the latent (B, S_kv, H, *)
+    k_nope = (c_all @ wuse(p["w_uk"], compute, None, "model")).reshape(
+        b, s_kv, cfg.n_heads, cfg.qk_nope_dim
+    )
+    v = (c_all @ wuse(p["w_uv"], compute, None, "model")).reshape(
+        b, s_kv, cfg.n_heads, cfg.v_head_dim
+    )
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_all[:, :, None, :],
+                                  (b, s_kv, cfg.n_heads, cfg.qk_rope_dim))],
+        axis=-1,
+    )
+    qh = constrain(
+        jnp.concatenate([q_nope, q_rope], axis=-1).transpose(0, 2, 1, 3),
+        "dp", "model", None, None)
+    kh = constrain(k.transpose(0, 2, 1, 3), "dp", "model", None, None)
+    # pad v head dim up to qk_dim for the shared kernel, slice after
+    vh = constrain(v.transpose(0, 2, 1, 3), "dp", "model", None, None)
+    if cfg.v_head_dim != cfg.qk_dim:
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, 0), (0, cfg.qk_dim - cfg.v_head_dim)))
+    out = kops.flash_attention(qh, kh, vh, causal=causal, kv_len_mask=kv_len_mask)
+    out = constrain(out[..., : cfg.v_head_dim], "dp", "model", None, None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.v_head_dim)
+    out = constrain(out, "dp", None, "model")
+    return constrain(out @ wuse(p["wo"], compute, "model", "fsdp"),
+                     "dp", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def swiglu_init(rng, d_model: int, d_ff: int) -> dict:
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff),
+        "w_up": dense_init(ks[1], d_model, d_ff),
+        "w_down": dense_init(ks[2], d_ff, d_model),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    compute = x.dtype
+    ndim = x.ndim
+    ff_spec = ["dp"] + [None] * (ndim - 2) + ["model"]
+    g = constrain(jax.nn.silu(x @ wuse(p["w_gate"], compute, "fsdp", "model")),
+                  *ff_spec)
+    u = constrain(x @ wuse(p["w_up"], compute, "fsdp", "model"), *ff_spec)
+    out_spec = ["dp"] + [None] * (ndim - 1)
+    return constrain((g * u) @ wuse(p["w_down"], compute, "model", "fsdp"),
+                     *out_spec)
+
+
+# ---------------------------------------------------------------------------
+# generic MLP (GNN / recsys substrate)
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, dims: list[int]) -> dict:
+    ks = jax.random.split(rng, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(ks[i], dims[i], dims[i + 1])
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros(dims[i + 1], jnp.float32)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, act=jax.nn.relu, final_act: bool = False) -> jax.Array:
+    n = len([k for k in p if k.startswith("w")])
+    compute = x.dtype
+    for i in range(n):
+        x = x @ p[f"w{i}"].astype(compute) + p[f"b{i}"].astype(compute)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

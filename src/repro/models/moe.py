@@ -1,0 +1,257 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bucketed scatter
+dispatch (MegaBlocks-style, linear memory).
+
+Classic GShard dispatch materializes a (tokens, experts, capacity) one-hot —
+O(T²) at large batch.  Here dispatch is a scatter-add into an (E*C, D) expert
+buffer and combine is K gathers back, so memory stays O(T·D + E·C·D):
+
+    slot(t, k) = expert(t, k) * C + position-within-expert(t, k)
+    xe          = zeros(E*C, D).at[slot].add(x)      # K sequential scatters
+    ye          = expert_ffn(xe)                     # stacked (E, C, D) einsums
+    out(t)      = sum_k gate(t,k) * ye[slot(t, k)]   # K gathers
+
+With experts sharded over the ``model`` axis and tokens over ``data``, XLA
+SPMD lowers the scatter/gather across shards to the expected all-to-alls.
+Overflow beyond capacity C = ceil(cf * T * k / E) drops (standard capacity
+semantics); the aux loss keeps the router balanced.
+
+Structural kinship with the paper's engine: the (token -> expert) assignment
+is an edge list, dispatch/combine are EdgeScan's gather/segment-sum
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.meshctx import constrain
+from repro.models.layers import dense_init, swiglu, swiglu_init, wuse
+
+
+@dataclasses.dataclass
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int           # per-expert intermediate size
+    n_experts: int
+    top_k: int
+    n_shared: int = 0          # DeepSeek shared experts (always-on)
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+
+def moe_init(rng, cfg: MoEConfig) -> dict:
+    ks = jax.random.split(rng, 3)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    scale = (6.0 / (d + f)) ** 0.5
+    p = {
+        "router": dense_init(ks[0], d, e),
+        # stacked expert weights (E, ...) — sharded over the model axis (EP)
+        "w_gate": jax.random.uniform(ks[1], (e, d, f), jnp.float32, -scale, scale),
+        "w_up": jax.random.uniform(jax.random.fold_in(ks[1], 1), (e, d, f),
+                                   jnp.float32, -scale, scale),
+        "w_down": jax.random.uniform(jax.random.fold_in(ks[1], 2), (e, f, d),
+                                     jnp.float32, -scale, scale),
+    }
+    if cfg.n_shared:
+        p["shared"] = swiglu_init(ks[2], d, cfg.d_ff_expert * cfg.n_shared)
+    return p
+
+
+def moe_apply(p: dict, cfg: MoEConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    compute = x.dtype
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_idx = jax.lax.top_k(probs, k)                          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # explicit expert-parallel dispatch (§Perf "moe_ep"): under a mesh, the
+    # pjit scatter-dispatch below lowers to full expert-buffer all-reduces
+    # (measured 94% of deepseek train collectives); the shard_map path
+    # scatters locally per (data, model) device and only psums (T_local, D)
+    from repro.distributed.meshctx import current_mesh
+    from repro.perf_flags import enabled
+    mesh = current_mesh()
+    if (enabled("moe_ep") and mesh is not None and "model" in mesh.axis_names
+            and e % mesh.shape["model"] == 0):
+        out_t, aux = _moe_ep_shardmap(p, cfg, mesh, xt, top_idx, gate_vals,
+                                      probs)
+        out = out_t.reshape(b, s, d)
+        if cfg.n_shared and "shared" in p:
+            out = out + swiglu(p["shared"], x)
+        return out, aux
+
+    # small token counts (decode steps, smoke tests) run dropless: capacity
+    # covers the worst case so serving quality never degrades from drops
+    if t <= 256:
+        capacity = t
+    else:
+        capacity = max(1, int(cfg.capacity_factor * t * k / e))
+
+    # position-within-expert for every (t, k) assignment, sort-based
+    # (MegaBlocks-style).  The one-hot cumsum alternative is O(T*K*E) with a
+    # reduce-window lowering — measured 235x FLOP inflation (EXPERIMENTS.md
+    # §Perf); stable argsort keeps first-come-first-served capacity semantics.
+    flat_e = top_idx.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)                              # (T*K,)
+    sorted_e = flat_e[order]
+    expert_starts = jnp.searchsorted(sorted_e, jnp.arange(e))             # (E,)
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - expert_starts[sorted_e]
+    pos = jnp.zeros(t * k, jnp.int32).at[order].set(
+        pos_sorted, mode="drop").reshape(t, k)                            # (T, K)
+    keep = pos < capacity
+
+    oob = e * capacity                                                    # drop slot
+    slot = jnp.where(keep, top_idx * capacity + pos, oob)                 # (T, K)
+
+    # dispatch: K sequential scatter-adds into the expert buffer.  The buffer
+    # is constrained to the expert (model) axis at creation so GSPMD lowers
+    # each scatter as partial-scatter + combine instead of replicating the
+    # whole dispatch across the model axis (15x measured, EXPERIMENTS.md §Perf)
+    xe = constrain(jnp.zeros((e * capacity, d), compute), "model", None)
+    for kk in range(k):
+        xe = constrain(
+            xe.at[slot[:, kk]].add(
+                xt * keep[:, kk, None].astype(compute), mode="drop"
+            ),
+            "model", None,
+        )
+    xe = constrain(xe.reshape(e, capacity, d), "model", None, None)
+
+    # expert computation: stacked SwiGLU over (E, C, D)
+    g = constrain(
+        jax.nn.silu(jnp.einsum(
+            "ecd,edf->ecf", xe, wuse(p["w_gate"], compute, "model", "fsdp", None))),
+        "model", None, None)
+    u = constrain(jnp.einsum(
+        "ecd,edf->ecf", xe, wuse(p["w_up"], compute, "model", "fsdp", None)),
+        "model", None, None)
+    ye = constrain(jnp.einsum(
+        "ecf,efd->ecd", g * u, wuse(p["w_down"], compute, "model", None, "fsdp")),
+        "model", None, None)
+    ye_flat = ye.reshape(e * capacity, d)
+
+    # combine: K gathers weighted by gates
+    out_t = jnp.zeros((t, d), compute)
+    for kk in range(k):
+        gathered = jnp.take(ye_flat, jnp.minimum(slot[:, kk], oob - 1), axis=0)
+        w = (gate_vals[:, kk] * keep[:, kk]).astype(compute)
+        out_t = out_t + gathered * w[:, None]
+
+    # load-balance aux loss (Switch/GShard form)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    frac_probs = probs.mean(axis=0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(frac_tokens * frac_probs)
+
+    out = out_t.reshape(b, s, d)
+    if cfg.n_shared and "shared" in p:
+        out = out + swiglu(p["shared"], x)
+    return out, aux
+
+
+def _moe_ep_shardmap(p, cfg, mesh, xt, top_idx, gate_vals, probs):
+    """Explicit EP dispatch (§Perf): tokens stay on their data shard
+    (replicated across the model axis), experts live on their model shard.
+    Device (s, m) scatters shard-s tokens into its OWN experts' capacity
+    buffer — a purely local scatter — runs the expert FFN on gathered-over-
+    data (FSDP) weights, and the per-token partials psum over ``model``
+    (each token's expert lives on exactly one model shard).
+
+    Communication per layer: weight all-gather (bf16, the FSDP cost) +
+    one (T_local, D) psum — vs. the pjit path's (E*C, D) all-reduce per
+    scatter (measured ~50x less collective volume on deepseek train_4k).
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import dp_axes
+    from repro.perf_flags import enabled
+
+    d = xt.shape[1]
+    e, k = cfg.n_experts, cfg.top_k
+    dp = dp_axes(mesh)
+    import numpy as np
+    p_data = int(np.prod([mesh.shape[a] for a in dp]))
+    m_size = mesh.shape["model"]
+    e_per = e // m_size
+    t_local = xt.shape[0] // p_data
+    if t_local <= 512:
+        c_local = t_local                      # dropless for small shards
+    else:
+        c_local = max(1, int(cfg.capacity_factor * t_local * k / e))
+    compute = xt.dtype
+    f = cfg.d_ff_expert
+
+    def _local(xt_l, idx_l, gate_l, wg, wu, wd):
+        # xt_l: (T_l, D); idx_l/gate_l: (T_l, K)
+        # wg/wu: (E_per, D/p_data, F); wd: (E_per, F, D/p_data)  [FSDP slices]
+        me = jax.lax.axis_index("model")
+        e_lo = me * e_per
+
+        # local positions per expert (sort-based, local tokens only)
+        flat_e = idx_l.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(e))
+        pos_sorted = jnp.arange(flat_e.shape[0], dtype=jnp.int32) - starts[sorted_e]
+        pos = jnp.zeros(flat_e.shape[0], jnp.int32).at[order].set(
+            pos_sorted, mode="drop").reshape(idx_l.shape)
+
+        local_e = idx_l - e_lo
+        owned = (local_e >= 0) & (local_e < e_per) & (pos < c_local)
+        oob = e_per * c_local
+        slot = jnp.where(owned, local_e * c_local + pos, oob)
+
+        xe = jnp.zeros((e_per * c_local, d), compute)
+        for kk in range(k):
+            xe = xe.at[slot[:, kk]].add(
+                xt_l * owned[:, kk, None].astype(compute), mode="drop")
+        xe = xe.reshape(e_per, c_local, d)
+
+        # FSDP weight gather over the data axes (bf16 on the wire when the
+        # bf16gather flag is on — the §Perf "bf16gather" applied explicitly)
+        def gather_w(w, axis):
+            if enabled("bf16gather") and w.dtype == jnp.float32:
+                w = w.astype(compute)
+            return jax.lax.all_gather(w, dp, axis=axis, tiled=True).astype(compute)
+
+        wg_full = gather_w(wg, 1)              # (E_per, D, F)
+        wu_full = gather_w(wu, 1)
+        wd_full = gather_w(wd, 2)              # (E_per, F, D)
+
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg_full))
+        u = jnp.einsum("ecd,edf->ecf", xe, wu_full)
+        ye = jnp.einsum("ecf,efd->ecd", g * u, wd_full).reshape(
+            e_per * c_local, d)
+
+        out = jnp.zeros((xt_l.shape[0], d), compute)
+        for kk in range(k):
+            got = jnp.take(ye, jnp.minimum(slot[:, kk], oob - 1), axis=0)
+            w = (gate_l[:, kk] * owned[:, kk]).astype(compute)
+            out = out + got * w[:, None]
+        # each token's expert lives on exactly one model shard
+        return jax.lax.psum(out, "model")
+
+    out_t = jax.shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(dp, None), P(dp, None), P(dp, None),
+                  P("model", dp, None), P("model", dp, None),
+                  P("model", None, dp)),
+        out_specs=P(dp, None),
+        check_vma=False,
+    )(xt, top_idx, gate_vals.astype(compute),
+      p["w_gate"], p["w_up"], p["w_down"])
+
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32),
+                           axis=0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(frac_tokens * probs.mean(axis=0))
+    return out_t, aux

@@ -1,0 +1,3 @@
+from repro.models.recsys.xdeepfm import XDeepFM, XDeepFMConfig
+
+__all__ = ["XDeepFM", "XDeepFMConfig"]

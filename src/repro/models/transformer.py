@@ -1,0 +1,312 @@
+"""Decoder-only transformer LMs (dense / MoE / MLA) with train + serve steps.
+
+Layer stacks are scanned (``lax.scan`` over stacked per-layer params) with
+selective remat — the HLO stays small enough that 512-way SPMD lowering on
+CPU placeholder devices compiles in seconds, and activation memory stays at
+one (B, S, D) residual per layer.
+
+Step functions (what the dry-run lowers and the launcher runs):
+
+- ``train_step(state, batch)``      — fwd + bwd + fused AdamW update,
+- ``prefill_step(params, tokens)``  — build KV caches + first logits,
+- ``decode_step(params, caches, token, index)`` — one-token serve step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.meshctx import constrain
+from repro.models import layers as L
+from repro.models.layers import wuse
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclasses.dataclass
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[L.MLAConfig] = None
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # unroll the layer scan (dry-run cost variants; cost_analysis counts
+    # while-loop bodies once, so exact FLOP audits need straight-line HLO)
+    scan_unroll: bool = False
+
+    def __post_init__(self):
+        if self.d_head is None:
+            self.d_head = self.d_model // self.n_heads
+
+    @property
+    def attention(self) -> str:
+        return "mla" if self.mla is not None else "gqa"
+
+    @property
+    def gqa(self) -> L.GQAConfig:
+        return L.GQAConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, d_head=self.d_head,
+            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+        )
+
+    # ---- analytic parameter / FLOP model (roofline §8) ----------------------
+
+    def param_count(self) -> int:
+        d = self.d_model
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * self.n_heads * m.qk_dim + d * m.kv_lora_rank
+                    + d * m.qk_rope_dim + m.kv_lora_rank * self.n_heads
+                    * (m.qk_nope_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = d * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe is not None:
+            ffn = (self.moe.n_experts * 3 * d * self.moe.d_ff_expert
+                   + d * self.moe.n_experts
+                   + (3 * d * self.moe.d_ff_expert * self.moe.n_shared))
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + embed + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        inactive = (self.moe.n_experts - self.moe.top_k) * 3 \
+            * self.d_model * self.moe.d_ff_expert * self.n_layers
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(rng, cfg: LMConfig) -> dict:
+    ka, kf = jax.random.split(rng)
+    p = {
+        "ln_attn": jnp.ones(cfg.d_model, jnp.float32),
+        "ln_ffn": jnp.ones(cfg.d_model, jnp.float32),
+    }
+    if cfg.mla is not None:
+        p["attn"] = L.mla_init(ka, cfg.mla)
+    else:
+        p["attn"] = L.gqa_init(ka, cfg.gqa)
+    if cfg.moe is not None:
+        p["moe"] = moe_init(kf, cfg.moe)
+    else:
+        p["ffn"] = L.swiglu_init(kf, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(rng, cfg: LMConfig) -> dict:
+    ke, kl, ko = jax.random.split(rng, 3)
+    # stacked layers: vmap the per-layer init over layer keys
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    params = {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "layers": layers,
+        "ln_final": jnp.ones(cfg.d_model, jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ko, cfg.d_model, cfg.vocab)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg: LMConfig, lp: dict, x: jax.Array, positions: jax.Array,
+           cache: Optional[jax.Array], cache_index, causal: bool):
+    h = L.rms_norm(x, lp["ln_attn"])
+    if cfg.mla is not None:
+        attn_out, new_cache = L.mla_attention(
+            lp["attn"], cfg.mla, h, positions, cache, cache_index, causal
+        )
+    else:
+        attn_out, new_cache = L.gqa_attention(
+            lp["attn"], cfg.gqa, h, positions, cache, cache_index, causal
+        )
+    x = x + attn_out
+    h = L.rms_norm(x, lp["ln_ffn"])
+    if cfg.moe is not None:
+        ffn_out, aux = moe_apply(lp["moe"], cfg.moe, h)
+    else:
+        ffn_out, aux = L.swiglu(lp["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + ffn_out, new_cache, aux
+
+
+def _trunk(
+    cfg: LMConfig, params: dict, tokens: jax.Array,
+    caches: Optional[jax.Array] = None, cache_index=None, causal: bool = True,
+    positions: Optional[jax.Array] = None,
+):
+    """Embed + layer stack + final norm -> (x (B, S, D), caches, aux)."""
+    compute = jnp.dtype(cfg.dtype)
+    x = constrain(params["embed"][tokens].astype(compute), "dp", None, None)
+    b, s = tokens.shape
+    if positions is None:
+        start = 0 if cache_index is None else cache_index
+        positions = start + jnp.arange(s)[None, :].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (b, s))
+
+    def scan_fn(carry, layer_in):
+        x = constrain(carry, "dp", None, None)
+        lp, layer_cache = layer_in
+        x, new_cache, aux = _block(cfg, lp, x, positions, layer_cache,
+                                   cache_index, causal)
+        return constrain(x, "dp", None, None), (new_cache, aux)
+
+    body = scan_fn
+    if cfg.remat:
+        body = jax.checkpoint(
+            scan_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, (new_caches, aux) = jax.lax.scan(
+        body, x, (params["layers"], caches),
+        unroll=cfg.n_layers if cfg.scan_unroll else 1,
+    )
+    return L.rms_norm(x, params["ln_final"]), new_caches, aux.sum()
+
+
+def forward(
+    cfg: LMConfig, params: dict, tokens: jax.Array,
+    caches: Optional[jax.Array] = None, cache_index=None, causal: bool = True,
+    positions: Optional[jax.Array] = None,
+):
+    """tokens: (B, S) -> (logits (B, S, V), new_caches, aux_loss).
+
+    ``caches``: stacked per-layer KV (or MLA latent) caches with leading layer
+    axis, or None for cache-less training.
+    """
+    compute = jnp.dtype(cfg.dtype)
+    x, new_caches, aux = _trunk(cfg, params, tokens, caches, cache_index,
+                                causal, positions)
+    if cfg.tie_embeddings:
+        head = params["embed"].T.astype(compute)
+    else:
+        head = wuse(params["lm_head"], compute, "fsdp", "model")
+    logits = constrain((x @ head).astype(jnp.float32), "dp", None, "model")
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def _nll(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict) -> jax.Array:
+    from repro.perf_flags import enabled
+
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    chunk = 512
+    s = batch["tokens"].shape[1]
+    if enabled("chunkloss") and s % chunk == 0 and s // chunk >= 2:
+        # chunked loss: never materialize the (B, S, V) f32 logits (§Perf).
+        # run the trunk once, then head+log-softmax+NLL per sequence chunk.
+        compute = jnp.dtype(cfg.dtype)
+        x, _, aux = _trunk(cfg, params, batch["tokens"])
+        if cfg.tie_embeddings:
+            head = params["embed"].T.astype(compute)
+        else:
+            head = wuse(params["lm_head"], compute, "fsdp", "model")
+        total = jnp.zeros((), jnp.float32)
+        for i in range(s // chunk):  # static loop: straight-line schedule
+            sl = slice(i * chunk, (i + 1) * chunk)
+            logits_c = constrain(
+                (x[:, sl] @ head).astype(jnp.float32),
+                "dp", None, "model")
+            total = total + (_nll(logits_c, labels[:, sl]) * mask[:, sl]).sum()
+        return total / jnp.maximum(mask.sum(), 1.0) + aux
+    logits, _, aux = forward(cfg, params, batch["tokens"])
+    nll = _nll(logits, labels)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0) + aux
+
+
+def make_train_step(cfg: LMConfig, optimizer):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch)
+        )(state["params"])
+        new_params, new_opt = optimizer.update(state["params"], grads,
+                                               state["opt"], state["step"])
+        metrics = {
+            "loss": loss,
+            "grad_norm": optimizer.last_grad_norm(grads),
+        }
+        return {
+            "params": new_params, "opt": new_opt, "step": state["step"] + 1
+        }, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                quantized: Optional[bool] = None):
+    """Stacked per-layer caches (leading layer axis).  With the ``kv_int8``
+    perf flag (or quantized=True), caches are int8 + per-vector bf16 scales —
+    half the persistent decode memory."""
+    if quantized is None:
+        from repro.perf_flags import enabled
+        quantized = enabled("kv_int8")
+    if cfg.mla is not None:
+        shape = (cfg.n_layers, batch, max_len, cfg.mla.cache_dim)
+        if quantized:
+            return (jnp.zeros(shape, jnp.int8),
+                    jnp.zeros(shape[:-1] + (1,), jnp.bfloat16))
+        return jnp.zeros(shape, dtype)
+    kshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    if quantized:
+        sshape = kshape[:-1] + (1,)
+        mk = lambda: (jnp.zeros(kshape, jnp.int8), jnp.zeros(sshape, jnp.bfloat16))
+        return (mk(), mk())
+    return (jnp.zeros(kshape, dtype), jnp.zeros(kshape, dtype))
+
+
+def prefill_step(cfg: LMConfig, params: dict, tokens: jax.Array, caches):
+    """Prefill: run the prompt, fill caches, return last-position logits."""
+    logits, new_caches, _ = forward(
+        cfg, params, tokens, caches=caches, cache_index=0, causal=True
+    )
+    return logits[:, -1, :], new_caches
+
+
+def decode_step(cfg: LMConfig, params: dict, caches, token: jax.Array,
+                index: jax.Array):
+    """One decode step. token: (B, 1); index: scalar current length."""
+    logits, new_caches, _ = forward(
+        cfg, params, token, caches=caches, cache_index=index, causal=False,
+        positions=jnp.full(token.shape, index, dtype=jnp.int32),
+    )
+    return logits[:, -1, :], new_caches

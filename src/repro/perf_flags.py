@@ -1,0 +1,45 @@
+"""Perf-optimization toggles (EXPERIMENTS.md §Perf).
+
+Beyond-paper optimizations are individually switchable so the perf loop can
+record exact before/after deltas:
+
+- ``tri``        — triangular causal blockwise attention: skip kv blocks
+                   above the diagonal at schedule time (2x on causal
+                   attention compute; matches the Pallas kernel's @pl.when
+                   block skip so the CPU dry-run costs reflect TPU behavior),
+- ``chunkloss``  — chunked LM loss: never materialize the (B, S, V) f32
+                   logits; compute log-softmax/NLL per sequence chunk,
+- ``pushdown``   — GNN projection pushdown: apply the first linear layer
+                   before the remote gather so the all_gather moves d_hidden
+                   wide rows instead of d_in (the paper's filter/projection
+                   pushdown lifted to feature space),
+- ``bf16gather`` — cast FSDP-sharded weights to bf16 *before* the per-layer
+                   all-gather (half the weight-gather collective bytes;
+                   f32 master weights stay sharded),
+- ``gnnbf16``    — ship GNN pass-1 feature gathers in bf16 (half the
+                   all_gather bytes; pass-2 partial sums stay f32),
+- ``moe_ep``     — explicit shard_map expert-parallel MoE dispatch: local
+                   scatter per (data, model) device + (T_local, D) psum,
+                   replacing GSPMD's (E*C, D) all-reduce per scatter
+                   (deepseek train: 94% of collective bytes),
+- ``kv_int8``    — int8 KV caches with per-vector scales (OFF by default:
+                   a capacity trade; halves decode cache memory — closes the
+                   two single-pod decode cells that exceed 16 GB/chip).
+
+Default: all on.  ``REPRO_OPTS=""`` disables all (baseline);
+``REPRO_OPTS="tri,chunkloss"`` enables a subset.
+"""
+
+from __future__ import annotations
+
+import os
+
+_ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep")
+
+
+def enabled(flag: str) -> bool:
+    raw = os.environ.get("REPRO_OPTS")
+    if raw is None:
+        return flag in _ALL
+    chosen = {x.strip() for x in raw.split(",") if x.strip()}
+    return flag in chosen

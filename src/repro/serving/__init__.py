@@ -1,0 +1,5 @@
+"""Serving layer: batched graph-analytics query serving over GraphLake."""
+
+from repro.serving.server import QueryServer, ServerConfig
+
+__all__ = ["QueryServer", "ServerConfig"]

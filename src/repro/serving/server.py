@@ -1,0 +1,120 @@
+"""Batched query serving over GraphLake (the paper's wrk2-driven evaluation,
+§7.5, as an in-process server).
+
+Clients submit named queries with parameters; worker threads drain the queue
+and execute against a shared engine (the engine's cache manager is
+thread-safe, so concurrent queries share warmed cache units exactly like the
+paper's multi-connection evaluation).  Latency percentiles and throughput
+are recorded for the scalability benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    n_workers: int = 2
+    max_queue: int = 256
+
+
+@dataclasses.dataclass
+class QueryResult:
+    request_id: int
+    ok: bool
+    value: object
+    error: Optional[str]
+    queued_s: float
+    service_s: float
+
+
+class QueryServer:
+    """query_fns: name -> fn(engine, **params) -> value."""
+
+    def __init__(self, engine, query_fns: dict[str, Callable],
+                 config: Optional[ServerConfig] = None):
+        self.engine = engine
+        self.query_fns = query_fns
+        self.config = config or ServerConfig()
+        self._q: queue.Queue = queue.Queue(maxsize=self.config.max_queue)
+        self._results: dict[int, QueryResult] = {}
+        self._done = threading.Event()
+        self._lock = threading.Lock()
+        self._next_id = 0
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True)
+            for _ in range(self.config.n_workers)
+        ]
+        for w in self._workers:
+            w.start()
+
+    # -- client API -------------------------------------------------------------
+
+    def submit(self, query: str, **params) -> int:
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+        self._q.put((rid, query, params, time.perf_counter()))
+        return rid
+
+    def result(self, rid: int, timeout_s: float = 60.0) -> QueryResult:
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            with self._lock:
+                if rid in self._results:
+                    return self._results.pop(rid)
+            time.sleep(0.001)
+        raise TimeoutError(f"request {rid}")
+
+    def run_batch(self, requests: list[tuple[str, dict]]) -> list[QueryResult]:
+        """Submit a batch, wait for all, return results in order."""
+        rids = [self.submit(q, **p) for q, p in requests]
+        return [self.result(r) for r in rids]
+
+    def close(self) -> None:
+        for _ in self._workers:
+            self._q.put(None)
+        for w in self._workers:
+            w.join()
+
+    # -- worker -------------------------------------------------------------------
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            rid, name, params, t_submit = item
+            t_start = time.perf_counter()
+            try:
+                fn = self.query_fns[name]
+                value = fn(self.engine, **params)
+                ok, err = True, None
+            except Exception as e:  # report, don't kill the worker
+                value, ok, err = None, False, f"{type(e).__name__}: {e}"
+            t_end = time.perf_counter()
+            with self._lock:
+                self._results[rid] = QueryResult(
+                    request_id=rid, ok=ok, value=value, error=err,
+                    queued_s=t_start - t_submit, service_s=t_end - t_start,
+                )
+
+
+def latency_stats(results: list[QueryResult]) -> dict:
+    lats = sorted(r.service_s for r in results if r.ok)
+    if not lats:
+        return {"count": 0}
+    pick = lambda q: lats[min(len(lats) - 1, int(q * len(lats)))]
+    return {
+        "count": len(lats),
+        "mean_s": sum(lats) / len(lats),
+        "p50_s": pick(0.50),
+        "p95_s": pick(0.95),
+        "p99_s": pick(0.99),
+        "max_s": lats[-1],
+    }

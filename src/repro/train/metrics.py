@@ -1,0 +1,37 @@
+"""Training metrics: running aggregation + JSONL logging."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, log_every: int = 10):
+        self.path = path
+        self.log_every = log_every
+        self.history: list[dict] = []
+        self._t_last = time.perf_counter()
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def log(self, step: int, metrics: dict) -> dict:
+        now = time.perf_counter()
+        rec = {"step": int(step), "time_s": round(now - self._t_last, 4)}
+        self._t_last = now
+        for k, v in metrics.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                rec[k] = v
+        self.history.append(rec)
+        if self.path and (step % self.log_every == 0):
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        return rec
+
+    def smoothed(self, key: str, window: int = 20) -> float:
+        vals = [h[key] for h in self.history[-window:] if key in h]
+        return sum(vals) / max(len(vals), 1)

@@ -1,0 +1,238 @@
+"""Tests: transformed IDs, IDM, edge lists, topology build + materialization."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edge_list import EdgeList
+from repro.core.topology import GraphTopology
+from repro.core.types import (
+    DANGLING_FILE_ID,
+    GraphSchema,
+    VSet,
+    make_transformed,
+    split_transformed,
+)
+from repro.core.vertex_idm import VertexIDM
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.table import LakeCatalog
+
+
+@pytest.fixture
+def store(tmp_path):
+    return ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+
+
+@pytest.fixture
+def ldbc(store):
+    return generate_ldbc(store, scale_factor=0.004, n_files=3, row_group_rows=256)
+
+
+# ---------------------------------------------------------------------------
+# transformed IDs
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_transformed_id_roundtrip(file_id, row):
+    tid = make_transformed(file_id, row)
+    f, r = split_transformed(tid)
+    assert int(f) == file_id and int(r) == row
+
+
+def test_transformed_id_vectorized():
+    fids = np.array([1, 2, 3, DANGLING_FILE_ID])
+    rows = np.array([0, 5, 100, 7])
+    f, r = split_transformed(make_transformed(fids, rows))
+    np.testing.assert_array_equal(f, fids)
+    np.testing.assert_array_equal(r, rows)
+
+
+# ---------------------------------------------------------------------------
+# Vertex IDM
+# ---------------------------------------------------------------------------
+
+def test_idm_translate_and_dangling():
+    idm = VertexIDM()
+    idm.insert_batch("V", np.array([100, 200, 300]), file_id=1)
+    idm.insert_batch("V", np.array([400, 500]), file_id=2)
+    idm.freeze()
+    tids = idm.translate("V", np.array([300, 400, 100]))
+    f, r = split_transformed(tids)
+    np.testing.assert_array_equal(f, [1, 2, 1])
+    np.testing.assert_array_equal(r, [2, 0, 0])
+    # dangling id gets file 0 + counter row
+    t2 = idm.translate("V", np.array([999, 999, 888]))
+    f2, r2 = split_transformed(t2)
+    np.testing.assert_array_equal(f2, [DANGLING_FILE_ID] * 3)
+    assert r2[0] == r2[1] != r2[2]
+    assert idm.n_dangling() == 2
+    with pytest.raises(KeyError):
+        idm.translate("V", np.array([777]), allow_dangling=False)
+
+
+def test_idm_duplicate_pk_rejected():
+    idm = VertexIDM()
+    idm.insert_batch("V", np.array([1, 2]), file_id=1)
+    idm.insert_batch("V", np.array([2, 3]), file_id=2)
+    with pytest.raises(ValueError):
+        idm.freeze()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=10**9), min_size=1,
+                max_size=200, unique=True))
+def test_idm_property_bijective(raw_ids):
+    raw = np.array(raw_ids, dtype=np.int64)
+    idm = VertexIDM()
+    half = len(raw) // 2
+    idm.insert_batch("V", raw[:half], file_id=1)
+    idm.insert_batch("V", raw[half:], file_id=2)
+    idm.freeze()
+    tids = idm.translate("V", raw)
+    assert len(np.unique(tids)) == len(raw)  # injective
+    f, r = split_transformed(tids)
+    np.testing.assert_array_equal(f[:half], 1)
+    np.testing.assert_array_equal(r[:half], np.arange(half))
+
+
+# ---------------------------------------------------------------------------
+# edge lists
+# ---------------------------------------------------------------------------
+
+def test_edge_list_serialization_roundtrip():
+    src = np.arange(100, dtype=np.int64) << 32
+    dst = (np.arange(100, dtype=np.int64) % 7) << 32 | 3
+    el = EdgeList("E", "f.col", src, dst, np.arange(100), np.arange(100) % 7,
+                  row_group_rows=[60, 40])
+    back = EdgeList.from_bytes(el.to_bytes())
+    assert back.edge_type == "E" and back.file_key == "f.col"
+    np.testing.assert_array_equal(back.src_tids, src)
+    np.testing.assert_array_equal(back.dst_dense, el.dst_dense)
+    assert [p.n_rows for p in back.portions] == [60, 40]
+
+
+def test_edge_list_portion_stats_and_pruning():
+    src_dense = np.array([0, 1, 2, 10, 11, 12], dtype=np.int64)
+    dst_dense = np.array([5, 5, 5, 20, 20, 20], dtype=np.int64)
+    el = EdgeList("E", "f", src_dense, dst_dense, src_dense, dst_dense, [3, 3])
+    assert el.portions[0].src_min == 0 and el.portions[0].src_max == 2
+    assert el.portions[1].src_min == 10 and el.portions[1].src_max == 12
+    hit = el.portions_overlapping(0, 5, direction="out")
+    assert [p.row_group for p in hit] == [0]
+    hit_in = el.portions_overlapping(20, 20, direction="in")
+    assert [p.row_group for p in hit_in] == [1]
+
+
+# ---------------------------------------------------------------------------
+# topology build over a real lakehouse
+# ---------------------------------------------------------------------------
+
+def test_topology_build_counts(store, ldbc):
+    topo = GraphTopology(ldbc.schema)
+    topo.build(store, LakeCatalog(store))
+    assert topo.n_real_vertices("Person") == ldbc.n_persons
+    assert topo.n_real_vertices("Comment") == ldbc.n_comments
+    assert topo.n_edges("HasCreator") == ldbc.n_comments
+    assert topo.n_edges() == ldbc.n_edges
+    assert "idm_build_s" in topo.timings and "edge_list_build_s" in topo.timings
+
+
+def test_topology_row_alignment(store, ldbc):
+    """Edge-list entries must align row-for-row with edge attribute columns."""
+    from repro.lakehouse.columnfile import read_columns
+
+    topo = GraphTopology(ldbc.schema)
+    topo.build(store, LakeCatalog(store))
+    el = topo.edge_lists["HasCreator"][0]
+    meta = topo.edge_file_metas[el.file_key]
+    raw = read_columns(store, meta, ["src", "dst"])
+    # re-translate raw FKs -> dense and compare with the edge list
+    tids = topo.idm.translate("Comment", raw["src"])
+    np.testing.assert_array_equal(topo.tid_to_dense("Comment", tids), el.src_dense)
+    tids_d = topo.idm.translate("Person", raw["dst"])
+    np.testing.assert_array_equal(topo.tid_to_dense("Person", tids_d), el.dst_dense)
+
+
+def test_topology_dense_roundtrip(store, ldbc):
+    topo = GraphTopology(ldbc.schema)
+    topo.build(store, LakeCatalog(store))
+    dense = np.arange(topo.n_real_vertices("Person"), dtype=np.int64)
+    fids, rows = topo.dense_to_file_row("Person", dense)
+    back = topo.tid_to_dense("Person", make_transformed(fids, rows))
+    np.testing.assert_array_equal(back, dense)
+
+
+def test_topology_materialize_and_reload(store, ldbc):
+    topo = GraphTopology(ldbc.schema)
+    topo.build(store, LakeCatalog(store))
+    topo.materialize(store)
+    assert GraphTopology.is_materialized(store)
+
+    topo2 = GraphTopology(ldbc_graph_schema())
+    topo2.load_materialized(store, LakeCatalog(store))
+    assert topo2.n_edges() == topo.n_edges()
+    for ename in topo.edge_lists:
+        np.testing.assert_array_equal(
+            np.sort(np.concatenate([el.src_dense for el in topo.edge_lists[ename]])),
+            np.sort(np.concatenate([el.src_dense for el in topo2.edge_lists[ename]])),
+        )
+
+
+def test_topology_incremental_edge_update(store, ldbc):
+    topo = GraphTopology(ldbc.schema)
+    topo.build(store, LakeCatalog(store))
+    before = topo.n_edges("Knows")
+    n_lists_before = len(topo.edge_lists["Knows"])
+
+    # append a new edge file to the Knows table
+    lake = LakeCatalog(store)
+    t = lake.table("Person_Knows_Person")
+    person_raw = topo.idm.raw_ids("Person")
+    new = {
+        "src": person_raw[:10],
+        "dst": person_raw[10:20],
+        "creationDate": np.full(10, 20230101, dtype=np.int64),
+    }
+    t.append_files([new])
+    added, removed = topo.refresh_edges(store, lake, "Knows")
+    assert (added, removed) == (1, 0)
+    assert topo.n_edges("Knows") == before + 10
+
+    # delete one original file -> only its edge list drops
+    victim = t.data_files()[0]
+    t.delete_file(victim)
+    added, removed = topo.refresh_edges(store, lake, "Knows")
+    assert removed == 1 and added == 0
+    assert len(topo.edge_lists["Knows"]) == n_lists_before
+
+
+def test_file_filter_sharding(store, ldbc):
+    """file_filter restricts a node to its own edge files (distributed build)."""
+    topo_a = GraphTopology(ldbc.schema)
+    topo_a.build(store, LakeCatalog(store), file_filter=lambda k, i: i % 2 == 0)
+    topo_b = GraphTopology(ldbc_graph_schema())
+    topo_b.build(store, LakeCatalog(store), file_filter=lambda k, i: i % 2 == 1)
+    full = GraphTopology(ldbc_graph_schema())
+    full.build(store, LakeCatalog(store))
+    for ename in full.edge_lists:
+        assert topo_a.n_edges(ename) + topo_b.n_edges(ename) == full.n_edges(ename)
+
+
+# ---------------------------------------------------------------------------
+# VSet algebra
+# ---------------------------------------------------------------------------
+
+def test_vset_algebra():
+    a = VSet.from_dense_ids("V", 10, [1, 2, 3])
+    b = VSet.from_dense_ids("V", 10, [3, 4])
+    assert a.union(b).ids().tolist() == [1, 2, 3, 4]
+    assert a.intersect(b).ids().tolist() == [3]
+    assert a.minus(b).ids().tolist() == [1, 2]
+    assert a.min_max() == (1, 3)
+    with pytest.raises(ValueError):
+        a.union(VSet.from_dense_ids("W", 10, [1]))

@@ -1,0 +1,205 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.edge_scan import edge_segment_sum_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# edge_scan kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,n,d", [(64, 16, 8), (1000, 100, 16), (4096, 512, 128),
+                                   (100, 1000, 4), (1, 1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_edge_segment_sum_shapes(e, n, d, dtype):
+    rng = _rng(e + n + d)
+    values = jnp.asarray(rng.standard_normal((e, d)), dtype=dtype)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    got = edge_segment_sum_pallas(values, dst, n, block_e=128, block_n=64,
+                                  interpret=True)
+    want = ref.edge_segment_sum(values.astype(jnp.float32), dst, n)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_edge_segment_sum_sorted_input():
+    """Sorted dst (the paper's sorted-FK layout) must give exact results too."""
+    rng = _rng(5)
+    e, n, d = 2048, 256, 32
+    dst = jnp.asarray(np.sort(rng.integers(0, n, size=e)), dtype=jnp.int32)
+    values = jnp.asarray(rng.standard_normal((e, d)), dtype=jnp.float32)
+    got = edge_segment_sum_pallas(values, dst, n, block_e=256, block_n=64,
+                                  interpret=True)
+    want = ref.edge_segment_sum(values, dst, n)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=1, max_value=50),
+    st.integers(min_value=1, max_value=16),
+)
+def test_edge_segment_sum_property(e, n, d):
+    rng = _rng(e * 31 + n * 7 + d)
+    values = jnp.asarray(rng.standard_normal((e, d)), dtype=jnp.float32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    got = edge_segment_sum_pallas(values, dst, n, block_e=64, block_n=32,
+                                  interpret=True)
+    want = ref.edge_segment_sum(values, dst, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # conservation: total mass preserved
+    np.testing.assert_allclose(np.asarray(got).sum(), np.asarray(values).sum(),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_masked_edge_segment_sum_frontier_semantics():
+    rng = _rng(9)
+    e, n, d = 512, 64, 8
+    src = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    values = jnp.asarray(rng.standard_normal((e, d)), dtype=jnp.float32)
+    frontier = jnp.asarray(rng.random(n) < 0.3)
+    got = ref.masked_edge_segment_sum(values, src, dst, frontier, n)
+    mask = np.asarray(frontier)[np.asarray(src)]
+    want = ref.edge_segment_sum(values * mask[:, None].astype(np.float32), dst, n)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# embedding_bag kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("v,d,b,l", [(100, 8, 32, 4), (1000, 16, 64, 8),
+                                     (512, 128, 256, 2), (50, 10, 7, 39)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_shapes(v, d, b, l, dtype):
+    rng = _rng(v + d + b + l)
+    table = jnp.asarray(rng.standard_normal((v, d)), dtype=dtype)
+    idx = jnp.asarray(rng.integers(0, v, size=(b, l)), dtype=jnp.int32)
+    w = jnp.asarray((rng.random((b, l)) < 0.8).astype(np.float32))
+    got = embedding_bag_pallas(table, idx, w, block_b=64, block_v=128,
+                               interpret=True)
+    want = ref.embedding_bag(table.astype(jnp.float32), idx, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=200),
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=1, max_value=40),
+)
+def test_embedding_bag_property(v, l, b):
+    rng = _rng(v * 13 + l * 5 + b)
+    d = 8
+    table = jnp.asarray(rng.standard_normal((v, d)), dtype=jnp.float32)
+    idx = jnp.asarray(rng.integers(0, v, size=(b, l)), dtype=jnp.int32)
+    w = jnp.asarray(rng.random((b, l)).astype(np.float32))
+    got = embedding_bag_pallas(table, idx, w, block_b=32, block_v=64, interpret=True)
+    want = ref.embedding_bag(table, idx, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_embedding_bag_padding_weights_zero():
+    """Weight-0 (padding) entries must not contribute even with index -1."""
+    table = jnp.asarray(np.eye(8, dtype=np.float32))
+    idx = jnp.asarray([[0, -1], [3, -1]], dtype=jnp.int32)
+    w = jnp.asarray([[1.0, 0.0], [2.0, 0.0]], dtype=jnp.float32)
+    got = embedding_bag_pallas(table, idx, w, block_b=8, block_v=8, interpret=True)
+    want = np.zeros((2, 8), dtype=np.float32)
+    want[0, 0] = 1.0
+    want[1, 3] = 2.0
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,dh", [(1, 2, 128, 32), (2, 4, 256, 64), (1, 1, 64, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_naive(b, h, s, dh, causal):
+    rng = _rng(b * h + s + dh)
+    q = jnp.asarray(rng.standard_normal((b, h, s, dh)), dtype=jnp.float32) * 0.3
+    k = jnp.asarray(rng.standard_normal((b, h, s, dh)), dtype=jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((b, h, s, dh)), dtype=jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=64, block_kv=64,
+                                 interpret=True)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_decode_alignment():
+    """q shorter than kv (decode/chunked prefill): causal offset aligns to the
+    kv tail."""
+    rng = _rng(77)
+    b, h, dh = 1, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, h, 64, dh)), dtype=jnp.float32) * 0.3
+    k = jnp.asarray(rng.standard_normal((b, h, 256, dh)), dtype=jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((b, h, 256, dh)), dtype=jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64,
+                                 interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_ref_matches_naive():
+    """The CPU dry-run attention path must match the naive oracle too."""
+    rng = _rng(11)
+    for (b, h, s, dh, causal) in [(2, 2, 96, 32, True), (1, 4, 200, 64, False)]:
+        q = jnp.asarray(rng.standard_normal((b, h, s, dh)), dtype=jnp.float32) * 0.4
+        k = jnp.asarray(rng.standard_normal((b, h, s, dh)), dtype=jnp.float32) * 0.4
+        v = jnp.asarray(rng.standard_normal((b, h, s, dh)), dtype=jnp.float32)
+        got = ref.attention_blockwise(q, k, v, causal=causal, block_kv=64)
+        want = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_bf16_attention_tolerance():
+    rng = _rng(13)
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype=jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype=jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype=jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_kv=64,
+                                 interpret=True)
+    want = ref.attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_interpret(monkeypatch):
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    rng = _rng(1)
+    values = jnp.asarray(rng.standard_normal((256, 16)), dtype=jnp.float32)
+    dst = jnp.asarray(rng.integers(0, 32, size=256), dtype=jnp.int32)
+    got = ops.edge_segment_sum(values, dst, 32)
+    want = ref.edge_segment_sum(values, dst, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    monkeypatch.setenv("REPRO_PALLAS", "off")
+    got2 = ops.edge_segment_sum(values, dst, 32)
+    np.testing.assert_allclose(got2, want, rtol=1e-6)

@@ -1,0 +1,253 @@
+"""Unit + property tests for the lakehouse substrate."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.lakehouse.encoding import (
+    Encoding,
+    bit_width,
+    choose_encoding,
+    chunk_row_count,
+    decode_column,
+    encode_column,
+    pack_bits,
+    unpack_bits,
+)
+from repro.lakehouse.columnfile import (
+    read_column_chunk,
+    read_columns,
+    read_footer,
+    write_column_file,
+)
+from repro.lakehouse.io_pool import IOPool, prefetch_iter
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.table import ColumnSpec, LakeCatalog, TableSchema
+from repro.lakehouse.writer import write_table
+
+
+@pytest.fixture
+def store(tmp_path):
+    return ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+
+
+# ---------------------------------------------------------------------------
+# encodings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("encoding", list(Encoding))
+@pytest.mark.parametrize(
+    "arr",
+    [
+        np.arange(1000, dtype=np.int64),
+        np.repeat(np.arange(10, dtype=np.int32), 100),
+        np.zeros(17, dtype=np.int64),
+        np.array([5], dtype=np.int64),
+        np.array([], dtype=np.int64),
+    ],
+)
+def test_int_roundtrip(encoding, arr):
+    blob = encode_column(arr, encoding)
+    out = decode_column(blob)
+    np.testing.assert_array_equal(out, arr)
+    assert chunk_row_count(blob) == len(arr)
+
+
+@pytest.mark.parametrize("encoding", [Encoding.PLAIN, Encoding.RLE])
+def test_float_roundtrip(encoding):
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal(513).astype(np.float32)
+    out = decode_column(encode_column(arr, encoding))
+    np.testing.assert_array_equal(out, arr)
+
+
+@pytest.mark.parametrize("encoding", [Encoding.PLAIN, Encoding.RLE, Encoding.DICTIONARY])
+def test_string_roundtrip(encoding):
+    arr = np.array(["alice", "bob", "alice", "carol", "", "bob"], dtype=object)
+    out = decode_column(encode_column(arr, encoding))
+    assert out.tolist() == arr.tolist()
+
+
+def test_bitpack_rejects_negative_and_strings():
+    with pytest.raises(ValueError):
+        encode_column(np.array([-1, 2]), Encoding.BITPACK)
+    with pytest.raises(ValueError):
+        encode_column(np.array(["x"], dtype=object), Encoding.BITPACK)
+
+
+@pytest.mark.parametrize("encoding", list(Encoding))
+def test_partial_decode_prefix(encoding):
+    arr = np.arange(1000, dtype=np.int64) % 7
+    blob = encode_column(arr, encoding)
+    np.testing.assert_array_equal(decode_column(blob, row_limit=137), arr[:137])
+    np.testing.assert_array_equal(decode_column(blob, row_limit=10_000), arr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=2**40), min_size=0, max_size=200),
+    st.sampled_from(list(Encoding)),
+)
+def test_property_int_roundtrip(values, encoding):
+    arr = np.array(values, dtype=np.int64)
+    np.testing.assert_array_equal(decode_column(encode_column(arr, encoding)), arr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=2**30), min_size=1, max_size=300))
+def test_property_pack_bits_roundtrip(values):
+    arr = np.array(values, dtype=np.uint64)
+    width = bit_width(int(arr.max()))
+    np.testing.assert_array_equal(unpack_bits(pack_bits(arr, width), width, len(arr)), arr)
+
+
+def test_choose_encoding_heuristics():
+    assert choose_encoding(np.repeat(np.arange(4), 64)) == Encoding.RLE
+    assert choose_encoding(np.random.default_rng(0).standard_normal(64)) == Encoding.PLAIN
+    assert choose_encoding(np.array(["a", "b", "a", "b"] * 16, dtype=object)) == Encoding.DICTIONARY
+
+
+# ---------------------------------------------------------------------------
+# column files
+# ---------------------------------------------------------------------------
+
+def test_column_file_roundtrip(store):
+    rng = np.random.default_rng(1)
+    cols = {
+        "id": np.arange(10_000, dtype=np.int64),
+        "score": rng.standard_normal(10_000).astype(np.float32),
+        "tag": np.array([f"t{i % 5}" for i in range(10_000)], dtype=object),
+    }
+    meta = write_column_file(store, "t/part-0.col", cols, row_group_rows=3000)
+    assert meta.n_rows == 10_000
+    assert len(meta.row_groups) == 4
+
+    back = read_footer(store, "t/part-0.col")
+    assert back.n_rows == 10_000
+    got = read_columns(store, back, ["id", "score", "tag"])
+    np.testing.assert_array_equal(got["id"], cols["id"])
+    np.testing.assert_array_equal(got["score"], cols["score"])
+    assert got["tag"].tolist() == cols["tag"].tolist()
+
+
+def test_column_chunk_stats_and_partial(store):
+    cols = {"id": np.arange(100, 300, dtype=np.int64)}
+    meta = write_column_file(store, "t/p.col", cols, row_group_rows=50)
+    c = meta.chunk("id", 1)
+    assert c.min_value == 150 and c.max_value == 199
+    part = read_column_chunk(store, meta, "id", 1, row_limit=10)
+    np.testing.assert_array_equal(part, np.arange(150, 160))
+
+
+# ---------------------------------------------------------------------------
+# object store
+# ---------------------------------------------------------------------------
+
+def test_object_store_ranged_reads(store):
+    store.put("a/b", b"0123456789")
+    assert store.get("a/b", offset=2, length=3) == b"234"
+    assert store.get("a/b", offset=-4) == b"6789"
+    assert store.counters["get_requests"] == 2
+
+
+def test_object_store_latency_model(tmp_path):
+    s = ObjectStore(StoreConfig(root=str(tmp_path), latency_scale=1.0,
+                                request_latency_s=0.003, bandwidth_bytes_per_s=1e9))
+    s.put("k", b"x" * 1000)
+    s.get("k")
+    assert s.counters["simulated_wait_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# tables
+# ---------------------------------------------------------------------------
+
+def _person_schema():
+    return TableSchema(
+        name="Person",
+        columns=[
+            ColumnSpec("id", "int64", role="primary_key"),
+            ColumnSpec("name", "str"),
+            ColumnSpec("age", "int64"),
+        ],
+    )
+
+
+def test_table_snapshots_and_append(store):
+    cols = {
+        "id": np.arange(100, dtype=np.int64),
+        "name": np.array([f"p{i}" for i in range(100)], dtype=object),
+        "age": np.arange(100, dtype=np.int64) % 90,
+    }
+    t = write_table(store, _person_schema(), cols, n_files=3)
+    assert t.current_snapshot().n_files == 3
+    assert t.current_snapshot().n_rows == 100
+
+    more = {
+        "id": np.arange(100, 120, dtype=np.int64),
+        "name": np.array([f"p{i}" for i in range(100, 120)], dtype=object),
+        "age": np.zeros(20, dtype=np.int64),
+    }
+    t.append_files([more])
+    assert t.current_snapshot().n_files == 4
+    assert t.current_snapshot().n_rows == 120
+    # old snapshot is still readable (time travel)
+    assert len(t.data_files(snapshot_id=1)) == 3
+
+
+def test_table_delete_file(store):
+    cols = {
+        "id": np.arange(90, dtype=np.int64),
+        "name": np.array(["x"] * 90, dtype=object),
+        "age": np.zeros(90, dtype=np.int64),
+    }
+    t = write_table(store, _person_schema(), cols, n_files=3)
+    victim = t.data_files()[1]
+    t.delete_file(victim)
+    assert victim not in t.data_files()
+    assert t.current_snapshot().n_rows == 60
+
+
+def test_catalog_state_polling(store):
+    cols = {
+        "id": np.arange(10, dtype=np.int64),
+        "name": np.array(["x"] * 10, dtype=object),
+        "age": np.zeros(10, dtype=np.int64),
+    }
+    write_table(store, _person_schema(), cols, n_files=2)
+    cat = LakeCatalog(store)
+    assert cat.list_tables() == ["Person"]
+    snap_id, files = cat.table_state("Person")
+    assert snap_id == 1 and len(files) == 2
+
+
+# ---------------------------------------------------------------------------
+# I/O pool
+# ---------------------------------------------------------------------------
+
+def test_io_pool_pipelined_order():
+    with IOPool(n_threads=4) as pool:
+        items = list(range(20))
+        out = pool.map_pipelined(items, fetch=lambda i: i * 2, compute=lambda i, v: v + 1)
+    assert out == [i * 2 + 1 for i in range(20)]
+
+
+def test_io_pool_prefetch_iter():
+    with IOPool(n_threads=2) as pool:
+        got = list(prefetch_iter(pool, range(7), fetch=lambda i: i * i, depth=3))
+    assert got == [(i, i * i) for i in range(7)]
+
+
+def test_io_pool_backup_fetch():
+    import time as _time
+    calls = []
+
+    def slow():
+        calls.append(1)
+        if len(calls) == 1:
+            _time.sleep(0.3)
+        return 42
+
+    with IOPool(n_threads=2) as pool:
+        assert pool.fetch_with_backup(slow, backup_after_s=0.05) == 42
+    assert pool.stats["backup_fetches"] == 1

@@ -1,0 +1,69 @@
+"""Render the dry-run roofline table (markdown) from benchmarks/results/dryrun.
+
+    PYTHONPATH=src python tools/render_roofline.py [--mesh pod]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                      "benchmarks", "results", "dryrun")
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def render(mesh: str | None) -> str:
+    rows = [
+        "| arch | cell | mesh | compute | memory | collective | dominant | "
+        "MODEL/HLO flops | roofline frac | GB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | {r['mesh']} | — | — | — | "
+                f"skipped | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['cell']} | {r['mesh']} | ERROR | | | "
+                f"{r.get('error','')[:60]} | | | | |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+            f"| {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+            f"| {fmt_s(t['collective_s'])} | **{t['dominant']}** "
+            f"| {t['useful_flop_fraction']:.2f} "
+            f"| {t['roofline_fraction']:.3f} "
+            f"| {r['per_device_bytes']/1e9:.2f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    print(render(args.mesh))
