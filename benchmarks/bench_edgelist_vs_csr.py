@@ -1,7 +1,14 @@
 """Paper Fig. 15: edge-centric EdgeScan (edge lists) vs vertex-centric
-EdgeMap (CSR) across input-set selectivities.  Reproduces the paper's
-crossover: CSR wins at low selectivity (prunes whole adjacency ranges),
-edge lists win at high selectivity (sequential scan locality)."""
+EdgeMap (CSR) across input-set selectivities, plus the topology plane's
+adaptive dispatcher on top of both.
+
+Reproduces the paper's crossover — CSR wins at low selectivity (prunes whole
+adjacency ranges), edge lists win at high selectivity (sequential scan
+locality) — and then checks that ``edge_scan(strategy="auto")`` tracks the
+faster representation on both sides of it.  The crossover selectivity
+observed here calibrates ``DEFAULT_CSR_THRESHOLD`` in
+``repro.core.topology_plane`` (override: ``REPRO_OPTS="csr=<threshold>"``).
+"""
 
 from __future__ import annotations
 
@@ -9,15 +16,25 @@ import numpy as np
 
 from benchmarks.common import emit, graph500_lake, make_engine, timed
 from repro.core.baselines import CSRTopology, csr_edge_map, edge_list_edge_map
+from repro.core.types import VSet
+
+SELECTIVITIES = (0.0001, 0.001, 0.01, 0.1, 0.5, 1.0)
+QUICK_SELECTIVITIES = (0.001, 0.5)
 
 
-def run(scale: int = 14) -> None:
-    store, schema = graph500_lake("fig15", scale)
+def run(scale: int = 14, quick: bool = False) -> None:
+    if quick:
+        scale = min(scale, 10)
+    sels = QUICK_SELECTIVITIES if quick else SELECTIVITIES
+    repeats = 1 if quick else 3
+
+    store, schema = graph500_lake("fig15_q" if quick else "fig15", scale)
     eng = make_engine(store, schema)
     eng.startup()
     src, dst = eng.concat_edges("Edge")
     n = eng.topology.n_vertices("Node")
 
+    # -- raw gather crossover (Fig. 15 proper) -------------------------------
     csr = CSRTopology(src, dst, n)
     el_build = eng.topology.timings.get(      # second connections load instead
         "edge_list_build_s", eng.topology.timings.get("load_topology_s", 0.0))
@@ -27,14 +44,16 @@ def run(scale: int = 14) -> None:
     rng = np.random.default_rng(0)
     crossover = None
     prev = None
-    for sel in (0.0001, 0.001, 0.01, 0.1, 0.5, 1.0):
+    frontiers = {}
+    for sel in sels:
         k = max(1, int(n * sel))
-        active = rng.choice(n, size=k, replace=False)
+        active = np.sort(rng.choice(n, size=k, replace=False))
         mask = np.zeros(n, dtype=bool)
         mask[active] = True
+        frontiers[sel] = active
 
-        _, t_csr = timed(csr_edge_map, csr, active, repeats=3)
-        _, t_el = timed(edge_list_edge_map, src, dst, mask, repeats=3)
+        _, t_csr = timed(csr_edge_map, csr, active, repeats=repeats)
+        _, t_el = timed(edge_list_edge_map, src, dst, mask, repeats=repeats)
         emit(f"fig15_sel{sel}_csr_us", t_csr * 1e6, "")
         emit(f"fig15_sel{sel}_edgelist_us", t_el * 1e6,
              f"speedup_vs_csr={t_csr / t_el:.2f}x")
@@ -43,4 +62,29 @@ def run(scale: int = 14) -> None:
         prev = t_csr / t_el
     if crossover:
         emit("fig15_crossover_selectivity", crossover * 1e6, f"~{crossover}")
+
+    # -- adaptive dispatch through the topology plane ------------------------
+    # the full edge_scan path (frontier test + materialization) under each
+    # forced strategy, then "auto": the dispatcher should pick the faster
+    # side at both ends of the crossover.
+    eng.plane.csr("Edge")  # build once outside the timed region
+    tracked = 0
+    for sel in sels:
+        frontier = VSet.from_dense_ids("Node", n, frontiers[sel])
+        _, t_el = timed(eng.edge_scan, frontier, "Edge", strategy="edgelist",
+                        repeats=repeats)
+        _, t_csr = timed(eng.edge_scan, frontier, "Edge", strategy="csr",
+                         repeats=repeats)
+        _, t_auto = timed(eng.edge_scan, frontier, "Edge", strategy="auto",
+                          repeats=repeats)
+        picked = eng.plane.last_strategy["Edge"]
+        faster = "csr" if t_csr < t_el else "edgelist"
+        if picked == faster:
+            tracked += 1
+        emit(f"fig15_scan_sel{sel}_auto_us", t_auto * 1e6,
+             f"picked={picked};faster={faster};"
+             f"el={t_el*1e6:.0f}us;csr={t_csr*1e6:.0f}us")
+    emit("fig15_auto_tracks_faster", tracked,
+         f"of {len(sels)} selectivities (threshold="
+         f"{eng.plane.threshold()})")
     eng.close()

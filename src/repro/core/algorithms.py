@@ -1,9 +1,22 @@
 """Graph algorithms over the engine (paper Table 2: PR, WCC, CDLP, LCC, BFS).
 
-All five run on the *topology only* (no property access) in the edge-centric
-style: a contiguous (src, dst) edge array is scanned per superstep and
-per-vertex state is combined with segment reductions.  The numeric inner
-loops are jitted JAX (dispatching to the Pallas ``edge_scan`` kernel path on
+All five run on the *topology only* (no property access), consuming the
+**topology plane** (DESIGN.md §3) directly:
+
+- whole-graph scans (PR, WCC, CDLP, LCC) take the plane's **dst-sorted CSR
+  edge order** — segment ids arrive non-decreasing, so the Pallas segment
+  kernels see tight per-block ranges and skip every non-overlapping
+  (edge-block, output-block) pair;
+- PageRank's inner reduction is the CSR offset-range segment sum
+  (``kops.csr_segment_sum``), fed by the reverse-CSR index — no per-edge
+  destination ids at all.  Its 1-D rank column takes the searchsorted
+  reference path; the Pallas offset-range kernel serves the 2-D
+  (multi-channel) form of the same op;
+- BFS dispatches adaptively per level, exactly like EdgeScan: small
+  frontiers expand through CSR adjacency ranges, large frontiers fall back
+  to the edge-centric masked scan.
+
+The numeric inner loops are jitted JAX (dispatching to the Pallas kernels on
 TPU via ``repro.kernels.ops``); convergence control stays in Python exactly
 like GSQL's WHILE drives supersteps.
 """
@@ -17,6 +30,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.perf_flags import enabled as perf_enabled
+
+
+def _csr_for(engine, edge_type: str, n: int):
+    """The edge type's CSR when the ``csr`` perf flag is on (the baseline
+    ``REPRO_OPTS=""`` run must not build or consume CSR at all) and its
+    vertex spaces match ``n`` (callers may override ``n`` for truncated
+    runs — then fall back to edge arrays)."""
+    if not perf_enabled("csr"):
+        return None
+    et = engine.schema.edge_types[edge_type]
+    topo = engine.topology
+    # dimension check BEFORE building: a truncated run must not pay the
+    # grouping cost of an index it cannot use
+    if topo.n_vertices(et.src_type) != n or topo.n_vertices(et.dst_type) != n:
+        return None
+    return engine.plane.csr(edge_type)
+
+
+def _edges_dst_sorted(engine, edge_type: str, n: int):
+    """(src, dst) in dst-sorted order when CSR dims match, else raw concat."""
+    csr = _csr_for(engine, edge_type, n)
+    if csr is not None:
+        return engine.plane.edges_by_dst(edge_type)
+    return engine.concat_edges(edge_type)
 
 
 # ---------------------------------------------------------------------------
@@ -24,25 +62,41 @@ from repro.kernels import ops as kops
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("n",))
+def _pagerank_step_csr(rank, rev_src, rev_indptr, out_deg, n: int, damping: float):
+    contrib = rank[rev_src] / jnp.maximum(out_deg[rev_src], 1.0)
+    agg = kops.csr_segment_sum(contrib, rev_indptr, n)
+    # dangling mass (vertices with no out-edges) redistributes uniformly
+    dangling = jnp.where(out_deg > 0, 0.0, rank).sum()
+    return (1.0 - damping) / n + damping * (agg + dangling / n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
 def _pagerank_step(rank, src, dst, out_deg, n: int, damping: float):
     contrib = rank[src] / jnp.maximum(out_deg[src], 1.0)
     agg = kops.segment_sum(contrib, dst, n)
-    # dangling mass (vertices with no out-edges) redistributes uniformly
     dangling = jnp.where(out_deg > 0, 0.0, rank).sum()
     return (1.0 - damping) / n + damping * (agg + dangling / n)
 
 
 def pagerank(engine, edge_type: str, n: int | None = None, damping: float = 0.85,
              max_iters: int = 20, tol: float = 1e-7) -> np.ndarray:
-    src, dst = engine.concat_edges(edge_type)
     et = engine.schema.edge_types[edge_type]
     n = n or engine.topology.n_vertices(et.src_type)
-    src_j = jnp.asarray(src, dtype=jnp.int32)
-    dst_j = jnp.asarray(dst, dtype=jnp.int32)
-    out_deg = kops.segment_sum(jnp.ones_like(src_j, dtype=jnp.float32), src_j, n)
+    csr = _csr_for(engine, edge_type, n)
+    if csr is not None:
+        rev_src = jnp.asarray(csr.rev_src, dtype=jnp.int32)
+        rev_indptr = jnp.asarray(csr.rev_indptr, dtype=jnp.int32)
+        out_deg = jnp.asarray(csr.degrees("out"), dtype=jnp.float32)
+        step = lambda r: _pagerank_step_csr(r, rev_src, rev_indptr, out_deg, n, damping)
+    else:
+        src, dst = engine.concat_edges(edge_type)
+        src_j = jnp.asarray(src, dtype=jnp.int32)
+        dst_j = jnp.asarray(dst, dtype=jnp.int32)
+        out_deg = kops.segment_sum(jnp.ones_like(src_j, dtype=jnp.float32), src_j, n)
+        step = lambda r: _pagerank_step(r, src_j, dst_j, out_deg, n, damping)
     rank = jnp.full(n, 1.0 / n, dtype=jnp.float32)
     for _ in range(max_iters):
-        new = _pagerank_step(rank, src_j, dst_j, out_deg, n, damping)
+        new = step(rank)
         if float(jnp.abs(new - rank).sum()) < tol:
             rank = new
             break
@@ -62,9 +116,9 @@ def _wcc_step(labels, src, dst, n: int):
 
 
 def wcc(engine, edge_type: str, n: int | None = None, max_iters: int = 200) -> np.ndarray:
-    src, dst = engine.concat_edges(edge_type)
     et = engine.schema.edge_types[edge_type]
     n = n or engine.topology.n_vertices(et.src_type)
+    src, dst = _edges_dst_sorted(engine, edge_type, n)
     src_j = jnp.asarray(src, dtype=jnp.int32)
     dst_j = jnp.asarray(dst, dtype=jnp.int32)
     labels = jnp.arange(n, dtype=jnp.int32)
@@ -85,11 +139,13 @@ def cdlp(engine, edge_type: str, n: int | None = None, iterations: int = 10) -> 
     frequent neighbor label; ties break to the smallest label.
 
     Mode-per-vertex is a sort-and-count host-side pass (argmax over ragged
-    groups); the scan itself stays edge-centric.
+    groups).  The neighbor pairs come from the plane's dst-sorted CSR order,
+    so each half of the undirected concatenation arrives pre-grouped by
+    vertex and the per-iteration lexsort runs on nearly-sorted keys.
     """
-    src, dst = engine.concat_edges(edge_type)
     et = engine.schema.edge_types[edge_type]
     n = n or engine.topology.n_vertices(et.src_type)
+    src, dst = _edges_dst_sorted(engine, edge_type, n)
     # undirected neighborhood: both edge directions contribute
     nbr_dst = np.concatenate([dst, src])
     nbr_src = np.concatenate([src, dst])
@@ -134,9 +190,9 @@ def lcc(engine, edge_type: str, n: int | None = None, block: int = 1024) -> np.n
     Fine for benchmark-scale graphs (n <= ~32k); the Graphalytics semantics
     treat the graph as directed-ignored (undirected), no self-loops.
     """
-    src, dst = engine.concat_edges(edge_type)
     et = engine.schema.edge_types[edge_type]
     n = n or engine.topology.n_vertices(et.src_type)
+    src, dst = _edges_dst_sorted(engine, edge_type, n)
     u = np.concatenate([src, dst])
     v = np.concatenate([dst, src])
     keep = u != v
@@ -163,25 +219,35 @@ def lcc(engine, edge_type: str, n: int | None = None, block: int = 1024) -> np.n
 
 def bfs(engine, edge_type: str, source_dense: int, n: int | None = None,
         directed: bool = True, max_depth: int = 10_000) -> np.ndarray:
-    """Edge-centric frontier BFS; returns int64 depths (-1 = unreached)."""
-    src, dst = engine.concat_edges(edge_type)
+    """Frontier BFS with per-level adaptive dispatch (DESIGN.md §3): small
+    frontiers expand through CSR adjacency ranges (touch only incident
+    edges), large frontiers use the edge-centric masked scan (sequential
+    locality).  Returns int64 depths (-1 = unreached)."""
     et = engine.schema.edge_types[edge_type]
     n = n or engine.topology.n_vertices(et.src_type)
+    csr = _csr_for(engine, edge_type, n)
+    src, dst = engine.concat_edges(edge_type)
     if not directed:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    threshold = engine.plane.threshold()
     depth = np.full(n, -1, dtype=np.int64)
     depth[source_dense] = 0
-    frontier = np.zeros(n, dtype=bool)
-    frontier[source_dense] = True
+    frontier_ids = np.array([source_dense], dtype=np.int64)
     for level in range(1, max_depth):
-        hit = frontier[src]
-        if not hit.any():
+        if csr is not None and len(frontier_ids) <= threshold * n:
+            _, cand, _ = csr.expand(frontier_ids, direction="out")
+            if not directed:
+                _, cand_in, _ = csr.expand(frontier_ids, direction="in")
+                cand = np.concatenate([cand, cand_in])
+        else:
+            mask = np.zeros(n, dtype=bool)
+            mask[frontier_ids] = True
+            cand = dst[mask[src]]
+        if len(cand) == 0:
             break
-        cand = dst[hit]
-        new = cand[depth[cand] < 0]
+        new = np.unique(cand[depth[cand] < 0])
         if len(new) == 0:
             break
         depth[new] = level
-        frontier = np.zeros(n, dtype=bool)
-        frontier[new] = True
+        frontier_ids = new
     return depth

@@ -1,9 +1,12 @@
 """Architectural stand-ins for the paper's (closed-source) baselines.
 
 - ``CSRTopology`` + ``csr_edge_map``: TigerGraph-style vertex-centric CSR
-  EdgeMap — used by the Fig. 15 selectivity-crossover reproduction.  Building
-  it requires grouping all edges by source vertex (the expensive step the
-  paper avoids with edge lists).
+  EdgeMap — used by the Fig. 15 selectivity-crossover reproduction.  The
+  topology plane promoted CSR to a first-class representation
+  (``repro.core.csr.CSRIndex``, DESIGN.md §3); what stays here is the thin
+  "always vertex-centric" measurement stand-in: forward-direction grouping
+  only (honest build-time numbers), the plane's shared ragged gather, and
+  none of the adaptive dispatch or edge-id bookkeeping.
 - ``FullLoadEngine``: loads *all* columns of *all* tables at startup into
   dense in-memory arrays (TigerGraph-style proprietary load).  Fast queries,
   slow startup — the left end of the paper's Fig. 1 trade-off.
@@ -19,6 +22,7 @@ import time
 
 import numpy as np
 
+from repro.core.csr import _ragged_gather
 from repro.lakehouse.columnfile import read_columns, read_footer
 from repro.lakehouse.objectstore import ObjectStore
 from repro.lakehouse.table import LakeCatalog
@@ -26,12 +30,18 @@ from repro.core.types import GraphSchema
 
 
 class CSRTopology:
-    """Vertex-centric CSR built from (src, dst) dense edge arrays."""
+    """Vertex-centric CSR built from (src, dst) dense edge arrays.
+
+    Forward direction only — the baseline engine stores no reverse index and
+    no edge-id permutation, so ``build_seconds`` measures exactly the single
+    grouping pass the Fig. 15 build-time comparison is about (the plane's
+    full ``CSRIndex`` builds both directions plus eid maps).
+    """
 
     def __init__(self, src: np.ndarray, dst: np.ndarray, n: int):
         t0 = time.perf_counter()
         order = np.argsort(src, kind="stable")   # group edges by source vertex
-        self.dst_sorted = np.ascontiguousarray(dst[order])
+        self.dst_sorted = np.ascontiguousarray(np.asarray(dst)[order])
         counts = np.bincount(src, minlength=n)
         self.indptr = np.zeros(n + 1, dtype=np.int64)
         np.cumsum(counts, out=self.indptr[1:])
@@ -47,21 +57,13 @@ def csr_edge_map(csr: CSRTopology, active_ids: np.ndarray):
 
     Returns (u_repeated, v) edge endpoints — the CSR engine prunes whole
     adjacency ranges per inactive vertex (why it wins at low selectivity).
+    The range expansion is the plane's shared ragged gather.
     """
     active_ids = np.asarray(active_ids, dtype=np.int64)
-    starts = csr.indptr[active_ids]
-    stops = csr.indptr[active_ids + 1]
-    lengths = stops - starts
-    total = int(lengths.sum())
-    if total == 0:
+    pos, lengths = _ragged_gather(csr.indptr, active_ids)
+    if len(pos) == 0:
         return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
-    # vectorized ragged gather of adjacency ranges: within-range offsets are
-    # arange(total) minus each range's cumulative start, shifted to `starts`
-    cumstarts = np.concatenate(([0], np.cumsum(lengths)[:-1]))
-    out_idx = np.arange(total) - np.repeat(cumstarts, lengths) + np.repeat(starts, lengths)
-    v = csr.dst_sorted[out_idx]
-    u = np.repeat(active_ids, lengths)
-    return u, v
+    return np.repeat(active_ids, lengths), csr.dst_sorted[pos]
 
 
 def edge_list_edge_map(src: np.ndarray, dst: np.ndarray, active_mask: np.ndarray):

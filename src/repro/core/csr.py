@@ -1,0 +1,206 @@
+"""CSR topology representation — the second physical layout of the topology
+plane (DESIGN.md §3).
+
+``CSRIndex`` holds one edge type's edges grouped by vertex, both directions:
+
+- **forward** (grouped by source): ``fwd_indptr``/``fwd_dst`` — the classic
+  vertex-centric adjacency index.  ``fwd_eid`` maps each CSR slot back to the
+  *global edge id* (edge-list order: lists in registration order, rows in file
+  order), which is what keeps CSR scans row-aligned with edge-attribute
+  chunks and lets the two physical representations produce bit-identical
+  scan output.
+- **reverse** (grouped by destination): ``rev_indptr``/``rev_src``/``rev_eid``
+  — bidirectional traversal with no transpose at query time, and the
+  dst-sorted edge order whose tight per-block Min-Max ranges the Pallas
+  ``edge_segment_sum`` kernel skips on (DESIGN.md §2).
+
+Unlike the per-file edge lists (cheap incremental maintenance, sequential
+scan locality), a CSR is built once per edge type over *all* its files — the
+expensive grouping step the paper's Fig. 15 amortizes across low-selectivity
+scans.  It serializes to a single lake blob next to the edge-list blobs so
+the fast "second connection" path restores both representations.
+"""
+
+from __future__ import annotations
+
+import io
+import struct
+import time
+
+import numpy as np
+
+_MAGIC = b"RCSR"
+
+
+def _ragged_gather(indptr: np.ndarray, active_ids: np.ndarray):
+    """Vectorized expansion of the adjacency ranges of ``active_ids``.
+
+    Returns ``(positions, lengths)``: ``positions`` indexes the CSR value
+    arrays (neighbors / eids) for every edge incident to an active vertex,
+    ``lengths`` is the per-active-vertex range length (for ``np.repeat``).
+    """
+    starts = indptr[active_ids]
+    stops = indptr[active_ids + 1]
+    lengths = stops - starts
+    total = int(lengths.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), lengths
+    # within-range offsets are arange(total) minus each range's cumulative
+    # start, shifted to the range's first CSR slot
+    cumstarts = np.concatenate(([0], np.cumsum(lengths)[:-1]))
+    pos = np.arange(total) - np.repeat(cumstarts, lengths) + np.repeat(starts, lengths)
+    return pos, lengths
+
+
+class CSRIndex:
+    """Forward + reverse CSR of one edge type (all edge files merged)."""
+
+    def __init__(
+        self,
+        edge_type: str,
+        n_src: int,
+        n_dst: int,
+        fwd_indptr: np.ndarray,
+        fwd_dst: np.ndarray,
+        fwd_eid: np.ndarray,
+        rev_indptr: np.ndarray,
+        rev_src: np.ndarray,
+        rev_eid: np.ndarray,
+        build_seconds: float = 0.0,
+    ):
+        self.edge_type = edge_type
+        self.n_src = n_src
+        self.n_dst = n_dst
+        self.fwd_indptr = np.asarray(fwd_indptr, dtype=np.int64)
+        self.fwd_dst = np.asarray(fwd_dst, dtype=np.int64)
+        self.fwd_eid = np.asarray(fwd_eid, dtype=np.int64)
+        self.rev_indptr = np.asarray(rev_indptr, dtype=np.int64)
+        self.rev_src = np.asarray(rev_src, dtype=np.int64)
+        self.rev_eid = np.asarray(rev_eid, dtype=np.int64)
+        self.build_seconds = build_seconds
+
+    # ------------------------------------------------------------------ build
+
+    @staticmethod
+    def from_arrays(
+        edge_type: str, src: np.ndarray, dst: np.ndarray, n_src: int, n_dst: int
+    ) -> "CSRIndex":
+        """Group (src, dst) dense edge arrays by both endpoints.
+
+        ``src``/``dst`` are in global-edge-id order; the stable argsorts keep
+        ``eid`` monotone within each vertex's range, so per-vertex adjacency
+        stays in edge-list order too.
+        """
+        t0 = time.perf_counter()
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        fwd_order = np.argsort(src, kind="stable")
+        fwd_indptr = np.zeros(n_src + 1, dtype=np.int64)
+        np.cumsum(np.bincount(src, minlength=n_src), out=fwd_indptr[1:])
+        rev_order = np.argsort(dst, kind="stable")
+        rev_indptr = np.zeros(n_dst + 1, dtype=np.int64)
+        np.cumsum(np.bincount(dst, minlength=n_dst), out=rev_indptr[1:])
+        return CSRIndex(
+            edge_type=edge_type,
+            n_src=n_src,
+            n_dst=n_dst,
+            fwd_indptr=fwd_indptr,
+            fwd_dst=dst[fwd_order],
+            fwd_eid=fwd_order,
+            rev_indptr=rev_indptr,
+            rev_src=src[rev_order],
+            rev_eid=rev_order,
+            build_seconds=time.perf_counter() - t0,
+        )
+
+    # ------------------------------------------------------------------ reads
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.fwd_dst)
+
+    def nbytes(self) -> int:
+        return sum(
+            a.nbytes
+            for a in (
+                self.fwd_indptr, self.fwd_dst, self.fwd_eid,
+                self.rev_indptr, self.rev_src, self.rev_eid,
+            )
+        )
+
+    def neighbors(self, v: int, direction: str = "out") -> np.ndarray:
+        if direction == "out":
+            return self.fwd_dst[self.fwd_indptr[v]: self.fwd_indptr[v + 1]]
+        return self.rev_src[self.rev_indptr[v]: self.rev_indptr[v + 1]]
+
+    def degrees(self, direction: str = "out") -> np.ndarray:
+        indptr = self.fwd_indptr if direction == "out" else self.rev_indptr
+        return np.diff(indptr)
+
+    def expand(self, active_ids: np.ndarray, direction: str = "out"):
+        """Vertex-centric EdgeMap: gather the adjacency ranges of the active
+        vertices.  Returns ``(u, v, eid)`` — frontier-side endpoints repeated
+        per neighbor, far-side endpoints, and global edge ids.
+        """
+        active_ids = np.asarray(active_ids, dtype=np.int64)
+        if direction == "out":
+            indptr, far, eids = self.fwd_indptr, self.fwd_dst, self.fwd_eid
+        else:
+            indptr, far, eids = self.rev_indptr, self.rev_src, self.rev_eid
+        pos, lengths = _ragged_gather(indptr, active_ids)
+        if len(pos) == 0:
+            z = np.empty(0, dtype=np.int64)
+            return z, z.copy(), z.copy()
+        return np.repeat(active_ids, lengths), far[pos], eids[pos]
+
+    def edges_by_dst(self):
+        """(src, dst, eid) with dst non-decreasing — the kernel-friendly edge
+        order (tight Pallas block Min-Max ranges, DESIGN.md §2)."""
+        dst = np.repeat(np.arange(self.n_dst, dtype=np.int64), np.diff(self.rev_indptr))
+        return self.rev_src, dst, self.rev_eid
+
+    def edges_by_src(self):
+        """(src, dst, eid) with src non-decreasing."""
+        src = np.repeat(np.arange(self.n_src, dtype=np.int64), np.diff(self.fwd_indptr))
+        return src, self.fwd_dst, self.fwd_eid
+
+    # ---------------------------------------------------------- serialization
+
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        et = self.edge_type.encode()
+        buf.write(_MAGIC)
+        buf.write(struct.pack("<iqqq", len(et), self.n_src, self.n_dst, self.n_edges))
+        buf.write(et)
+        for arr in (
+            self.fwd_indptr, self.fwd_dst, self.fwd_eid,
+            self.rev_indptr, self.rev_src, self.rev_eid,
+        ):
+            buf.write(np.ascontiguousarray(arr, dtype=np.int64).tobytes())
+        return buf.getvalue()
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "CSRIndex":
+        if blob[:4] != _MAGIC:
+            raise ValueError("bad CSR magic")
+        et_len, n_src, n_dst, n_edges = struct.unpack_from("<iqqq", blob, 4)
+        off = 4 + struct.calcsize("<iqqq")
+        edge_type = blob[off: off + et_len].decode(); off += et_len
+
+        def take(count):
+            nonlocal off
+            arr = np.frombuffer(blob, dtype=np.int64, count=count, offset=off).copy()
+            off += count * 8
+            return arr
+
+        return CSRIndex(
+            edge_type=edge_type,
+            n_src=n_src,
+            n_dst=n_dst,
+            fwd_indptr=take(n_src + 1),
+            fwd_dst=take(n_edges),
+            fwd_eid=take(n_edges),
+            rev_indptr=take(n_dst + 1),
+            rev_src=take(n_edges),
+            rev_eid=take(n_edges),
+        )

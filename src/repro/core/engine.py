@@ -126,11 +126,13 @@ class GraphLakeEngine:
         u_columns: Sequence[str] = (),
         v_columns: Sequence[str] = (),
         edge_filter=None,
+        strategy: str = "auto",
     ) -> EdgeFrame:
         return edge_scan(
             self.topology, self.cache, frontier, edge_type, direction,
             edge_columns=edge_columns, u_columns=u_columns, v_columns=v_columns,
             edge_filter=edge_filter, prefetcher=self.prefetcher,
+            strategy=strategy,
         )
 
     def read_vertex_column(self, vertex_type: str, dense_ids, column: str) -> np.ndarray:
@@ -162,26 +164,23 @@ class GraphLakeEngine:
             active = nxt
         return active
 
-    # ------------------------------------------------------------------ topology concat (for algorithms)
+    # ------------------------------------------------------------------ topology plane (for algorithms)
 
-    _edge_concat_cache: dict
+    @property
+    def plane(self):
+        """The topology plane: physical representations + adaptive dispatch."""
+        return self.topology.plane
 
     def concat_edges(self, edge_type: str) -> tuple[np.ndarray, np.ndarray]:
         """All (src_dense, dst_dense) pairs of an edge type, concatenated.
 
         The iterative graph algorithms consume the whole topology every
-        superstep; concatenating once and handing a contiguous array to the
-        JAX kernels is the edge-centric scan in its TPU-friendly form.
+        superstep; the plane concatenates once, caches, and invalidates the
+        cache whenever the topology is (re)built or incrementally refreshed.
         """
-        if not hasattr(self, "_edge_concat_store"):
-            self._edge_concat_store = {}
-        if edge_type not in self._edge_concat_store:
-            els = self.topology.all_edge_lists(edge_type)
-            if els:
-                src = np.concatenate([el.src_dense for el in els])
-                dst = np.concatenate([el.dst_dense for el in els])
-            else:
-                src = np.empty(0, dtype=np.int64)
-                dst = np.empty(0, dtype=np.int64)
-            self._edge_concat_store[edge_type] = (src, dst)
-        return self._edge_concat_store[edge_type]
+        return self.topology.plane.concat_edges(edge_type)
+
+    def edges_by_dst(self, edge_type: str) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) sorted by dst — tight segment ranges for the Pallas
+        kernels (DESIGN.md §2); served from the plane's CSR index."""
+        return self.topology.plane.edges_by_dst(edge_type)

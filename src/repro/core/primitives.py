@@ -5,11 +5,14 @@ vectorized UDFs.  The paper's per-thread loops become block-vectorized numpy
 over (file x row-group) tasks — the TPU-idiomatic masking formulation of the
 same computation (see DESIGN.md §2).
 
-``EdgeScan`` is edge-centric: it scans edge lists sequentially, keeps
-row-level alignment with edge-attribute chunks, prunes portions by frontier
-Min-Max, supports bidirectional traversal with no extra storage (swap the
-roles of the two stored endpoints), and fully materializes the (u, v, edge)
-rows that survive the frontier test before applying UDFs.
+``EdgeScan`` consumes the topology through the **topology plane**
+(DESIGN.md §3): per scan it resolves a physical representation — the
+edge-centric per-file edge lists (sequential scan, Min-Max portion pruning)
+or the vertex-centric CSR index (adjacency-range gather) — via an adaptive
+selectivity dispatch.  Either way the gather returns (u, v, global-edge-id)
+in canonical order, row-level alignment with edge-attribute chunks is kept
+through the global edge ids, and the (u, v, edge) rows that survive the
+frontier test are fully materialized before UDFs run.
 """
 
 from __future__ import annotations
@@ -65,6 +68,50 @@ def read_vertex_values(
     if out is None:
         out = np.zeros(len(dense_ids), dtype=np.float64)
     return out
+
+
+def read_edge_columns_by_eid(
+    topology, cache: CacheManager, edge_type: str, eids: np.ndarray,
+    columns: Sequence[str],
+) -> dict[str, np.ndarray]:
+    """Materialize edge columns for *global* edge ids of an edge type.
+
+    Global edge ids address rows across the edge type's files (lists in
+    registration order, rows in file order) — the addressing every
+    ``TopologyView.gather`` returns.  The per-list grouping depends only on
+    the eids, so it is computed once and shared by all requested columns;
+    each group reads through the scan-aligned per-file reader.
+    """
+    eids = np.asarray(eids, dtype=np.int64)
+    if len(eids) == 0 or not columns:
+        return {c: np.empty(0, dtype=np.float64) for c in columns}
+    offsets = topology.plane.eid_offsets(edge_type)
+    lists = topology.all_edge_lists(edge_type)
+    list_idx = np.searchsorted(offsets, eids, side="right") - 1
+    groups = [
+        (li, list_idx == li) for li in np.unique(list_idx)
+    ]
+    out: dict[str, Optional[np.ndarray]] = {c: None for c in columns}
+    for li, sel in groups:
+        local_rows = eids[sel] - offsets[li]
+        pos = np.flatnonzero(sel)
+        for c in columns:
+            vals = read_edge_values(topology, cache, lists[li], local_rows, c)
+            if out[c] is None:
+                out[c] = np.empty(len(eids), dtype=vals.dtype)
+                if vals.dtype == object:
+                    out[c][:] = ""
+                else:
+                    out[c][:] = 0
+            out[c][pos] = vals
+    return out
+
+
+def read_edge_values_by_eid(
+    topology, cache: CacheManager, edge_type: str, eids: np.ndarray, column: str
+) -> np.ndarray:
+    """Single-column convenience over :func:`read_edge_columns_by_eid`."""
+    return read_edge_columns_by_eid(topology, cache, edge_type, eids, [column])[column]
 
 
 def read_edge_values(
@@ -164,13 +211,23 @@ def edge_scan(
     edge_filter: Optional[Callable[[dict], np.ndarray]] = None,
     prefetcher=None,
     read_v_values: Optional[Callable[[str, np.ndarray, str], np.ndarray]] = None,
+    strategy: str = "auto",
 ) -> EdgeFrame:
-    """Edge-centric scan over edge lists incident to ``frontier`` (paper §6.1).
+    """Scan the edges incident to ``frontier`` (paper §6.1).
+
+    The physical plan is chosen per scan by the topology plane
+    (DESIGN.md §3): ``strategy="edgelist"`` forces the edge-centric
+    sequential scan with Min-Max portion pruning, ``strategy="csr"`` forces
+    the vertex-centric adjacency-range gather, and ``strategy="auto"``
+    (default) picks by frontier selectivity — CSR below the calibrated
+    crossover threshold, edge lists above it.  Both produce bit-identical
+    output (global edge-id order).
 
     ``direction="out"`` treats stored (first, second) IDs as (u=src, v=dst);
     ``direction="in"`` swaps roles — bidirectional traversal without storing
-    reverse edges.  ``edge_filter`` sees the full materialized frame and
-    returns a keep-mask (cross-entity predicates welcome).
+    reverse edges (edge lists swap endpoint roles; CSR uses its reverse
+    index).  ``edge_filter`` sees the full materialized frame and returns a
+    keep-mask (cross-entity predicates welcome).
 
     ``read_v_values`` overrides far-side attribute reads — the distributed
     engine injects the two-pass remote fetch here (paper §6.2).
@@ -185,37 +242,12 @@ def edge_scan(
         prefetcher.prefetch_edges(frontier, edge_type, edge_columns, direction=direction)
         prefetcher.prefetch_vertices(frontier, u_columns)
 
-    lo, hi = frontier.min_max()
-    mask_arr = frontier.mask
-
-    parts_u, parts_v, parts_cols = [], [], {f"e.{c}": [] for c in edge_columns}
-    for el in topology.all_edge_lists(edge_type):
-        u_dense_all = el.src_dense if direction == "out" else el.dst_dense
-        v_dense_all = el.dst_dense if direction == "out" else el.src_dense
-        # Min-Max portion pruning (paper §5.3): skip portions that cannot
-        # intersect the frontier envelope.
-        for p in el.portions_overlapping(lo, hi, direction=direction):
-            sl = slice(p.first_row, p.first_row + p.n_rows)
-            u_dense = u_dense_all[sl]
-            hit = mask_arr[u_dense]
-            if not hit.any():
-                continue
-            rows_local = p.first_row + np.flatnonzero(hit)
-            parts_u.append(u_dense[hit])
-            parts_v.append(v_dense_all[sl][hit])
-            for c in edge_columns:
-                parts_cols[f"e.{c}"].append(
-                    read_edge_values(topology, cache, el, rows_local, c)
-                )
-
-    if parts_u:
-        u = np.concatenate(parts_u)
-        v = np.concatenate(parts_v)
-        columns = {k: np.concatenate(vs) for k, vs in parts_cols.items()}
-    else:
-        u = np.empty(0, dtype=np.int64)
-        v = np.empty(0, dtype=np.int64)
-        columns = {k: np.empty(0) for k in parts_cols}
+    view = topology.plane.view(
+        edge_type, strategy, frontier=frontier, direction=direction
+    )
+    u, v, eid = view.gather(frontier, direction=direction)
+    by_col = read_edge_columns_by_eid(topology, cache, edge_type, eid, edge_columns)
+    columns = {f"e.{c}": by_col[c] for c in edge_columns}
 
     # endpoint materialization (vertex rows via graph-aware cache units)
     for c in u_columns:

@@ -1,0 +1,275 @@
+"""The topology plane: one logical topology, multiple physical layouts
+(DESIGN.md §3).
+
+A ``TopologyView`` is a physical representation of one edge type that can
+``gather`` the edges incident to a frontier.  Two first-class views exist:
+
+- ``EdgeListView`` — the paper's per-file edge lists (§4.1): sequential scan
+  with Min-Max portion pruning.  Wins at high frontier selectivity (scan
+  locality, no indirection) and is the only representation that supports
+  cheap incremental maintenance, so it is always present.
+- ``CSRView`` — a per-edge-type :class:`~repro.core.csr.CSRIndex`:
+  adjacency-range gather.  Wins at low selectivity (prunes whole vertices),
+  the vertex-centric side of the paper's Fig. 15 crossover.
+
+Both views return ``(u, v, eid)`` in **global edge-id order** — edge lists in
+registration order, rows in file order — so downstream attribute
+materialization and the scan output are bit-identical regardless of which
+representation served the scan.
+
+``TopologyPlane`` owns the views per edge type, the lazily-built CSR indexes
+(invalidated on incremental edge refresh), the concatenated edge-array cache
+the analytics algorithms use, and the **adaptive dispatcher**: per scan it
+estimates frontier selectivity and picks the representation, with the
+crossover threshold calibrated by ``benchmarks/bench_edgelist_vs_csr.py`` and
+overridable via ``REPRO_OPTS="csr=0.02"`` (the ``csr`` perf flag with an
+attached threshold value).
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Optional
+
+import numpy as np
+
+from repro.core.csr import CSRIndex
+from repro.core.types import VSet
+from repro.perf_flags import enabled, value
+
+# Fig. 15 reproduction on this substrate (graph500 scale 14, edge factor 16):
+# the raw-gather crossover lands between 10% and 50% frontier selectivity and
+# the full edge_scan path crosses even later, so 20% is the calibrated
+# default — conservative toward the general-purpose edge-list scan (see
+# DESIGN.md §3.3; recalibrate with benchmarks/bench_edgelist_vs_csr.py).
+# Override: REPRO_OPTS="csr=<threshold>".
+DEFAULT_CSR_THRESHOLD = 0.2
+
+
+def _empty_gather():
+    z = np.empty(0, dtype=np.int64)
+    return z, z.copy(), z.copy()
+
+
+class TopologyView(abc.ABC):
+    """A physical representation of one edge type's topology."""
+
+    kind: str = "abstract"
+
+    @abc.abstractmethod
+    def gather(self, frontier: VSet, direction: str = "out"):
+        """Edges incident to ``frontier``: ``(u, v, eid)`` int64 arrays in
+        global edge-id order.  ``u`` is the frontier-side endpoint,
+        ``v`` the far side, ``eid`` the global edge id (attribute row)."""
+
+    @property
+    @abc.abstractmethod
+    def n_edges(self) -> int: ...
+
+
+class EdgeListView(TopologyView):
+    """Edge-centric scan over the per-file edge lists (paper §6.1)."""
+
+    kind = "edgelist"
+
+    def __init__(self, edge_type: str, edge_lists, eid_offsets: np.ndarray):
+        self.edge_type = edge_type
+        self.edge_lists = edge_lists
+        self.eid_offsets = eid_offsets  # cumulative edge counts per list
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.eid_offsets[-1]) if len(self.eid_offsets) else 0
+
+    def gather(self, frontier: VSet, direction: str = "out"):
+        lo, hi = frontier.min_max()
+        mask = frontier.mask
+        parts_u, parts_v, parts_e = [], [], []
+        for li, el in enumerate(self.edge_lists):
+            u_all = el.src_dense if direction == "out" else el.dst_dense
+            v_all = el.dst_dense if direction == "out" else el.src_dense
+            base = self.eid_offsets[li]
+            # Min-Max portion pruning (paper §5.3): skip portions whose
+            # frontier-side ID range misses the frontier envelope.
+            for p in el.portions_overlapping(lo, hi, direction=direction):
+                sl = slice(p.first_row, p.first_row + p.n_rows)
+                u = u_all[sl]
+                hit = mask[u]
+                if not hit.any():
+                    continue
+                rows = np.flatnonzero(hit)
+                parts_u.append(u[hit])
+                parts_v.append(v_all[sl][hit])
+                parts_e.append(base + p.first_row + rows)
+        if not parts_u:
+            return _empty_gather()
+        return (
+            np.concatenate(parts_u),
+            np.concatenate(parts_v),
+            np.concatenate(parts_e),
+        )
+
+
+class CSRView(TopologyView):
+    """Vertex-centric adjacency-range gather over a ``CSRIndex``."""
+
+    kind = "csr"
+
+    def __init__(self, csr: CSRIndex):
+        self.csr = csr
+
+    @property
+    def n_edges(self) -> int:
+        return self.csr.n_edges
+
+    def gather(self, frontier: VSet, direction: str = "out"):
+        u, v, eid = self.csr.expand(frontier.ids(), direction=direction)
+        if len(eid) == 0:
+            return _empty_gather()
+        # canonical global edge-id order: bit-identical to the edge-list scan
+        # (cheap — the CSR path only runs on small gathered sets)
+        order = np.argsort(eid, kind="stable")
+        return u[order], v[order], eid[order]
+
+
+class TopologyPlane:
+    """Per-edge-type physical representations + adaptive per-scan dispatch."""
+
+    def __init__(self, topology):
+        self._topology = topology
+        self._csr: dict[str, CSRIndex] = {}
+        self._concat: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        self._eid_offsets: dict[str, np.ndarray] = {}
+        self.auto_build_csr = True
+        self.csr_build_seconds: dict[str, float] = {}
+        self.last_strategy: dict[str, str] = {}  # edge_type -> kind (introspection)
+
+    # ------------------------------------------------------------ invalidation
+
+    def invalidate(self, edge_type: Optional[str] = None) -> None:
+        """Drop derived state after the underlying edge lists changed
+        (topology rebuild or incremental refresh)."""
+        if edge_type is None:
+            self._csr.clear()
+            self._concat.clear()
+            self._eid_offsets.clear()
+        else:
+            self._csr.pop(edge_type, None)
+            self._concat.pop(edge_type, None)
+            self._eid_offsets.pop(edge_type, None)
+
+    # ------------------------------------------------------------ constituents
+
+    def eid_offsets(self, edge_type: str) -> np.ndarray:
+        """Cumulative edge counts per edge list: global eid = offsets[list] + row."""
+        if edge_type not in self._eid_offsets:
+            counts = [el.n_edges for el in self._topology.all_edge_lists(edge_type)]
+            self._eid_offsets[edge_type] = np.concatenate(
+                ([0], np.cumsum(counts, dtype=np.int64))
+            ) if counts else np.zeros(1, dtype=np.int64)
+        return self._eid_offsets[edge_type]
+
+    def edge_list_view(self, edge_type: str) -> EdgeListView:
+        return EdgeListView(
+            edge_type,
+            self._topology.all_edge_lists(edge_type),
+            self.eid_offsets(edge_type),
+        )
+
+    def csr(self, edge_type: str, build: bool = True) -> Optional[CSRIndex]:
+        """The edge type's CSR index; built (and cached) on first demand."""
+        if edge_type not in self._csr:
+            if not build:
+                return None
+            et = self._topology.schema.edge_types[edge_type]
+            src, dst = self.concat_edges(edge_type)  # shares the concat cache
+            idx = CSRIndex.from_arrays(
+                edge_type, src, dst,
+                n_src=self._topology.n_vertices(et.src_type),
+                n_dst=self._topology.n_vertices(et.dst_type),
+            )
+            self._csr[edge_type] = idx
+            self.csr_build_seconds[edge_type] = idx.build_seconds
+        return self._csr[edge_type]
+
+    def csr_ready(self, edge_type: str) -> bool:
+        return edge_type in self._csr
+
+    def attach_csr(self, edge_type: str, csr: CSRIndex) -> None:
+        """Adopt a deserialized CSR (topology materialization restore)."""
+        self._csr[edge_type] = csr
+
+    def built_csrs(self) -> dict[str, CSRIndex]:
+        return dict(self._csr)
+
+    # --------------------------------------------------------------- dispatch
+
+    @staticmethod
+    def threshold() -> float:
+        return value("csr", DEFAULT_CSR_THRESHOLD)
+
+    def choose(self, edge_type: str, frontier: VSet, direction: str = "out") -> str:
+        """Pick the physical representation for one scan.
+
+        CSR serves the scan when (a) the ``csr`` perf flag is on, (b) frontier
+        selectivity is below the crossover threshold, and (c) a CSR index is
+        either already built or allowed to build lazily.
+        """
+        if not enabled("csr"):
+            return "edgelist"
+        k = frontier.size()
+        if k == 0:
+            # nothing to gather — never worth triggering a lazy CSR build
+            return "edgelist"
+        n = max(1, len(frontier.mask))
+        if k / n > self.threshold():
+            return "edgelist"
+        if not self.csr_ready(edge_type) and not self.auto_build_csr:
+            return "edgelist"
+        return "csr"
+
+    def view(
+        self,
+        edge_type: str,
+        strategy: str = "auto",
+        frontier: Optional[VSet] = None,
+        direction: str = "out",
+    ) -> TopologyView:
+        """Resolve a strategy name ("auto" | "edgelist" | "csr") to a view."""
+        if strategy == "auto":
+            if frontier is None:
+                strategy = "edgelist"
+            else:
+                strategy = self.choose(edge_type, frontier, direction)
+        if strategy == "csr":
+            self.last_strategy[edge_type] = "csr"
+            return CSRView(self.csr(edge_type))
+        if strategy == "edgelist":
+            self.last_strategy[edge_type] = "edgelist"
+            return self.edge_list_view(edge_type)
+        raise ValueError(f"unknown edge_scan strategy: {strategy!r}")
+
+    # ------------------------------------------------------- analytics arrays
+
+    def concat_edges(self, edge_type: str) -> tuple[np.ndarray, np.ndarray]:
+        """All (src_dense, dst_dense) pairs in global edge-id order, cached."""
+        if edge_type not in self._concat:
+            els = self._topology.all_edge_lists(edge_type)
+            if els:
+                src = np.concatenate([el.src_dense for el in els])
+                dst = np.concatenate([el.dst_dense for el in els])
+            else:
+                src = np.empty(0, dtype=np.int64)
+                dst = np.empty(0, dtype=np.int64)
+            self._concat[edge_type] = (src, dst)
+        return self._concat[edge_type]
+
+    def edges_by_dst(self, edge_type: str) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) sorted by dst — the Pallas-kernel-friendly edge order."""
+        src, dst, _ = self.csr(edge_type).edges_by_dst()
+        return src, dst
+
+    def edges_by_src(self, edge_type: str) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) sorted by src."""
+        src, dst, _ = self.csr(edge_type).edges_by_src()
+        return src, dst

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.csr_expand import csr_segment_sum_pallas
 from repro.kernels.edge_scan import edge_segment_sum_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -100,6 +101,23 @@ def edge_segment_sum(values: jax.Array, dst: jax.Array, num_segments: int) -> ja
 def masked_edge_segment_sum(values, src, dst, frontier, num_segments: int) -> jax.Array:
     mask = frontier[src].astype(values.dtype)
     return edge_segment_sum(values * mask[:, None], dst, num_segments)
+
+
+def csr_segment_sum(values: jax.Array, indptr: jax.Array, num_segments: int) -> jax.Array:
+    """Segment sum over CSR offset ranges: values pre-sorted by owning
+    segment, indptr (N+1,).  The topology plane's vertex-centric hot path —
+    accepts (E,) or (E, D) values; 1-D input returns a 1-D result.
+
+    Like ``segment_sum``, only the 2-D case dispatches to the Pallas
+    one-hot-matmul kernel — a single value column would waste the MXU.
+    """
+    if values.ndim == 1:
+        return _ref.csr_segment_sum(values, indptr, num_segments)
+    if use_pallas():
+        return csr_segment_sum_pallas(
+            values, indptr, num_segments, interpret=_interpret()
+        )
+    return _ref.csr_segment_sum(values, indptr, num_segments)
 
 
 # ---------------------------------------------------------------------------

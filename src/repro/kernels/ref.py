@@ -34,6 +34,19 @@ def masked_edge_segment_sum(
     return edge_segment_sum(values * mask[:, None], dst, num_segments)
 
 
+def csr_segment_sum(values: jax.Array, indptr: jax.Array, num_segments: int) -> jax.Array:
+    """out[v] = sum of values[indptr[v]:indptr[v+1]] — segment sum over CSR
+    offset ranges (values pre-sorted by owning segment).
+
+    values: (E, D) float; indptr: (N+1,) int; returns (N, D).
+    """
+    e = values.shape[0]
+    # edge e belongs to segment v iff indptr[v] <= e < indptr[v+1]; with a
+    # sorted indptr that is searchsorted-right minus one (empty ranges skip)
+    seg = jnp.searchsorted(indptr, jnp.arange(e), side="right") - 1
+    return jax.ops.segment_sum(values, seg, num_segments=num_segments)
+
+
 # ---------------------------------------------------------------------------
 # embedding bag (gather + segment-sum; recsys lookup)
 # ---------------------------------------------------------------------------

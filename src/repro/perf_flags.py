@@ -26,20 +26,43 @@ record exact before/after deltas:
                    a capacity trade; halves decode cache memory — closes the
                    two single-pod decode cells that exceed 16 GB/chip).
 
+- ``csr``        — adaptive CSR dispatch in EdgeScan: serve low-selectivity
+                   scans from the per-edge-type CSR index instead of the
+                   edge-list scan (the Fig. 15 crossover, DESIGN.md §3).
+
 Default: all on.  ``REPRO_OPTS=""`` disables all (baseline);
 ``REPRO_OPTS="tri,chunkloss"`` enables a subset.
+
+A flag can carry a numeric tunable: ``REPRO_OPTS="csr=0.02"`` enables
+``csr`` *and* overrides its selectivity threshold — one entry, so tuning a
+flag can never accidentally change which flags are on.  ``value(name,
+default)`` reads the numeric part (default when absent or bare).
 """
 
 from __future__ import annotations
 
 import os
 
-_ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep")
+_ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr")
 
 
 def enabled(flag: str) -> bool:
     raw = os.environ.get("REPRO_OPTS")
     if raw is None:
         return flag in _ALL
-    chosen = {x.strip() for x in raw.split(",") if x.strip()}
+    chosen = {x.strip().split("=", 1)[0] for x in raw.split(",") if x.strip()}
     return flag in chosen
+
+
+def value(name: str, default: float) -> float:
+    """Numeric tunable attached to a flag (``name=<float>`` entries)."""
+    raw = os.environ.get("REPRO_OPTS") or ""
+    for part in raw.split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            if k.strip() == name:
+                try:
+                    return float(v)
+                except ValueError:
+                    return default
+    return default
