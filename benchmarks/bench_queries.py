@@ -1,14 +1,33 @@
 """Paper Fig. 10/11: BI query time — hot vs disk-cold vs S3-cold, GraphLake
 vs the in-situ naive baseline (PuppyGraph-style: no decoded cache, no
-prefetch, no materialized topology)."""
+prefetch, no materialized topology).
+
+Plus the predicate-pushdown selectivity sweep (DESIGN.md §4): one selective
+hop run at several edge-predicate selectivities, pushdown on vs off, with
+bit-identical-result verification and the zone-map pruning counters
+(chunks skipped, rows/bytes decoded).  The sweep writes a
+``BENCH_queries.json`` snapshot so the perf trajectory is tracked PR over PR
+(override the path with ``REPRO_BENCH_SNAPSHOT``); ``run(quick=True)`` is
+the CI gate mode — sweep only, small scale.
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import emit, ldbc_lake, make_engine, timed
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_store, ldbc_lake, make_engine, timed
 from repro.core.bi_queries import BI_QUERIES
+from repro.core.query import Query, gt
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+
+SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_SNAPSHOT", "BENCH_queries.json")
 
 
-def run(sf: float = 0.02) -> None:
+def _fig10(sf: float) -> None:
     store, schema = ldbc_lake("queries", sf)
 
     # --- GraphLake engine ------------------------------------------------------
@@ -40,3 +59,90 @@ def run(sf: float = 0.02) -> None:
     emit("fig10_cache_stats", 0.0,
          f"hits={gl_stats['hits']};misses={gl_stats['misses']};"
          f"lake_fetches={gl_stats['lake_fetches']}")
+
+
+def _assert_parity(a, b) -> None:
+    assert a.n_edges_scanned == b.n_edges_scanned
+    assert np.array_equal(a.vset.ids(), b.vset.ids())
+    for fa, fb in zip(a.frames, b.frames):
+        assert np.array_equal(fa.u, fb.u) and np.array_equal(fa.v, fb.v)
+        assert set(fa.columns) == set(fb.columns)
+        for k in fa.columns:
+            assert np.array_equal(fa.columns[k], fb.columns[k]), k
+
+
+def selectivity_sweep(sf: float = 0.02, row_group_rows: int = 512) -> dict:
+    """Pushdown-vs-baseline sweep over edge-predicate selectivity.
+
+    A one-hop Comment -[HasCreator]-> Person scan with a ``creationDate``
+    range predicate; thresholds are data quantiles so each point keeps a
+    known row fraction.  Every point verifies bit-identical results and
+    reports the pruning counters; the selective points are where zone maps
+    must shine (chunks_skipped > 0, fewer rows decoded).
+    """
+    store = fresh_store(f"queries_sweep_{sf}")
+    generate_ldbc(store, scale_factor=sf, n_files=2, row_group_rows=row_group_rows)
+    eng = make_engine(store, ldbc_graph_schema())
+    eng.startup()
+
+    # data quantiles of the predicate column -> exact target selectivities
+    comments = eng.all_vertices("Comment")
+    dates = eng.read_vertex_column("Comment", comments.ids(), "creationDate")
+    rows = []
+    t0 = time.perf_counter()
+    for keep_frac in (0.5, 0.1, 0.01):
+        thr = float(np.quantile(dates, 1.0 - keep_frac))
+        q = (Query(eng)
+             .vertices("Comment")
+             .hop("HasCreator", direction="out",
+                  edge_where=gt("creationDate", thr)))
+        eng.cache.drop_all()
+        res_off, t_off = timed(q.run, pushdown=False)
+        eng.cache.drop_all()
+        res_on, t_on = timed(q.run, pushdown=True)
+        _assert_parity(res_off, res_on)
+        row = {
+            "keep_frac": keep_frac,
+            "n_survivors": int(res_on.n_edges_scanned),
+            "pushdown_us": t_on * 1e6,
+            "baseline_us": t_off * 1e6,
+            "chunks_skipped": res_on.pruning["chunks_skipped"],
+            "chunks_read": res_on.pruning["chunks_read"],
+            "rows_decoded": res_on.pruning["rows_decoded"],
+            "rows_decoded_baseline": res_off.pruning["rows_decoded"],
+            "bytes_read": res_on.pruning["bytes_read"],
+            "bytes_read_baseline": res_off.pruning["bytes_read"],
+            "bytes_skipped": res_on.pruning["bytes_skipped"],
+        }
+        rows.append(row)
+        emit(f"sweep_keep{keep_frac}_pushdown_us", row["pushdown_us"],
+             f"baseline={row['baseline_us']:.0f}us;"
+             f"chunks_skipped={row['chunks_skipped']};"
+             f"rows_decoded={row['rows_decoded']}/{row['rows_decoded_baseline']};"
+             f"bytes_read={row['bytes_read']}/{row['bytes_read_baseline']}")
+
+    # acceptance invariant: a selective hop (<=10% kept) must actually prune
+    selective = [r for r in rows if r["keep_frac"] <= 0.1]
+    assert all(r["chunks_skipped"] > 0 for r in selective), rows
+    assert all(r["rows_decoded"] < r["rows_decoded_baseline"] for r in selective), rows
+    eng.close()
+
+    snap = {
+        "bench": "queries_selectivity_sweep",
+        "sf": sf,
+        "row_group_rows": row_group_rows,
+        "wall_s": time.perf_counter() - t0,
+        "rows": rows,
+    }
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snap, f, indent=2)
+    emit("sweep_snapshot", 0.0, SNAPSHOT_PATH)
+    return snap
+
+
+def run(sf: float = 0.02, quick: bool = False) -> None:
+    if quick:
+        selectivity_sweep(sf=0.004)
+        return
+    _fig10(sf)
+    selectivity_sweep(sf=sf)

@@ -87,7 +87,17 @@ class CacheManager:
                 unit = VertexCacheUnit(ref, raw, chunk_meta.n_rows)
                 spilled = self._disk_decoded.pop(key, None)
                 if spilled is not None:
-                    unit.import_decoded(*spilled)
+                    values, upto, nbytes = spilled
+                    unit.import_decoded(values, upto)
+                    # reclaim the disk-tier budget the spilled entry held;
+                    # leaving the bytes/order entry behind makes _disk_bytes
+                    # drift upward across evict/re-admit cycles and triggers
+                    # premature trims
+                    self._disk_bytes -= nbytes
+                    try:
+                        self._disk_order.remove("D:" + key)
+                    except ValueError:
+                        pass
                     self.stats["disk_hits"] += 1
             else:
                 unit = EdgeCacheUnit(ref, raw, chunk_meta.n_rows, window=self.config.edge_window)
@@ -170,8 +180,17 @@ class CacheManager:
         self._disk_trim()
 
     def _disk_put_decoded(self, key: str, values: np.ndarray, upto: int) -> None:
+        old = self._disk_decoded.pop(key, None)
+        if old is not None:
+            # duplicate admission (evict raced with a stale entry): replace
+            # the entry instead of double counting its bytes
+            self._disk_bytes -= old[2]
+            try:
+                self._disk_order.remove("D:" + key)
+            except ValueError:
+                pass
         nbytes = values.nbytes if values.dtype != object else len(pickle.dumps(values[:upto]))
-        self._disk_decoded[key] = (values, upto)
+        self._disk_decoded[key] = (values, upto, nbytes)
         self._disk_bytes += nbytes
         self._disk_order.append("D:" + key)
         self._disk_trim()
@@ -180,9 +199,9 @@ class CacheManager:
         while self._disk_bytes > self.config.disk_budget_bytes and self._disk_order:
             victim = self._disk_order.pop(0)
             if victim.startswith("D:"):
-                values, upto = self._disk_decoded.pop(victim[2:], (None, 0))
-                if values is not None:
-                    self._disk_bytes -= values.nbytes if values.dtype != object else 0
+                entry = self._disk_decoded.pop(victim[2:], None)
+                if entry is not None:
+                    self._disk_bytes -= entry[2]
             else:
                 raw = self._disk_raw.pop(victim, b"")
                 self._disk_bytes -= len(raw)

@@ -12,6 +12,13 @@ Two signals drive asynchronous cache-unit loads ahead of traversal:
    chunks prefetched.  Most effective when edge tables are sorted by source
    FK, as the paper notes.
 
+3. **Predicate zone maps** (DESIGN.md §4): when the caller passes ``bounds``
+   (column -> ``ColumnBounds`` from the query planner), each surviving row
+   group is additionally checked against its chunks' Min/Max value
+   statistics.  A row group some bound rejects is *definitively* dead — no
+   column of it is prefetched, so pruned chunks are never fetched from the
+   lake at all (the read path will skip them identically).
+
 Prefetching is mechanically just ``CacheManager.get_unit`` on I/O threads:
 units land in the memory tier before EdgeScan/VertexMap ask for them.
 """
@@ -22,6 +29,7 @@ from typing import Optional, Sequence
 
 from repro.core.cache.manager import CacheManager
 from repro.core.cache.units import ChunkRef
+from repro.core.plan import group_rejected
 from repro.core.types import VSet
 from repro.lakehouse.io_pool import IOPool
 
@@ -31,7 +39,8 @@ class Prefetcher:
         self.cache = cache
         self.topology = topology
         self.pool = pool
-        self.stats = {"vertex_chunks": 0, "edge_chunks": 0, "pruned_portions": 0}
+        self.stats = {"vertex_chunks": 0, "edge_chunks": 0, "pruned_portions": 0,
+                      "pruned_chunks": 0}
 
     def _issue(self, ref: ChunkRef, meta, kind: str) -> None:
         if self.pool is not None:
@@ -39,9 +48,19 @@ class Prefetcher:
         else:
             self.cache.get_unit(ref, meta, kind)
 
+    def _zone_map_rejects(self, meta, row_group: int, bounds, n_cols: int) -> bool:
+        """The read path's zone-map test (shared via plan.group_rejected, so
+        prefetch never fetches a chunk the read will skip) + stats."""
+        if group_rejected(meta, row_group, bounds):
+            self.stats["pruned_chunks"] += n_cols
+            return True
+        return False
+
     # ---------------------------------------------------------------- vertices
 
-    def prefetch_vertices(self, frontier: VSet, columns: Sequence[str]) -> int:
+    def prefetch_vertices(
+        self, frontier: VSet, columns: Sequence[str], bounds=None
+    ) -> int:
         """Prefetch vertex column chunks overlapping the frontier envelope."""
         if not columns or frontier.size() == 0:
             return 0
@@ -54,6 +73,8 @@ class Prefetcher:
                 g_lo = finfo.dense_offset + g.first_row
                 g_hi = g_lo + g.n_rows - 1
                 if g_hi < lo or g_lo > hi:
+                    continue
+                if self._zone_map_rejects(meta, g.index, bounds, len(columns)):
                     continue
                 for col in columns:
                     self._issue(ChunkRef(finfo.key, col, g.index), meta, "vertex")
@@ -69,6 +90,7 @@ class Prefetcher:
         edge_type: str,
         columns: Sequence[str],
         direction: str = "out",
+        bounds=None,
     ) -> int:
         """Prefetch edge-attribute chunks for portions the frontier can hit."""
         if not columns or frontier.size() == 0:
@@ -80,6 +102,8 @@ class Prefetcher:
             live = el.portions_overlapping(lo, hi, direction=direction)
             self.stats["pruned_portions"] += len(el.portions) - len(live)
             for p in live:
+                if self._zone_map_rejects(meta, p.row_group, bounds, len(columns)):
+                    continue
                 for col in columns:
                     self._issue(ChunkRef(el.file_key, col, p.row_group), meta, "edge")
                     issued += 1

@@ -111,10 +111,12 @@ class GraphLakeEngine:
 
     # ------------------------------------------------------------------ primitives
 
-    def vertex_map(self, vset: VSet, columns=(), filter_fn=None, map_fn=None):
+    def vertex_map(self, vset: VSet, columns=(), filter_fn=None, map_fn=None,
+                   bounds=None, counters=None):
         return vertex_map(
             self.topology, self.cache, vset, columns,
             filter_fn=filter_fn, map_fn=map_fn, prefetcher=self.prefetcher,
+            bounds=bounds, counters=counters,
         )
 
     def edge_scan(
@@ -127,12 +129,14 @@ class GraphLakeEngine:
         v_columns: Sequence[str] = (),
         edge_filter=None,
         strategy: str = "auto",
+        plan=None,
+        counters=None,
     ) -> EdgeFrame:
         return edge_scan(
             self.topology, self.cache, frontier, edge_type, direction,
             edge_columns=edge_columns, u_columns=u_columns, v_columns=v_columns,
             edge_filter=edge_filter, prefetcher=self.prefetcher,
-            strategy=strategy,
+            strategy=strategy, plan=plan, counters=counters,
         )
 
     def read_vertex_column(self, vertex_type: str, dense_ids, column: str) -> np.ndarray:

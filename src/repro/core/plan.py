@@ -1,0 +1,175 @@
+"""Predicate-pushdown planning types (DESIGN.md §4).
+
+A hop's WHERE clause is split by the planner (``core/query.py``) into
+per-prefix conjuncts; each boundable conjunct also compiles to a
+:class:`ColumnBounds` — the value-range/value-set constraint the zone-map
+pruning in the read path checks against ``ColumnChunkMeta.min_value`` /
+``max_value``.  A chunk whose statistics *cannot* satisfy a bound is skipped
+entirely: never fetched, never decoded, never admitted to the cache, and its
+rows come back with a **definitive reject mask** (they provably fail the
+conjunct, so the staged scan drops them without evaluating anything).
+
+Bounds are conservative by construction: ``rejects`` may only return True
+when no value inside the chunk's [min, max] envelope can satisfy the
+constraint.  Anything it cannot reason about (missing statistics, non-numeric
+constants, ``|``-composition, opaque UDFs) degrades to "cannot reject", i.e.
+the pre-pushdown full-read behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def _as_float(v) -> Optional[float]:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnBounds:
+    """Satisfiability envelope of one column's conjunct.
+
+    ``lo``/``hi`` express range constraints (``lo_strict`` means ``col > lo``
+    rather than ``col >= lo``); ``values`` expresses an exact membership set
+    (``eq`` / ``isin``).  ``None`` fields are unconstrained.
+    """
+
+    lo: Optional[float] = None
+    hi: Optional[float] = None
+    lo_strict: bool = False
+    hi_strict: bool = False
+    values: Optional[frozenset] = None
+
+    # -- zone-map test ---------------------------------------------------------
+
+    def rejects(self, min_value, max_value) -> bool:
+        """True iff NO value in a chunk with [min_value, max_value] statistics
+        can satisfy this constraint.  Missing statistics never reject."""
+        if min_value is None or max_value is None:
+            return False
+        mn, mx = float(min_value), float(max_value)
+        if self.values is not None:
+            if len(self.values) > 64:
+                # large sets: fall back to their numeric envelope (safe:
+                # may fail to reject, never wrongly rejects)
+                nums = [f for f in (_as_float(v) for v in self.values) if f is not None]
+                if len(nums) < len(self.values):
+                    return False  # non-numeric candidate -> cannot reason
+                return bool(nums) and (min(nums) > mx or max(nums) < mn)
+            for v in self.values:
+                fv = _as_float(v)
+                if fv is None:
+                    return False  # non-numeric candidate -> cannot reason
+                if mn <= fv <= mx:
+                    return False
+            return True  # nothing in the set fits the chunk (incl. empty set)
+        if self.lo is not None and (mx < self.lo or (self.lo_strict and mx <= self.lo)):
+            return True
+        if self.hi is not None and (mn > self.hi or (self.hi_strict and mn >= self.hi)):
+            return True
+        return False
+
+    # -- conjunction -----------------------------------------------------------
+
+    def intersect(self, other: "ColumnBounds") -> "ColumnBounds":
+        """Bounds of the AND of two constraints on the same column."""
+        lo, lo_strict = self.lo, self.lo_strict
+        if other.lo is not None and (
+            lo is None or other.lo > lo or (other.lo == lo and other.lo_strict)
+        ):
+            lo, lo_strict = other.lo, other.lo_strict
+        hi, hi_strict = self.hi, self.hi_strict
+        if other.hi is not None and (
+            hi is None or other.hi < hi or (other.hi == hi and other.hi_strict)
+        ):
+            hi, hi_strict = other.hi, other.hi_strict
+        if self.values is not None and other.values is not None:
+            values = self.values & other.values
+        else:
+            values = self.values if self.values is not None else other.values
+        if values is not None and (lo is not None or hi is not None):
+            # fold the range into the membership set (non-numeric survive:
+            # the range test cannot speak about them)
+            kept = []
+            for v in values:
+                fv = _as_float(v)
+                if fv is None:
+                    kept.append(v)
+                    continue
+                if lo is not None and (fv < lo or (lo_strict and fv == lo)):
+                    continue
+                if hi is not None and (fv > hi or (hi_strict and fv == hi)):
+                    continue
+                kept.append(v)
+            values = frozenset(kept)
+        return ColumnBounds(lo, hi, lo_strict, hi_strict, values)
+
+
+def group_rejected(meta, row_group: int, bounds: Optional[dict]) -> bool:
+    """The one zone-map test both the read path and the prefetcher apply:
+    True iff some bounded column's chunk statistics in this row group prove
+    the conjunct unsatisfiable.  A rejected group is *definitive* — its rows
+    cannot survive the predicate — so callers skip every column of it.
+    Sharing the test keeps the two paths in lockstep: prefetch never fetches
+    a chunk the read would skip, and vice versa."""
+    if not bounds:
+        return False
+    for col, b in bounds.items():
+        try:
+            cm = meta.chunk(col, row_group)
+        except KeyError:
+            continue
+        if b.rejects(cm.min_value, cm.max_value):
+            return True
+    return False
+
+
+def merge_bounds(a: dict, b: dict) -> dict:
+    """Per-column conjunction of two bounds maps (missing key = unconstrained
+    on that side; the AND is at least as restrictive as either side)."""
+    out = dict(a)
+    for col, bnd in b.items():
+        out[col] = out[col].intersect(bnd) if col in out else bnd
+    return out
+
+
+@dataclasses.dataclass
+class ScanPlan:
+    """Staged execution plan for one EdgeScan hop (DESIGN.md §4).
+
+    Stage order is E -> U -> V -> accum: edge-column conjuncts first (their
+    chunks are scan-aligned and cheapest), then frontier-side vertex
+    conjuncts, then far-side (``v.``) conjuncts — far-side reads are the
+    expensive random point lookups, so they only ever see rows that survived
+    the earlier stages.  ``accum_*_columns`` are needed for ACCUM values but
+    by no predicate; they materialize last, for final survivors only.
+    """
+
+    edge_pred: Optional[object] = None      # Predicate over "e." columns
+    source_pred: Optional[object] = None    # Predicate over "u." columns
+    target_pred: Optional[object] = None    # Predicate over "v." columns
+    edge_columns: tuple = ()
+    u_columns: tuple = ()
+    v_columns: tuple = ()
+    accum_edge_columns: tuple = ()
+    accum_u_columns: tuple = ()
+    accum_v_columns: tuple = ()
+    edge_bounds: dict = dataclasses.field(default_factory=dict)
+    u_bounds: dict = dataclasses.field(default_factory=dict)
+    v_bounds: dict = dataclasses.field(default_factory=dict)
+
+
+def new_pruning_counters() -> dict:
+    """Per-query pruning counters (exposed on ``QueryResult.pruning``)."""
+    return {
+        "chunks_skipped": 0,   # chunks never fetched/decoded (zone-map reject)
+        "chunks_read": 0,      # chunks materialized through the cache
+        "rows_pruned": 0,      # requested rows covered by skipped chunks
+        "rows_decoded": 0,     # chunk rows actually decoded (decode_ops delta)
+        "bytes_skipped": 0,    # encoded bytes of skipped chunks
+        "bytes_read": 0,       # encoded bytes of chunks read
+    }

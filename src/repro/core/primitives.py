@@ -10,9 +10,22 @@ same computation (see DESIGN.md §2).
 edge-centric per-file edge lists (sequential scan, Min-Max portion pruning)
 or the vertex-centric CSR index (adjacency-range gather) — via an adaptive
 selectivity dispatch.  Either way the gather returns (u, v, global-edge-id)
-in canonical order, row-level alignment with edge-attribute chunks is kept
-through the global edge ids, and the (u, v, edge) rows that survive the
-frontier test are fully materialized before UDFs run.
+in canonical order and row-level alignment with edge-attribute chunks is
+kept through the global edge ids.
+
+Two materialization paths exist past the gather (DESIGN.md §4):
+
+- the **legacy full-materialization path** (``edge_filter`` callable): every
+  requested column is materialized for every gathered row, then the filter
+  runs once over the complete frame — the only path that supports opaque
+  cross-entity UDF filters;
+- the **staged pushdown path** (``plan``: a :class:`~repro.core.plan.ScanPlan`
+  from the query planner): per-prefix conjuncts evaluate stage by stage on a
+  shrinking row set (edge columns -> frontier-side vertex columns -> far-side
+  vertex columns), each stage's reads consult per-chunk Min/Max statistics to
+  skip chunks that cannot satisfy the conjunct (zone-map pruning), and
+  ACCUM-only columns materialize last, for final survivors only.  Both paths
+  produce bit-identical ``EdgeFrame``s.
 """
 
 from __future__ import annotations
@@ -24,6 +37,7 @@ import numpy as np
 
 from repro.core.cache.manager import CacheManager
 from repro.core.cache.units import ChunkRef
+from repro.core.plan import group_rejected
 from repro.core.types import VSet
 
 
@@ -31,18 +45,73 @@ from repro.core.types import VSet
 # value-reader helpers
 # ---------------------------------------------------------------------------
 
-def read_vertex_values(
-    topology, cache: CacheManager, vertex_type: str, dense_ids: np.ndarray, column: str
-) -> np.ndarray:
-    """Materialize one vertex column for arbitrary dense IDs (point lookups).
+def _zone_map_rejects(meta, row_group: int, bounds, columns, n_req: int, counters) -> bool:
+    """:func:`~repro.core.plan.group_rejected` plus pruning-counter
+    bookkeeping for the read path (DESIGN.md §4)."""
+    if not group_rejected(meta, row_group, bounds):
+        return False
+    if counters is not None:
+        counters["chunks_skipped"] += len(columns)
+        counters["rows_pruned"] += n_req
+        for c in columns:
+            try:
+                counters["bytes_skipped"] += meta.chunk(c, row_group).length
+            except KeyError:
+                pass
+    return True
+
+
+def _read_unit(cache, ref: ChunkRef, meta, kind, rows: np.ndarray, counters):
+    """``get_unit`` + ``read`` with pruning-counter bookkeeping."""
+    unit = cache.get_unit(ref, meta, kind)
+    before = unit.decode_ops
+    vals = unit.read(rows)
+    if counters is not None:
+        counters["chunks_read"] += 1
+        counters["rows_decoded"] += unit.decode_ops - before
+        try:
+            counters["bytes_read"] += meta.chunk(ref.column, ref.row_group).length
+        except KeyError:
+            pass
+    return vals
+
+
+def _scatter(out: dict, column: str, n: int, pos: np.ndarray, vals: np.ndarray) -> None:
+    if out[column] is None:
+        out[column] = np.empty(n, dtype=vals.dtype)
+        if vals.dtype == object:
+            out[column][:] = ""
+        else:
+            out[column][:] = 0
+    out[column][pos] = vals
+
+
+def _finalize(out: dict, n: int) -> dict[str, np.ndarray]:
+    for c, arr in out.items():
+        if arr is None:
+            out[c] = np.zeros(n, dtype=np.float64)
+    return out
+
+
+def read_vertex_columns_pruned(
+    topology, cache: CacheManager, vertex_type: str, dense_ids: np.ndarray,
+    columns: Sequence[str], bounds: Optional[dict] = None, counters: Optional[dict] = None,
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Materialize vertex columns for arbitrary dense IDs (point lookups).
 
     Groups the request by (file, row group) and reads each group through its
-    VertexCacheUnit, then scatters results back into request order.
+    VertexCacheUnit, scattering results back into request order.  When
+    ``bounds`` (column -> ``ColumnBounds``) is given, row groups whose chunk
+    Min/Max statistics cannot satisfy a bound are skipped outright — no
+    column of the group is fetched/decoded — and their rows are flagged in
+    the returned reject mask (they definitively fail the conjunct; their
+    output values are filler and must not be consulted).
     """
     dense_ids = np.asarray(dense_ids, dtype=np.int64)
-    out: Optional[np.ndarray] = None
-    if len(dense_ids) == 0:
-        return np.empty(0, dtype=np.float64)
+    reject = np.zeros(len(dense_ids), dtype=bool)
+    if len(dense_ids) == 0 or not columns:
+        return {c: np.empty(0, dtype=np.float64) for c in columns}, reject
+    out: dict[str, Optional[np.ndarray]] = {c: None for c in columns}
     file_ids, rows = topology.dense_to_file_row(vertex_type, dense_ids)
     for fid in np.unique(file_ids):
         finfo = topology.file_registry.get(int(fid))
@@ -56,55 +125,77 @@ def read_vertex_values(
             in_g = (rows_f >= g.first_row) & (rows_f < g.first_row + g.n_rows)
             if not in_g.any():
                 continue
-            unit = cache.get_unit(ChunkRef(finfo.key, column, g.index), meta, "vertex")
-            vals = unit.read(rows_f[in_g] - g.first_row)
-            if out is None:
-                out = np.empty(len(dense_ids), dtype=vals.dtype)
-                if vals.dtype == object:
-                    out[:] = ""
-                else:
-                    out[:] = 0
-            out[idx_f[in_g]] = vals
-    if out is None:
-        out = np.zeros(len(dense_ids), dtype=np.float64)
-    return out
+            pos = idx_f[in_g]
+            if bounds and _zone_map_rejects(meta, g.index, bounds, columns,
+                                            int(in_g.sum()), counters):
+                reject[pos] = True
+                continue
+            for c in columns:
+                vals = _read_unit(cache, ChunkRef(finfo.key, c, g.index), meta,
+                                  "vertex", rows_f[in_g] - g.first_row, counters)
+                _scatter(out, c, len(dense_ids), pos, vals)
+    return _finalize(out, len(dense_ids)), reject
+
+
+def read_vertex_values(
+    topology, cache: CacheManager, vertex_type: str, dense_ids: np.ndarray, column: str
+) -> np.ndarray:
+    """Single-column, no-pruning convenience over
+    :func:`read_vertex_columns_pruned` (the pre-pushdown API)."""
+    cols, _ = read_vertex_columns_pruned(topology, cache, vertex_type, dense_ids, [column])
+    return cols[column]
+
+
+def read_edge_columns_pruned(
+    topology, cache: CacheManager, edge_type: str, eids: np.ndarray,
+    columns: Sequence[str], bounds: Optional[dict] = None, counters: Optional[dict] = None,
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Materialize edge columns for *global* edge ids of an edge type.
+
+    Global edge ids address rows across the edge type's files (lists in
+    registration order, rows in file order) — the addressing every
+    ``TopologyView.gather`` returns.  The per-list/per-row-group grouping
+    depends only on the eids, so it is computed once and shared by all
+    requested columns.  ``bounds``/``counters`` behave exactly as in
+    :func:`read_vertex_columns_pruned`: zone-map-rejected row groups are
+    never fetched or decoded and their rows come back reject-flagged.
+    """
+    eids = np.asarray(eids, dtype=np.int64)
+    reject = np.zeros(len(eids), dtype=bool)
+    if len(eids) == 0 or not columns:
+        return {c: np.empty(0, dtype=np.float64) for c in columns}, reject
+    offsets = topology.plane.eid_offsets(edge_type)
+    lists = topology.all_edge_lists(edge_type)
+    list_idx = np.searchsorted(offsets, eids, side="right") - 1
+    out: dict[str, Optional[np.ndarray]] = {c: None for c in columns}
+    for li in np.unique(list_idx):
+        sel = list_idx == li
+        local_rows = eids[sel] - offsets[li]
+        pos = np.flatnonzero(sel)
+        el = lists[li]
+        meta = topology.edge_file_metas[el.file_key]
+        for g in meta.row_groups:
+            in_g = (local_rows >= g.first_row) & (local_rows < g.first_row + g.n_rows)
+            if not in_g.any():
+                continue
+            gpos = pos[in_g]
+            if bounds and _zone_map_rejects(meta, g.index, bounds, columns,
+                                            int(in_g.sum()), counters):
+                reject[gpos] = True
+                continue
+            for c in columns:
+                vals = _read_unit(cache, ChunkRef(el.file_key, c, g.index), meta,
+                                  "edge", local_rows[in_g] - g.first_row, counters)
+                _scatter(out, c, len(eids), gpos, vals)
+    return _finalize(out, len(eids)), reject
 
 
 def read_edge_columns_by_eid(
     topology, cache: CacheManager, edge_type: str, eids: np.ndarray,
     columns: Sequence[str],
 ) -> dict[str, np.ndarray]:
-    """Materialize edge columns for *global* edge ids of an edge type.
-
-    Global edge ids address rows across the edge type's files (lists in
-    registration order, rows in file order) — the addressing every
-    ``TopologyView.gather`` returns.  The per-list grouping depends only on
-    the eids, so it is computed once and shared by all requested columns;
-    each group reads through the scan-aligned per-file reader.
-    """
-    eids = np.asarray(eids, dtype=np.int64)
-    if len(eids) == 0 or not columns:
-        return {c: np.empty(0, dtype=np.float64) for c in columns}
-    offsets = topology.plane.eid_offsets(edge_type)
-    lists = topology.all_edge_lists(edge_type)
-    list_idx = np.searchsorted(offsets, eids, side="right") - 1
-    groups = [
-        (li, list_idx == li) for li in np.unique(list_idx)
-    ]
-    out: dict[str, Optional[np.ndarray]] = {c: None for c in columns}
-    for li, sel in groups:
-        local_rows = eids[sel] - offsets[li]
-        pos = np.flatnonzero(sel)
-        for c in columns:
-            vals = read_edge_values(topology, cache, lists[li], local_rows, c)
-            if out[c] is None:
-                out[c] = np.empty(len(eids), dtype=vals.dtype)
-                if vals.dtype == object:
-                    out[c][:] = ""
-                else:
-                    out[c][:] = 0
-            out[c][pos] = vals
-    return out
+    """No-pruning convenience over :func:`read_edge_columns_pruned`."""
+    return read_edge_columns_pruned(topology, cache, edge_type, eids, columns)[0]
 
 
 def read_edge_values_by_eid(
@@ -112,32 +203,6 @@ def read_edge_values_by_eid(
 ) -> np.ndarray:
     """Single-column convenience over :func:`read_edge_columns_by_eid`."""
     return read_edge_columns_by_eid(topology, cache, edge_type, eids, [column])[column]
-
-
-def read_edge_values(
-    topology, cache: CacheManager, edge_list, local_rows: np.ndarray, column: str
-) -> np.ndarray:
-    """Materialize one edge column for rows of one edge file (scan-aligned)."""
-    meta = topology.edge_file_metas[edge_list.file_key]
-    local_rows = np.asarray(local_rows, dtype=np.int64)
-    out: Optional[np.ndarray] = None
-    first = 0
-    for g in meta.row_groups:
-        in_g = (local_rows >= g.first_row) & (local_rows < g.first_row + g.n_rows)
-        if in_g.any():
-            unit = cache.get_unit(ChunkRef(edge_list.file_key, column, g.index), meta, "edge")
-            vals = unit.read(local_rows[in_g] - g.first_row)
-            if out is None:
-                out = np.empty(len(local_rows), dtype=vals.dtype)
-                if vals.dtype == object:
-                    out[:] = ""
-                else:
-                    out[:] = 0
-            out[np.flatnonzero(in_g)] = vals
-        first += g.n_rows
-    if out is None:
-        out = np.zeros(len(local_rows), dtype=np.float64)
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -152,22 +217,31 @@ def vertex_map(
     filter_fn: Optional[Callable[[dict], np.ndarray]] = None,
     map_fn: Optional[Callable[[dict], np.ndarray]] = None,
     prefetcher=None,
+    bounds: Optional[dict] = None,
+    counters: Optional[dict] = None,
 ):
     """Apply a UDF over an active vertex set (paper §6.1).
 
     Returns ``(VSet, values)``: the filtered subset (if ``filter_fn``) and the
     per-active-vertex ``map_fn`` output (if given).  The UDF receives a dict
     ``{"id": dense ids, <col>: values...}`` — fully materialized vertex rows.
+
+    ``bounds`` (column -> ``ColumnBounds``, only sensible with ``filter_fn``)
+    enables zone-map chunk pruning on the column reads: definitively rejected
+    rows are dropped from the output without the UDF seeing real values.
     """
     if prefetcher is not None:
-        prefetcher.prefetch_vertices(vset, columns)
+        prefetcher.prefetch_vertices(vset, columns, bounds=bounds)
     ids = vset.ids()
     frame = {"id": ids}
-    for col in columns:
-        frame[col] = read_vertex_values(topology, cache, vset.vertex_type, ids, col)
+    cols, reject = read_vertex_columns_pruned(
+        topology, cache, vset.vertex_type, ids, list(columns),
+        bounds=bounds, counters=counters,
+    )
+    frame.update(cols)
     out_vals = map_fn(frame) if map_fn is not None else None
     if filter_fn is not None:
-        keep = np.asarray(filter_fn(frame), dtype=bool)
+        keep = np.asarray(filter_fn(frame), dtype=bool) & ~reject
         new = VSet.from_dense_ids(vset.vertex_type, len(vset.mask), ids[keep])
         if out_vals is not None:
             out_vals = out_vals[keep]
@@ -212,6 +286,8 @@ def edge_scan(
     prefetcher=None,
     read_v_values: Optional[Callable[[str, np.ndarray, str], np.ndarray]] = None,
     strategy: str = "auto",
+    plan=None,
+    counters: Optional[dict] = None,
 ) -> EdgeFrame:
     """Scan the edges incident to ``frontier`` (paper §6.1).
 
@@ -229,6 +305,11 @@ def edge_scan(
     index).  ``edge_filter`` sees the full materialized frame and returns a
     keep-mask (cross-entity predicates welcome).
 
+    ``plan`` (a :class:`~repro.core.plan.ScanPlan`, mutually exclusive with
+    ``edge_filter``/column args) switches to the staged pushdown path
+    (DESIGN.md §4): per-prefix conjuncts evaluate on a shrinking row set with
+    zone-map chunk pruning, and far-side/ACCUM columns materialize late.
+
     ``read_v_values`` overrides far-side attribute reads — the distributed
     engine injects the two-pass remote fetch here (paper §6.2).
     """
@@ -238,6 +319,12 @@ def edge_scan(
     else:
         u_type, v_type = et.dst_type, et.src_type
 
+    if plan is not None:
+        return _edge_scan_staged(
+            topology, cache, frontier, edge_type, direction, plan,
+            prefetcher, read_v_values, strategy, counters, u_type, v_type,
+        )
+
     if prefetcher is not None:
         prefetcher.prefetch_edges(frontier, edge_type, edge_columns, direction=direction)
         prefetcher.prefetch_vertices(frontier, u_columns)
@@ -246,17 +333,26 @@ def edge_scan(
         edge_type, strategy, frontier=frontier, direction=direction
     )
     u, v, eid = view.gather(frontier, direction=direction)
-    by_col = read_edge_columns_by_eid(topology, cache, edge_type, eid, edge_columns)
+    by_col, _ = read_edge_columns_pruned(
+        topology, cache, edge_type, eid, edge_columns, counters=counters
+    )
     columns = {f"e.{c}": by_col[c] for c in edge_columns}
 
     # endpoint materialization (vertex rows via graph-aware cache units)
+    u_vals, _ = read_vertex_columns_pruned(
+        topology, cache, u_type, u, list(u_columns), counters=counters
+    )
     for c in u_columns:
-        columns[f"u.{c}"] = read_vertex_values(topology, cache, u_type, u, c)
-    for c in v_columns:
-        if read_v_values is not None:
+        columns[f"u.{c}"] = u_vals[c]
+    if read_v_values is not None:
+        for c in v_columns:
             columns[f"v.{c}"] = read_v_values(v_type, v, c)
-        else:
-            columns[f"v.{c}"] = read_vertex_values(topology, cache, v_type, v, c)
+    else:
+        v_vals, _ = read_vertex_columns_pruned(
+            topology, cache, v_type, v, list(v_columns), counters=counters
+        )
+        for c in v_columns:
+            columns[f"v.{c}"] = v_vals[c]
 
     frame = dict(columns)
     frame["u"] = u
@@ -265,5 +361,99 @@ def edge_scan(
         keep = np.asarray(edge_filter(frame), dtype=bool)
         u, v = u[keep], v[keep]
         columns = {k: vals[keep] for k, vals in columns.items()}
+
+    return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns)
+
+
+def _edge_scan_staged(
+    topology, cache, frontier, edge_type, direction, plan,
+    prefetcher, read_v_values, strategy, counters, u_type, v_type,
+) -> EdgeFrame:
+    """Staged late-materialization EdgeScan (DESIGN.md §4).
+
+    Stage order E -> U -> V: each predicate stage materializes only its own
+    prefix's columns, for only the rows still alive, with zone-map chunk
+    pruning folded into the reads (a pruned chunk's rows carry a definitive
+    reject, so filler values never reach a predicate's verdict).  Far-side
+    (``v.``) reads — the expensive random point lookups — therefore see only
+    rows that survived the cheaper stages, and ACCUM-only columns are read
+    last, for final survivors.
+    """
+    if prefetcher is not None:
+        prefetcher.prefetch_edges(
+            frontier, edge_type,
+            tuple(plan.edge_columns) + tuple(plan.accum_edge_columns),
+            direction=direction, bounds=plan.edge_bounds,
+        )
+        prefetcher.prefetch_vertices(
+            frontier, tuple(plan.u_columns) + tuple(plan.accum_u_columns),
+            bounds=plan.u_bounds,
+        )
+
+    view = topology.plane.view(
+        edge_type, strategy, frontier=frontier, direction=direction
+    )
+    u, v, eid = view.gather(frontier, direction=direction)
+    columns: dict[str, np.ndarray] = {}
+
+    def _evaluate(pred, prefix, prefix_cols, reject):
+        """Shrink (u, v, eid, columns) to the conjunct's survivors."""
+        nonlocal u, v, eid, columns
+        columns.update(prefix_cols)
+        if pred is None or not len(u):
+            return
+        frame = dict(columns)
+        frame["u"] = u
+        frame["v"] = v
+        keep = np.asarray(pred.evaluate(frame, prefix), dtype=bool) & ~reject
+        u, v, eid = u[keep], v[keep], eid[keep]
+        columns = {k: vals[keep] for k, vals in columns.items()}
+
+    if plan.edge_columns:
+        e_cols, rej = read_edge_columns_pruned(
+            topology, cache, edge_type, eid, plan.edge_columns,
+            bounds=plan.edge_bounds, counters=counters,
+        )
+        _evaluate(plan.edge_pred, "e", {f"e.{c}": a for c, a in e_cols.items()}, rej)
+
+    if plan.u_columns:
+        u_cols, rej = read_vertex_columns_pruned(
+            topology, cache, u_type, u, plan.u_columns,
+            bounds=plan.u_bounds, counters=counters,
+        )
+        _evaluate(plan.source_pred, "u", {f"u.{c}": a for c, a in u_cols.items()}, rej)
+
+    if plan.v_columns:
+        if read_v_values is not None:
+            v_cols = {c: read_v_values(v_type, v, c) for c in plan.v_columns}
+            rej = np.zeros(len(v), dtype=bool)
+        else:
+            v_cols, rej = read_vertex_columns_pruned(
+                topology, cache, v_type, v, plan.v_columns,
+                bounds=plan.v_bounds, counters=counters,
+            )
+        _evaluate(plan.target_pred, "v", {f"v.{c}": a for c, a in v_cols.items()}, rej)
+
+    # ACCUM-only columns: needed by no predicate -> final survivors only
+    if plan.accum_edge_columns:
+        e_cols, _ = read_edge_columns_pruned(
+            topology, cache, edge_type, eid, plan.accum_edge_columns, counters=counters
+        )
+        columns.update({f"e.{c}": a for c, a in e_cols.items()})
+    if plan.accum_u_columns:
+        u_cols, _ = read_vertex_columns_pruned(
+            topology, cache, u_type, u, plan.accum_u_columns, counters=counters
+        )
+        columns.update({f"u.{c}": a for c, a in u_cols.items()})
+    if plan.accum_v_columns:
+        if read_v_values is not None:
+            columns.update(
+                {f"v.{c}": read_v_values(v_type, v, c) for c in plan.accum_v_columns}
+            )
+        else:
+            v_cols, _ = read_vertex_columns_pruned(
+                topology, cache, v_type, v, plan.accum_v_columns, counters=counters
+            )
+            columns.update({f"v.{c}": a for c, a in v_cols.items()})
 
     return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns)

@@ -21,6 +21,18 @@ is expressed as::
 
 Predicates compose with ``&`` / ``|``; they compile to vectorized masks over
 materialized frames.
+
+**Predicate pushdown (DESIGN.md §4).**  ``run()`` plans every hop before
+executing it: the WHERE conjuncts are already split by prefix (``e.`` /
+``u.`` / ``v.``) at the API level, so the planner's job is staging — pred
+columns vs ACCUM-only columns per prefix — plus compiling each boundable
+conjunct to :class:`~repro.core.plan.ColumnBounds` via ``Predicate.bounds()``.
+``eq``/``gt``/``ge``/``lt``/``le``/``isin`` and their ``&``-compositions
+produce usable bounds; ``|``-compositions, ``ne`` and opaque UDF predicates
+degrade safely to no-prune (empty bounds).  The staged plan drives
+``edge_scan``'s late materialization and the zone-map chunk skipping in the
+read/prefetch path; ``run(pushdown=False)`` forces the legacy
+full-materialization path (the parity baseline).
 """
 
 from __future__ import annotations
@@ -30,6 +42,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.plan import ColumnBounds, ScanPlan, merge_bounds, new_pruning_counters
 from repro.core.types import VSet
 
 
@@ -40,20 +53,40 @@ from repro.core.types import VSet
 class Predicate:
     """Vectorized predicate over a named column of a materialized frame."""
 
-    def __init__(self, fn: Callable[[dict, str], np.ndarray], columns: tuple[str, ...]):
+    def __init__(
+        self,
+        fn: Callable[[dict, str], np.ndarray],
+        columns: tuple[str, ...],
+        bounds: Optional[dict] = None,
+    ):
         self._fn = fn
         self.columns = columns  # bare column names this predicate touches
+        self._bounds = dict(bounds) if bounds else {}
+
+    def bounds(self) -> dict[str, ColumnBounds]:
+        """Column -> zone-map bounds implied by this predicate.
+
+        Conservative protocol: every returned bound is a *necessary*
+        condition of the whole predicate, so chunk pruning against it can
+        only drop rows that would fail anyway.  Unboundable predicates
+        (``|``-composition, ``ne``, raw UDFs) return ``{}`` — no pruning.
+        """
+        return dict(self._bounds)
 
     def evaluate(self, frame: dict, prefix: str) -> np.ndarray:
         return self._fn(frame, prefix)
 
     def __and__(self, other: "Predicate") -> "Predicate":
+        # AND is at least as restrictive as each side: bounds intersect, and
+        # a one-sided bound stays usable even if the other side is opaque.
         return Predicate(
             lambda f, p: self.evaluate(f, p) & other.evaluate(f, p),
             self.columns + other.columns,
+            bounds=merge_bounds(self._bounds, other.bounds()),
         )
 
     def __or__(self, other: "Predicate") -> "Predicate":
+        # OR weakens both sides; degrade to no-prune rather than widen.
         return Predicate(
             lambda f, p: self.evaluate(f, p) | other.evaluate(f, p),
             self.columns + other.columns,
@@ -67,7 +100,7 @@ def _col(frame: dict, prefix: str, column: str) -> np.ndarray:
     return frame[column]
 
 
-def _cmp(column: str, op: Callable) -> Callable[..., Predicate]:
+def _cmp(column: str, op: Callable, bounds_of: Optional[Callable] = None) -> Callable[..., Predicate]:
     def make(value) -> Predicate:
         def fn(frame, prefix):
             col = _col(frame, prefix, column)
@@ -75,12 +108,14 @@ def _cmp(column: str, op: Callable) -> Callable[..., Predicate]:
                 col = np.asarray([str(x) for x in col])
                 return op(col, str(value))
             return op(col, value)
-        return Predicate(fn, (column,))
+        b = {column: bounds_of(value)} if bounds_of is not None else None
+        return Predicate(fn, (column,), bounds=b)
     return make
 
 
 def eq(column: str, value) -> Predicate:
-    return _cmp(column, np.equal)(value)
+    return _cmp(column, np.equal,
+                lambda v: ColumnBounds(values=frozenset([v])))(value)
 
 
 def ne(column: str, value) -> Predicate:
@@ -88,29 +123,37 @@ def ne(column: str, value) -> Predicate:
 
 
 def gt(column: str, value) -> Predicate:
-    return _cmp(column, np.greater)(value)
+    return _cmp(column, np.greater,
+                lambda v: ColumnBounds(lo=v, lo_strict=True))(value)
 
 
 def ge(column: str, value) -> Predicate:
-    return _cmp(column, np.greater_equal)(value)
+    return _cmp(column, np.greater_equal, lambda v: ColumnBounds(lo=v))(value)
 
 
 def lt(column: str, value) -> Predicate:
-    return _cmp(column, np.less)(value)
+    return _cmp(column, np.less,
+                lambda v: ColumnBounds(hi=v, hi_strict=True))(value)
 
 
 def le(column: str, value) -> Predicate:
-    return _cmp(column, np.less_equal)(value)
+    return _cmp(column, np.less_equal, lambda v: ColumnBounds(hi=v))(value)
 
 
 def isin(column: str, values) -> Predicate:
     values = set(values)
+    test = np.asarray(sorted(values, key=repr))
 
     def fn(frame, prefix):
         col = _col(frame, prefix, column)
-        return np.asarray([x in values for x in col.tolist()])
+        if col.dtype != object and test.dtype.kind in "biuf":
+            # vectorized membership — only when the candidates are uniformly
+            # numeric (a mixed list coerces to strings and would mismatch)
+            return np.isin(col, test)
+        return np.asarray([x in values for x in col.tolist()], dtype=bool)
 
-    return Predicate(fn, (column,))
+    return Predicate(fn, (column,),
+                     bounds={column: ColumnBounds(values=frozenset(values))})
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +208,41 @@ class QueryResult:
     accumulators: dict[str, np.ndarray]
     n_edges_scanned: int
     frames: list
+    # zone-map pruning counters accumulated over every read the query issued
+    # (seed VertexMap + all hops); see plan.new_pruning_counters for keys
+    pruning: dict = dataclasses.field(default_factory=new_pruning_counters)
+
+
+def plan_hop(hop: "_HopBlock") -> ScanPlan:
+    """Compile one hop block into a staged :class:`ScanPlan`.
+
+    The WHERE is already split per prefix at the builder level; planning
+    stages the columns (predicate columns materialize in their stage,
+    ACCUM-only columns for final survivors) and compiles each conjunct's
+    zone-map bounds.
+    """
+    e_cols = list(dict.fromkeys(hop.edge_where.columns)) if hop.edge_where else []
+    u_cols = list(dict.fromkeys(hop.source_where.columns)) if hop.source_where else []
+    v_cols = list(dict.fromkeys(hop.target_where.columns)) if hop.target_where else []
+    acc: dict[str, list[str]] = {"e": [], "u": [], "v": []}
+    if hop.accum is not None and isinstance(hop.accum.value, str):
+        pfx, col = hop.accum.value.split(".", 1)
+        if col not in {"e": e_cols, "u": u_cols, "v": v_cols}[pfx]:
+            acc[pfx].append(col)
+    return ScanPlan(
+        edge_pred=hop.edge_where,
+        source_pred=hop.source_where,
+        target_pred=hop.target_where,
+        edge_columns=tuple(sorted(e_cols)),
+        u_columns=tuple(sorted(u_cols)),
+        v_columns=tuple(sorted(v_cols)),
+        accum_edge_columns=tuple(acc["e"]),
+        accum_u_columns=tuple(acc["u"]),
+        accum_v_columns=tuple(acc["v"]),
+        edge_bounds=hop.edge_where.bounds() if hop.edge_where else {},
+        u_bounds=hop.source_where.bounds() if hop.source_where else {},
+        v_bounds=hop.target_where.bounds() if hop.target_where else {},
+    )
 
 
 class Query:
@@ -197,11 +275,16 @@ class Query:
 
     # -- execution ----------------------------------------------------------------
 
-    def run(self) -> QueryResult:
+    def run(self, pushdown: bool = True) -> QueryResult:
+        """Execute the query.  ``pushdown=False`` forces the legacy
+        full-materialization scan path (no staging, no zone-map pruning) —
+        the baseline the pushdown parity tests and benchmarks compare
+        against.  Both paths return bit-identical results."""
         eng = self.engine
         seed = self._seed
         if seed is None:
             raise ValueError("query has no seed block")
+        counters = new_pruning_counters()
 
         if seed.raw_ids is not None:
             vset = eng.vset_from_raw_ids(seed.vertex_type, seed.raw_ids)
@@ -212,6 +295,8 @@ class Query:
                 vset,
                 columns=list(dict.fromkeys(seed.where.columns)),
                 filter_fn=lambda fr: seed.where.evaluate(fr, ""),
+                bounds=seed.where.bounds() if pushdown else None,
+                counters=counters,
             )
 
         accum_out: dict[str, np.ndarray] = {}
@@ -222,35 +307,42 @@ class Query:
             u_type = et.src_type if hop.direction == "out" else et.dst_type
             v_type = et.dst_type if hop.direction == "out" else et.src_type
 
-            edge_cols, u_cols, v_cols = set(), set(), set()
-            if hop.edge_where is not None:
-                edge_cols.update(hop.edge_where.columns)
-            if hop.source_where is not None:
-                u_cols.update(hop.source_where.columns)
-            if hop.target_where is not None:
-                v_cols.update(hop.target_where.columns)
-            if hop.accum is not None and isinstance(hop.accum.value, str):
-                pfx, col = hop.accum.value.split(".", 1)
-                {"e": edge_cols, "u": u_cols, "v": v_cols}[pfx].add(col)
-
-            def _filter(frame, hop=hop):
-                n = len(frame["u"])
-                keep = np.ones(n, dtype=bool)
+            if pushdown:
+                frame = eng.edge_scan(
+                    vset, hop.edge_type, hop.direction,
+                    plan=plan_hop(hop), counters=counters,
+                )
+            else:
+                edge_cols, u_cols, v_cols = set(), set(), set()
                 if hop.edge_where is not None:
-                    keep &= hop.edge_where.evaluate(frame, "e")
+                    edge_cols.update(hop.edge_where.columns)
                 if hop.source_where is not None:
-                    keep &= hop.source_where.evaluate(frame, "u")
+                    u_cols.update(hop.source_where.columns)
                 if hop.target_where is not None:
-                    keep &= hop.target_where.evaluate(frame, "v")
-                return keep
+                    v_cols.update(hop.target_where.columns)
+                if hop.accum is not None and isinstance(hop.accum.value, str):
+                    pfx, col = hop.accum.value.split(".", 1)
+                    {"e": edge_cols, "u": u_cols, "v": v_cols}[pfx].add(col)
 
-            frame = eng.edge_scan(
-                vset, hop.edge_type, hop.direction,
-                edge_columns=sorted(edge_cols),
-                u_columns=sorted(u_cols),
-                v_columns=sorted(v_cols),
-                edge_filter=_filter,
-            )
+                def _filter(frame, hop=hop):
+                    n = len(frame["u"])
+                    keep = np.ones(n, dtype=bool)
+                    if hop.edge_where is not None:
+                        keep &= hop.edge_where.evaluate(frame, "e")
+                    if hop.source_where is not None:
+                        keep &= hop.source_where.evaluate(frame, "u")
+                    if hop.target_where is not None:
+                        keep &= hop.target_where.evaluate(frame, "v")
+                    return keep
+
+                frame = eng.edge_scan(
+                    vset, hop.edge_type, hop.direction,
+                    edge_columns=sorted(edge_cols),
+                    u_columns=sorted(u_cols),
+                    v_columns=sorted(v_cols),
+                    edge_filter=_filter,
+                    counters=counters,
+                )
             n_scanned += len(frame)
             frames.append(frame)
 
@@ -274,5 +366,6 @@ class Query:
             vset = frame.v_set(n_v)
 
         return QueryResult(
-            vset=vset, accumulators=accum_out, n_edges_scanned=n_scanned, frames=frames
+            vset=vset, accumulators=accum_out, n_edges_scanned=n_scanned,
+            frames=frames, pruning=counters,
         )

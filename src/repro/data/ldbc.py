@@ -113,9 +113,15 @@ def generate_ldbc(
     )
 
     comment_ids = np.arange(1, n_comments + 1, dtype=np.int64) * 10 + 3
+    # comments are created over time, so creationDate trends with the id (row
+    # order) like a real event table; this row-order clustering is what makes
+    # per-chunk Min/Max statistics selective for date predicates (zone-map
+    # pruning, DESIGN.md §4) — jitter keeps neighboring chunks overlapping
+    date_base = np.linspace(20080101, 20221231, n_comments)
+    date_jitter = rng.integers(-5000, 5001, size=n_comments)
     comments = {
         "id": comment_ids,
-        "creationDate": rng.integers(20080101, 20221231, size=n_comments).astype(np.int64),
+        "creationDate": np.clip(date_base + date_jitter, 20080101, 20221231).astype(np.int64),
         "length": rng.integers(1, 2000, size=n_comments).astype(np.int64),
         "browserUsed": np.array(rng.choice(_BROWSERS, size=n_comments), dtype=object),
     }

@@ -168,6 +168,48 @@ def test_manager_pinned_units_never_evicted(store):
     mgr.unpin(pinned)
 
 
+def test_disk_bytes_stable_across_evict_readmit_cycles(store):
+    # regression: get_unit used to pop a spilled decoded entry without
+    # decrementing _disk_bytes or dropping its _disk_order entry, so the
+    # accounting drifted upward every evict/re-admit cycle and eventually
+    # forced premature disk trims
+    meta = _file_with_columns(store, "t/f0.col", n=4096, n_cols=6)
+    mgr = CacheManager(store, CacheConfig(memory_budget_bytes=2 * (4096 * 8 + 4200)))
+    refs = [ChunkRef("t/f0.col", f"c{i}", 0) for i in range(6)]
+
+    def cycle():
+        for r in refs:
+            mgr.get_unit(r, meta, "vertex").read_all()
+
+    for cyc in range(6):
+        cycle()
+        raw_bytes = sum(len(b) for b in mgr._disk_raw.values())
+        decoded_bytes = sum(e[2] for e in mgr._disk_decoded.values())
+        # accounting always matches what actually lives on the tier — the
+        # old code drifted upward here on every evict/re-admit cycle
+        assert mgr._disk_bytes == raw_bytes + decoded_bytes, cyc
+        assert len(mgr._disk_decoded) <= len(refs)
+        # order list carries no stale decoded entries
+        live = {"D:" + k for k in mgr._disk_decoded}
+        assert {k for k in mgr._disk_order if k.startswith("D:")} == live
+    assert mgr.stats["vertex_flushes"] > 0
+    # bounded by 6 raw chunks + 6 fully-decoded arrays, with headroom
+    assert mgr._disk_bytes <= 6 * (4096 * 8 + 4300) * 2
+
+
+def test_disk_put_decoded_duplicate_key_no_double_count(store):
+    meta = _file_with_columns(store, "t/f0.col", n=256)
+    mgr = CacheManager(store)
+    u = mgr.get_unit(ChunkRef("t/f0.col", "c0", 0), meta, "vertex")
+    u.read_all()
+    values, upto = u.export_decoded()
+    mgr._disk_put_decoded("k", values, upto)
+    once = mgr._disk_bytes
+    mgr._disk_put_decoded("k", values, upto)
+    assert mgr._disk_bytes == once
+    assert mgr._disk_order.count("D:k") == 1
+
+
 def test_manager_drop_memory_keeps_disk(store):
     meta = _file_with_columns(store, "t/f0.col")
     mgr = CacheManager(store)

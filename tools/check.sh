@@ -12,6 +12,14 @@ from benchmarks.bench_edgelist_vs_csr import run
 run(quick=True)
 PY
 
+echo "== query pushdown selectivity sweep (quick mode) =="
+# writes the BENCH_queries.json snapshot (chunks skipped, bytes decoded,
+# wall time) and asserts pruned results stay bit-identical to the baseline
+python - <<'PY'
+from benchmarks.bench_queries import run
+run(quick=True)
+PY
+
 echo "== tier-1 tests (slow SPMD dry-runs deselected) =="
 # test_archs_smoke / test_train_substrate and one misc test fail in this
 # container for environment reasons (installed jax predates APIs the model
