@@ -2,13 +2,20 @@
 vs the in-situ naive baseline (PuppyGraph-style: no decoded cache, no
 prefetch, no materialized topology).
 
-Plus the predicate-pushdown selectivity sweep (DESIGN.md §4): one selective
-hop run at several edge-predicate selectivities, pushdown on vs off, with
-bit-identical-result verification and the zone-map pruning counters
-(chunks skipped, rows/bytes decoded).  The sweep writes a
-``BENCH_queries.json`` snapshot so the perf trajectory is tracked PR over PR
-(override the path with ``REPRO_BENCH_SNAPSHOT``); ``run(quick=True)`` is
-the CI gate mode — sweep only, small scale.
+Plus two sweeps snapshotted into ``BENCH_queries.json`` (override the path
+with ``REPRO_BENCH_SNAPSHOT``) so the perf trajectory is tracked PR over PR:
+
+- the predicate-pushdown selectivity sweep (DESIGN.md §4): one selective hop
+  run at several edge-predicate selectivities, pushdown on vs off, with
+  bit-identical-result verification and the zone-map pruning counters
+  (chunks skipped, rows/bytes decoded);
+- the chunk-pipeline sweep (DESIGN.md §5): the same hop under the *enabled*
+  object-store latency model (``latency_scale>0``), sequential vs pipelined
+  read path, reporting wall times, speedup and overlap efficiency (fraction
+  of the I/O pool's worker-seconds spent inside modeled store waits) — with
+  bit-identical-result verification and a floor assertion on the speedup.
+
+``run(quick=True)`` is the CI gate mode — sweeps only, small scale.
 """
 
 from __future__ import annotations
@@ -127,22 +134,126 @@ def selectivity_sweep(sf: float = 0.02, row_group_rows: int = 512) -> dict:
     assert all(r["rows_decoded"] < r["rows_decoded_baseline"] for r in selective), rows
     eng.close()
 
-    snap = {
+    return {
         "bench": "queries_selectivity_sweep",
         "sf": sf,
         "row_group_rows": row_group_rows,
         "wall_s": time.perf_counter() - t0,
         "rows": rows,
     }
+
+
+def pipeline_sweep(
+    sf: float = 0.02,
+    row_group_rows: int = 512,
+    latency_scale: float = 1.0,
+    keep_frac: float = 0.1,
+    min_speedup: float = 3.0,
+) -> dict:
+    """Sequential-vs-pipelined read path under the modeled store latency.
+
+    One 10%-selectivity Comment -[HasCreator]-> Person hop, run cold twice:
+    ``pipeline=False`` fetches+decodes each surviving chunk serially on the
+    caller thread (every chunk pays the full modeled first-byte latency);
+    ``pipeline=True`` batches the gather's fetch plan through the engine's
+    shared IOPool (DESIGN.md §5).  Prefetch is disabled in both arms so the
+    measurement isolates the read-path pipelining itself.  Results must be
+    bit-identical; the pipelined arm must beat the sequential arm by
+    ``min_speedup`` (the ISSUE 3 acceptance floor).
+    """
+    store = fresh_store(f"queries_pipe_{sf}_{row_group_rows}")
+    generate_ldbc(store, scale_factor=sf, n_files=2,
+                  row_group_rows=row_group_rows)
+    # 16 I/O threads: the modeled store charges first-byte latency per
+    # request (it overlaps, like real S3) and divides bandwidth statically,
+    # so more streams legitimately hide more latency
+    eng = make_engine(store, ldbc_graph_schema(), prefetch=False,
+                      n_io_threads=16)
+    eng.startup()
+    n_io_threads = eng.pool.n_threads
+    t0 = time.perf_counter()
+
+    comments = eng.all_vertices("Comment")
+    dates = eng.read_vertex_column("Comment", comments.ids(), "creationDate")
+    thr = float(np.quantile(dates, 1.0 - keep_frac))
+    q = (Query(eng)
+         .vertices("Comment")
+         .hop("HasCreator", direction="out",
+              edge_where=gt("creationDate", thr)))
+
+    # startup/generation ran latency-free; queries now pay the modeled store
+    store.config.latency_scale = latency_scale
+
+    def arm(pipelined: bool, repeats: int = 3):
+        # best-of-N *cold* runs: the pipelined arm's wall time is sensitive
+        # to thread wake-up jitter (its whole point is concurrent sleeps in
+        # the latency model), and min() is the jitter-robust estimator
+        best = float("inf")
+        res = io_s = None
+        for _ in range(repeats):
+            eng.cache.drop_all()
+            store.reset_counters()
+            r, wall = timed(q.run, pipeline=pipelined)
+            if wall < best:
+                best, res, io_s = wall, r, store.counters["simulated_wait_s"]
+        return res, best, io_s
+
+    res_seq, t_seq, io_seq = arm(False)
+    res_pipe, t_pipe, io_pipe = arm(True)
+    store.config.latency_scale = 0.0
+    _assert_parity(res_seq, res_pipe)
+
+    speedup = t_seq / t_pipe
+    # fraction of the pool's worker-seconds spent inside modeled store waits
+    # during the pipelined run: 1.0 would mean every I/O thread was waiting
+    # on the store for the whole query — perfect fetch/decode/compute overlap
+    overlap_efficiency = io_pipe / (n_io_threads * t_pipe)
+    row = {
+        "keep_frac": keep_frac,
+        "latency_scale": latency_scale,
+        "n_io_threads": n_io_threads,
+        "chunks_read": res_pipe.pruning["chunks_read"],
+        "sequential_s": t_seq,
+        "pipelined_s": t_pipe,
+        "speedup": speedup,
+        "io_wait_sequential_s": io_seq,
+        "io_wait_pipelined_s": io_pipe,
+        "overlap_efficiency": overlap_efficiency,
+    }
+    emit("pipe_sequential_ms", t_seq * 1e3,
+         f"pipelined={t_pipe*1e3:.0f}ms;speedup={speedup:.1f}x;"
+         f"overlap_eff={overlap_efficiency:.2f};"
+         f"chunks={row['chunks_read']}")
+    assert speedup >= min_speedup, (
+        f"pipelined read path only {speedup:.2f}x over sequential "
+        f"(floor {min_speedup}x): {row}")
+    eng.close()
+
+    return {
+        "bench": "queries_pipeline_sweep",
+        "sf": sf,
+        "row_group_rows": row_group_rows,
+        "wall_s": time.perf_counter() - t0,
+        "rows": [row],
+    }
+
+
+def _write_snapshot(snap: dict) -> None:
     with open(SNAPSHOT_PATH, "w") as f:
         json.dump(snap, f, indent=2)
     emit("sweep_snapshot", 0.0, SNAPSHOT_PATH)
-    return snap
 
 
 def run(sf: float = 0.02, quick: bool = False) -> None:
+    snap = {}
     if quick:
-        selectivity_sweep(sf=0.004)
-        return
-    _fig10(sf)
-    selectivity_sweep(sf=sf)
+        snap["selectivity_sweep"] = selectivity_sweep(sf=0.004)
+        snap["pipeline_sweep"] = pipeline_sweep()
+    else:
+        _fig10(sf)
+        snap["selectivity_sweep"] = selectivity_sweep(sf=sf)
+        # the pipeline sweep runs at its tuned operating point regardless of
+        # ``sf``: larger lakes grow the CPU share (gather + predicate eval)
+        # faster than the I/O share, which measures overlap less cleanly
+        snap["pipeline_sweep"] = pipeline_sweep()
+    _write_snapshot(snap)

@@ -60,11 +60,13 @@ def graph500_lake(name: str, scale: int, latency_scale: float = 0.0):
 
 
 def make_engine(store, schema, naive: bool = False, prefetch: bool = True,
-                materialize: bool = True, memory_mb: int = 256) -> GraphLakeEngine:
+                materialize: bool = True, memory_mb: int = 256,
+                n_io_threads: int = 8) -> GraphLakeEngine:
     return GraphLakeEngine(
         store, schema,
         cache_config=CacheConfig(
             memory_budget_bytes=memory_mb * 1024 * 1024, naive_mode=naive),
+        n_io_threads=n_io_threads,
         enable_prefetch=prefetch,
         materialize_topology=materialize,
     )

@@ -11,6 +11,35 @@ policy is the paper's priority-aware sweep clock (PostgreSQL-style):
   later re-admission skips re-decoding,
 - disk-tier entries are deleted outright when the disk budget is exceeded
   (never written back to the data lake — §5.2).
+
+**Concurrency (DESIGN.md §5).**  The manager is the shared hot path of the
+pipelined read pipeline and of concurrent serving queries, so its internals
+are built for parallel callers:
+
+- the hit path is O(1) under one short critical section (dict probe + clock
+  count reset);
+- chunk loading is **single-flight**: a miss registers a per-key loading
+  event and performs the lake fetch *outside* the global lock, concurrent
+  requests for the same chunk wait on the event instead of fetching again —
+  the structural "never fetch the same chunk twice" guarantee the per-gather
+  dedup in ``core/read_pipeline.py`` builds on;
+- byte accounting is **incremental**: admission charges ``unit.nbytes()``
+  once, decoded growth is reported as deltas through :meth:`note_growth`
+  (units track their ``accounted_nbytes`` watermark), and the eviction sweep
+  consults the O(1) ``_mem_bytes`` counter instead of re-summing every unit
+  per iteration (the old sweep was O(n²));
+- the clock ring and the disk-tier order are ordered dicts (rotate =
+  ``popitem(last=False)`` + reinsert; arbitrary removal = ``del``) — no
+  ``list.remove`` O(n) scans;
+- decode happens under **per-unit locks**, never under the global lock.
+  Deadlock-freedom argument: a unit-lock holder *may* block on the global
+  lock (``on_growth`` fires mid-decode and ``note_growth`` takes it), but a
+  global-lock holder never blocks on a unit lock — the eviction sweep's
+  unit-lock probe is strictly non-blocking (``acquire(blocking=False)``,
+  skipping units mid-decode).  Blocking edges therefore only ever point
+  unit-lock → global-lock; a one-directional blocking order cannot cycle.
+  Never add a blocking ``unit.lock.acquire()`` anywhere the global lock is
+  held — that creates the cycle this design rules out.
 """
 
 from __future__ import annotations
@@ -19,7 +48,8 @@ import dataclasses
 import os
 import pickle
 import threading
-from typing import Optional
+from collections import OrderedDict
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -42,21 +72,22 @@ class CacheManager:
         self.store = store
         self.config = config or CacheConfig()
         self._units: dict[str, object] = {}       # cache key -> unit (memory tier)
-        self._clock_keys: list[str] = []           # circular buffer of keys
-        self._clock_counts: dict[str, int] = {}
-        self._hand = 0
+        # clock ring: key -> usage count, rotated FIFO (second-chance clock)
+        self._clock: OrderedDict[str, int] = OrderedDict()
         self._mem_bytes = 0
         self._lock = threading.RLock()
+        self._loading: dict[str, threading.Event] = {}  # single-flight admissions
         # disk tier: raw chunks and spilled decoded arrays
         self._disk_raw: dict[str, bytes] = {}
-        self._disk_decoded: dict[str, tuple[np.ndarray, int]] = {}
+        self._disk_decoded: dict[str, tuple[np.ndarray, int, int]] = {}
         self._disk_bytes = 0
-        self._disk_order: list[str] = []
+        self._disk_order: OrderedDict[str, None] = OrderedDict()
         if self.config.disk_dir:
             os.makedirs(self.config.disk_dir, exist_ok=True)
         self.stats = {
             "hits": 0, "misses": 0, "evictions": 0,
             "vertex_flushes": 0, "disk_hits": 0, "lake_fetches": 0,
+            "load_waits": 0, "sweep_steps": 0,
         }
 
     # ------------------------------------------------------------------ fetch
@@ -68,43 +99,99 @@ class CacheManager:
         kind: str,
         pin: bool = False,
     ):
-        """Return the cache unit for a chunk, admitting it if necessary."""
+        """Return the cache unit for a chunk, admitting it if necessary.
+
+        Hits resolve in one O(1) critical section.  Misses are single-flight:
+        the winning thread fetches and decodes-restores *outside* the global
+        lock while racing threads wait on the per-key loading event — the
+        modeled ~30 ms lake latency is never paid under the lock and never
+        paid twice for one chunk.
+        """
         key = ref.cache_key()
-        with self._lock:
-            unit = self._units.get(key)
-            if unit is not None:
-                self.stats["hits"] += 1
-                self._clock_counts[key] = unit.priority
-                if pin:
-                    unit.pinned += 1
-                return unit
-            self.stats["misses"] += 1
+        while True:
+            with self._lock:
+                unit = self._units.get(key)
+                if unit is not None:
+                    self.stats["hits"] += 1
+                    self._clock[key] = unit.priority
+                    if pin:
+                        unit.pinned += 1
+                    return unit
+                event = self._loading.get(key)
+                if event is None:
+                    event = threading.Event()
+                    self._loading[key] = event
+                    self.stats["misses"] += 1
+                    break
+                self.stats["load_waits"] += 1
+            event.wait()  # another thread is admitting this chunk
+
+        try:
             raw = self._load_raw(ref, meta)
             chunk_meta = meta.chunk(ref.column, ref.row_group)
             if self.config.naive_mode:
                 unit = NaiveChunkReader(ref, raw, chunk_meta.n_rows)
             elif kind == "vertex":
                 unit = VertexCacheUnit(ref, raw, chunk_meta.n_rows)
-                spilled = self._disk_decoded.pop(key, None)
+                with self._lock:
+                    spilled = self._disk_decoded.pop(key, None)
+                    if spilled is not None:
+                        values, upto, nbytes = spilled
+                        # reclaim the disk-tier budget the spilled entry held;
+                        # leaving the bytes/order entry behind makes
+                        # _disk_bytes drift upward across evict/re-admit
+                        # cycles and triggers premature trims
+                        self._disk_bytes -= nbytes
+                        self._disk_order.pop("D:" + key, None)
+                        self.stats["disk_hits"] += 1
                 if spilled is not None:
-                    values, upto, nbytes = spilled
                     unit.import_decoded(values, upto)
-                    # reclaim the disk-tier budget the spilled entry held;
-                    # leaving the bytes/order entry behind makes _disk_bytes
-                    # drift upward across evict/re-admit cycles and triggers
-                    # premature trims
-                    self._disk_bytes -= nbytes
-                    try:
-                        self._disk_order.remove("D:" + key)
-                    except ValueError:
-                        pass
-                    self.stats["disk_hits"] += 1
             else:
-                unit = EdgeCacheUnit(ref, raw, chunk_meta.n_rows, window=self.config.edge_window)
-            self._admit(key, unit)
-            if pin:
-                unit.pinned += 1
+                unit = EdgeCacheUnit(ref, raw, chunk_meta.n_rows,
+                                     window=self.config.edge_window)
+            with self._lock:
+                self._admit(key, unit)
+                if pin:
+                    unit.pinned += 1
             return unit
+        finally:
+            with self._lock:
+                self._loading.pop(key, None)
+            event.set()
+
+    def get_units_batch(
+        self,
+        requests: Sequence[tuple[ChunkRef, ColumnFileMeta, str]],
+        pool=None,
+    ) -> dict[str, object]:
+        """Admit a batch of chunks, in parallel when a pool is given.
+
+        Returns ``cache key -> unit`` with duplicate refs deduplicated —
+        the synchronous bulk-admission entry (poolless prefetching, warm-up
+        loads, tests).  The read pipeline's executor streams per-chunk jobs
+        instead, to overlap each chunk's decode with later fetches; both
+        paths meet in single-flight ``get_unit`` admission, so batches
+        racing the pipeline (or each other) still fetch each chunk once.
+        Call it from a caller thread, not from a pool worker — with
+        ``pool`` given it blocks on futures of that same bounded pool.
+        """
+        dedup: dict[str, tuple[ChunkRef, ColumnFileMeta, str]] = {}
+        for ref, meta, kind in requests:
+            dedup.setdefault(ref.cache_key(), (ref, meta, kind))
+        if pool is None:
+            return {k: self.get_unit(*req) for k, req in dedup.items()}
+        futures = {k: pool.submit(self.get_unit, *req) for k, req in dedup.items()}
+        return {k: f.result() for k, f in futures.items()}
+
+    def read_unit(self, unit, rows: np.ndarray) -> tuple[np.ndarray, int]:
+        """Decode-safe read: per-unit lock around ``read``.  Growth is
+        accounted by the unit's ``on_growth`` callback the moment the decode
+        happens.  Returns ``(values, decode_ops delta)``."""
+        with unit.lock:
+            before = unit.decode_ops
+            vals = unit.read(rows)
+            delta = unit.decode_ops - before
+        return vals, delta
 
     def unpin(self, unit) -> None:
         with self._lock:
@@ -112,52 +199,83 @@ class CacheManager:
 
     def _load_raw(self, ref: ChunkRef, meta: ColumnFileMeta) -> bytes:
         key = ref.cache_key()
-        raw = self._disk_raw.get(key)
-        if raw is not None:
-            self.stats["disk_hits"] += 1
-            return raw
+        with self._lock:
+            raw = self._disk_raw.get(key)
+            if raw is not None:
+                self.stats["disk_hits"] += 1
+                return raw
         chunk = meta.chunk(ref.column, ref.row_group)
         raw = self.store.get(meta.key, offset=chunk.offset, length=chunk.length)
-        self.stats["lake_fetches"] += 1
-        self._disk_put_raw(key, raw)
+        with self._lock:
+            self.stats["lake_fetches"] += 1
+            self._disk_put_raw(key, raw)
         return raw
 
     # ----------------------------------------------------------------- memory tier
 
     def _admit(self, key: str, unit) -> None:
+        # caller holds self._lock
+        unit.accounted_nbytes = unit.nbytes()
+        unit.on_growth = self.note_growth
         self._units[key] = unit
-        self._clock_keys.append(key)
-        self._clock_counts[key] = unit.priority
-        self._mem_bytes += unit.nbytes()
+        # new admissions enter at the ring's front — the next sweep position —
+        # so a fresh low-priority unit is inspected before long-resident ones
+        # whose counts earlier sweeps already ground down (hand continuation,
+        # same placement the list-based clock converged to)
+        self._clock[key] = unit.priority
+        self._clock.move_to_end(key, last=False)
+        self._mem_bytes += unit.accounted_nbytes
         self._maybe_evict()
 
+    def note_growth(self, unit) -> None:
+        """Charge a unit's decoded-state growth against the memory budget.
+
+        Units report growth as deltas against their ``accounted_nbytes``
+        watermark — the sweep never re-sums live units.  Growth on a unit
+        that was already evicted (its holder keeps reading the object) is
+        not charged: it left the tier with its watermark's worth of bytes.
+        """
+        with self._lock:
+            nbytes = unit.nbytes()
+            delta = nbytes - unit.accounted_nbytes
+            if delta == 0:
+                return
+            unit.accounted_nbytes = nbytes
+            if self._units.get(unit.ref.cache_key()) is unit:
+                self._mem_bytes += delta
+                self._maybe_evict()
+
     def _maybe_evict(self) -> None:
-        # refresh byte accounting lazily: decoded arrays grow after admission
+        # caller holds self._lock; _mem_bytes is maintained incrementally so
+        # each sweep step is O(1) — no per-iteration re-sum of unit sizes
         budget = self.config.memory_budget_bytes
-        if self.mem_bytes() <= budget:
+        if self._mem_bytes <= budget:
             return
         sweeps = 0
-        max_sweeps = 8 * max(1, len(self._clock_keys))
-        while self.mem_bytes() > budget and self._clock_keys and sweeps < max_sweeps:
+        max_sweeps = 8 * max(1, len(self._clock))
+        while self._mem_bytes > budget and self._clock and sweeps < max_sweeps:
             sweeps += 1
-            self._hand %= len(self._clock_keys)
-            key = self._clock_keys[self._hand]
+            self.stats["sweep_steps"] += 1
+            key, count = self._clock.popitem(last=False)
             unit = self._units[key]
-            count = self._clock_counts.get(key, 0)
             if unit.pinned > 0:
-                self._hand += 1
+                self._clock[key] = count        # second chance, hand advances
                 continue
             if count > 0:
-                self._clock_counts[key] = count - 1
-                self._hand += 1
+                self._clock[key] = count - 1
                 continue
-            self._evict(key)
-            # hand stays: list shrank at this position
+            if not unit.lock.acquire(blocking=False):
+                self._clock[key] = count        # mid-decode: skip this round
+                continue
+            try:
+                self._evict(key, unit)
+            finally:
+                unit.lock.release()
 
-    def _evict(self, key: str) -> None:
-        unit = self._units.pop(key)
-        self._clock_keys.remove(key)
-        self._clock_counts.pop(key, None)
+    def _evict(self, key: str, unit) -> None:
+        # caller holds self._lock and unit.lock (clock entry already popped)
+        self._units.pop(key)
+        self._mem_bytes -= unit.accounted_nbytes
         self.stats["evictions"] += 1
         if unit.kind == "vertex":
             values, upto = unit.export_decoded()
@@ -167,7 +285,14 @@ class CacheManager:
         # edge units: discard (raw chunk already lives on the disk tier)
 
     def mem_bytes(self) -> int:
-        return sum(u.nbytes() for u in self._units.values())
+        """Accounted memory-tier bytes — O(1), maintained incrementally."""
+        return self._mem_bytes
+
+    def mem_bytes_recomputed(self) -> int:
+        """Ground truth: re-sum every live unit (tests assert it matches the
+        incremental counter after concurrent storms)."""
+        with self._lock:
+            return sum(u.nbytes() for u in self._units.values())
 
     # ----------------------------------------------------------------- disk tier
 
@@ -176,7 +301,7 @@ class CacheManager:
             return
         self._disk_raw[key] = raw
         self._disk_bytes += len(raw)
-        self._disk_order.append(key)
+        self._disk_order[key] = None
         self._disk_trim()
 
     def _disk_put_decoded(self, key: str, values: np.ndarray, upto: int) -> None:
@@ -185,19 +310,16 @@ class CacheManager:
             # duplicate admission (evict raced with a stale entry): replace
             # the entry instead of double counting its bytes
             self._disk_bytes -= old[2]
-            try:
-                self._disk_order.remove("D:" + key)
-            except ValueError:
-                pass
+            self._disk_order.pop("D:" + key, None)
         nbytes = values.nbytes if values.dtype != object else len(pickle.dumps(values[:upto]))
         self._disk_decoded[key] = (values, upto, nbytes)
         self._disk_bytes += nbytes
-        self._disk_order.append("D:" + key)
+        self._disk_order["D:" + key] = None
         self._disk_trim()
 
     def _disk_trim(self) -> None:
         while self._disk_bytes > self.config.disk_budget_bytes and self._disk_order:
-            victim = self._disk_order.pop(0)
+            victim, _ = self._disk_order.popitem(last=False)
             if victim.startswith("D:"):
                 entry = self._disk_decoded.pop(victim[2:], None)
                 if entry is not None:
@@ -212,9 +334,7 @@ class CacheManager:
         """Simulate a cold restart: clear the memory tier, keep disk tier."""
         with self._lock:
             self._units.clear()
-            self._clock_keys.clear()
-            self._clock_counts.clear()
-            self._hand = 0
+            self._clock.clear()
             self._mem_bytes = 0
 
     def drop_all(self) -> None:
@@ -226,4 +346,5 @@ class CacheManager:
             self._disk_order.clear()
 
     def resident_keys(self) -> list[str]:
-        return list(self._units.keys())
+        with self._lock:
+            return list(self._units.keys())

@@ -29,7 +29,7 @@ from typing import Optional, Sequence
 
 from repro.core.cache.manager import CacheManager
 from repro.core.cache.units import ChunkRef
-from repro.core.plan import group_rejected
+from repro.core.plan import new_pruning_counters, zone_map_rejects
 from repro.core.types import VSet
 from repro.lakehouse.io_pool import IOPool
 
@@ -41,18 +41,29 @@ class Prefetcher:
         self.pool = pool
         self.stats = {"vertex_chunks": 0, "edge_chunks": 0, "pruned_portions": 0,
                       "pruned_chunks": 0}
+        # standard pruning-counter schema fed by the shared zone-map helper
+        # (plan.zone_map_rejects) — the very same test+bookkeeping the read
+        # path applies, so prefetch never fetches a chunk the read will skip
+        self.counters = new_pruning_counters()
+        self._sync_batch: list = []  # poolless mode: bulk-admitted per call
 
     def _issue(self, ref: ChunkRef, meta, kind: str) -> None:
         if self.pool is not None:
+            # fire-and-forget: units land in the memory tier ahead of the
+            # traversal's reads (which coalesce with in-flight admissions
+            # through the cache's single-flight loading)
             self.pool.submit(self.cache.get_unit, ref, meta, kind)
         else:
-            self.cache.get_unit(ref, meta, kind)
+            self._sync_batch.append((ref, meta, kind))
 
-    def _zone_map_rejects(self, meta, row_group: int, bounds, n_cols: int) -> bool:
-        """The read path's zone-map test (shared via plan.group_rejected, so
-        prefetch never fetches a chunk the read will skip) + stats."""
-        if group_rejected(meta, row_group, bounds):
-            self.stats["pruned_chunks"] += n_cols
+    def _flush_sync(self) -> None:
+        if self._sync_batch:
+            self.cache.get_units_batch(self._sync_batch)
+            self._sync_batch = []
+
+    def _rejected(self, meta, row_group: int, bounds, columns) -> bool:
+        if zone_map_rejects(meta, row_group, bounds, columns, 0, self.counters):
+            self.stats["pruned_chunks"] = self.counters["chunks_skipped"]
             return True
         return False
 
@@ -74,11 +85,12 @@ class Prefetcher:
                 g_hi = g_lo + g.n_rows - 1
                 if g_hi < lo or g_lo > hi:
                     continue
-                if self._zone_map_rejects(meta, g.index, bounds, len(columns)):
+                if self._rejected(meta, g.index, bounds, columns):
                     continue
                 for col in columns:
                     self._issue(ChunkRef(finfo.key, col, g.index), meta, "vertex")
                     issued += 1
+        self._flush_sync()
         self.stats["vertex_chunks"] += issued
         return issued
 
@@ -102,10 +114,11 @@ class Prefetcher:
             live = el.portions_overlapping(lo, hi, direction=direction)
             self.stats["pruned_portions"] += len(el.portions) - len(live)
             for p in live:
-                if self._zone_map_rejects(meta, p.row_group, bounds, len(columns)):
+                if self._rejected(meta, p.row_group, bounds, columns):
                     continue
                 for col in columns:
                     self._issue(ChunkRef(el.file_key, col, p.row_group), meta, "edge")
                     issued += 1
+        self._flush_sync()
         self.stats["edge_chunks"] += issued
         return issued

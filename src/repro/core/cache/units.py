@@ -20,11 +20,27 @@ matching the paper exactly:
 
 Decode-cost accounting (``decode_ops``) lets benchmarks reproduce Fig. 16
 (graph-aware units vs naive re-decoding).
+
+**Concurrency contract (DESIGN.md §5).**  Every unit carries its own
+``lock``; callers that may run concurrently (the pipelined read path, the
+prefetcher's I/O threads, concurrent serving queries) hold it around
+``read``/``read_all`` so decode state mutates under exactly one thread.
+A unit-lock holder may block on the manager's global lock (``on_growth``
+fires mid-decode), but the manager never *blocks* on a unit lock while
+holding its global lock — its eviction probe is non-blocking — so blocking
+edges only point unit-lock → global-lock and cannot cycle.
+``accounted_nbytes`` is the manager's
+incremental byte-accounting watermark: the last ``nbytes()`` the manager has
+charged against its memory budget.  Units report decoded-growth deltas
+upward through the ``on_growth`` callback (installed at admission, wired to
+``CacheManager.note_growth``) the moment their decoded state changes size —
+the manager never re-sums live units to learn their footprint.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -58,6 +74,9 @@ class VertexCacheUnit:
         self._decoded_upto = 0
         self.decode_ops = 0
         self.pinned = 0
+        self.lock = threading.Lock()
+        self.accounted_nbytes = 0
+        self.on_growth = None
 
     # -- decoded-state management ------------------------------------------------
 
@@ -79,6 +98,8 @@ class VertexCacheUnit:
         self._values[self._decoded_upto: upto] = decoded[self._decoded_upto: upto]
         self.decode_ops += upto - self._decoded_upto
         self._decoded_upto = upto
+        if self.on_growth is not None:
+            self.on_growth(self)
 
     @property
     def decoded_prefix(self) -> int:
@@ -133,6 +154,9 @@ class EdgeCacheUnit:
         self._buf_start = 0
         self.decode_ops = 0
         self.pinned = 0
+        self.lock = threading.Lock()
+        self.accounted_nbytes = 0
+        self.on_growth = None
 
     def _advance(self, start: int, stop: int) -> None:
         stop = min(max(stop, start + self.window), self.n_rows)
@@ -143,6 +167,8 @@ class EdgeCacheUnit:
         self._buf = decoded[start:stop]
         self._buf_start = start
         self.decode_ops += stop - start
+        if self.on_growth is not None:
+            self.on_growth(self)
 
     def read(self, row_indices: np.ndarray) -> np.ndarray:
         """Batch row-level reads; indices are typically ascending during scans."""
@@ -179,6 +205,9 @@ class NaiveChunkReader:
         self.n_rows = n_rows
         self.decode_ops = 0
         self.pinned = 0
+        self.lock = threading.Lock()
+        self.accounted_nbytes = 0
+        self.on_growth = None  # naive readers retain nothing: never fires
 
     def read(self, row_indices: np.ndarray) -> np.ndarray:
         rows = np.asarray(row_indices, dtype=np.int64)

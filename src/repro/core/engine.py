@@ -21,6 +21,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro import perf_flags
 from repro.core.accumulators import Accumulators, AccumSpec
 from repro.core.cache.manager import CacheConfig, CacheManager
 from repro.core.cache.prefetch import Prefetcher
@@ -111,12 +112,25 @@ class GraphLakeEngine:
 
     # ------------------------------------------------------------------ primitives
 
+    def _query_pool(self, pipeline: Optional[bool]):
+        """The shared query-time IOPool, or None for the sequential path.
+
+        ``pipeline=None`` defers to the ``pipe`` perf flag; an explicit
+        True/False overrides it (benchmarks pin each arm).  Concurrent
+        queries (``serving/server.py`` workers) all flow through this one
+        pool, so the store's modeled parallel-stream budget is shared, not
+        multiplied, under load.
+        """
+        if pipeline is None:
+            pipeline = perf_flags.enabled("pipe")
+        return self.pool if pipeline else None
+
     def vertex_map(self, vset: VSet, columns=(), filter_fn=None, map_fn=None,
-                   bounds=None, counters=None):
+                   bounds=None, counters=None, pipeline: Optional[bool] = None):
         return vertex_map(
             self.topology, self.cache, vset, columns,
             filter_fn=filter_fn, map_fn=map_fn, prefetcher=self.prefetcher,
-            bounds=bounds, counters=counters,
+            bounds=bounds, counters=counters, pool=self._query_pool(pipeline),
         )
 
     def edge_scan(
@@ -131,12 +145,14 @@ class GraphLakeEngine:
         strategy: str = "auto",
         plan=None,
         counters=None,
+        pipeline: Optional[bool] = None,
     ) -> EdgeFrame:
         return edge_scan(
             self.topology, self.cache, frontier, edge_type, direction,
             edge_columns=edge_columns, u_columns=u_columns, v_columns=v_columns,
             edge_filter=edge_filter, prefetcher=self.prefetcher,
             strategy=strategy, plan=plan, counters=counters,
+            pool=self._query_pool(pipeline),
         )
 
     def read_vertex_column(self, vertex_type: str, dense_ids, column: str) -> np.ndarray:

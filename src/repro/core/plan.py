@@ -128,6 +128,31 @@ def group_rejected(meta, row_group: int, bounds: Optional[dict]) -> bool:
     return False
 
 
+def zone_map_rejects(meta, row_group: int, bounds, columns, n_req: int,
+                     counters: Optional[dict]) -> bool:
+    """:func:`group_rejected` plus the pruning-counter bookkeeping every
+    consumer of the zone-map test wants (DESIGN.md §4).
+
+    The read path (``core/primitives.py`` / ``core/read_pipeline.py``) and
+    the prefetcher (``cache/prefetch.py``) used to carry their own copies of
+    this group-reject + counter logic; one shared helper keeps their
+    accounting — chunks skipped, rows pruned, encoded bytes never fetched —
+    in lockstep with the reject decision itself.  ``counters`` follows the
+    :func:`new_pruning_counters` schema; pass ``None`` to skip bookkeeping.
+    """
+    if not group_rejected(meta, row_group, bounds):
+        return False
+    if counters is not None:
+        counters["chunks_skipped"] += len(columns)
+        counters["rows_pruned"] += n_req
+        for c in columns:
+            try:
+                counters["bytes_skipped"] += meta.chunk(c, row_group).length
+            except KeyError:
+                pass
+    return True
+
+
 def merge_bounds(a: dict, b: dict) -> dict:
     """Per-column conjunction of two bounds maps (missing key = unconstrained
     on that side; the AND is at least as restrictive as either side)."""

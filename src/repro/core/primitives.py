@@ -26,6 +26,14 @@ Two materialization paths exist past the gather (DESIGN.md §4):
   skip chunks that cannot satisfy the conjunct (zone-map pruning), and
   ACCUM-only columns materialize last, for final survivors only.  Both paths
   produce bit-identical ``EdgeFrame``s.
+
+Every reader accepts an optional ``pool`` (the engine's shared ``IOPool``):
+surviving chunks then fetch and decode through the **parallel chunk
+pipeline** (``core/read_pipeline.py``, DESIGN.md §5) instead of one at a
+time on the caller thread.  The staged path threads one
+:class:`~repro.core.read_pipeline.ReadContext` through all of its stages so
+E/U/V/ACCUM never fetch the same chunk twice.  ``pool=None`` (or the
+``pipe`` flag off) is the sequential parity path — bit-identical output.
 """
 
 from __future__ import annotations
@@ -36,54 +44,13 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.cache.manager import CacheManager
-from repro.core.cache.units import ChunkRef
-from repro.core.plan import group_rejected
+from repro.core.read_pipeline import (
+    ReadContext,
+    execute_plan,
+    plan_edge_read,
+    plan_vertex_read,
+)
 from repro.core.types import VSet
-
-
-# ---------------------------------------------------------------------------
-# value-reader helpers
-# ---------------------------------------------------------------------------
-
-def _zone_map_rejects(meta, row_group: int, bounds, columns, n_req: int, counters) -> bool:
-    """:func:`~repro.core.plan.group_rejected` plus pruning-counter
-    bookkeeping for the read path (DESIGN.md §4)."""
-    if not group_rejected(meta, row_group, bounds):
-        return False
-    if counters is not None:
-        counters["chunks_skipped"] += len(columns)
-        counters["rows_pruned"] += n_req
-        for c in columns:
-            try:
-                counters["bytes_skipped"] += meta.chunk(c, row_group).length
-            except KeyError:
-                pass
-    return True
-
-
-def _read_unit(cache, ref: ChunkRef, meta, kind, rows: np.ndarray, counters):
-    """``get_unit`` + ``read`` with pruning-counter bookkeeping."""
-    unit = cache.get_unit(ref, meta, kind)
-    before = unit.decode_ops
-    vals = unit.read(rows)
-    if counters is not None:
-        counters["chunks_read"] += 1
-        counters["rows_decoded"] += unit.decode_ops - before
-        try:
-            counters["bytes_read"] += meta.chunk(ref.column, ref.row_group).length
-        except KeyError:
-            pass
-    return vals
-
-
-def _scatter(out: dict, column: str, n: int, pos: np.ndarray, vals: np.ndarray) -> None:
-    if out[column] is None:
-        out[column] = np.empty(n, dtype=vals.dtype)
-        if vals.dtype == object:
-            out[column][:] = ""
-        else:
-            out[column][:] = 0
-    out[column][pos] = vals
 
 
 def _finalize(out: dict, n: int) -> dict[str, np.ndarray]:
@@ -96,45 +63,24 @@ def _finalize(out: dict, n: int) -> dict[str, np.ndarray]:
 def read_vertex_columns_pruned(
     topology, cache: CacheManager, vertex_type: str, dense_ids: np.ndarray,
     columns: Sequence[str], bounds: Optional[dict] = None, counters: Optional[dict] = None,
+    pool=None, ctx: Optional[ReadContext] = None,
 ) -> tuple[dict[str, np.ndarray], np.ndarray]:
     """Materialize vertex columns for arbitrary dense IDs (point lookups).
 
-    Groups the request by (file, row group) and reads each group through its
-    VertexCacheUnit, scattering results back into request order.  When
+    Groups the request by (file, row group) into a
+    :class:`~repro.core.read_pipeline.ChunkFetchPlan` and reads each
+    surviving chunk through its VertexCacheUnit — batched through ``pool``
+    when given — scattering results back into request order.  When
     ``bounds`` (column -> ``ColumnBounds``) is given, row groups whose chunk
     Min/Max statistics cannot satisfy a bound are skipped outright — no
     column of the group is fetched/decoded — and their rows are flagged in
     the returned reject mask (they definitively fail the conjunct; their
     output values are filler and must not be consulted).
     """
-    dense_ids = np.asarray(dense_ids, dtype=np.int64)
-    reject = np.zeros(len(dense_ids), dtype=bool)
-    if len(dense_ids) == 0 or not columns:
-        return {c: np.empty(0, dtype=np.float64) for c in columns}, reject
-    out: dict[str, Optional[np.ndarray]] = {c: None for c in columns}
-    file_ids, rows = topology.dense_to_file_row(vertex_type, dense_ids)
-    for fid in np.unique(file_ids):
-        finfo = topology.file_registry.get(int(fid))
-        if finfo is None:  # dangling vertices have no attributes
-            continue
-        meta = topology.vertex_file_metas[finfo.key]
-        sel_f = file_ids == fid
-        rows_f = rows[sel_f]
-        idx_f = np.flatnonzero(sel_f)
-        for g in meta.row_groups:
-            in_g = (rows_f >= g.first_row) & (rows_f < g.first_row + g.n_rows)
-            if not in_g.any():
-                continue
-            pos = idx_f[in_g]
-            if bounds and _zone_map_rejects(meta, g.index, bounds, columns,
-                                            int(in_g.sum()), counters):
-                reject[pos] = True
-                continue
-            for c in columns:
-                vals = _read_unit(cache, ChunkRef(finfo.key, c, g.index), meta,
-                                  "vertex", rows_f[in_g] - g.first_row, counters)
-                _scatter(out, c, len(dense_ids), pos, vals)
-    return _finalize(out, len(dense_ids)), reject
+    plan = plan_vertex_read(topology, vertex_type, dense_ids, columns,
+                            bounds=bounds, counters=counters)
+    out = execute_plan(plan, cache, counters=counters, pool=pool, ctx=ctx)
+    return _finalize(out, plan.n), plan.reject
 
 
 def read_vertex_values(
@@ -149,6 +95,7 @@ def read_vertex_values(
 def read_edge_columns_pruned(
     topology, cache: CacheManager, edge_type: str, eids: np.ndarray,
     columns: Sequence[str], bounds: Optional[dict] = None, counters: Optional[dict] = None,
+    pool=None, ctx: Optional[ReadContext] = None,
 ) -> tuple[dict[str, np.ndarray], np.ndarray]:
     """Materialize edge columns for *global* edge ids of an edge type.
 
@@ -156,46 +103,23 @@ def read_edge_columns_pruned(
     registration order, rows in file order) — the addressing every
     ``TopologyView.gather`` returns.  The per-list/per-row-group grouping
     depends only on the eids, so it is computed once and shared by all
-    requested columns.  ``bounds``/``counters`` behave exactly as in
-    :func:`read_vertex_columns_pruned`: zone-map-rejected row groups are
+    requested columns.  ``bounds``/``counters``/``pool`` behave exactly as
+    in :func:`read_vertex_columns_pruned`: zone-map-rejected row groups are
     never fetched or decoded and their rows come back reject-flagged.
     """
-    eids = np.asarray(eids, dtype=np.int64)
-    reject = np.zeros(len(eids), dtype=bool)
-    if len(eids) == 0 or not columns:
-        return {c: np.empty(0, dtype=np.float64) for c in columns}, reject
-    offsets = topology.plane.eid_offsets(edge_type)
-    lists = topology.all_edge_lists(edge_type)
-    list_idx = np.searchsorted(offsets, eids, side="right") - 1
-    out: dict[str, Optional[np.ndarray]] = {c: None for c in columns}
-    for li in np.unique(list_idx):
-        sel = list_idx == li
-        local_rows = eids[sel] - offsets[li]
-        pos = np.flatnonzero(sel)
-        el = lists[li]
-        meta = topology.edge_file_metas[el.file_key]
-        for g in meta.row_groups:
-            in_g = (local_rows >= g.first_row) & (local_rows < g.first_row + g.n_rows)
-            if not in_g.any():
-                continue
-            gpos = pos[in_g]
-            if bounds and _zone_map_rejects(meta, g.index, bounds, columns,
-                                            int(in_g.sum()), counters):
-                reject[gpos] = True
-                continue
-            for c in columns:
-                vals = _read_unit(cache, ChunkRef(el.file_key, c, g.index), meta,
-                                  "edge", local_rows[in_g] - g.first_row, counters)
-                _scatter(out, c, len(eids), gpos, vals)
-    return _finalize(out, len(eids)), reject
+    plan = plan_edge_read(topology, edge_type, eids, columns,
+                          bounds=bounds, counters=counters)
+    out = execute_plan(plan, cache, counters=counters, pool=pool, ctx=ctx)
+    return _finalize(out, plan.n), plan.reject
 
 
 def read_edge_columns_by_eid(
     topology, cache: CacheManager, edge_type: str, eids: np.ndarray,
-    columns: Sequence[str],
+    columns: Sequence[str], pool=None,
 ) -> dict[str, np.ndarray]:
     """No-pruning convenience over :func:`read_edge_columns_pruned`."""
-    return read_edge_columns_pruned(topology, cache, edge_type, eids, columns)[0]
+    return read_edge_columns_pruned(topology, cache, edge_type, eids, columns,
+                                    pool=pool)[0]
 
 
 def read_edge_values_by_eid(
@@ -219,6 +143,7 @@ def vertex_map(
     prefetcher=None,
     bounds: Optional[dict] = None,
     counters: Optional[dict] = None,
+    pool=None,
 ):
     """Apply a UDF over an active vertex set (paper §6.1).
 
@@ -236,7 +161,7 @@ def vertex_map(
     frame = {"id": ids}
     cols, reject = read_vertex_columns_pruned(
         topology, cache, vset.vertex_type, ids, list(columns),
-        bounds=bounds, counters=counters,
+        bounds=bounds, counters=counters, pool=pool,
     )
     frame.update(cols)
     out_vals = map_fn(frame) if map_fn is not None else None
@@ -288,6 +213,7 @@ def edge_scan(
     strategy: str = "auto",
     plan=None,
     counters: Optional[dict] = None,
+    pool=None,
 ) -> EdgeFrame:
     """Scan the edges incident to ``frontier`` (paper §6.1).
 
@@ -311,7 +237,8 @@ def edge_scan(
     zone-map chunk pruning, and far-side/ACCUM columns materialize late.
 
     ``read_v_values`` overrides far-side attribute reads — the distributed
-    engine injects the two-pass remote fetch here (paper §6.2).
+    engine injects the two-pass remote fetch here (paper §6.2).  ``pool``
+    selects the parallel chunk pipeline for every attribute read.
     """
     et = topology.schema.edge_types[edge_type]
     if direction == "out":
@@ -322,7 +249,7 @@ def edge_scan(
     if plan is not None:
         return _edge_scan_staged(
             topology, cache, frontier, edge_type, direction, plan,
-            prefetcher, read_v_values, strategy, counters, u_type, v_type,
+            prefetcher, read_v_values, strategy, counters, u_type, v_type, pool,
         )
 
     if prefetcher is not None:
@@ -333,14 +260,17 @@ def edge_scan(
         edge_type, strategy, frontier=frontier, direction=direction
     )
     u, v, eid = view.gather(frontier, direction=direction)
+    ctx = ReadContext()
     by_col, _ = read_edge_columns_pruned(
-        topology, cache, edge_type, eid, edge_columns, counters=counters
+        topology, cache, edge_type, eid, edge_columns, counters=counters,
+        pool=pool, ctx=ctx,
     )
     columns = {f"e.{c}": by_col[c] for c in edge_columns}
 
     # endpoint materialization (vertex rows via graph-aware cache units)
     u_vals, _ = read_vertex_columns_pruned(
-        topology, cache, u_type, u, list(u_columns), counters=counters
+        topology, cache, u_type, u, list(u_columns), counters=counters,
+        pool=pool, ctx=ctx,
     )
     for c in u_columns:
         columns[f"u.{c}"] = u_vals[c]
@@ -349,7 +279,8 @@ def edge_scan(
             columns[f"v.{c}"] = read_v_values(v_type, v, c)
     else:
         v_vals, _ = read_vertex_columns_pruned(
-            topology, cache, v_type, v, list(v_columns), counters=counters
+            topology, cache, v_type, v, list(v_columns), counters=counters,
+            pool=pool, ctx=ctx,
         )
         for c in v_columns:
             columns[f"v.{c}"] = v_vals[c]
@@ -367,7 +298,7 @@ def edge_scan(
 
 def _edge_scan_staged(
     topology, cache, frontier, edge_type, direction, plan,
-    prefetcher, read_v_values, strategy, counters, u_type, v_type,
+    prefetcher, read_v_values, strategy, counters, u_type, v_type, pool=None,
 ) -> EdgeFrame:
     """Staged late-materialization EdgeScan (DESIGN.md §4).
 
@@ -378,6 +309,10 @@ def _edge_scan_staged(
     (``v.``) reads — the expensive random point lookups — therefore see only
     rows that survived the cheaper stages, and ACCUM-only columns are read
     last, for final survivors.
+
+    All stages share one :class:`ReadContext`, so a chunk materialized by an
+    earlier stage (self-loop edge types, predicate columns re-used by ACCUM
+    reads) is never fetched or pool-dispatched twice within the gather.
     """
     if prefetcher is not None:
         prefetcher.prefetch_edges(
@@ -394,6 +329,7 @@ def _edge_scan_staged(
         edge_type, strategy, frontier=frontier, direction=direction
     )
     u, v, eid = view.gather(frontier, direction=direction)
+    ctx = ReadContext()
     columns: dict[str, np.ndarray] = {}
 
     def _evaluate(pred, prefix, prefix_cols, reject):
@@ -412,14 +348,14 @@ def _edge_scan_staged(
     if plan.edge_columns:
         e_cols, rej = read_edge_columns_pruned(
             topology, cache, edge_type, eid, plan.edge_columns,
-            bounds=plan.edge_bounds, counters=counters,
+            bounds=plan.edge_bounds, counters=counters, pool=pool, ctx=ctx,
         )
         _evaluate(plan.edge_pred, "e", {f"e.{c}": a for c, a in e_cols.items()}, rej)
 
     if plan.u_columns:
         u_cols, rej = read_vertex_columns_pruned(
             topology, cache, u_type, u, plan.u_columns,
-            bounds=plan.u_bounds, counters=counters,
+            bounds=plan.u_bounds, counters=counters, pool=pool, ctx=ctx,
         )
         _evaluate(plan.source_pred, "u", {f"u.{c}": a for c, a in u_cols.items()}, rej)
 
@@ -430,19 +366,21 @@ def _edge_scan_staged(
         else:
             v_cols, rej = read_vertex_columns_pruned(
                 topology, cache, v_type, v, plan.v_columns,
-                bounds=plan.v_bounds, counters=counters,
+                bounds=plan.v_bounds, counters=counters, pool=pool, ctx=ctx,
             )
         _evaluate(plan.target_pred, "v", {f"v.{c}": a for c, a in v_cols.items()}, rej)
 
     # ACCUM-only columns: needed by no predicate -> final survivors only
     if plan.accum_edge_columns:
         e_cols, _ = read_edge_columns_pruned(
-            topology, cache, edge_type, eid, plan.accum_edge_columns, counters=counters
+            topology, cache, edge_type, eid, plan.accum_edge_columns,
+            counters=counters, pool=pool, ctx=ctx,
         )
         columns.update({f"e.{c}": a for c, a in e_cols.items()})
     if plan.accum_u_columns:
         u_cols, _ = read_vertex_columns_pruned(
-            topology, cache, u_type, u, plan.accum_u_columns, counters=counters
+            topology, cache, u_type, u, plan.accum_u_columns,
+            counters=counters, pool=pool, ctx=ctx,
         )
         columns.update({f"u.{c}": a for c, a in u_cols.items()})
     if plan.accum_v_columns:
@@ -452,7 +390,8 @@ def _edge_scan_staged(
             )
         else:
             v_cols, _ = read_vertex_columns_pruned(
-                topology, cache, v_type, v, plan.accum_v_columns, counters=counters
+                topology, cache, v_type, v, plan.accum_v_columns,
+                counters=counters, pool=pool, ctx=ctx,
             )
             columns.update({f"v.{c}": a for c, a in v_cols.items()})
 

@@ -275,11 +275,15 @@ class Query:
 
     # -- execution ----------------------------------------------------------------
 
-    def run(self, pushdown: bool = True) -> QueryResult:
+    def run(self, pushdown: bool = True,
+            pipeline: Optional[bool] = None) -> QueryResult:
         """Execute the query.  ``pushdown=False`` forces the legacy
         full-materialization scan path (no staging, no zone-map pruning) —
         the baseline the pushdown parity tests and benchmarks compare
-        against.  Both paths return bit-identical results."""
+        against.  ``pipeline`` pins the parallel chunk-pipelined read path
+        on/off per run (``None`` defers to the ``pipe`` perf flag; the
+        sequential path is the pipelining parity baseline, DESIGN.md §5).
+        All paths return bit-identical results."""
         eng = self.engine
         seed = self._seed
         if seed is None:
@@ -296,7 +300,7 @@ class Query:
                 columns=list(dict.fromkeys(seed.where.columns)),
                 filter_fn=lambda fr: seed.where.evaluate(fr, ""),
                 bounds=seed.where.bounds() if pushdown else None,
-                counters=counters,
+                counters=counters, pipeline=pipeline,
             )
 
         accum_out: dict[str, np.ndarray] = {}
@@ -310,7 +314,7 @@ class Query:
             if pushdown:
                 frame = eng.edge_scan(
                     vset, hop.edge_type, hop.direction,
-                    plan=plan_hop(hop), counters=counters,
+                    plan=plan_hop(hop), counters=counters, pipeline=pipeline,
                 )
             else:
                 edge_cols, u_cols, v_cols = set(), set(), set()
@@ -341,7 +345,7 @@ class Query:
                     u_columns=sorted(u_cols),
                     v_columns=sorted(v_cols),
                     edge_filter=_filter,
-                    counters=counters,
+                    counters=counters, pipeline=pipeline,
                 )
             n_scanned += len(frame)
             frames.append(frame)

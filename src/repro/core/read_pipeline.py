@@ -1,0 +1,262 @@
+"""Parallel chunk-pipelined read path (DESIGN.md §5).
+
+The query-path readers used to fetch and decode one column chunk at a time
+on the caller thread — every surviving chunk serially paid the object
+store's modeled ~30 ms first-byte latency while the ``IOPool`` that already
+pipelines startup loading sat idle.  This module splits each gather into
+two phases, mirroring the paper's §4.2 fetch/decode/compute overlap:
+
+1. **Planning** (:func:`plan_vertex_read` / :func:`plan_edge_read`): walk
+   the (file, row-group) partition of the request, apply zone-map pruning
+   up front (shared :func:`~repro.core.plan.zone_map_rejects` test, so the
+   plan and the prefetcher agree chunk-for-chunk), and emit one
+   :class:`ChunkFetchPlan` covering *all* surviving (column, row group)
+   chunks — each with its group-local rows and output scatter positions.
+
+2. **Execution** (:func:`execute_plan`): issue the plan as a batch of
+   streamed per-chunk jobs through the engine's shared ``IOPool`` — each
+   job runs lake fetch *and* raw→decoded on a worker thread
+   (``CacheManager.get_unit`` + per-unit-locked ``read``), with at most
+   ``pipe=<depth>`` jobs in flight so one chunk's decode overlaps another's
+   fetch wait — and stream results into the caller's scatter buffers in
+   deterministic plan order as they complete.  Without a pool the same plan
+   executes sequentially on the caller thread: bit-identical output, the
+   parity baseline.  (Whether a pool is passed is decided upstream: the
+   engine's ``_query_pool`` consults the ``pipe`` perf flag unless the
+   caller pins an explicit override.)
+
+A :class:`ReadContext` scopes deduplication to one gather: the E/U/V/ACCUM
+stages of ``_edge_scan_staged`` share it, so a chunk two stages touch (e.g.
+``u.``/``v.`` columns of the same vertex file when an edge type is a
+self-loop) is fetched and pool-dispatched once; later stages read it
+directly from the context.  Across gathers the cache manager's single-flight
+admission provides the same never-fetch-twice guarantee globally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.cache.manager import CacheManager
+from repro.core.cache.units import ChunkRef
+from repro.core.plan import zone_map_rejects
+from repro import perf_flags
+
+
+@dataclasses.dataclass
+class ChunkRequest:
+    """One surviving (column, row group) chunk of a gather: which rows of it
+    to decode and where their values scatter in the output frame."""
+
+    ref: ChunkRef
+    meta: object                # ColumnFileMeta of the owning file
+    kind: str                   # "vertex" | "edge"
+    rows: np.ndarray            # chunk-local row indices to read
+    pos: np.ndarray             # positions in the length-n output arrays
+
+
+@dataclasses.dataclass
+class ChunkFetchPlan:
+    """Every chunk one gather must read, zone-map pruning already applied.
+
+    ``reject`` flags request rows whose row group a bound definitively
+    rejected — their output values are filler and must not be consulted
+    (identical contract to the pre-pipeline readers).
+    """
+
+    n: int                      # request length (output array length)
+    columns: list[str]
+    requests: list[ChunkRequest]
+    reject: np.ndarray
+
+
+class ReadContext:
+    """Per-gather dedup scope: cache key -> unit already materialized by an
+    earlier stage of the same gather.  Not thread-safe by design — stages of
+    one gather run from one caller thread; only the chunk jobs fan out.
+
+    Holding unit references pins their memory for the gather's lifetime
+    (eviction may drop them from the cache, but the context keeps them
+    alive), so peak memory is bounded by one gather's surviving chunk set —
+    the price of never re-entering the cache across E/U/V/ACCUM stages.
+    Executors only retain units when a context asks for cross-stage reuse;
+    context-free reads drop each unit as soon as its values are scattered.
+    """
+
+    def __init__(self):
+        self.units: dict[str, object] = {}
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+def plan_vertex_read(
+    topology, vertex_type: str, dense_ids: np.ndarray, columns: Sequence[str],
+    bounds: Optional[dict] = None, counters: Optional[dict] = None,
+) -> ChunkFetchPlan:
+    """Partition a dense-id point-lookup request into per-chunk requests."""
+    dense_ids = np.asarray(dense_ids, dtype=np.int64)
+    n = len(dense_ids)
+    reject = np.zeros(n, dtype=bool)
+    requests: list[ChunkRequest] = []
+    if n == 0 or not columns:
+        return ChunkFetchPlan(n, list(columns), requests, reject)
+    file_ids, rows = topology.dense_to_file_row(vertex_type, dense_ids)
+    for fid in np.unique(file_ids):
+        finfo = topology.file_registry.get(int(fid))
+        if finfo is None:  # dangling vertices have no attributes
+            continue
+        meta = topology.vertex_file_metas[finfo.key]
+        sel_f = file_ids == fid
+        rows_f = rows[sel_f]
+        idx_f = np.flatnonzero(sel_f)
+        for g in meta.row_groups:
+            in_g = (rows_f >= g.first_row) & (rows_f < g.first_row + g.n_rows)
+            if not in_g.any():
+                continue
+            pos = idx_f[in_g]
+            if bounds and zone_map_rejects(meta, g.index, bounds, columns,
+                                           int(in_g.sum()), counters):
+                reject[pos] = True
+                continue
+            local = rows_f[in_g] - g.first_row
+            for c in columns:
+                requests.append(ChunkRequest(
+                    ChunkRef(finfo.key, c, g.index), meta, "vertex", local, pos))
+    return ChunkFetchPlan(n, list(columns), requests, reject)
+
+
+def plan_edge_read(
+    topology, edge_type: str, eids: np.ndarray, columns: Sequence[str],
+    bounds: Optional[dict] = None, counters: Optional[dict] = None,
+) -> ChunkFetchPlan:
+    """Partition a global-edge-id request into per-chunk requests."""
+    eids = np.asarray(eids, dtype=np.int64)
+    n = len(eids)
+    reject = np.zeros(n, dtype=bool)
+    requests: list[ChunkRequest] = []
+    if n == 0 or not columns:
+        return ChunkFetchPlan(n, list(columns), requests, reject)
+    offsets = topology.plane.eid_offsets(edge_type)
+    lists = topology.all_edge_lists(edge_type)
+    list_idx = np.searchsorted(offsets, eids, side="right") - 1
+    for li in np.unique(list_idx):
+        sel = list_idx == li
+        local_rows = eids[sel] - offsets[li]
+        pos = np.flatnonzero(sel)
+        el = lists[li]
+        meta = topology.edge_file_metas[el.file_key]
+        for g in meta.row_groups:
+            in_g = (local_rows >= g.first_row) & (local_rows < g.first_row + g.n_rows)
+            if not in_g.any():
+                continue
+            gpos = pos[in_g]
+            if bounds and zone_map_rejects(meta, g.index, bounds, columns,
+                                           int(in_g.sum()), counters):
+                reject[gpos] = True
+                continue
+            local = local_rows[in_g] - g.first_row
+            for c in columns:
+                requests.append(ChunkRequest(
+                    ChunkRef(el.file_key, c, g.index), meta, "edge", local, gpos))
+    return ChunkFetchPlan(n, list(columns), requests, reject)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def _scatter(out: dict, column: str, n: int, pos: np.ndarray, vals: np.ndarray) -> None:
+    if out[column] is None:
+        out[column] = np.empty(n, dtype=vals.dtype)
+        if vals.dtype == object:
+            out[column][:] = ""
+        else:
+            out[column][:] = 0
+    out[column][pos] = vals
+
+
+def _count_read(counters: Optional[dict], req: ChunkRequest, decode_delta: int) -> None:
+    if counters is None:
+        return
+    counters["chunks_read"] += 1
+    counters["rows_decoded"] += decode_delta
+    try:
+        counters["bytes_read"] += req.meta.chunk(req.ref.column, req.ref.row_group).length
+    except KeyError:
+        pass
+
+
+def pipeline_depth() -> int:
+    """In-flight chunk budget of the pipelined executor (``pipe=<depth>``)."""
+    return max(1, int(perf_flags.value("pipe", 16)))
+
+
+def execute_plan(
+    plan: ChunkFetchPlan,
+    cache: CacheManager,
+    counters: Optional[dict] = None,
+    pool=None,
+    ctx: Optional[ReadContext] = None,
+) -> dict[str, Optional[np.ndarray]]:
+    """Materialize a fetch plan into per-column scatter buffers.
+
+    With a pool, each fresh chunk becomes one worker job — cache admission
+    (single-flight lake fetch) plus per-unit-locked decode — with at most
+    :func:`pipeline_depth` jobs in flight; the caller consumes results in
+    deterministic plan order (scatter targets are disjoint, so ordering
+    only fixes counter/decode determinism, not values).  Without a pool the
+    same jobs run inline: the sequential parity path.
+    """
+    out: dict[str, Optional[np.ndarray]] = {c: None for c in plan.columns}
+    if not plan.requests:
+        return out
+    units = ctx.units if ctx is not None else {}
+
+    def _job(req: ChunkRequest):
+        unit = units.get(req.ref.cache_key())
+        if unit is None:
+            unit = cache.get_unit(req.ref, req.meta, req.kind)
+        return unit, *cache.read_unit(unit, req.rows)
+
+    # whether to pipeline is decided where ``pool`` is resolved (the engine's
+    # _query_pool consults the ``pipe`` flag unless the caller pinned an
+    # explicit override); a non-None pool here *is* the decision
+    if pool is None:
+        for req in plan.requests:
+            unit, vals, delta = _job(req)
+            if ctx is not None:
+                units[req.ref.cache_key()] = unit
+            _count_read(counters, req, delta)
+            _scatter(out, req.ref.column, plan.n, req.pos, vals)
+        return out
+
+    # split by dedup state: chunks an earlier stage of this gather already
+    # materialized are read inline (O(1) cache hit, no pool round-trip)
+    fresh = [r for r in plan.requests if r.ref.cache_key() not in units]
+    for req in plan.requests:
+        if req.ref.cache_key() in units:
+            unit, vals, delta = _job(req)
+            _count_read(counters, req, delta)
+            _scatter(out, req.ref.column, plan.n, req.pos, vals)
+
+    # one streamed fetch+decode job per fresh chunk: at most pipeline_depth()
+    # jobs in flight, so `pipe=<depth>` bounds concurrent lake requests, and
+    # chunk N's decode overlaps chunk N+k's fetch wait on the worker pool.
+    # Units are retained only while a ReadContext needs them for cross-stage
+    # dedup; otherwise each unit is dropped once its values are scattered,
+    # so cache eviction can actually free memory mid-gather.
+    def _consume(req: ChunkRequest, result) -> None:
+        unit, vals, delta = result
+        if ctx is not None:
+            units[req.ref.cache_key()] = unit
+        _count_read(counters, req, delta)
+        _scatter(out, req.ref.column, plan.n, req.pos, vals)
+
+    pool.map_pipelined(fresh, _job, lambda req, res: _consume(req, res),
+                       depth=pipeline_depth())
+    return out

@@ -28,6 +28,7 @@ R = TypeVar("R")
 
 class IOPool:
     def __init__(self, n_threads: int = 8, max_in_flight: int = 32):
+        self.n_threads = n_threads
         self._pool = ThreadPoolExecutor(max_workers=n_threads, thread_name_prefix="io")
         self._sem = threading.Semaphore(max_in_flight)
         self._lock = threading.Lock()
@@ -58,7 +59,15 @@ class IOPool:
                     self.stats["io_seconds"] += dt
                 self._sem.release()
 
-        return self._pool.submit(_run)
+        try:
+            return self._pool.submit(_run)
+        except BaseException:
+            # executor rejected the task (pool shut down mid-query): _run
+            # will never run, so the in-flight slot it would have released
+            # must be released here or the semaphore leaks one permit per
+            # rejection until submit deadlocks
+            self._sem.release()
+            raise
 
     # -- pipelined map ---------------------------------------------------------
 

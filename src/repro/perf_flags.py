@@ -30,6 +30,13 @@ record exact before/after deltas:
                    scans from the per-edge-type CSR index instead of the
                    edge-list scan (the Fig. 15 crossover, DESIGN.md §3).
 
+- ``pipe``       — parallel chunk-pipelined read path (DESIGN.md §5): batch
+                   each gather's surviving chunk fetches+decodes through the
+                   engine's shared IOPool instead of one-at-a-time on the
+                   caller thread.  ``pipe=<depth>`` overrides the bounded
+                   in-flight chunk budget (default 16).  Off = the
+                   sequential parity path.
+
 Default: all on.  ``REPRO_OPTS=""`` disables all (baseline);
 ``REPRO_OPTS="tri,chunkloss"`` enables a subset.
 
@@ -43,7 +50,8 @@ from __future__ import annotations
 
 import os
 
-_ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr")
+_ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr",
+        "pipe")
 
 
 def enabled(flag: str) -> bool:

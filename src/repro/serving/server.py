@@ -6,6 +6,14 @@ and execute against a shared engine (the engine's cache manager is
 thread-safe, so concurrent queries share warmed cache units exactly like the
 paper's multi-connection evaluation).  Latency percentiles and throughput
 are recorded for the scalability benchmark.
+
+Concurrent queries also share the engine's query-time ``IOPool``
+(DESIGN.md §5): each worker's scans issue their chunk-fetch batches through
+the one pool, so the modeled object-store parallel-stream budget is a
+per-engine resource — adding server workers raises concurrency without
+multiplying in-flight lake requests.  The cache manager's single-flight
+admission guarantees that two workers racing over the same cold chunk pay
+its lake fetch once.
 """
 
 from __future__ import annotations

@@ -207,7 +207,7 @@ def test_disk_put_decoded_duplicate_key_no_double_count(store):
     once = mgr._disk_bytes
     mgr._disk_put_decoded("k", values, upto)
     assert mgr._disk_bytes == once
-    assert mgr._disk_order.count("D:k") == 1
+    assert list(mgr._disk_order).count("D:k") == 1
 
 
 def test_manager_drop_memory_keeps_disk(store):

@@ -12,9 +12,11 @@ from benchmarks.bench_edgelist_vs_csr import run
 run(quick=True)
 PY
 
-echo "== query pushdown selectivity sweep (quick mode) =="
-# writes the BENCH_queries.json snapshot (chunks skipped, bytes decoded,
-# wall time) and asserts pruned results stay bit-identical to the baseline
+echo "== query sweeps: pushdown selectivity + chunk pipeline (quick mode) =="
+# writes the BENCH_queries.json snapshot: the pushdown sweep (chunks
+# skipped, bytes decoded) and the latency-scaled sequential-vs-pipelined
+# sweep (wall times, speedup floor, overlap efficiency).  Both assert their
+# results stay bit-identical to their baselines.
 python - <<'PY'
 from benchmarks.bench_queries import run
 run(quick=True)
