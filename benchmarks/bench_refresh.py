@@ -1,0 +1,183 @@
+"""Incremental epoch advance vs full topology rebuild (DESIGN.md §7).
+
+The epoch subsystem's reason to exist at serving scale: picking up a small
+append-only lake commit must not cost a topology rebuild.  This benchmark
+stages a ≤5% append (new Comment vertex file + the matching HasCreator edge
+file) against an LDBC lake, then measures — under the modeled object-store
+latency — the two ways to become fresh:
+
+- **incremental** ``engine.advance()``: pooled per-table snapshot diff,
+  delta edge-list build for the new files only, IDM dense-offset extension,
+  CSR merge-extension, atomic epoch publish;
+- **full rebuild**: what the pre-epoch engine did on *any* vertex-table
+  change — re-read every PK/FK column of every table from the lake, rebuild
+  the IDM, all edge lists and the CSR indexes.
+
+Asserts the incremental path clears the ISSUE 4 acceptance floor
+(``advance`` ≥ 5x faster than rebuild for the ≤5% append) and that the
+advanced engine's query results are **bit-identical** to a cold-started
+engine on the new snapshot.  Snapshot written to ``BENCH_refresh.json``
+(override with ``REPRO_BENCH_REFRESH_SNAPSHOT``); ``run(quick=True)`` is
+the CI-gate mode.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_store, make_engine, timed
+from repro.core.query import Query, gt
+from repro.core.topology import GraphTopology
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.lakehouse.table import LakeCatalog
+
+SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_REFRESH_SNAPSHOT", "BENCH_refresh.json")
+
+_EDGE_TYPES = ("Knows", "HasCreator", "HasTag")
+
+
+def _assert_parity(a, b) -> None:
+    assert a.n_edges_scanned == b.n_edges_scanned
+    assert np.array_equal(a.vset.ids(), b.vset.ids())
+    for fa, fb in zip(a.frames, b.frames):
+        assert np.array_equal(fa.u, fb.u) and np.array_equal(fa.v, fb.v)
+        for k in fa.columns:
+            assert np.array_equal(fa.columns[k], fb.columns[k]), k
+
+
+def _stage_append(store, eng, ds, append_frac: float, seed: int = 11):
+    """Commit ~append_frac new comments + their HasCreator edges."""
+    rng = np.random.default_rng(seed)
+    n_new = max(8, int(ds.n_comments * append_frac))
+    # continue the generator's raw-id scheme past the existing comments
+    new_cids = (np.arange(ds.n_comments + 1, ds.n_comments + n_new + 1,
+                          dtype=np.int64)) * 10 + 3
+    lake = LakeCatalog(store)
+    lake.table("Comment").append_files([{
+        "id": new_cids,
+        "creationDate": rng.integers(20230101, 20231231, n_new).astype(np.int64),
+        "length": rng.integers(1, 2000, n_new).astype(np.int64),
+        "browserUsed": np.array(["Chrome"] * n_new, dtype=object),
+    }])
+    person_raw = eng.topology.idm.raw_ids("Person")
+    lake.table("Comment_HasCreator_Person").append_files([{
+        "src": new_cids,
+        "dst": person_raw[rng.integers(0, len(person_raw), n_new)],
+        "creationDate": rng.integers(20230101, 20231231, n_new).astype(np.int64),
+    }])
+    return n_new
+
+
+def refresh_sweep(
+    sf: float = 0.02,
+    append_frac: float = 0.05,
+    latency_scale: float = 1.0,
+    min_speedup: float = 5.0,
+    row_group_rows: int = 512,
+) -> dict:
+    store = fresh_store(f"refresh_{sf}")
+    ds = generate_ldbc(store, scale_factor=sf, n_files=2,
+                       row_group_rows=row_group_rows)
+    # materialize=False on every engine here: this benchmark compares lake
+    # (re)read costs, and a cold start must see the *new* snapshot, not a
+    # stale materialized topology blob
+    eng = make_engine(store, ldbc_graph_schema(), materialize=False)
+    eng.startup()
+    t0 = time.perf_counter()
+
+    # the advance must exercise the CSR merge-extension, so the current
+    # epoch's CSR indexes exist before the commit lands
+    for ename in _EDGE_TYPES:
+        eng.current_epoch().plane.csr(ename)
+
+    comments = eng.all_vertices("Comment")
+    dates = eng.read_vertex_column("Comment", comments.ids(), "creationDate")
+    thr = float(np.quantile(dates, 0.5))
+
+    def make_query(e):
+        return (Query(e)
+                .vertices("Comment")
+                .hop("HasCreator", direction="out",
+                     edge_where=gt("creationDate", thr)))
+
+    res_before = make_query(eng).run()
+    n_new = _stage_append(store, eng, ds, append_frac)
+
+    # -- arm 1: incremental advance, modeled store latency on ------------------
+    store.config.latency_scale = latency_scale
+    store.reset_counters()
+    report, t_advance = timed(eng.advance)
+    adv_requests = store.counters["get_requests"]
+    assert report.changed and report.mode == "incremental", report
+    assert "HasCreator" in report.csr_extended, report
+
+    # -- arm 2: full topology rebuild (the pre-epoch vertex-change path) -------
+    def full_rebuild():
+        topo = GraphTopology(ldbc_graph_schema())
+        topo.build(store, LakeCatalog(store))
+        for ename in _EDGE_TYPES:   # rebuild the same derived state advance kept
+            topo.plane.csr(ename)
+        return topo
+
+    store.reset_counters()
+    _, t_rebuild = timed(full_rebuild)
+    rebuild_requests = store.counters["get_requests"]
+    store.config.latency_scale = 0.0
+
+    speedup = t_rebuild / t_advance
+
+    # -- parity: advanced engine vs a cold start on the new snapshot -----------
+    res_after = make_query(eng).run()
+    assert res_after.epoch_id > res_before.epoch_id
+    cold = make_engine(store, ldbc_graph_schema(), materialize=False)
+    cold.startup()
+    res_cold = make_query(cold).run()
+    _assert_parity(res_after, res_cold)
+    cold.close()
+    eng.close()
+
+    row = {
+        "sf": sf,
+        "append_frac": append_frac,
+        "appended_rows": n_new,
+        "latency_scale": latency_scale,
+        "advance_s": t_advance,
+        "rebuild_s": t_rebuild,
+        "speedup": speedup,
+        "advance_get_requests": adv_requests,
+        "rebuild_get_requests": rebuild_requests,
+        "edges_added": report.edges_added,
+        "vertices_added": report.vertices_added,
+        "csr_extended": list(report.csr_extended),
+        "mode": report.mode,
+    }
+    emit("refresh_advance_ms", t_advance * 1e3,
+         f"rebuild={t_rebuild*1e3:.0f}ms;speedup={speedup:.1f}x;"
+         f"gets={adv_requests}/{rebuild_requests};rows+={n_new}")
+    assert speedup >= min_speedup, (
+        f"incremental advance only {speedup:.2f}x over full rebuild "
+        f"(floor {min_speedup}x): {row}")
+    return {
+        "bench": "refresh_incremental_vs_rebuild",
+        "wall_s": time.perf_counter() - t0,
+        "rows": [row],
+    }
+
+
+def _write_snapshot(snap: dict) -> None:
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snap, f, indent=2)
+    emit("refresh_snapshot", 0.0, SNAPSHOT_PATH)
+
+
+def run(quick: bool = False) -> None:
+    snap = {"refresh_sweep": refresh_sweep(sf=0.02 if quick else 0.05)}
+    _write_snapshot(snap)
+
+
+if __name__ == "__main__":
+    run()

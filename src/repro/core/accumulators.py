@@ -13,6 +13,7 @@ containers used by the paper's workloads:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable
 
 import numpy as np
@@ -68,35 +69,60 @@ class Accumulators:
         self.topology = topology
         self._arrays: dict[tuple[str, str], np.ndarray] = {}
         self._specs: dict[tuple[str, str], AccumSpec] = {}
+        # updates mutate / may grow-and-rebind arrays; concurrent serving
+        # workers share one Accumulators, so both must happen under one lock
+        # (reentrant: combine_delta funnels through update)
+        self._lock = threading.RLock()
 
     def register(self, spec: AccumSpec) -> np.ndarray:
         key = (spec.vertex_type, spec.name)
         if spec.op not in _COMBINERS:
             raise ValueError(f"unknown accumulator op {spec.op!r}")
-        n = self.topology.n_vertices(spec.vertex_type)
-        init = spec.init if spec.init is not None else _IDENTITY[spec.op]
-        if spec.op == "or":
-            arr = np.full(n, bool(init), dtype=bool)
-        else:
-            arr = np.full(n, init, dtype=np.dtype(spec.dtype))
-        self._arrays[key] = arr
-        self._specs[key] = spec
-        return arr
+        with self._lock:
+            n = self.topology.n_vertices(spec.vertex_type)
+            init = spec.init if spec.init is not None else _IDENTITY[spec.op]
+            if spec.op == "or":
+                arr = np.full(n, bool(init), dtype=bool)
+            else:
+                arr = np.full(n, init, dtype=np.dtype(spec.dtype))
+            self._arrays[key] = arr
+            self._specs[key] = spec
+            return arr
 
     def array(self, vertex_type: str, name: str) -> np.ndarray:
         return self._arrays[(vertex_type, name)]
+
+    def ensure_capacity(self, vertex_type: str, name: str, n: int) -> np.ndarray:
+        """Grow an accumulator array for a dense space extended by an
+        incremental epoch advance (vertex appends land at the tail, so old
+        slots keep their meaning; new slots start at the identity)."""
+        with self._lock:
+            return self._ensure_capacity((vertex_type, name), n)
+
+    def _ensure_capacity(self, key: tuple[str, str], n: int) -> np.ndarray:
+        # caller holds self._lock
+        arr = self._arrays[key]
+        if n <= len(arr):
+            return arr
+        spec = self._specs[key]
+        init = spec.init if spec.init is not None else _IDENTITY[spec.op]
+        grown = np.full(n, init, dtype=arr.dtype)
+        grown[: len(arr)] = arr
+        self._arrays[key] = grown
+        return grown
 
     def update(
         self, vertex_type: str, name: str, dense_ids: np.ndarray, values
     ) -> None:
         """Parallel accumulator update: @name op= values at dense_ids."""
         key = (vertex_type, name)
-        arr = self._arrays[key]
         ids = np.asarray(dense_ids, dtype=np.int64)
         if len(ids) == 0:
             return
-        vals = np.broadcast_to(np.asarray(values), ids.shape)
-        _COMBINERS[self._specs[key].op](arr, ids, vals)
+        with self._lock:
+            arr = self._ensure_capacity(key, int(ids.max()) + 1)
+            vals = np.broadcast_to(np.asarray(values), ids.shape)
+            _COMBINERS[self._specs[key].op](arr, ids, vals)
 
     def reset(self, vertex_type: str, name: str) -> None:
         spec = self._specs[(vertex_type, name)]

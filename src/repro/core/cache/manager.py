@@ -87,7 +87,7 @@ class CacheManager:
         self.stats = {
             "hits": 0, "misses": 0, "evictions": 0,
             "vertex_flushes": 0, "disk_hits": 0, "lake_fetches": 0,
-            "load_waits": 0, "sweep_steps": 0,
+            "load_waits": 0, "sweep_steps": 0, "invalidated_units": 0,
         }
 
     # ------------------------------------------------------------------ fetch
@@ -327,6 +327,41 @@ class CacheManager:
             else:
                 raw = self._disk_raw.pop(victim, b"")
                 self._disk_bytes -= len(raw)
+
+    # ------------------------------------------------------- file invalidation
+
+    def invalidate_file(self, file_key: str) -> int:
+        """Evict exactly the ``(file, row-group)`` units of one data file —
+        every tier: memory units, disk raw chunks, disk decoded spills.
+
+        The epoch manager calls this when a lake commit removes or replaces
+        a data file (DESIGN.md §7): nothing else is touched, so the rest of
+        the working set stays warm.  Cache keys are
+        ``"{file_key}::{column}::{row_group}"``, so prefix matching is
+        exact per file.  Readers still holding an affected unit object keep
+        a valid self-contained handle (units own their raw bytes), and old
+        epochs re-reading a logically deleted file fall through to the lake,
+        where the immutable physical object still exists.  Returns the
+        number of memory-tier units evicted.
+        """
+        prefix = file_key + "::"
+        n = 0
+        with self._lock:
+            for key in [k for k in self._units if k.startswith(prefix)]:
+                unit = self._units.pop(key)
+                self._clock.pop(key, None)
+                self._mem_bytes -= unit.accounted_nbytes
+                n += 1
+            for key in [k for k in self._disk_raw if k.startswith(prefix)]:
+                raw = self._disk_raw.pop(key)
+                self._disk_bytes -= len(raw)
+                self._disk_order.pop(key, None)
+            for key in [k for k in self._disk_decoded if k.startswith(prefix)]:
+                entry = self._disk_decoded.pop(key)
+                self._disk_bytes -= entry[2]
+                self._disk_order.pop("D:" + key, None)
+            self.stats["invalidated_units"] += n
+        return n
 
     # ----------------------------------------------------------------- misc
 

@@ -70,16 +70,21 @@ class Prefetcher:
     # ---------------------------------------------------------------- vertices
 
     def prefetch_vertices(
-        self, frontier: VSet, columns: Sequence[str], bounds=None
+        self, frontier: VSet, columns: Sequence[str], bounds=None, topo=None
     ) -> int:
-        """Prefetch vertex column chunks overlapping the frontier envelope."""
+        """Prefetch vertex column chunks overlapping the frontier envelope.
+
+        ``topo`` pins the file registry to read from — the primitives pass
+        their snapshot-pinned epoch here so prefetch and the read path
+        resolve the exact same file set (core/epochs.py)."""
         if not columns or frontier.size() == 0:
             return 0
+        topo = topo if topo is not None else self.topology
         lo, hi = frontier.min_max()
         issued = 0
-        vt = self.topology.vertex_info[frontier.vertex_type]
+        vt = topo.vertex_info[frontier.vertex_type]
         for finfo in vt.files:
-            meta = self.topology.vertex_file_metas[finfo.key]
+            meta = topo.vertex_file_metas[finfo.key]
             for g in meta.row_groups:
                 g_lo = finfo.dense_offset + g.first_row
                 g_hi = g_lo + g.n_rows - 1
@@ -103,14 +108,16 @@ class Prefetcher:
         columns: Sequence[str],
         direction: str = "out",
         bounds=None,
+        topo=None,
     ) -> int:
         """Prefetch edge-attribute chunks for portions the frontier can hit."""
         if not columns or frontier.size() == 0:
             return 0
+        topo = topo if topo is not None else self.topology
         lo, hi = frontier.min_max()
         issued = 0
-        for el in self.topology.all_edge_lists(edge_type):
-            meta = self.topology.edge_file_metas[el.file_key]
+        for el in topo.all_edge_lists(edge_type):
+            meta = topo.edge_file_metas[el.file_key]
             live = el.portions_overlapping(lo, hi, direction=direction)
             self.stats["pruned_portions"] += len(el.portions) - len(live)
             for p in live:

@@ -24,17 +24,35 @@ class SyncReport:
     vertex_changes_detected: bool = False
 
 
+class MissingTableError(RuntimeError):
+    """A schema-mapped table does not exist in the lake — a configuration
+    error, never silently treated as 'no snapshots yet'."""
+
+
 class GraphCatalog:
-    def __init__(self, store: ObjectStore, schema: GraphSchema, topology: GraphTopology):
+    def __init__(self, store: ObjectStore, schema: GraphSchema,
+                 topology: GraphTopology, epochs=None):
         self.store = store
         self.lake = LakeCatalog(store)
         self.schema = schema
         self.topology = topology
+        # when an EpochManager is attached (core/epochs.py), sync() promotes
+        # to its epoch-publishing advance(); the legacy in-place refresh
+        # remains for catalogs watching a bare topology
+        self.epochs = epochs
         self._vertex_snapshots: dict[str, int] = {}
         for name, vt in schema.vertex_types.items():
+            table = self.lake.table(vt.table)
+            if not table.exists():
+                raise MissingTableError(
+                    f"vertex type {name!r} maps to table {vt.table!r}, "
+                    f"which does not exist in the lake"
+                )
             try:
-                self._vertex_snapshots[name] = self.lake.table(vt.table).current_snapshot().snapshot_id
-            except Exception:
+                self._vertex_snapshots[name] = table.current_snapshot().snapshot_id
+            except RuntimeError:
+                # the table exists but has no snapshots yet (created, never
+                # committed) — a legitimate empty state, not a misconfiguration
                 self._vertex_snapshots[name] = -1
 
     def mapping(self) -> dict[str, dict]:
@@ -55,7 +73,23 @@ class GraphCatalog:
         }
 
     def sync(self) -> SyncReport:
-        """Poll the lake for table changes; update topology incrementally."""
+        """Poll the lake for table changes; update topology incrementally.
+
+        With an attached :class:`~repro.core.epochs.EpochManager` this is
+        the epoch-publishing ``advance()`` — consistent snapshot diffing,
+        incremental delta merges and file-scoped cache invalidation — and
+        the report is translated back to the legacy shape.
+        """
+        if self.epochs is not None:
+            r = self.epochs.advance()
+            return SyncReport(
+                edge_lists_added=r.edge_files_added,
+                edge_lists_removed=r.edge_files_removed,
+                vertex_changes_detected=bool(
+                    r.vertex_files_added or r.vertex_files_removed
+                    or r.mode == "rebuild"
+                ),
+            )
         report = SyncReport()
         for ename in self.schema.edge_types:
             added, removed = self.topology.refresh_edges(self.store, self.lake, ename)

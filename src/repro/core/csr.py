@@ -26,6 +26,7 @@ from __future__ import annotations
 import io
 import struct
 import time
+from typing import Optional
 
 import numpy as np
 
@@ -110,6 +111,110 @@ class CSRIndex:
             rev_indptr=rev_indptr,
             rev_src=src[rev_order],
             rev_eid=rev_order,
+            build_seconds=time.perf_counter() - t0,
+        )
+
+    # ---------------------------------------------------------- incremental
+
+    @staticmethod
+    def _pad_indptr(indptr: np.ndarray, n_new: int) -> np.ndarray:
+        """Extend an indptr to ``n_new`` vertices (new tail vertices have
+        empty adjacency ranges).  Returns the input when nothing grows."""
+        n_old = len(indptr) - 1
+        if n_new == n_old:
+            return indptr
+        if n_new < n_old:
+            raise ValueError(f"CSR vertex space cannot shrink ({n_old} -> {n_new})")
+        out = np.empty(n_new + 1, dtype=np.int64)
+        out[: n_old + 1] = indptr
+        out[n_old + 1:] = indptr[-1]
+        return out
+
+    def padded(self, n_src: int, n_dst: int) -> "CSRIndex":
+        """This index re-dimensioned for a grown vertex space (append-only
+        vertex commits).  Edge arrays are shared, only indptrs reallocate —
+        the O(V) carry-forward the epoch manager uses for edge types whose
+        edges did not change (DESIGN.md §7)."""
+        if n_src == self.n_src and n_dst == self.n_dst:
+            return self
+        return CSRIndex(
+            edge_type=self.edge_type,
+            n_src=n_src,
+            n_dst=n_dst,
+            fwd_indptr=self._pad_indptr(self.fwd_indptr, n_src),
+            fwd_dst=self.fwd_dst,
+            fwd_eid=self.fwd_eid,
+            rev_indptr=self._pad_indptr(self.rev_indptr, n_dst),
+            rev_src=self.rev_src,
+            rev_eid=self.rev_eid,
+        )
+
+    def extended(
+        self,
+        src_new: np.ndarray,
+        dst_new: np.ndarray,
+        n_src: int,
+        n_dst: int,
+        eid_base: Optional[int] = None,
+    ) -> "CSRIndex":
+        """A *new* CSRIndex with ``(src_new, dst_new)`` delta edges merged in.
+
+        The incremental-epoch maintenance path (DESIGN.md §7): append-only
+        edge commits add edge lists at the end of the global-edge-id space,
+        so each vertex's adjacency range grows at its tail — an O(E_old +
+        E_new log E_new) positional merge (copies + one delta-sized sort)
+        instead of the full rebuild's two O(E_total log E_total) argsorts
+        over re-concatenated arrays.  ``self`` is untouched (epochs are
+        immutable; the previous epoch keeps serving from the old index), and
+        the result is bit-identical to ``from_arrays`` over the concatenated
+        edge set: old slots keep their order, delta slots append per vertex
+        in delta order, so eids stay monotone within every adjacency range.
+        """
+        t0 = time.perf_counter()
+        src_new = np.asarray(src_new, dtype=np.int64)
+        dst_new = np.asarray(dst_new, dtype=np.int64)
+        if eid_base is None:
+            eid_base = self.n_edges
+
+        def merge(indptr_old, far_old, eid_old, group_new, far_new, n_groups):
+            indptr_old = self._pad_indptr(indptr_old, n_groups)
+            old_deg = np.diff(indptr_old)
+            new_cnt = np.bincount(group_new, minlength=n_groups)
+            indptr = np.zeros(n_groups + 1, dtype=np.int64)
+            np.cumsum(old_deg + new_cnt, out=indptr[1:])
+            # old slots shift by the delta edges inserted before their vertex
+            shift = indptr[:-1] - indptr_old[:-1]
+            pos_old = np.arange(len(far_old), dtype=np.int64) + np.repeat(shift, old_deg)
+            order = np.argsort(group_new, kind="stable")
+            g_sorted = group_new[order]
+            # rank within each vertex group of the sorted delta
+            rank = np.arange(len(g_sorted), dtype=np.int64) - np.searchsorted(
+                g_sorted, g_sorted, side="left"
+            )
+            pos_new = indptr[g_sorted] + old_deg[g_sorted] + rank
+            total = len(far_old) + len(far_new)
+            far = np.empty(total, dtype=np.int64)
+            eid = np.empty(total, dtype=np.int64)
+            far[pos_old] = far_old
+            far[pos_new] = far_new[order]
+            eid[pos_old] = eid_old
+            eid[pos_new] = eid_base + order
+            return indptr, far, eid
+
+        fwd_indptr, fwd_dst, fwd_eid = merge(
+            self.fwd_indptr, self.fwd_dst, self.fwd_eid, src_new, dst_new, n_src)
+        rev_indptr, rev_src, rev_eid = merge(
+            self.rev_indptr, self.rev_src, self.rev_eid, dst_new, src_new, n_dst)
+        return CSRIndex(
+            edge_type=self.edge_type,
+            n_src=n_src,
+            n_dst=n_dst,
+            fwd_indptr=fwd_indptr,
+            fwd_dst=fwd_dst,
+            fwd_eid=fwd_eid,
+            rev_indptr=rev_indptr,
+            rev_src=rev_src,
+            rev_eid=rev_eid,
             build_seconds=time.perf_counter() - t0,
         )
 

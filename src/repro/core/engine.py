@@ -25,6 +25,7 @@ from repro import perf_flags
 from repro.core.accumulators import Accumulators, AccumSpec
 from repro.core.cache.manager import CacheConfig, CacheManager
 from repro.core.cache.prefetch import Prefetcher
+from repro.core.epochs import AdvanceReport, EpochManager
 from repro.core.primitives import EdgeFrame, edge_scan, read_vertex_values, vertex_map
 from repro.core.topology import GraphTopology
 from repro.core.types import GraphSchema, VSet
@@ -53,9 +54,11 @@ class GraphLakeEngine:
         self.materialize_topology = materialize_topology
         self.prefetcher: Optional[Prefetcher] = None
         self.accums = None
+        self.epochs: Optional[EpochManager] = None
         self.startup_seconds: float = 0.0
         self.startup_mode: str = "unstarted"
         self._started = False
+        self._file_filter = None
 
     # ------------------------------------------------------------------ startup
 
@@ -76,9 +79,38 @@ class GraphLakeEngine:
             else None
         )
         self.accums = Accumulators(self.topology)
+        # pin the loaded lake state as epoch 1 (DESIGN.md §7); queries
+        # acquire/release epochs so mid-query commits can never tear reads
+        self._file_filter = file_filter
+        self.epochs = EpochManager(self)
+        self.epochs.bootstrap()
         self.startup_seconds = time.perf_counter() - t0
         self._started = True
         return dict(self.topology.timings)
+
+    # ------------------------------------------------------------------ epochs
+
+    def advance(self) -> AdvanceReport:
+        """Sync with the lake: diff tables against the current epoch, apply
+        incremental deltas, publish a new epoch (core/epochs.py)."""
+        return self.epochs.advance()
+
+    def current_epoch(self):
+        return self.epochs.current()
+
+    def adopt_topology(self, topology: GraphTopology) -> None:
+        """Swap in a freshly rebuilt builder topology (the epoch manager's
+        non-incremental fallback).  Accumulator state is dropped — a rebuild
+        renumbers the dense space, so old accumulator slots are meaningless."""
+        self.topology = topology
+        if self.prefetcher is not None:
+            self.prefetcher = Prefetcher(self.cache, topology, pool=self.pool)
+        self.accums = Accumulators(topology)
+
+    def _topo(self, epoch=None):
+        """Resolve the topology surface a read should use: an explicitly
+        pinned epoch, else the live builder topology (analytics paths)."""
+        return epoch if epoch is not None else self.topology
 
     def close(self) -> None:
         self.pool.close()
@@ -91,24 +123,35 @@ class GraphLakeEngine:
 
     # ------------------------------------------------------------------ vsets
 
-    def all_vertices(self, vertex_type: str) -> VSet:
-        n = self.topology.n_vertices(vertex_type)
+    def all_vertices(self, vertex_type: str, epoch=None) -> VSet:
+        topo = self._topo(epoch)
+        n = topo.n_vertices(vertex_type)
         mask = np.zeros(n, dtype=bool)
-        mask[: self.topology.n_real_vertices(vertex_type)] = True
+        mask[: topo.n_real_vertices(vertex_type)] = True
         return VSet(vertex_type, mask)
 
-    def empty_vset(self, vertex_type: str) -> VSet:
-        return VSet.empty(vertex_type, self.topology.n_vertices(vertex_type))
+    def empty_vset(self, vertex_type: str, epoch=None) -> VSet:
+        return VSet.empty(vertex_type, self._topo(epoch).n_vertices(vertex_type))
 
-    def vset_from_raw_ids(self, vertex_type: str, raw_ids) -> VSet:
-        """Seed a vertex set from raw (lakehouse) primary-key values."""
-        if self.topology.idm is None or self.topology.idm.n_mapped(vertex_type) == 0:
-            self.topology._rebuild_idm(self.store)
-        tids = self.topology.idm.translate(
+    def vset_from_raw_ids(self, vertex_type: str, raw_ids, epoch=None) -> VSet:
+        """Seed a vertex set from raw (lakehouse) primary-key values.
+
+        With a pinned epoch, translation uses the IDM the epoch was frozen
+        with — its file-id assignments match the epoch's registry even after
+        a full rebuild re-assigned them — and the set size comes from the
+        epoch, so an ID committed after the epoch raises instead of silently
+        leaking future data in."""
+        topo = self._topo(epoch)
+        idm = getattr(epoch, "idm", None) if epoch is not None else None
+        if idm is None or idm.n_mapped(vertex_type) == 0:
+            if self.topology.idm is None or self.topology.idm.n_mapped(vertex_type) == 0:
+                self.topology._rebuild_idm(self.store)
+            idm = self.topology.idm
+        tids = idm.translate(
             vertex_type, np.asarray(raw_ids, dtype=np.int64), allow_dangling=False
         )
-        dense = self.topology.tid_to_dense(vertex_type, tids)
-        return VSet.from_dense_ids(vertex_type, self.topology.n_vertices(vertex_type), dense)
+        dense = topo.tid_to_dense(vertex_type, tids)
+        return VSet.from_dense_ids(vertex_type, topo.n_vertices(vertex_type), dense)
 
     # ------------------------------------------------------------------ primitives
 
@@ -126,9 +169,10 @@ class GraphLakeEngine:
         return self.pool if pipeline else None
 
     def vertex_map(self, vset: VSet, columns=(), filter_fn=None, map_fn=None,
-                   bounds=None, counters=None, pipeline: Optional[bool] = None):
+                   bounds=None, counters=None, pipeline: Optional[bool] = None,
+                   epoch=None):
         return vertex_map(
-            self.topology, self.cache, vset, columns,
+            self._topo(epoch), self.cache, vset, columns,
             filter_fn=filter_fn, map_fn=map_fn, prefetcher=self.prefetcher,
             bounds=bounds, counters=counters, pool=self._query_pool(pipeline),
         )
@@ -146,17 +190,20 @@ class GraphLakeEngine:
         plan=None,
         counters=None,
         pipeline: Optional[bool] = None,
+        epoch=None,
     ) -> EdgeFrame:
         return edge_scan(
-            self.topology, self.cache, frontier, edge_type, direction,
+            self._topo(epoch), self.cache, frontier, edge_type, direction,
             edge_columns=edge_columns, u_columns=u_columns, v_columns=v_columns,
             edge_filter=edge_filter, prefetcher=self.prefetcher,
             strategy=strategy, plan=plan, counters=counters,
             pool=self._query_pool(pipeline),
         )
 
-    def read_vertex_column(self, vertex_type: str, dense_ids, column: str) -> np.ndarray:
-        return read_vertex_values(self.topology, self.cache, vertex_type, dense_ids, column)
+    def read_vertex_column(self, vertex_type: str, dense_ids, column: str,
+                           epoch=None) -> np.ndarray:
+        return read_vertex_values(self._topo(epoch), self.cache, vertex_type,
+                                  dense_ids, column)
 
     # ------------------------------------------------------------------ accums
 

@@ -1,0 +1,547 @@
+"""Snapshot-pinned epochs: consistent reads + incremental delta sync
+(DESIGN.md §7).
+
+GraphLake computes *directly over* evolving lake tables, so the engine needs
+a first-class answer to "which version of the lake is this query reading?".
+Before this subsystem nothing was pinned: a ``commit()`` landing mid-query
+tore reads (the planner, prefetcher and pipelined readers each consulted the
+live, mutating topology), any vertex-table change forced a full topology
+rebuild, and the cache could not invalidate per-file.
+
+A :class:`GraphEpoch` is an immutable view of the whole graph: for every
+vertex/edge table it pins the ``(snapshot_id, data-file set)``, plus the
+topology-plane version, the frozen per-edge-type edge-list tuples, the
+frozen vertex file registry and the dangling tail.  It exposes the same
+read surface as :class:`~repro.core.topology.GraphTopology` (duck-typed:
+``all_edge_lists`` / ``tid_to_dense`` / ``plane`` / file metas / ...), so
+``Query.run``, the ``read_pipeline`` planners, the staged ``edge_scan``
+evaluators and the prefetcher simply *receive an epoch where they used to
+receive the topology* — every file they resolve comes from the pinned sets,
+and results are bit-identical no matter what commits land mid-query.
+
+The :class:`EpochManager` owns refcounted epochs:
+
+- ``acquire()`` / ``release()`` pin an epoch for a query's lifetime;
+  in-flight queries drain on their pinned epoch while new queries pick up
+  the latest one;
+- ``advance()`` (the promotion of ``GraphCatalog.sync``) diffs the lake
+  against the current epoch and applies **incremental deltas** to the
+  mutable builder topology: append-only edge commits build edge lists for
+  the *new files only* and merge them into the per-type CSR via
+  :meth:`~repro.core.csr.CSRIndex.extended`; append-only vertex commits
+  extend the Vertex IDM's dense offsets (``VertexIDM.extend_batch``) —
+  replacing the old "any vertex change ⇒ full rebuild" flag; removed or
+  replaced files trigger **file-scoped cache invalidation**
+  (``CacheManager.invalidate_file`` evicts exactly the affected
+  ``(file, row-group)`` units, nothing else).  Only vertex-file *removals*
+  (dense offsets of later files shift) — or vertex appends while dangling
+  vertices exist (the dangling tail sits right after the real rows, so the
+  tail's dense ids would shift) — fall back to a full rebuild;
+- the new epoch then publishes atomically; a superseded epoch whose
+  refcount has drained is *retired*: its pinned edge-list tuples and
+  derived plane state (CSR, concat caches) are dropped so delta buffers
+  only ever live as long as some query needs them.
+
+Concurrency contract: ``advance()`` mutates the builder topology only by
+*rebinding* or *appending* (epochs pin tuples and insert-only dicts), so
+readers on any pinned epoch never observe intermediate state; one advancer
+runs at a time (``_advance_lock``); publish/acquire/release share one short
+mutex.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.topology import (
+    GraphTopology,
+    dense_to_file_row_for,
+    tid_to_dense_for,
+)
+from repro.core.topology_plane import TopologyPlane
+from repro.lakehouse.columnfile import read_column_chunk, read_footer
+
+
+@dataclasses.dataclass(frozen=True)
+class TablePin:
+    """One lake table as an epoch sees it: snapshot + exact data-file set."""
+
+    table: str
+    snapshot_id: int
+    data_files: tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochVertexType:
+    """Frozen registry slice of one vertex type (same shape the prefetcher
+    and the dense translators consume on the mutable topology)."""
+
+    name: str
+    table: str
+    primary_key: str
+    files: tuple  # tuple[VertexFileInfo, ...] — entries are write-once
+
+    @property
+    def n_real(self) -> int:
+        return sum(f.n_rows for f in self.files)
+
+
+@dataclasses.dataclass
+class AdvanceReport:
+    """What one ``EpochManager.advance()`` observed and did."""
+
+    changed: bool = False
+    mode: str = "noop"              # "noop" | "incremental" | "rebuild"
+    from_epoch: int = -1
+    to_epoch: int = -1
+    vertex_files_added: int = 0
+    vertex_files_removed: int = 0
+    edge_files_added: int = 0
+    edge_files_removed: int = 0
+    vertices_added: int = 0
+    edges_added: int = 0
+    csr_extended: list = dataclasses.field(default_factory=list)
+    cache_units_evicted: int = 0
+    wall_s: float = 0.0
+
+
+class GraphEpoch:
+    """An immutable, refcounted view of the graph at one lake state.
+
+    Exposes the read-path surface of :class:`GraphTopology` (duck-typed), so
+    the primitives, planners and prefetcher resolve every file through the
+    pinned state.  File-meta dicts and the file registry are *shared* with
+    the builder topology — they are insert-only, and entries are never
+    mutated, so sharing is safe; the file *sets* that decide what a query
+    touches are pinned as tuples here.
+    """
+
+    def __init__(
+        self,
+        epoch_id: int,
+        schema,
+        vertex_pins: dict[str, TablePin],
+        edge_pins: dict[str, TablePin],
+        vertex_info: dict[str, EpochVertexType],
+        file_registry: dict,
+        vertex_file_metas: dict,
+        edge_file_metas: dict,
+        edge_lists: dict[str, tuple],
+        n_dangling: int,
+        topology_version: int,
+        idm=None,
+    ):
+        self.epoch_id = epoch_id
+        self.schema = schema
+        self.vertex_pins = vertex_pins
+        self.edge_pins = edge_pins
+        self.vertex_info = vertex_info
+        self.file_registry = file_registry
+        self.vertex_file_metas = vertex_file_metas
+        self.edge_file_metas = edge_file_metas
+        self._edge_lists = edge_lists
+        self._n_real = {name: vt.n_real for name, vt in vertex_info.items()}
+        self.n_dangling = n_dangling
+        self.topology_version = topology_version
+        # the IDM whose file-id assignments match this epoch's registry.
+        # Incremental advances extend the same object in place (safe: old raw
+        # ids keep their translations), but a full rebuild re-assigns file
+        # ids — raw-id seeds on an old pinned epoch must translate through
+        # the IDM it was frozen with, never the rebuilt one.
+        self.idm = idm
+        self.created_at = time.time()
+        self.retired = False
+        self._refs = 0
+        # per-epoch derived representations: CSR / concat / eid offsets are
+        # built (or carried forward) against the pinned edge lists, never
+        # against the mutating builder topology
+        self.plane = TopologyPlane(self)
+
+    # -- the GraphTopology read surface (duck-typed) -------------------------
+
+    def all_edge_lists(self, edge_type: str):
+        return self._edge_lists[edge_type]
+
+    def n_real_vertices(self, vertex_type: str) -> int:
+        return self._n_real[vertex_type]
+
+    def n_vertices(self, vertex_type: str) -> int:
+        return self._n_real[vertex_type] + self.n_dangling
+
+    def n_edges(self, edge_type: Optional[str] = None) -> int:
+        if edge_type is not None:
+            return sum(el.n_edges for el in self._edge_lists[edge_type])
+        return sum(self.n_edges(e) for e in self._edge_lists)
+
+    def tid_to_dense(self, vertex_type: str, tids: np.ndarray) -> np.ndarray:
+        return tid_to_dense_for(
+            self.vertex_info[vertex_type].files,
+            self._n_real[vertex_type], vertex_type, tids,
+        )
+
+    def dense_to_file_row(self, vertex_type: str, dense: np.ndarray):
+        return dense_to_file_row_for(
+            self.vertex_info[vertex_type].files,
+            self._n_real[vertex_type], dense,
+        )
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def staleness_s(self) -> float:
+        """Seconds since this view of the lake was pinned."""
+        return max(0.0, time.time() - self.created_at)
+
+    def refs(self) -> int:
+        return self._refs
+
+
+class EpochManager:
+    """Owns the epoch sequence: bootstrap, acquire/release, advance, retire."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._lock = threading.Lock()           # publish / acquire / release
+        self._advance_lock = threading.Lock()   # one advancer at a time
+        self._current: Optional[GraphEpoch] = None
+        self._next_id = 1
+        self.stats = {"published": 0, "retired": 0, "advances": 0,
+                      "noop_advances": 0, "rebuilds": 0}
+
+    # -- pinning ---------------------------------------------------------------
+
+    def current(self) -> GraphEpoch:
+        with self._lock:
+            return self._current
+
+    def current_id(self) -> int:
+        return self.current().epoch_id
+
+    def acquire(self) -> GraphEpoch:
+        """Pin the current epoch for a query's lifetime (refcounted)."""
+        with self._lock:
+            e = self._current
+            e._refs += 1
+            return e
+
+    def release(self, epoch: GraphEpoch) -> None:
+        with self._lock:
+            epoch._refs = max(0, epoch._refs - 1)
+            if epoch._refs == 0 and epoch is not self._current:
+                self._retire(epoch)
+
+    def _publish(self, epoch: GraphEpoch) -> None:
+        with self._lock:
+            old = self._current
+            self._current = epoch
+            self.stats["published"] += 1
+            if old is not None and old._refs == 0:
+                self._retire(old)
+
+    def _retire(self, epoch: GraphEpoch) -> None:
+        # caller holds self._lock; nobody references the epoch anymore, so
+        # drop its delta buffers: the pinned edge-list tuples and every
+        # derived plane representation (CSR / concat) it owned
+        epoch.retired = True
+        epoch._edge_lists = {}
+        epoch.plane.invalidate()
+        self.stats["retired"] += 1
+
+    # -- bootstrap ---------------------------------------------------------------
+
+    def bootstrap(self) -> GraphEpoch:
+        """Pin the freshly-started topology as epoch 1."""
+        eng = self.engine
+        topo = eng.topology
+        vertex_pins = {}
+        for name, vt in topo.vertex_info.items():
+            files = tuple(f.key for f in vt.files)
+            vertex_pins[name] = TablePin(
+                table=vt.table,
+                snapshot_id=self._match_snapshot(vt.table, files),
+                data_files=files,
+            )
+        edge_pins = {}
+        for ename, et in topo.schema.edge_types.items():
+            files = tuple(el.file_key for el in topo.edge_lists[ename])
+            edge_pins[ename] = TablePin(
+                table=et.table,
+                snapshot_id=topo._edge_snapshot_ids.get(ename, -1),
+                data_files=files,
+            )
+        epoch = self._freeze(topo, vertex_pins, edge_pins)
+        # adopt derived state the startup path already built — notably CSR
+        # indexes restored from the materialized topology blob (the
+        # second-connection fast path must reach epoch-pinned queries too)
+        for ename, csr in topo.plane.built_csrs().items():
+            epoch.plane.adopt(ename, csr=csr)
+        for ename in topo.schema.edge_types:
+            epoch.plane.adopt(
+                ename,
+                concat=topo.plane.cached_concat(ename),
+                eid_offsets=topo.plane.cached_eid_offsets(ename),
+            )
+        self._publish(epoch)
+        return epoch
+
+    def _match_snapshot(self, table: str, files: tuple[str, ...]) -> int:
+        """Find the snapshot whose file set the topology actually loaded.
+
+        A materialized topology can lag the table HEAD; pinning the matching
+        snapshot (newest first) makes the first ``advance()`` diff correctly.
+        ``-1`` when nothing matches — the next advance reconciles by file set.
+        """
+        try:
+            t = self.engine.lake.table(table)
+            want = set(files)
+            for snap in reversed(t.snapshots()):
+                if set(t.data_files(snap.snapshot_id)) == want:
+                    return snap.snapshot_id
+        except Exception:
+            pass
+        return -1
+
+    def _freeze(self, topo: GraphTopology, vertex_pins, edge_pins) -> GraphEpoch:
+        vertex_info = {
+            name: EpochVertexType(
+                name=name, table=vt.table, primary_key=vt.primary_key,
+                files=tuple(vt.files),
+            )
+            for name, vt in topo.vertex_info.items()
+        }
+        epoch = GraphEpoch(
+            epoch_id=self._next_id,
+            schema=topo.schema,
+            vertex_pins=vertex_pins,
+            edge_pins=edge_pins,
+            vertex_info=vertex_info,
+            file_registry=topo.file_registry,
+            vertex_file_metas=topo.vertex_file_metas,
+            edge_file_metas=topo.edge_file_metas,
+            edge_lists={e: tuple(els) for e, els in topo.edge_lists.items()},
+            n_dangling=topo._n_dangling,
+            topology_version=topo.version,
+            idm=topo.idm,
+        )
+        self._next_id += 1
+        return epoch
+
+    # -- advance ---------------------------------------------------------------
+
+    def advance(self) -> AdvanceReport:
+        """Diff the lake against the current epoch; publish a new epoch.
+
+        Append-only commits apply as deltas (new edge lists, CSR merge
+        extension, IDM dense-offset extension); removed/replaced files evict
+        exactly their cache units; vertex-file removal (or a vertex append
+        while dangling vertices exist) falls back to a full rebuild.  No-op
+        when nothing changed — the current epoch stays published.
+        """
+        eng = self.engine
+        if getattr(eng, "_file_filter", None) is not None:
+            raise RuntimeError(
+                "advance() is unsupported on a file-filtered (sharded) engine; "
+                "re-shard and restart instead")
+        with self._advance_lock:
+            t0 = time.perf_counter()
+            cur = self.current()
+            topo = eng.topology
+            lake, store = eng.lake, eng.store
+            report = AdvanceReport(from_epoch=cur.epoch_id, to_epoch=cur.epoch_id)
+            self.stats["advances"] += 1
+
+            # diff every pinned table against the lake — one job per table
+            # through the engine's IOPool, so the modeled metadata latency
+            # is paid once across tables, not once per table
+            def resolve(pin: TablePin):
+                t = lake.table(pin.table)
+                snap = t.current_snapshot()
+                if snap.snapshot_id == pin.snapshot_id:
+                    return None
+                return (snap.snapshot_id, tuple(t.data_files(snap.snapshot_id)))
+
+            items = (
+                [("v", name, pin) for name, pin in cur.vertex_pins.items()]
+                + [("e", ename, pin) for ename, pin in cur.edge_pins.items()]
+            )
+            pool = getattr(eng, "pool", None)
+            if pool is not None:
+                futs = [(kind, name, pool.submit(resolve, pin))
+                        for kind, name, pin in items]
+                states = [(kind, name, f.result()) for kind, name, f in futs]
+            else:
+                states = [(kind, name, resolve(pin)) for kind, name, pin in items]
+            vdiffs: dict[str, tuple[int, tuple[str, ...]]] = {}
+            ediffs: dict[str, tuple[int, tuple[str, ...]]] = {}
+            for kind, name, state in states:
+                if state is not None:
+                    (vdiffs if kind == "v" else ediffs)[name] = state
+
+            if not vdiffs and not ediffs:
+                self.stats["noop_advances"] += 1
+                report.wall_s = time.perf_counter() - t0
+                return report
+
+            removed_keys: list[str] = []
+            v_added: dict[str, list[str]] = {}
+            rebuild = False
+            for name, (_sid, files) in vdiffs.items():
+                old = set(cur.vertex_pins[name].data_files)
+                added = [k for k in files if k not in old]
+                removed = [k for k in old if k not in set(files)]
+                removed_keys += removed
+                report.vertex_files_added += len(added)
+                report.vertex_files_removed += len(removed)
+                v_added[name] = added
+                if removed:
+                    rebuild = True   # dense offsets of every later file shift
+                elif added and topo._n_dangling > 0:
+                    rebuild = True   # the dangling dense tail would shift
+            for ename, (_sid, files) in ediffs.items():
+                old = set(cur.edge_pins[ename].data_files)
+                report.edge_files_added += len([k for k in files if k not in old])
+                removed = [k for k in old if k not in set(files)]
+                report.edge_files_removed += len(removed)
+                removed_keys += removed
+
+            report.changed = True
+            if rebuild:
+                report.mode = "rebuild"
+                self.stats["rebuilds"] += 1
+                topo = self._full_rebuild()
+            else:
+                report.mode = "incremental"
+                # vertices first: the IDM must cover appended vertices before
+                # delta edge files translate their FK columns
+                for name, added in v_added.items():
+                    if added:
+                        report.vertices_added += self._apply_vertex_append(
+                            topo, name, added)
+                e_before = topo.n_edges()
+                for ename in ediffs:
+                    topo.refresh_edges(store, lake, ename)
+                report.edges_added = max(0, topo.n_edges() - e_before)
+
+            for key in removed_keys:
+                report.cache_units_evicted += eng.cache.invalidate_file(key)
+
+            new_epoch = self._freeze(
+                topo,
+                vertex_pins=self._new_vertex_pins(topo, cur, vdiffs),
+                edge_pins=self._new_edge_pins(topo, cur),
+            )
+            if not rebuild:
+                self._carry_plane(cur, new_epoch, ediffs, report)
+            self._publish(new_epoch)
+            report.to_epoch = new_epoch.epoch_id
+            report.wall_s = time.perf_counter() - t0
+            return report
+
+    # -- delta application -------------------------------------------------------
+
+    def _apply_vertex_append(self, topo: GraphTopology, name: str,
+                             added_keys: list[str]) -> int:
+        """Register appended vertex files + extend the IDM's dense offsets."""
+        store = self.engine.store
+        vt = topo.schema.vertex_types[name]
+        idm = topo.idm
+        can_extend = (
+            idm is not None and idm._frozen
+            and sum(idm.n_mapped(t) for t in topo.vertex_info) > 0
+        )
+        n_rows = 0
+        for key in added_keys:   # manifest order — matches a cold rebuild
+            meta = read_footer(store, key)
+            topo.vertex_file_metas[key] = meta
+            finfo = topo.register_vertex_file(name, key, meta.n_rows)
+            n_rows += meta.n_rows
+            if can_extend:
+                parts = [
+                    read_column_chunk(store, meta, vt.primary_key, g.index)
+                    for g in meta.row_groups
+                ]
+                idm.extend_batch(
+                    name,
+                    np.concatenate(parts) if len(parts) > 1 else parts[0],
+                    finfo.file_id,
+                )
+            # else: the IDM is absent/deallocated; the next lazy
+            # _rebuild_idm walks the registry and picks the new file up
+        topo.version += 1
+        return n_rows
+
+    def _full_rebuild(self) -> GraphTopology:
+        """Non-incremental fallback: rebuild from the lake HEAD and swap the
+        engine's builder topology.  Old epochs keep serving from their pinned
+        (now-orphaned) structures until they drain."""
+        eng = self.engine
+        new_topo = GraphTopology(eng.schema)
+        new_topo.build(eng.store, eng.lake, pool=eng.pool)
+        eng.adopt_topology(new_topo)
+        return new_topo
+
+    def _carry_plane(self, prev: GraphEpoch, nxt: GraphEpoch,
+                     ediffs: dict, report: AdvanceReport) -> None:
+        """Carry derived representations across an incremental advance.
+
+        Unchanged edge types share the previous epoch's CSR/concat outright
+        (indptrs padded if the vertex space grew); append-only deltas merge
+        into the CSR via ``CSRIndex.extended``.  Anything with removals is
+        left to rebuild lazily on first demand.
+        """
+        for ename, et in nxt.schema.edge_types.items():
+            old_lists = prev.all_edge_lists(ename)
+            new_lists = nxt.all_edge_lists(ename)
+            shared_prefix = len(new_lists) >= len(old_lists) and all(
+                a is b for a, b in zip(old_lists, new_lists)
+            )
+            if not shared_prefix:
+                continue  # removals/replacements: lazy rebuild
+            n_src = nxt.n_vertices(et.src_type)
+            n_dst = nxt.n_vertices(et.dst_type)
+            old_csr = prev.plane.csr(ename, build=False)
+            if len(new_lists) == len(old_lists):
+                # topologically unchanged: share everything, pad dims
+                if old_csr is not None:
+                    nxt.plane.adopt(ename, csr=old_csr.padded(n_src, n_dst))
+                nxt.plane.adopt(
+                    ename,
+                    concat=prev.plane.cached_concat(ename),
+                    eid_offsets=prev.plane.cached_eid_offsets(ename),
+                )
+                continue
+            delta = new_lists[len(old_lists):]
+            if old_csr is not None:
+                delta_src = np.concatenate([el.src_dense for el in delta])
+                delta_dst = np.concatenate([el.dst_dense for el in delta])
+                nxt.plane.adopt(ename, csr=old_csr.extended(
+                    delta_src, delta_dst, n_src, n_dst,
+                    eid_base=old_csr.n_edges,
+                ))
+                report.csr_extended.append(ename)
+
+    def _new_vertex_pins(self, topo, prev: GraphEpoch, vdiffs) -> dict:
+        pins = {}
+        for name, vt in topo.vertex_info.items():
+            sid = vdiffs[name][0] if name in vdiffs \
+                else prev.vertex_pins[name].snapshot_id
+            pins[name] = TablePin(
+                table=vt.table, snapshot_id=sid,
+                data_files=tuple(f.key for f in vt.files),
+            )
+        return pins
+
+    def _new_edge_pins(self, topo, prev: GraphEpoch) -> dict:
+        pins = {}
+        for ename, et in topo.schema.edge_types.items():
+            pins[ename] = TablePin(
+                table=et.table,
+                snapshot_id=topo._edge_snapshot_ids.get(
+                    ename, prev.edge_pins[ename].snapshot_id),
+                data_files=tuple(el.file_key for el in topo.edge_lists[ename]),
+            )
+        return pins

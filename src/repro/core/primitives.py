@@ -156,7 +156,7 @@ def vertex_map(
     rows are dropped from the output without the UDF seeing real values.
     """
     if prefetcher is not None:
-        prefetcher.prefetch_vertices(vset, columns, bounds=bounds)
+        prefetcher.prefetch_vertices(vset, columns, bounds=bounds, topo=topology)
     ids = vset.ids()
     frame = {"id": ids}
     cols, reject = read_vertex_columns_pruned(
@@ -253,8 +253,9 @@ def edge_scan(
         )
 
     if prefetcher is not None:
-        prefetcher.prefetch_edges(frontier, edge_type, edge_columns, direction=direction)
-        prefetcher.prefetch_vertices(frontier, u_columns)
+        prefetcher.prefetch_edges(frontier, edge_type, edge_columns,
+                                  direction=direction, topo=topology)
+        prefetcher.prefetch_vertices(frontier, u_columns, topo=topology)
 
     view = topology.plane.view(
         edge_type, strategy, frontier=frontier, direction=direction
@@ -318,11 +319,11 @@ def _edge_scan_staged(
         prefetcher.prefetch_edges(
             frontier, edge_type,
             tuple(plan.edge_columns) + tuple(plan.accum_edge_columns),
-            direction=direction, bounds=plan.edge_bounds,
+            direction=direction, bounds=plan.edge_bounds, topo=topology,
         )
         prefetcher.prefetch_vertices(
             frontier, tuple(plan.u_columns) + tuple(plan.accum_u_columns),
-            bounds=plan.u_bounds,
+            bounds=plan.u_bounds, topo=topology,
         )
 
     view = topology.plane.view(

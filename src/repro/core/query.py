@@ -42,6 +42,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.accumulators import AccumSpec
 from repro.core.plan import ColumnBounds, ScanPlan, merge_bounds, new_pruning_counters
 from repro.core.types import VSet
 
@@ -211,6 +212,11 @@ class QueryResult:
     # zone-map pruning counters accumulated over every read the query issued
     # (seed VertexMap + all hops); see plan.new_pruning_counters for keys
     pruning: dict = dataclasses.field(default_factory=new_pruning_counters)
+    # which snapshot-pinned epoch served the query and how stale its view of
+    # the lake was when the query finished (core/epochs.py); -1 = no epoch
+    # subsystem (query ran straight against the mutable topology)
+    epoch_id: int = -1
+    staleness_s: float = 0.0
 
 
 def plan_hop(hop: "_HopBlock") -> ScanPlan:
@@ -276,31 +282,55 @@ class Query:
     # -- execution ----------------------------------------------------------------
 
     def run(self, pushdown: bool = True,
-            pipeline: Optional[bool] = None) -> QueryResult:
+            pipeline: Optional[bool] = None, epoch=None) -> QueryResult:
         """Execute the query.  ``pushdown=False`` forces the legacy
         full-materialization scan path (no staging, no zone-map pruning) —
         the baseline the pushdown parity tests and benchmarks compare
         against.  ``pipeline`` pins the parallel chunk-pipelined read path
         on/off per run (``None`` defers to the ``pipe`` perf flag; the
         sequential path is the pipelining parity baseline, DESIGN.md §5).
-        All paths return bit-identical results."""
+        All paths return bit-identical results.
+
+        Every run executes against one snapshot-pinned epoch (DESIGN.md §7):
+        by default the engine's current epoch is acquired for the whole run
+        and released afterwards, so commits (and ``advance()``) landing
+        mid-query can never tear the result — the next run simply picks up
+        the newer epoch.  Pass ``epoch`` (an explicitly acquired
+        ``GraphEpoch``) to time-travel onto an older pinned view; the caller
+        then owns its release."""
         eng = self.engine
         seed = self._seed
         if seed is None:
             raise ValueError("query has no seed block")
         counters = new_pruning_counters()
 
+        mgr = getattr(eng, "epochs", None)
+        acquired = None
+        if epoch is None and mgr is not None:
+            epoch = acquired = mgr.acquire()
+        try:
+            return self._run_pinned(eng, seed, counters, pushdown, pipeline, epoch)
+        finally:
+            if acquired is not None:
+                mgr.release(acquired)
+
+    def _run_pinned(self, eng, seed, counters, pushdown, pipeline, epoch) -> QueryResult:
+        topo = epoch if epoch is not None else eng.topology
+        # pin the accumulator store too: a full-rebuild advance() swaps
+        # eng.accums (renumbered dense space), and this query's dense ids
+        # only mean anything in the store that matches its pinned epoch
+        accums = eng.accums
         if seed.raw_ids is not None:
-            vset = eng.vset_from_raw_ids(seed.vertex_type, seed.raw_ids)
+            vset = eng.vset_from_raw_ids(seed.vertex_type, seed.raw_ids, epoch=epoch)
         else:
-            vset = eng.all_vertices(seed.vertex_type)
+            vset = eng.all_vertices(seed.vertex_type, epoch=epoch)
         if seed.where is not None:
             vset, _ = eng.vertex_map(
                 vset,
                 columns=list(dict.fromkeys(seed.where.columns)),
                 filter_fn=lambda fr: seed.where.evaluate(fr, ""),
                 bounds=seed.where.bounds() if pushdown else None,
-                counters=counters, pipeline=pipeline,
+                counters=counters, pipeline=pipeline, epoch=epoch,
             )
 
         accum_out: dict[str, np.ndarray] = {}
@@ -315,6 +345,7 @@ class Query:
                 frame = eng.edge_scan(
                     vset, hop.edge_type, hop.direction,
                     plan=plan_hop(hop), counters=counters, pipeline=pipeline,
+                    epoch=epoch,
                 )
             else:
                 edge_cols, u_cols, v_cols = set(), set(), set()
@@ -346,6 +377,7 @@ class Query:
                     v_columns=sorted(v_cols),
                     edge_filter=_filter,
                     counters=counters, pipeline=pipeline,
+                    epoch=epoch,
                 )
             n_scanned += len(frame)
             frames.append(frame)
@@ -356,20 +388,27 @@ class Query:
                     tgt_type, tgt_ids = v_type, frame.v
                 else:
                     tgt_type, tgt_ids = u_type, frame.u
-                if (tgt_type, a.name) not in eng.accums._arrays:
-                    eng.register_accum(tgt_type, a.name, op=a.op, dtype=a.dtype)
+                if (tgt_type, a.name) not in accums._arrays:
+                    accums.register(AccumSpec(tgt_type, a.name, op=a.op, dtype=a.dtype))
                 if isinstance(a.value, str):
                     pfx, col = a.value.split(".", 1)
                     vals = frame.columns[f"{pfx}.{col}"]
                 else:
                     vals = a.value
-                eng.accums.update(tgt_type, a.name, tgt_ids, vals)
-                accum_out[a.name] = eng.accums.array(tgt_type, a.name)
+                accums.update(tgt_type, a.name, tgt_ids, vals)
+                # the result view is sized to *this* epoch's dense space, so
+                # it always aligns with the result vset's mask even when a
+                # later epoch has already grown the shared array
+                n_tgt = topo.n_vertices(tgt_type)
+                accums.ensure_capacity(tgt_type, a.name, n_tgt)
+                accum_out[a.name] = accums.array(tgt_type, a.name)[:n_tgt]
 
-            n_v = eng.topology.n_vertices(v_type)
+            n_v = topo.n_vertices(v_type)
             vset = frame.v_set(n_v)
 
         return QueryResult(
             vset=vset, accumulators=accum_out, n_edges_scanned=n_scanned,
             frames=frames, pruning=counters,
+            epoch_id=epoch.epoch_id if epoch is not None else -1,
+            staleness_s=epoch.staleness_s() if epoch is not None else 0.0,
         )

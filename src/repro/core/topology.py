@@ -41,6 +41,50 @@ from repro.lakehouse.objectstore import ObjectStore
 from repro.lakehouse.table import LakeCatalog
 
 
+def tid_to_dense_for(
+    files, n_real: int, vertex_type: str, tids: np.ndarray
+) -> np.ndarray:
+    """transformed IDs -> dense indices over a pinned file registry.
+
+    Shared by the mutable :class:`GraphTopology` and the immutable
+    :class:`~repro.core.epochs.GraphEpoch`, which pin different ``files``
+    tuples of the same vertex type (DESIGN.md §7)."""
+    file_ids, rows = split_transformed(tids)
+    max_fid = int(file_ids.max()) if len(file_ids) else 0
+    lut = np.full(max(max_fid + 1, 1), -1, dtype=np.int64)
+    for f in files:
+        if f.file_id <= max_fid:
+            lut[f.file_id] = f.dense_offset
+    dense = np.where(
+        file_ids == DANGLING_FILE_ID,
+        n_real + rows,
+        lut[np.minimum(file_ids, max_fid)] + rows,
+    )
+    if np.any((file_ids != DANGLING_FILE_ID) & (lut[np.minimum(file_ids, max_fid)] < 0)):
+        bad = file_ids[(file_ids != DANGLING_FILE_ID) & (lut[np.minimum(file_ids, max_fid)] < 0)][0]
+        raise KeyError(f"file id {bad} is not a {vertex_type} file")
+    return dense.astype(np.int64)
+
+
+def dense_to_file_row_for(files, n_real: int, dense: np.ndarray):
+    """dense indices -> (file_id, row) pairs over a pinned file registry."""
+    offsets = np.array([f.dense_offset for f in files], dtype=np.int64)
+    fids = np.array([f.file_id for f in files], dtype=np.int64)
+    dense = np.asarray(dense, dtype=np.int64)
+    idx = np.searchsorted(offsets, dense, side="right") - 1
+    idx = np.clip(idx, 0, max(len(offsets) - 1, 0))
+    if len(offsets):
+        file_ids = fids[idx]
+        rows = dense - offsets[idx]
+    else:
+        file_ids = np.zeros_like(dense)
+        rows = dense
+    dangling = dense >= n_real
+    file_ids = np.where(dangling, DANGLING_FILE_ID, file_ids)
+    rows = np.where(dangling, dense - n_real, rows)
+    return file_ids, rows
+
+
 class GraphTopology:
     def __init__(self, schema: GraphSchema):
         self.schema = schema
@@ -54,6 +98,9 @@ class GraphTopology:
         self._next_file_id = DANGLING_FILE_ID + 1
         self._n_dangling = 0
         self._edge_snapshot_ids: dict[str, int] = {}
+        # monotonic mutation counter: bumped on build/load/refresh so epochs
+        # (core/epochs.py) can pin exactly which topology state they froze
+        self.version = 0
         # the topology plane: physical representations (edge lists + CSR) and
         # the adaptive per-scan dispatch over them (DESIGN.md §3)
         self.plane = TopologyPlane(self)
@@ -86,41 +133,17 @@ class GraphTopology:
 
     def tid_to_dense(self, vertex_type: str, tids: np.ndarray) -> np.ndarray:
         """transformed IDs -> dense indices for ``vertex_type``. Vectorized."""
-        file_ids, rows = split_transformed(tids)
-        max_fid = int(file_ids.max()) if len(file_ids) else 0
-        lut = np.full(max(max_fid + 1, 1), -1, dtype=np.int64)
-        for f in self.vertex_info[vertex_type].files:
-            if f.file_id <= max_fid:
-                lut[f.file_id] = f.dense_offset
-        dense = np.where(
-            file_ids == DANGLING_FILE_ID,
-            self.n_real_vertices(vertex_type) + rows,
-            lut[np.minimum(file_ids, max_fid)] + rows,
+        return tid_to_dense_for(
+            self.vertex_info[vertex_type].files,
+            self.n_real_vertices(vertex_type), vertex_type, tids,
         )
-        if np.any((file_ids != DANGLING_FILE_ID) & (lut[np.minimum(file_ids, max_fid)] < 0)):
-            bad = file_ids[(file_ids != DANGLING_FILE_ID) & (lut[np.minimum(file_ids, max_fid)] < 0)][0]
-            raise KeyError(f"file id {bad} is not a {vertex_type} file")
-        return dense.astype(np.int64)
 
     def dense_to_file_row(self, vertex_type: str, dense: np.ndarray):
         """dense indices -> (file_id, row) pairs. Vectorized over sorted offsets."""
-        vt = self.vertex_info[vertex_type]
-        offsets = np.array([f.dense_offset for f in vt.files], dtype=np.int64)
-        fids = np.array([f.file_id for f in vt.files], dtype=np.int64)
-        dense = np.asarray(dense, dtype=np.int64)
-        n_real = self.n_real_vertices(vertex_type)
-        idx = np.searchsorted(offsets, dense, side="right") - 1
-        idx = np.clip(idx, 0, max(len(offsets) - 1, 0))
-        if len(offsets):
-            file_ids = fids[idx]
-            rows = dense - offsets[idx]
-        else:
-            file_ids = np.zeros_like(dense)
-            rows = dense
-        dangling = dense >= n_real
-        file_ids = np.where(dangling, DANGLING_FILE_ID, file_ids)
-        rows = np.where(dangling, dense - n_real, rows)
-        return file_ids, rows
+        return dense_to_file_row_for(
+            self.vertex_info[vertex_type].files,
+            self.n_real_vertices(vertex_type), dense,
+        )
 
     def all_edge_lists(self, edge_type: str) -> list[EdgeList]:
         return self.edge_lists[edge_type]
@@ -234,6 +257,7 @@ class GraphTopology:
                 self.edge_lists[ename].append(el)
             self._n_dangling = self.idm.n_dangling()
             self.timings["edge_list_build_s"] = time.perf_counter() - t2
+            self.version += 1
             self.plane.invalidate()
 
             if deallocate_idm:
@@ -378,6 +402,7 @@ class GraphTopology:
         finally:
             if own:
                 pool.close()
+        self.version += 1
         self.timings["load_topology_s"] = time.perf_counter() - t1
 
     # ------------------------------------------------------ incremental updates
@@ -396,39 +421,50 @@ class GraphTopology:
         snap = table.current_snapshot()
         if snap.snapshot_id == self._edge_snapshot_ids.get(edge_type):
             return (0, 0)
-        current = set(table.data_files(snap.snapshot_id))
+        current_files = table.data_files(snap.snapshot_id)
+        current = set(current_files)
         have = {el.file_key for el in self.edge_lists[edge_type]}
 
         removed = have - current
         if removed:
+            # rebind, never mutate in place: epochs pin the old list object
             self.edge_lists[edge_type] = [
                 el for el in self.edge_lists[edge_type] if el.file_key not in removed
             ]
-        added = sorted(current - have)
+        # manifest order, not lexicographic: appended lists then land in the
+        # same global-edge-id order a cold rebuild would produce, which is
+        # what keeps incremental epochs bit-identical to a fresh engine
+        added = [k for k in current_files if k not in have]
         if added and (self.idm is None or self.idm.n_mapped(et.src_type) == 0):
             self._rebuild_idm(store)
         for key in added:
-            meta = read_footer(store, key)
-            self.edge_file_metas[key] = meta
-            src_parts, dst_parts, rows = [], [], []
-            for g in meta.row_groups:
-                src_parts.append(read_column_chunk(store, meta, et.src_column, g.index))
-                dst_parts.append(read_column_chunk(store, meta, et.dst_column, g.index))
-                rows.append(g.n_rows)
-            el = build_edge_list(
-                edge_type, key,
-                np.concatenate(src_parts) if len(src_parts) > 1 else src_parts[0],
-                np.concatenate(dst_parts) if len(dst_parts) > 1 else dst_parts[0],
-                rows, self.idm, et.src_type, et.dst_type, self.tid_to_dense,
-            )
-            self.edge_lists[edge_type].append(el)
+            el = self.build_edge_list_for_file(store, edge_type, key)
+            self.edge_lists[edge_type] = self.edge_lists[edge_type] + [el]
             self._n_dangling = max(self._n_dangling, self.idm.n_dangling())
         self._edge_snapshot_ids[edge_type] = snap.snapshot_id
         if added or removed:
             # derived representations (CSR, concat cache) are stale now;
             # they rebuild lazily on next demand
+            self.version += 1
             self.plane.invalidate(edge_type)
         return (len(added), len(removed))
+
+    def build_edge_list_for_file(self, store: ObjectStore, edge_type: str, key: str):
+        """Fetch + translate one edge file into an EdgeList (delta builds)."""
+        et = self.schema.edge_types[edge_type]
+        meta = read_footer(store, key)
+        self.edge_file_metas[key] = meta
+        src_parts, dst_parts, rows = [], [], []
+        for g in meta.row_groups:
+            src_parts.append(read_column_chunk(store, meta, et.src_column, g.index))
+            dst_parts.append(read_column_chunk(store, meta, et.dst_column, g.index))
+            rows.append(g.n_rows)
+        return build_edge_list(
+            edge_type, key,
+            np.concatenate(src_parts) if len(src_parts) > 1 else src_parts[0],
+            np.concatenate(dst_parts) if len(dst_parts) > 1 else dst_parts[0],
+            rows, self.idm, et.src_type, et.dst_type, self.tid_to_dense,
+        )
 
     def _rebuild_idm(self, store: ObjectStore) -> None:
         self.idm = VertexIDM()

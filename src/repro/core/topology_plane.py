@@ -195,9 +195,28 @@ class TopologyPlane:
     def csr_ready(self, edge_type: str) -> bool:
         return edge_type in self._csr
 
+    def cached_concat(self, edge_type: str):
+        """The concat cache entry if built (epoch carry-forward), else None."""
+        return self._concat.get(edge_type)
+
+    def cached_eid_offsets(self, edge_type: str):
+        return self._eid_offsets.get(edge_type)
+
     def attach_csr(self, edge_type: str, csr: CSRIndex) -> None:
         """Adopt a deserialized CSR (topology materialization restore)."""
         self._csr[edge_type] = csr
+
+    def adopt(self, edge_type: str, csr: Optional[CSRIndex] = None,
+              concat=None, eid_offsets=None) -> None:
+        """Seed derived state carried forward from a previous epoch's plane
+        (unchanged edge types share it outright; append-only deltas pass an
+        incrementally-extended CSR) — see core/epochs.py, DESIGN.md §7."""
+        if csr is not None:
+            self._csr[edge_type] = csr
+        if concat is not None:
+            self._concat[edge_type] = concat
+        if eid_offsets is not None:
+            self._eid_offsets[edge_type] = eid_offsets
 
     def built_csrs(self) -> dict[str, CSRIndex]:
         return dict(self._csr)

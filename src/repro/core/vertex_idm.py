@@ -64,6 +64,41 @@ class VertexIDM:
         self._buffers.clear()
         self._frozen = True
 
+    def extend_batch(self, vertex_type: str, raw_ids: np.ndarray, file_id: int) -> None:
+        """Merge one *new* vertex file's PK column into a frozen IDM.
+
+        The incremental-epoch path (``EpochManager.advance``, DESIGN.md §7):
+        append-only vertex commits extend the dense space at the end, so the
+        sorted lookup arrays absorb the new (raw, transformed) pairs with one
+        O(V + B) vectorized merge — no re-sort, no full rebuild.  Readers are
+        lock-free: the sorted arrays are replaced atomically (attribute
+        rebind), so a concurrent ``translate`` sees either the old or the new
+        arrays, both correct for every pre-existing raw ID.
+        """
+        if not self._frozen:
+            raise RuntimeError("extend_batch requires a frozen IDM (use insert_batch)")
+        raw = np.asarray(raw_ids, dtype=np.int64)
+        tids = make_transformed(file_id, np.arange(len(raw), dtype=np.int64))
+        order = np.argsort(raw, kind="stable")
+        raw, tids = raw[order], tids[order]
+        if len(raw) > 1 and np.any(raw[1:] == raw[:-1]):
+            dup = raw[1:][raw[1:] == raw[:-1]][0]
+            raise ValueError(f"duplicate primary key {dup} in vertex type {vertex_type!r}")
+        with self._lock:
+            keys = self._sorted_raw.get(vertex_type, np.empty(0, dtype=np.int64))
+            vals = self._sorted_tid.get(vertex_type, np.empty(0, dtype=np.int64))
+            if len(keys) and len(raw):
+                pos_c = np.minimum(np.searchsorted(keys, raw), len(keys) - 1)
+                clash = keys[pos_c] == raw
+                if clash.any():
+                    raise ValueError(
+                        f"primary key {raw[clash][0]} already mapped in {vertex_type!r}"
+                    )
+            pos = np.searchsorted(keys, raw)
+            self._sorted_raw[vertex_type] = np.insert(keys, pos, raw)
+            self._sorted_tid[vertex_type] = np.insert(vals, pos, tids)
+            self._dangling.setdefault(vertex_type, {})
+
     # -- lookup phase ------------------------------------------------------------
 
     def n_mapped(self, vertex_type: str) -> int:

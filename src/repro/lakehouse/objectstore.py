@@ -41,9 +41,11 @@ class ObjectStore:
         self.config = config
         os.makedirs(config.root, exist_ok=True)
         self._lock = threading.Lock()
+        self._cas_lock = threading.Lock()   # serializes conditional puts
         self.counters = {
             "get_requests": 0,
             "put_requests": 0,
+            "cas_failures": 0,
             "bytes_read": 0,
             "bytes_written": 0,
             "simulated_wait_s": 0.0,
@@ -84,6 +86,38 @@ class ObjectStore:
         os.replace(tmp, path)  # atomic publish, like S3 PUT visibility
         self._count(put_requests=1, bytes_written=len(data))
         self._simulate(len(data))
+
+    def put_if(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
+        """Conditional put (compare-and-swap), like S3's If-Match /
+        If-None-Match conditional writes.
+
+        Succeeds — and writes atomically — only when the key's current
+        content equals ``expected`` (``None`` means *the key must not
+        exist*, i.e. put-if-absent).  Returns False, writing nothing, on a
+        mismatch.  This is what makes the table layer's optimistic
+        metadata-swap commit safe under concurrent committers: the
+        read-modify-write of the snapshot log is fenced by the CAS, so a
+        lost race is detected and retried instead of silently dropping the
+        other committer's snapshot.
+        """
+        path = self._path(key)
+        with self._cas_lock:
+            try:
+                with open(path, "rb") as f:
+                    current: Optional[bytes] = f.read()
+            except FileNotFoundError:
+                current = None
+            if current != expected:
+                self._count(cas_failures=1)
+                return False
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + f".tmp.{threading.get_ident()}"
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        self._count(put_requests=1, bytes_written=len(data))
+        self._simulate(len(data))
+        return True
 
     def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
         path = self._path(key)

@@ -8,10 +8,19 @@ A table is a directory of immutable column files plus a metadata layer:
     <table>/data/part-<k>.col       -- immutable data files (columnfile format)
 
 Commits follow Iceberg's optimistic metadata-swap protocol: write new data
-files, write a new manifest + metadata version, then atomically swap the
-VERSION pointer.  Readers resolve VERSION -> metadata -> manifest -> files,
-which gives snapshot isolation and lets GraphLake's catalog watch for
+files, write a new manifest + metadata version, then swap the VERSION
+pointer.  Readers resolve VERSION -> metadata -> manifest -> files, which
+gives snapshot isolation and lets GraphLake's catalog watch for
 added/removed files (the paper's incremental edge-list maintenance).
+
+Concurrent committers are safe: every commit creates its next metadata
+version file with a **conditional put** (``ObjectStore.put_if`` with
+put-if-absent semantics — the compare-and-swap fence), so exactly one
+racing committer wins each version and the losers re-read the fresh
+snapshot log and retry.  Manifests and data files carry a per-commit token
+in their keys, so a losing attempt can never overwrite a winner's objects.
+The old protocol's unguarded read-modify-write of ``metadata/VERSION``
+could silently drop a concurrent committer's snapshot.
 """
 
 from __future__ import annotations
@@ -19,7 +28,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Optional
+import uuid
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -94,11 +104,13 @@ class LakeTable:
     def _version_key(self) -> str:
         return f"{self._prefix}/metadata/VERSION"
 
-    def _manifest_key(self, snapshot_id: int) -> str:
-        return f"{self._prefix}/metadata/snap-{snapshot_id}.json"
+    def _manifest_key(self, snapshot_id: int, token: str = "") -> str:
+        suffix = f"-{token}" if token else ""
+        return f"{self._prefix}/metadata/snap-{snapshot_id}{suffix}.json"
 
-    def data_key(self, file_index: int) -> str:
-        return f"{self._prefix}/data/part-{file_index:05d}.col"
+    def data_key(self, file_index: int, token: str = "") -> str:
+        suffix = f"-{token}" if token else ""
+        return f"{self._prefix}/data/part-{file_index:05d}{suffix}.col"
 
     # -- metadata ------------------------------------------------------------
 
@@ -144,6 +156,38 @@ class LakeTable:
         self.store.put(self._meta_key(1), json.dumps(meta).encode())
         self.store.put(self._version_key(), b"1")
 
+    _COMMIT_RETRIES = 64
+
+    def _commit(self, build: Callable[[dict, str], Snapshot]) -> Snapshot:
+        """Optimistic commit loop fenced by a conditional put.
+
+        ``build(meta, token)`` derives the next snapshot from a *fresh* read
+        of the metadata (appending to ``meta["snapshots"]`` in place) and
+        returns it.  The new metadata version file is then created with
+        put-if-absent: exactly one racing committer wins each version; a
+        loser re-reads the advanced snapshot log and rebuilds its commit on
+        top, so no concurrent snapshot is ever dropped.  The VERSION pointer
+        is only ever moved by the version's unique winner, so it advances
+        monotonically one step at a time.
+        """
+        token = uuid.uuid4().hex[:8]
+        for _ in range(self._COMMIT_RETRIES):
+            version = self.current_version()
+            meta = json.loads(self.store.get(self._meta_key(version)))
+            snap = build(meta, token)
+            payload = json.dumps(meta).encode()
+            if not self.store.put_if(self._meta_key(version + 1), payload, expected=None):
+                # lost the race for version+1 — wait for the winner's VERSION
+                # swap to land, then retry on top of it
+                time.sleep(0.0005)
+                continue
+            self.store.put(self._version_key(), str(version + 1).encode())
+            return snap
+        raise RuntimeError(
+            f"commit contention on table {self.name}: "
+            f"gave up after {self._COMMIT_RETRIES} CAS attempts"
+        )
+
     def append_files(
         self,
         file_columns: list[dict[str, np.ndarray]],
@@ -151,67 +195,81 @@ class LakeTable:
         encodings: Optional[dict[str, Encoding]] = None,
         replace: bool = False,
     ) -> Snapshot:
-        """Write data files and commit a new snapshot (append or replace)."""
-        meta = self._read_meta()
-        version = self.current_version()
-        next_idx = meta["next_file_index"]
+        """Write data files and commit a new snapshot (append or replace).
 
+        Data files are written once, up front, under commit-unique keys
+        (the token keeps racing appenders from colliding on a file index);
+        only the metadata commit retries on contention.
+        """
+        token = uuid.uuid4().hex[:8]
+        start_idx = self._read_meta()["next_file_index"]
         new_keys: list[str] = []
         n_new_rows = 0
-        for cols in file_columns:
-            key = self.data_key(next_idx)
+        for i, cols in enumerate(file_columns):
+            key = self.data_key(start_idx + i, token)
             fm = write_column_file(
                 self.store, key, cols, row_group_rows=row_group_rows, encodings=encodings
             )
             n_new_rows += fm.n_rows
             new_keys.append(key)
-            next_idx += 1
 
-        if replace or not meta["snapshots"]:
-            base_files: list[str] = []
-            base_rows = 0
-        else:
-            prev = Snapshot(**meta["snapshots"][-1])
-            base_files = self.data_files(prev.snapshot_id)
-            base_rows = prev.n_rows
+        def build(meta: dict, tok: str) -> Snapshot:
+            if replace or not meta["snapshots"]:
+                base_files: list[str] = []
+                base_rows = 0
+            else:
+                prev = Snapshot(**meta["snapshots"][-1])
+                manifest = json.loads(self.store.get(prev.manifest_key))
+                base_files = list(manifest["files"])
+                base_rows = prev.n_rows
+            snapshot_id = len(meta["snapshots"]) + 1
+            manifest_key = self._manifest_key(snapshot_id, tok)
+            self.store.put(
+                manifest_key, json.dumps({"files": base_files + new_keys}).encode()
+            )
+            snap = Snapshot(
+                snapshot_id=snapshot_id,
+                timestamp=time.time(),
+                manifest_key=manifest_key,
+                n_files=len(base_files) + len(new_keys),
+                n_rows=base_rows + n_new_rows,
+            )
+            meta["snapshots"].append(dataclasses.asdict(snap))
+            meta["next_file_index"] = max(
+                meta["next_file_index"], start_idx + len(new_keys)
+            )
+            return snap
 
-        snapshot_id = len(meta["snapshots"]) + 1
-        manifest_key = self._manifest_key(snapshot_id)
-        self.store.put(manifest_key, json.dumps({"files": base_files + new_keys}).encode())
-        snap = Snapshot(
-            snapshot_id=snapshot_id,
-            timestamp=time.time(),
-            manifest_key=manifest_key,
-            n_files=len(base_files) + len(new_keys),
-            n_rows=base_rows + n_new_rows,
-        )
-        meta["snapshots"].append(dataclasses.asdict(snap))
-        meta["next_file_index"] = next_idx
-        self.store.put(self._meta_key(version + 1), json.dumps(meta).encode())
-        self.store.put(self._version_key(), str(version + 1).encode())  # atomic swap
-        return snap
+        return self._commit(build)
 
     def delete_file(self, key: str) -> Snapshot:
-        """Commit a snapshot with one data file removed (logical delete)."""
-        meta = self._read_meta()
-        version = self.current_version()
-        prev = Snapshot(**meta["snapshots"][-1])
-        files = [f for f in self.data_files(prev.snapshot_id) if f != key]
+        """Commit a snapshot with one data file removed (logical delete).
+
+        The data object itself stays in the store — older snapshots (and
+        older pinned epochs) can keep reading it after the logical delete.
+        """
         removed_rows = read_footer(self.store, key).n_rows
-        snapshot_id = len(meta["snapshots"]) + 1
-        manifest_key = self._manifest_key(snapshot_id)
-        self.store.put(manifest_key, json.dumps({"files": files}).encode())
-        snap = Snapshot(
-            snapshot_id=snapshot_id,
-            timestamp=time.time(),
-            manifest_key=manifest_key,
-            n_files=len(files),
-            n_rows=prev.n_rows - removed_rows,
-        )
-        meta["snapshots"].append(dataclasses.asdict(snap))
-        self.store.put(self._meta_key(version + 1), json.dumps(meta).encode())
-        self.store.put(self._version_key(), str(version + 1).encode())
-        return snap
+
+        def build(meta: dict, tok: str) -> Snapshot:
+            if not meta["snapshots"]:
+                raise RuntimeError(f"table {self.name} has no snapshots")
+            prev = Snapshot(**meta["snapshots"][-1])
+            manifest = json.loads(self.store.get(prev.manifest_key))
+            files = [f for f in manifest["files"] if f != key]
+            snapshot_id = len(meta["snapshots"]) + 1
+            manifest_key = self._manifest_key(snapshot_id, tok)
+            self.store.put(manifest_key, json.dumps({"files": files}).encode())
+            snap = Snapshot(
+                snapshot_id=snapshot_id,
+                timestamp=time.time(),
+                manifest_key=manifest_key,
+                n_files=len(files),
+                n_rows=prev.n_rows - removed_rows,
+            )
+            meta["snapshots"].append(dataclasses.asdict(snap))
+            return snap
+
+        return self._commit(build)
 
 
 class LakeCatalog:

@@ -37,6 +37,13 @@ record exact before/after deltas:
                    in-flight chunk budget (default 16).  Off = the
                    sequential parity path.
 
+- ``refresh``    — background epoch refresh in the query server
+                   (DESIGN.md §7): a refresher thread calls the engine's
+                   ``advance()`` on an interval so serving picks up lake
+                   commits without a restart.  ``refresh=<seconds>``
+                   overrides the interval (default 30); an explicit
+                   ``ServerConfig.refresh_interval_s`` wins over the flag.
+
 Default: all on.  ``REPRO_OPTS=""`` disables all (baseline);
 ``REPRO_OPTS="tri,chunkloss"`` enables a subset.
 
@@ -51,7 +58,7 @@ from __future__ import annotations
 import os
 
 _ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr",
-        "pipe")
+        "pipe", "refresh")
 
 
 def enabled(flag: str) -> bool:

@@ -14,6 +14,15 @@ per-engine resource — adding server workers raises concurrency without
 multiplying in-flight lake requests.  The cache manager's single-flight
 admission guarantees that two workers racing over the same cold chunk pay
 its lake fetch once.
+
+**Freshness (DESIGN.md §7).**  A background refresher thread periodically
+calls the engine's ``advance()``: the epoch manager diffs the lake, applies
+incremental deltas and atomically publishes a new epoch, while queries
+already in flight keep draining on the epoch they pinned at start.  Serving
+therefore picks up lake commits continuously — no engine restart — and
+every ``repro.core.query.QueryResult`` carries the epoch id + staleness it
+was served at.  The interval comes from ``ServerConfig.refresh_interval_s``
+or, when unset, the ``refresh`` perf flag (``refresh=<seconds>``).
 """
 
 from __future__ import annotations
@@ -24,11 +33,16 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro import perf_flags
+
 
 @dataclasses.dataclass
 class ServerConfig:
     n_workers: int = 2
     max_queue: int = 256
+    # background epoch-refresh interval; None defers to the ``refresh`` perf
+    # flag (its numeric value, default 30 s), <= 0 disables outright
+    refresh_interval_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -60,6 +74,19 @@ class QueryServer:
         ]
         for w in self._workers:
             w.start()
+        # background epoch refresher (DESIGN.md §7)
+        self.refresh_stats = {"ticks": 0, "advanced": 0, "errors": 0,
+                              "last_epoch": -1}
+        self._refresh_stop = threading.Event()
+        self._refresher: Optional[threading.Thread] = None
+        interval = self.config.refresh_interval_s
+        if interval is None and perf_flags.enabled("refresh"):
+            interval = perf_flags.value("refresh", 30.0)
+        if interval is not None and interval > 0 and hasattr(engine, "advance"):
+            self._refresher = threading.Thread(
+                target=self._refresh_loop, args=(float(interval),), daemon=True
+            )
+            self._refresher.start()
 
     # -- client API -------------------------------------------------------------
 
@@ -85,10 +112,28 @@ class QueryServer:
         return [self.result(r) for r in rids]
 
     def close(self) -> None:
+        self._refresh_stop.set()
         for _ in self._workers:
             self._q.put(None)
         for w in self._workers:
             w.join()
+        if self._refresher is not None:
+            self._refresher.join(timeout=10.0)
+
+    # -- background refresher ------------------------------------------------------
+
+    def _refresh_loop(self, interval_s: float) -> None:
+        """Periodically advance the engine's epoch: in-flight queries drain
+        on their pinned epoch, the next query picks up the new one."""
+        while not self._refresh_stop.wait(interval_s):
+            try:
+                report = self.engine.advance()
+                self.refresh_stats["ticks"] += 1
+                self.refresh_stats["last_epoch"] = report.to_epoch
+                if report.changed:   # last: pollers key off this counter
+                    self.refresh_stats["advanced"] += 1
+            except Exception:  # keep refreshing; queries stay on the old epoch
+                self.refresh_stats["errors"] += 1
 
     # -- worker -------------------------------------------------------------------
 

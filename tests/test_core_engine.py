@@ -209,6 +209,52 @@ def test_graph_catalog_sync(store, ldbc):
         assert r1.edge_lists_added == 1
 
 
+def test_graph_catalog_missing_table_raises(store, ldbc):
+    """A schema mapped to a nonexistent table is a configuration error —
+    the old bare ``except Exception`` silently pinned snapshot -1 instead."""
+    from repro.core.catalog import MissingTableError
+    from repro.core.topology import GraphTopology
+    from repro.core.types import GraphSchema
+
+    bad = GraphSchema()
+    bad.add_vertex_type("Ghost", table="NoSuchTable", primary_key="id")
+    with pytest.raises(MissingTableError):
+        GraphCatalog(store, bad, GraphTopology(bad))
+
+
+def test_graph_catalog_empty_table_is_legitimate(store, ldbc):
+    """A table that exists but has no snapshots yet pins -1, no raise."""
+    from repro.core.topology import GraphTopology
+    from repro.core.types import GraphSchema
+    from repro.lakehouse.table import ColumnSpec, TableSchema
+
+    LakeCatalog(store).table("Fresh").create(TableSchema("Fresh", [
+        ColumnSpec("id", "int64", role="primary_key")]))
+    schema = GraphSchema()
+    schema.add_vertex_type("Fresh", table="Fresh", primary_key="id")
+    cat = GraphCatalog(store, schema, GraphTopology(schema))
+    assert cat._vertex_snapshots["Fresh"] == -1
+
+
+def test_graph_catalog_sync_promotes_to_epochs(store, ldbc):
+    """With an EpochManager attached, sync() is the epoch-publishing
+    advance(): it diffs consistently and reports in the legacy shape."""
+    with GraphLakeEngine(store, ldbc.schema, materialize_topology=False) as eng:
+        eng.startup()
+        cat = GraphCatalog(store, eng.schema, eng.topology, epochs=eng.epochs)
+        assert cat.sync() == __import__(
+            "repro.core.catalog", fromlist=["SyncReport"]).SyncReport()
+        e0 = eng.current_epoch()
+        raw = eng.topology.idm.raw_ids("Person")
+        LakeCatalog(store).table("Person_Knows_Person").append_files([{
+            "src": raw[:5], "dst": raw[5:10],
+            "creationDate": np.full(5, 20230101, dtype=np.int64),
+        }])
+        r = cat.sync()
+        assert r.edge_lists_added == 1 and not r.vertex_changes_detected
+        assert eng.current_epoch().epoch_id == e0.epoch_id + 1
+
+
 # ---------------------------------------------------------------------------
 # distributed two-pass EdgeScan
 # ---------------------------------------------------------------------------

@@ -1,0 +1,329 @@
+"""Tests: snapshot-pinned epochs — torn-read consistency, incremental delta
+sync (edge/vertex appends, CSR merge-extension, IDM extension), file-scoped
+cache invalidation, refcounted retirement, and the serving refresher."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.csr import CSRIndex
+from repro.core.engine import GraphLakeEngine
+from repro.core.query import Predicate, Query, eq, gt
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.table import LakeCatalog
+from repro.serving.server import QueryServer, ServerConfig
+
+
+@pytest.fixture
+def store(tmp_path):
+    return ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+
+
+@pytest.fixture
+def ldbc(store):
+    return generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=256)
+
+
+@pytest.fixture
+def engine(store, ldbc):
+    # materialize=False: rebuild/cold-parity tests must always read the
+    # *current* lake snapshot, never a stale materialized topology blob
+    eng = GraphLakeEngine(store, ldbc.schema, materialize_topology=False)
+    eng.startup()
+    yield eng
+    eng.close()
+
+
+def _assert_parity(a, b):
+    assert a.n_edges_scanned == b.n_edges_scanned
+    np.testing.assert_array_equal(a.vset.ids(), b.vset.ids())
+    for fa, fb in zip(a.frames, b.frames):
+        np.testing.assert_array_equal(fa.u, fb.u)
+        np.testing.assert_array_equal(fa.v, fb.v)
+        assert set(fa.columns) == set(fb.columns)
+        for k in fa.columns:
+            np.testing.assert_array_equal(fa.columns[k], fb.columns[k])
+
+
+def _append_comments_and_edges(store, eng, ldbc, n_new=30, date=20230601):
+    """Commit one new Comment vertex file + matching HasCreator edge file."""
+    new_cids = np.arange(ldbc.n_comments + 1, ldbc.n_comments + n_new + 1,
+                         dtype=np.int64) * 10 + 3
+    lake = LakeCatalog(store)
+    lake.table("Comment").append_files([{
+        "id": new_cids,
+        "creationDate": np.full(n_new, date, dtype=np.int64),
+        "length": np.arange(n_new, dtype=np.int64) + 1,
+        "browserUsed": np.array(["Chrome"] * n_new, dtype=object),
+    }])
+    person_raw = eng.topology.idm.raw_ids("Person")
+    lake.table("Comment_HasCreator_Person").append_files([{
+        "src": new_cids,
+        "dst": person_raw[np.arange(n_new) % len(person_raw)],
+        "creationDate": np.full(n_new, date, dtype=np.int64),
+    }])
+    return new_cids
+
+
+# ---------------------------------------------------------------------------
+# bootstrap + result stamping
+# ---------------------------------------------------------------------------
+
+def test_bootstrap_pins_and_result_stamp(engine):
+    epoch = engine.current_epoch()
+    assert epoch.epoch_id == 1
+    # pins cover every mapped table with a real snapshot + file set
+    for pin in list(epoch.vertex_pins.values()) + list(epoch.edge_pins.values()):
+        assert pin.snapshot_id >= 1
+        assert len(pin.data_files) > 0
+    res = Query(engine).vertices("Comment").hop("HasCreator").run()
+    assert res.epoch_id == epoch.epoch_id
+    assert res.staleness_s >= 0.0
+    # nothing changed: advance is a no-op and the epoch stays published
+    report = engine.advance()
+    assert not report.changed and report.mode == "noop"
+    assert engine.current_epoch() is epoch
+
+
+# ---------------------------------------------------------------------------
+# the torn-read regression (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_commit_mid_query_yields_pre_commit_results(store, ldbc, engine):
+    """Committing new edge+vertex files *during* a running query must leave
+    the result bit-identical to the pre-commit epoch; the next advance()
+    makes the new data visible."""
+    def build_query():
+        return (Query(engine)
+                .vertices("Tag", where=eq("name", "Music"))
+                .hop("HasTag", direction="in", edge_where=mid_hop_pred)
+                .hop("HasCreator", direction="out",
+                     edge_where=gt("creationDate", 20100101)))
+
+    # a pass-through predicate for the *reference* run
+    mid_hop_pred = Predicate(lambda fr, p: np.ones(len(fr["u"]), dtype=bool), ())
+    res_ref = build_query().run(pushdown=False)
+
+    # now a side-effecting predicate: the first evaluation (mid-query,
+    # between hop 1 and hop 2) commits new Comment vertices + HasCreator
+    # edges and *publishes a new epoch* via advance()
+    fired = {"done": False}
+
+    def commit_midway(frame, prefix):
+        if not fired["done"]:
+            fired["done"] = True
+            _append_comments_and_edges(store, engine, ldbc, n_new=25)
+            report = engine.advance()
+            assert report.changed and report.mode == "incremental"
+        return np.ones(len(frame["u"]), dtype=bool)
+
+    mid_hop_pred = Predicate(commit_midway, ())
+    res_torn = build_query().run(pushdown=False)
+    assert fired["done"], "the mid-query commit hook never fired"
+
+    # bit-identical to the pre-commit epoch, and pinned to it
+    _assert_parity(res_ref, res_torn)
+    assert res_torn.epoch_id == res_ref.epoch_id
+
+    # the *next* run picks up the already-published epoch and sees new data
+    mid_hop_pred = Predicate(lambda fr, p: np.ones(len(fr["u"]), dtype=bool), ())
+    res_fresh = build_query().run(pushdown=False)
+    assert res_fresh.epoch_id > res_torn.epoch_id
+    count = Query(engine).vertices("Comment").hop("HasCreator").run()
+    assert count.n_edges_scanned == ldbc.n_comments + 25
+
+
+# ---------------------------------------------------------------------------
+# incremental delta sync
+# ---------------------------------------------------------------------------
+
+def test_edge_append_extends_csr_incrementally(store, ldbc, engine):
+    e0 = engine.current_epoch()
+    csr0 = e0.plane.csr("HasCreator")       # force-build on the old epoch
+    knows_concat = e0.plane.cached_concat("Knows")
+
+    raw_c = engine.topology.idm.raw_ids("Comment")
+    raw_p = engine.topology.idm.raw_ids("Person")
+    LakeCatalog(store).table("Comment_HasCreator_Person").append_files([{
+        "src": raw_c[:40], "dst": raw_p[np.arange(40) % len(raw_p)],
+        "creationDate": np.full(40, 20230101, dtype=np.int64),
+    }])
+    report = engine.advance()
+    assert report.mode == "incremental"
+    assert report.edge_files_added == 1 and report.edges_added == 40
+    assert report.csr_extended == ["HasCreator"]
+
+    e1 = engine.current_epoch()
+    assert e1.epoch_id == e0.epoch_id + 1
+    # the delta merged into a *new* CSR; the old epoch's index is untouched
+    ext = e1.plane.csr("HasCreator", build=False)
+    assert ext is not None and ext is not csr0
+    assert csr0.n_edges + 40 == ext.n_edges
+    # bit-identical to a from-scratch build over the new epoch's edges
+    src, dst = e1.plane.concat_edges("HasCreator")
+    ref = CSRIndex.from_arrays("HasCreator", src, dst,
+                               e1.n_vertices("Comment"), e1.n_vertices("Person"))
+    for attr in ("fwd_indptr", "fwd_dst", "fwd_eid",
+                 "rev_indptr", "rev_src", "rev_eid"):
+        np.testing.assert_array_equal(getattr(ext, attr), getattr(ref, attr))
+    # untouched edge types carry their derived arrays forward by reference
+    if knows_concat is not None:
+        assert e1.plane.cached_concat("Knows") is knows_concat
+
+
+def test_vertex_append_extends_idm_without_rebuild(store, ldbc, engine):
+    topo_before = engine.topology
+    n_real_before = engine.current_epoch().n_real_vertices("Comment")
+    new_cids = _append_comments_and_edges(store, engine, ldbc, n_new=30)
+
+    report = engine.advance()
+    assert report.mode == "incremental"
+    assert report.vertex_files_added == 1 and report.vertices_added == 30
+    assert engine.topology is topo_before          # no rebuild happened
+
+    e1 = engine.current_epoch()
+    assert e1.n_real_vertices("Comment") == n_real_before + 30
+    # the extended IDM resolves the new raw ids into the new epoch
+    vset = engine.vset_from_raw_ids("Comment", new_cids, epoch=e1)
+    assert vset.size() == 30
+    # and their attributes + edges are queryable, bit-identical to cold start
+    res = (Query(engine).vertices("Comment", raw_ids=new_cids)
+           .hop("HasCreator", direction="out").run())
+    assert res.n_edges_scanned == 30
+    cold = GraphLakeEngine(store, ldbc_graph_schema(), materialize_topology=False)
+    cold.startup()
+    res_cold = (Query(cold).vertices("Comment", raw_ids=new_cids)
+                .hop("HasCreator", direction="out").run())
+    _assert_parity(res, res_cold)
+    cold.close()
+
+
+def test_removed_file_invalidates_exactly_its_units(store, ldbc, engine):
+    # warm the cache across Knows edge chunks and Person vertex chunks
+    (Query(engine).vertices("Person")
+     .hop("Knows", direction="out", edge_where=gt("creationDate", 0)).run())
+    victim = LakeCatalog(store).table("Person_Knows_Person").data_files()[0]
+    assert any(k.startswith(victim + "::") for k in engine.cache.resident_keys())
+    survivors_before = [k for k in engine.cache.resident_keys()
+                        if not k.startswith(victim + "::")]
+
+    LakeCatalog(store).table("Person_Knows_Person").delete_file(victim)
+    report = engine.advance()
+    assert report.mode == "incremental" and report.edge_files_removed == 1
+    assert report.cache_units_evicted > 0
+
+    resident = engine.cache.resident_keys()
+    assert not any(k.startswith(victim + "::") for k in resident)
+    # file-scoped means *only* that file: everything else stayed warm
+    for k in survivors_before:
+        assert k in resident
+    # the epoch no longer scans the removed file's edges
+    frame = engine.edge_scan(engine.all_vertices("Person"), "Knows")
+    assert len(frame) == engine.current_epoch().n_edges("Knows")
+
+
+def test_vertex_file_removal_falls_back_to_rebuild(store, ldbc, engine):
+    old_topo = engine.topology
+    n_before = engine.current_epoch().n_real_vertices("Person")
+    victim_rows = None
+    t = LakeCatalog(store).table("Person")
+    victim = t.data_files()[0]
+    from repro.lakehouse.columnfile import read_footer
+    victim_rows = read_footer(store, victim).n_rows
+    t.delete_file(victim)
+
+    report = engine.advance()
+    assert report.changed and report.mode == "rebuild"
+    assert engine.topology is not old_topo
+    e1 = engine.current_epoch()
+    assert e1.n_real_vertices("Person") == n_before - victim_rows
+    # engine still answers queries over the rebuilt topology; edges whose
+    # source person was deleted hang off dangling vertices now, so a
+    # real-vertex frontier scans exactly the surviving-source edges
+    res = Query(engine).vertices("Person").hop("Knows", direction="out").run()
+    assert res.epoch_id == e1.epoch_id
+    n_live_src = sum(
+        int((el.src_dense < e1.n_real_vertices("Person")).sum())
+        for el in e1.all_edge_lists("Knows")
+    )
+    assert res.n_edges_scanned == n_live_src > 0
+
+
+def test_accumulators_track_grown_dense_space(store, ldbc, engine):
+    """After a vertex-append advance, a pre-existing accumulator's result
+    view must still align with the result vset's (grown) dense space."""
+    from repro.core.query import accum_sum
+
+    def accum_query():
+        return (Query(engine).vertices("Comment")
+                .hop("HasCreator", direction="out",
+                     accum=accum_sum("cnt", 1.0)).run())
+
+    res0 = accum_query()                       # registers cnt at the old size
+    sum0 = res0.accumulators["cnt"].sum()      # views share the live buffer:
+    _append_comments_and_edges(store, engine, ldbc, n_new=30)  # snapshot now
+    assert engine.advance().mode == "incremental"
+
+    res1 = accum_query()
+    # the accumulator view is sized to the new epoch's dense space, so
+    # indexing it with the result vset's mask is always well-formed
+    assert len(res1.accumulators["cnt"]) == len(res1.vset.mask)
+    assert res1.accumulators["cnt"][res1.vset.mask].sum() > 0
+    # both runs counted every comment once; the append added 30 edges
+    assert res1.accumulators["cnt"].sum() == sum0 + ldbc.n_comments + 30
+
+
+# ---------------------------------------------------------------------------
+# refcounting + retirement
+# ---------------------------------------------------------------------------
+
+def test_epoch_refcount_drain_and_retire(store, ldbc, engine):
+    mgr = engine.epochs
+    e0 = mgr.acquire()
+    res_old = Query(engine).vertices("Comment").hop("HasCreator").run(epoch=e0)
+
+    _append_comments_and_edges(store, engine, ldbc, n_new=20)
+    assert engine.advance().changed
+    e1 = engine.current_epoch()
+    assert e1 is not e0 and not e0.retired   # still pinned by our acquire
+
+    # in-flight work drains on the old epoch, bit-identical to before
+    res_drain = Query(engine).vertices("Comment").hop("HasCreator").run(epoch=e0)
+    _assert_parity(res_old, res_drain)
+    res_new = Query(engine).vertices("Comment").hop("HasCreator").run()
+    assert res_new.n_edges_scanned == res_old.n_edges_scanned + 20
+
+    mgr.release(e0)                          # last ref gone -> delta buffers freed
+    assert e0.retired and mgr.stats["retired"] >= 1
+    assert not e0._edge_lists
+    assert engine.current_epoch() is e1 and not e1.retired
+
+
+# ---------------------------------------------------------------------------
+# serving: background refresher
+# ---------------------------------------------------------------------------
+
+def test_server_background_refresh_picks_up_commits(store, ldbc, engine):
+    def count_edges(eng):
+        return Query(eng).vertices("Comment").hop("HasCreator").run().n_edges_scanned
+
+    server = QueryServer(engine, {"count": count_edges},
+                         ServerConfig(n_workers=1, refresh_interval_s=0.05))
+    try:
+        r0 = server.run_batch([("count", {})])[0]
+        assert r0.ok and r0.value == ldbc.n_comments
+
+        _append_comments_and_edges(store, engine, ldbc, n_new=15)
+        deadline = time.monotonic() + 20.0
+        while time.monotonic() < deadline and server.refresh_stats["advanced"] == 0:
+            time.sleep(0.02)
+        assert server.refresh_stats["advanced"] >= 1, server.refresh_stats
+        assert server.refresh_stats["last_epoch"] == engine.current_epoch().epoch_id
+
+        r1 = server.run_batch([("count", {})])[0]
+        assert r1.ok and r1.value == ldbc.n_comments + 15
+    finally:
+        server.close()
+    assert not server._refresher.is_alive()

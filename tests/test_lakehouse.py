@@ -222,6 +222,119 @@ def test_catalog_state_polling(store):
 
 
 # ---------------------------------------------------------------------------
+# time travel + commit accounting
+# ---------------------------------------------------------------------------
+
+def _rows(n, offset=0):
+    return {
+        "id": np.arange(offset, offset + n, dtype=np.int64),
+        "name": np.array([f"p{i}" for i in range(offset, offset + n)], dtype=object),
+        "age": np.zeros(n, dtype=np.int64),
+    }
+
+
+def test_time_travel_historical_file_sets(store):
+    t = write_table(store, _person_schema(), _rows(30), n_files=2)
+    t.append_files([_rows(10, 100)])
+    t.append_files([_rows(5, 200), _rows(5, 300)])
+
+    snaps = t.snapshots()
+    assert [s.snapshot_id for s in snaps] == [1, 2, 3]
+    # each historical snapshot resolves its exact file set, forever
+    files_1 = t.data_files(snapshot_id=1)
+    files_2 = t.data_files(snapshot_id=2)
+    files_3 = t.data_files(snapshot_id=3)
+    assert len(files_1) == 2 and len(files_2) == 3 and len(files_3) == 5
+    assert files_2[: len(files_1)] == files_1   # appends extend, never reorder
+    assert files_3[: len(files_2)] == files_2
+    # row accounting is cumulative per snapshot
+    assert [s.n_rows for s in snaps] == [30, 40, 50]
+    # a later commit does not disturb an already-resolved historical set
+    t.append_files([_rows(1, 400)])
+    assert t.data_files(snapshot_id=2) == files_2
+
+
+def test_delete_file_row_and_file_accounting(store):
+    t = write_table(store, _person_schema(), _rows(90), n_files=3)
+    victim = t.data_files()[1]
+    victim_rows = read_footer(store, victim).n_rows
+    snap = t.delete_file(victim)
+    assert snap.n_files == 2
+    assert snap.n_rows == 90 - victim_rows
+    assert victim not in t.data_files()
+    # the old snapshot still sees the victim (logical delete, time travel)
+    assert victim in t.data_files(snapshot_id=1)
+    # and the physical object survives for readers pinned to old snapshots
+    assert store.exists(victim)
+
+
+def test_version_monotone_under_sequential_commits(store):
+    t = write_table(store, _person_schema(), _rows(10), n_files=1)
+    assert t.current_version() == 2   # create() wrote v1, first commit v2
+    for i in range(5):
+        before = t.current_version()
+        snap = t.append_files([_rows(2, 1000 + 10 * i)])
+        assert t.current_version() == before + 1      # exactly one step
+        assert snap.snapshot_id == len(t.snapshots())  # ids are 1..N, dense
+    ids = [s.snapshot_id for s in t.snapshots()]
+    assert ids == list(range(1, len(ids) + 1))
+
+
+# ---------------------------------------------------------------------------
+# conditional put + concurrent committers
+# ---------------------------------------------------------------------------
+
+def test_put_if_semantics(store):
+    assert store.put_if("k", b"v1", expected=None)          # create if absent
+    assert not store.put_if("k", b"v2", expected=None)      # already exists
+    assert not store.put_if("k", b"v2", expected=b"wrong")  # stale expectation
+    assert store.get("k") == b"v1"
+    assert store.put_if("k", b"v2", expected=b"v1")         # CAS succeeds
+    assert store.get("k") == b"v2"
+    assert store.counters["cas_failures"] == 2
+
+
+def test_concurrent_committers_drop_no_snapshots(store):
+    """The ISSUE 4 commit-race regression: racing append_files must never
+    drop a snapshot (the old unguarded VERSION read-modify-write did)."""
+    import threading
+
+    t = write_table(store, _person_schema(), _rows(10), n_files=1)
+    n_threads, commits_each = 4, 3
+    snaps, errors = [], []
+    lock = threading.Lock()
+
+    def committer(tid):
+        try:
+            for i in range(commits_each):
+                s = LakeCatalog(store).table("Person").append_files(
+                    [_rows(5, 10_000 + 1000 * tid + 10 * i)])
+                with lock:
+                    snaps.append(s)
+        except Exception as e:  # pragma: no cover - surfaced by the assert
+            with lock:
+                errors.append(e)
+
+    threads = [threading.Thread(target=committer, args=(k,)) for k in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+
+    total = n_threads * commits_each
+    final = t.snapshots()
+    assert len(final) == 1 + total                      # nothing dropped
+    assert [s.snapshot_id for s in final] == list(range(1, 2 + total))
+    assert t.current_version() == 2 + total             # one step per commit
+    assert t.current_snapshot().n_rows == 10 + 5 * total
+    # every committer's data file made it into the final manifest
+    assert len(set(t.data_files())) == 1 + total
+    # distinct snapshot ids were handed back to the committers
+    assert len({s.snapshot_id for s in snaps}) == total
+
+
+# ---------------------------------------------------------------------------
 # I/O pool
 # ---------------------------------------------------------------------------
 

@@ -22,6 +22,15 @@ from benchmarks.bench_queries import run
 run(quick=True)
 PY
 
+echo "== epoch refresh: incremental advance vs full rebuild (quick mode) =="
+# writes the BENCH_refresh.json snapshot: incremental epoch advance vs a
+# full topology rebuild on a <=5% append, asserting the >=5x floor and
+# bit-identical post-sync query results against a cold-started engine.
+python - <<'PY'
+from benchmarks.bench_refresh import run
+run(quick=True)
+PY
+
 echo "== tier-1 tests (slow SPMD dry-runs deselected) =="
 # test_archs_smoke / test_train_substrate and one misc test fail in this
 # container for environment reasons (installed jax predates APIs the model
