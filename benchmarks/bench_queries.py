@@ -13,7 +13,11 @@ with ``REPRO_BENCH_SNAPSHOT``) so the perf trajectory is tracked PR over PR:
   object-store latency model (``latency_scale>0``), sequential vs pipelined
   read path, reporting wall times, speedup and overlap efficiency (fraction
   of the I/O pool's worker-seconds spent inside modeled store waits) — with
-  bit-identical-result verification and a floor assertion on the speedup.
+  bit-identical-result verification and a floor assertion on the speedup;
+- the GSQL parity sweep (DESIGN.md §8): representative queries run through
+  both front ends — fluent builder chains and GSQL text via the session —
+  asserting bit-identical results (vset, frames, accumulators) and that
+  parse+compile costs at most 5% of a cold execution.
 
 ``run(quick=True)`` is the CI gate mode — sweeps only, small scale.
 """
@@ -28,7 +32,7 @@ import numpy as np
 
 from benchmarks.common import emit, fresh_store, ldbc_lake, make_engine, timed
 from repro.core.bi_queries import BI_QUERIES
-from repro.core.query import Query, gt
+from repro.core.query import ExecOptions, Query, accum_sum, eq, gt
 from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
 
 SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_SNAPSHOT", "BENCH_queries.json")
@@ -238,6 +242,105 @@ def pipeline_sweep(
     }
 
 
+def gsql_parity_sweep(sf: float = 0.004, row_group_rows: int = 512,
+                      max_compile_frac: float = 0.05) -> dict:
+    """Builder-vs-GSQL parity: the ISSUE 5 acceptance sweep.
+
+    Each case pairs a fluent-builder chain with the equivalent GSQL text and
+    asserts the two front ends produce **bit-identical** results — vset,
+    every frame column, accumulator arrays — plus a compile-overhead bound:
+    parse+compile (median) must cost at most ``max_compile_frac`` of one
+    cold execution, i.e. the textual front end is free at serving
+    granularity.
+    """
+    from repro.gsql.compiler import compile_query
+    from repro.gsql.parser import parse
+    from repro.gsql.session import GraphSession
+
+    store = fresh_store(f"queries_gsql_{sf}")
+    generate_ldbc(store, scale_factor=sf, n_files=2,
+                  row_group_rows=row_group_rows)
+    eng = make_engine(store, ldbc_graph_schema())
+    eng.startup()
+    session = GraphSession.for_engine(eng)
+    t0 = time.perf_counter()
+
+    comments = eng.all_vertices("Comment")
+    dates = eng.read_vertex_column("Comment", comments.ids(), "creationDate")
+    thr = float(np.quantile(dates, 0.9))
+
+    cases = [
+        ("hop_edge_pred",
+         lambda: (Query(eng).vertices("Comment")
+                  .hop("HasCreator", direction="out",
+                       edge_where=gt("creationDate", thr))),
+         "SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+         "WHERE e.creationDate > $thr",
+         {"thr": thr}),
+        ("seed_2hop_accum",
+         lambda: (Query(eng).vertices("Tag", where=eq("name", "Music"))
+                  .hop("HasTag", direction="in")
+                  .hop("HasCreator", direction="out",
+                       edge_where=gt("creationDate", 20100101),
+                       target_where=eq("gender", "Female"),
+                       accum=accum_sum("cnt", 1.0))),
+         "SELECT p FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p "
+         "WHERE t.name == $tag AND e2.creationDate > $date "
+         "AND p.gender == 'Female' ACCUM p.@cnt += 1",
+         {"tag": "Music", "date": 20100101}),
+    ]
+
+    rows = []
+    for name, build, text, params in cases:
+        # builder arm (cold), accumulators snapshotted before the GSQL arm
+        # re-runs (both arms share the engine's accumulator store)
+        for key in list(eng.accums._arrays):
+            eng.accums.reset(*key)
+        eng.cache.drop_all()
+        res_b, t_builder = timed(build().run)
+        accums_b = {k: np.array(v) for k, v in res_b.accumulators.items()}
+
+        eng.cache.drop_all()
+        res_g, t_gsql = timed(session.query, text, **params)
+        _assert_parity(res_b, res_g)
+        assert set(accums_b) == set(res_g.accumulators)
+        for k, arr in accums_b.items():
+            assert np.array_equal(arr, res_g.accumulators[k]), k
+
+        compiles = []
+        for _ in range(25):
+            c0 = time.perf_counter()
+            compile_query(parse(text), session.catalog(), params)
+            compiles.append(time.perf_counter() - c0)
+        t_compile = float(np.median(compiles))
+        frac = t_compile / t_gsql
+        row = {
+            "case": name,
+            "n_survivors": int(res_g.n_edges_scanned),
+            "builder_us": t_builder * 1e6,
+            "gsql_us": t_gsql * 1e6,
+            "compile_us": t_compile * 1e6,
+            "compile_frac_of_cold_exec": frac,
+        }
+        rows.append(row)
+        emit(f"gsql_{name}_compile_us", row["compile_us"],
+             f"gsql={row['gsql_us']:.0f}us;builder={row['builder_us']:.0f}us;"
+             f"compile_frac={frac:.4f}")
+        assert frac <= max_compile_frac, (
+            f"GSQL compile overhead {frac:.1%} exceeds "
+            f"{max_compile_frac:.0%} of a cold execution: {row}")
+    eng.close()
+
+    return {
+        "bench": "queries_gsql_parity_sweep",
+        "sf": sf,
+        "row_group_rows": row_group_rows,
+        "max_compile_frac": max_compile_frac,
+        "wall_s": time.perf_counter() - t0,
+        "rows": rows,
+    }
+
+
 def _write_snapshot(snap: dict) -> None:
     with open(SNAPSHOT_PATH, "w") as f:
         json.dump(snap, f, indent=2)
@@ -249,6 +352,7 @@ def run(sf: float = 0.02, quick: bool = False) -> None:
     if quick:
         snap["selectivity_sweep"] = selectivity_sweep(sf=0.004)
         snap["pipeline_sweep"] = pipeline_sweep()
+        snap["gsql_parity_sweep"] = gsql_parity_sweep()
     else:
         _fig10(sf)
         snap["selectivity_sweep"] = selectivity_sweep(sf=sf)
@@ -256,4 +360,5 @@ def run(sf: float = 0.02, quick: bool = False) -> None:
         # ``sf``: larger lakes grow the CPU share (gather + predicate eval)
         # faster than the I/O share, which measures overlap less cleanly
         snap["pipeline_sweep"] = pipeline_sweep()
+        snap["gsql_parity_sweep"] = gsql_parity_sweep(sf=sf)
     _write_snapshot(snap)

@@ -1,15 +1,21 @@
-"""Quickstart: build a Lakehouse, start GraphLake, run a query + PageRank.
+"""Quickstart: build a Lakehouse, connect a GSQL session, query + PageRank.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import tempfile
 
+import repro
 from repro.core.algorithms import pagerank
-from repro.core.engine import GraphLakeEngine
-from repro.core.query import Query, accum_sum, eq, gt
 from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
 from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+
+BI1 = """
+SELECT p
+FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p
+WHERE t.name == $tag AND e2.creationDate > $date AND p.gender == 'Female'
+ACCUM p.@cnt += 1
+"""
 
 
 def main() -> None:
@@ -21,29 +27,30 @@ def main() -> None:
           f"{ds.n_edges} edges across "
           f"{len(store.list('tables/'))} objects")
 
-    # 2. start the engine: topology-only load (the paper's §4)
-    with GraphLakeEngine(store, ldbc_graph_schema()) as engine:
-        timings = engine.startup()
-        print(f"startup ({engine.startup_mode}): "
-              f"{engine.startup_seconds:.3f}s  phases={ {k: round(v,3) for k,v in timings.items()} }")
+    # 2. connect: engine startup (topology-only load, paper §4) + session
+    with repro.connect(store, ldbc_graph_schema()) as session:
+        engine = session.engine
+        print(f"startup ({engine.startup_mode}): {engine.startup_seconds:.3f}s")
         print(f"topology: {engine.topology.n_edges()} edges in "
               f"{engine.topology.topology_bytes()/1e6:.1f} MB "
               f"(properties stay in the lake)")
 
-        # 3. the paper's running example query (§6)
-        result = (
-            Query(engine)
-            .vertices("Tag", where=eq("name", "Music"))
-            .hop("HasTag", direction="in")
-            .hop("HasCreator", direction="out",
-                 edge_where=gt("creationDate", 20100101),
-                 target_where=eq("gender", "Female"),
-                 accum=accum_sum("cnt", 1.0))
-            .run()
-        )
+        # 3. the paper's running example (§6) as GSQL text with parameters
+        result = session.query(BI1, tag="Music", date=20100101)
         print(f"women with Music comments after 2010: {result.vset.size()} "
               f"({result.accumulators['cnt'].sum():.0f} comments, "
-              f"{result.n_edges_scanned} edges scanned)")
+              f"{result.n_edges_scanned} edges scanned, "
+              f"epoch {result.epoch_id})")
+
+        # 3b. what the compiler planned: staged columns, zone-map bounds,
+        # topology dispatch — before running anything
+        print("-- explain --")
+        print(session.explain(BI1, tag="Music", date=20100101))
+
+        # 3c. install once, run many (what the serving layer does)
+        session.install("bi1", BI1)
+        again = session.query("bi1", tag="Sports", date=20120101)
+        print(f"installed bi1(Sports, 2012): {again.vset.size()} persons")
 
         # 4. a graph algorithm over the same topology (Table 2)
         ranks = pagerank(engine, "Knows")
@@ -51,11 +58,11 @@ def main() -> None:
         print(f"top-3 PageRank persons (dense ids): {top.tolist()}, "
               f"mass={ranks.sum():.4f}")
 
-        # 5. second connection: materialized topology makes restarts fast
-    with GraphLakeEngine(store, ldbc_graph_schema()) as engine2:
-        engine2.startup()
-        print(f"second connection: {engine2.startup_seconds:.3f}s "
-              f"({engine2.startup_mode})")
+    # 5. second connection: materialized topology makes restarts fast
+    with repro.connect(store, ldbc_graph_schema()) as session2:
+        eng2 = session2.engine
+        print(f"second connection: {eng2.startup_seconds:.3f}s "
+              f"({eng2.startup_mode})")
 
 
 if __name__ == "__main__":

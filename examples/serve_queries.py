@@ -1,7 +1,11 @@
-"""End-to-end serving driver: batched BI queries against GraphLake.
+"""End-to-end serving driver: installed GSQL queries served in batches.
 
 This is the paper-kind end-to-end example (a query/analytics engine serving
-batched requests), mirroring §7.5's wrk2 evaluation in-process.
+batched requests), mirroring §7.5's wrk2 evaluation in-process: a GSQL
+session installs the BI suite (parse + schema validation up front), the
+server executes installed names with bound parameters through
+``session.query()``, admission control sheds load when the bounded queue
+fills, and ``ServerConfig.timeout_s`` bounds each query's execution.
 
     PYTHONPATH=src python examples/serve_queries.py
 """
@@ -11,11 +15,16 @@ import random
 import tempfile
 import time
 
-from repro.core.bi_queries import BI_QUERIES
-from repro.core.engine import GraphLakeEngine
+import repro
+from repro.core.bi_queries import BI_QUERIES, install_bi_queries
 from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
 from repro.lakehouse.objectstore import ObjectStore, StoreConfig
-from repro.serving.server import QueryServer, ServerConfig, latency_stats
+from repro.serving.server import (
+    QueryServer,
+    ServerConfig,
+    ServerOverloadedError,
+    latency_stats,
+)
 
 
 def main() -> None:
@@ -23,39 +32,52 @@ def main() -> None:
     store = ObjectStore(StoreConfig(root=root))
     generate_ldbc(store, scale_factor=0.02)
 
-    with GraphLakeEngine(store, ldbc_graph_schema()) as engine:
-        engine.startup()
+    with repro.connect(store, ldbc_graph_schema()) as session:
+        engine = session.engine
         print(f"engine up in {engine.startup_seconds:.3f}s "
               f"({engine.startup_mode})")
+        install_bi_queries(session)
+        print(f"installed: {sorted(session.installed_queries())}")
 
-        server = QueryServer(engine, BI_QUERIES, ServerConfig(n_workers=2))
+        server = QueryServer(session,
+                             config=ServerConfig(n_workers=2, timeout_s=30.0))
         rng = random.Random(0)
         requests = []
         for _ in range(60):
-            name = rng.choice(list(BI_QUERIES))
-            params = {}
-            if name == "bi1":
-                params = {"date": rng.choice([20090101, 20120101, 20150101]),
-                          "tag_name": rng.choice(["Music", "Sports", "Movies"])}
-            elif name == "bi4":
-                params = {"city": f"city_{rng.randrange(50)}"}
-            elif name == "bi3":
-                params = {"min_len": rng.choice([200, 500, 1000])}
+            name = rng.choice(sorted(session.installed_queries()))
+            params = {"bi1": lambda: {"tag": rng.choice(["Music", "Sports", "Movies"]),
+                                      "date": rng.choice([20090101, 20120101, 20150101])},
+                      "bi2": lambda: {"lo": 20100101, "hi": 20151231},
+                      "bi3": lambda: {"min_len": rng.choice([200, 500, 1000])},
+                      "bi4": lambda: {"city": f"city_{rng.randrange(50)}"},
+                      "bi5": lambda: {"min_degree": 10, "date": 20140101},
+                      }[name]()
             requests.append((name, params))
 
         t0 = time.perf_counter()
-        results = server.run_batch(requests)
+        rids = []
+        shed = 0
+        for name, params in requests:
+            try:
+                rids.append(server.submit(name, **params))
+            except ServerOverloadedError:   # admission control at the edge
+                shed += 1
+        results = [server.result(r) for r in rids]
         wall = time.perf_counter() - t0
         server.close()
 
         ok = [r for r in results if r.ok]
-        print(f"{len(ok)}/{len(results)} ok | "
+        print(f"{len(ok)}/{len(results)} ok ({shed} shed) | "
               f"throughput {len(ok)/wall:.1f} q/s")
         print("latency:", json.dumps(
             {k: round(v, 4) for k, v in latency_stats(results).items()}))
         print("cache:", engine.cache.stats)
         sample = next(r for r in results if r.ok)
-        print("sample result:", sample.value)
+        print(f"sample result: vset={sample.value.vset.size()} "
+              f"epoch={sample.value.epoch_id} "
+              f"staleness={sample.value.staleness_s:.2f}s")
+        # summary-shaped results still come from the same session/GSQL path
+        print("bi1 summary:", BI_QUERIES["bi1"](session, tag_name="Music"))
 
 
 if __name__ == "__main__":

@@ -1,3 +1,29 @@
-"""repro: GraphLake (graph compute engine for Lakehouse) on JAX/TPU."""
+"""repro: GraphLake (graph compute engine for Lakehouse) on JAX/TPU.
+
+The front door is :func:`connect` — build an engine over a lake and get the
+GSQL session facade back::
+
+    import repro
+    session = repro.connect(store, schema)
+    res = session.query("SELECT p FROM Tag:t -(HasTag:e)- Comment:p "
+                        "WHERE t.name == $tag", tag="Music")
+"""
 
 __version__ = "1.0.0"
+
+_LAZY = {
+    "connect": ("repro.gsql.session", "connect"),
+    "GraphSession": ("repro.gsql.session", "GraphSession"),
+    "ExecOptions": ("repro.core.query", "ExecOptions"),
+}
+
+
+def __getattr__(name: str):
+    # lazy: importing bare ``repro`` must stay light (configs/models pull jax)
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

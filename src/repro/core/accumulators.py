@@ -92,6 +92,9 @@ class Accumulators:
     def array(self, vertex_type: str, name: str) -> np.ndarray:
         return self._arrays[(vertex_type, name)]
 
+    def has(self, vertex_type: str, name: str) -> bool:
+        return (vertex_type, name) in self._arrays
+
     def ensure_capacity(self, vertex_type: str, name: str, n: int) -> np.ndarray:
         """Grow an accumulator array for a dense space extended by an
         incremental epoch advance (vertex appends land at the tail, so old

@@ -1,30 +1,91 @@
-"""Five LDBC_SNB-BI-style graph-aggregation queries (paper §7.3).
+"""Five LDBC_SNB-BI-style graph-aggregation queries (paper §7.3), expressed
+as *installed GSQL text* (DESIGN.md §8).
 
-Expressed in the declarative Query layer (GSQL-block analogue).  Each returns
-a small summary dict so the serving layer can ship results cheaply.  BI1 is
-the paper's §6 running example verbatim.
+Each query is a named GSQL program in :data:`BI_GSQL`, installed once per
+session (parse + schema validation up front) and executed with bound
+parameters through :class:`~repro.gsql.session.GraphSession` — there is no
+imperative traversal code left here.  BI1 is the paper's §6 running example
+verbatim; BI2's second aggregation (tag counts over the date-active
+comments) is the POST-ACCUM block; BI5's accumulator-driven influencer
+filter is a two-statement program whose second seed filters on ``@deg``.
+
+The ``bi*`` callables keep their historical signatures — they accept either
+an engine (a cached session is created for it) or a session — and shape the
+:class:`~repro.core.query.QueryResult` into the small summary dicts the
+serving layer ships.  Results are bit-identical to the pre-GSQL builder
+implementations (pinned by ``tests/test_gsql_exec.py``).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.query import Query, accum_max, accum_sum, eq, ge, gt, le
+from repro.gsql.session import GraphSession
+
+BI_GSQL: dict[str, str] = {
+    # women who created comments tagged $tag after $date; count per person
+    # (the paper's running example)
+    "bi1": """
+        SELECT p
+        FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p
+        WHERE t.name == $tag AND e2.creationDate > $date
+          AND p.gender == 'Female'
+        ACCUM p.@cnt += 1
+    """,
+    # comment volume per tag inside a date window: the main SELECT matches
+    # the date-active comments, POST-ACCUM aggregates their tags
+    "bi2": """
+        SELECT c
+        FROM Comment:c -(HasCreator:e)- Person:p
+        WHERE e.creationDate >= $lo AND e.creationDate <= $hi
+        POST-ACCUM c -(HasTag:e2)- Tag:t ACCUM t.@tag_cnt += 1
+    """,
+    # per-person total length of their long comments (cross-entity ACCUM)
+    "bi3": """
+        SELECT p
+        FROM Comment:c -(HasCreator:e)- Person:p
+        WHERE c.length > $min_len
+        ACCUM p.@tot_len += c.length
+    """,
+    # friend counts of persons in one city (1-hop Knows aggregation)
+    "bi4": """
+        SELECT s
+        FROM Person:s -(Knows:k)-> Person:q
+        WHERE s.locationCity == $city
+        ACCUM s.@deg += 1
+    """,
+    # tags used by recent comments of well-connected persons: statement 1
+    # computes out-degrees, statement 2 seeds on the @deg filter
+    "bi5": """
+        SELECT q FROM Person:a -(Knows:k)-> Person:q ACCUM a.@deg += 1;
+
+        SELECT t
+        FROM Person:s -(HasCreator:e)- Comment:c -(HasTag:e2)- Tag:t
+        WHERE s.@deg >= $min_degree AND e.creationDate > $date
+        ACCUM t.@inf_cnt += 1
+    """,
+}
+
+
+def install_bi_queries(session: GraphSession) -> None:
+    """Install (parse + validate) the whole BI suite on a session."""
+    for name, text in BI_GSQL.items():
+        session.install(name, text)
+
+
+def _session(engine_or_session) -> GraphSession:
+    """Resolve the session the BI suite runs on, installing it on first use."""
+    if isinstance(engine_or_session, GraphSession):
+        session = engine_or_session
+    else:
+        session = GraphSession.for_engine(engine_or_session)
+    if not session.is_installed("bi1"):
+        install_bi_queries(session)
+    return session
 
 
 def bi1_music_women(engine, tag_name: str = "Music", date: int = 20100101):
-    """Women who created comments tagged `tag_name` after `date`; count per
-    person (the paper's running example)."""
-    res = (
-        Query(engine)
-        .vertices("Tag", where=eq("name", tag_name))
-        .hop("HasTag", direction="in")
-        .hop("HasCreator", direction="out",
-             edge_where=gt("creationDate", date),
-             target_where=eq("gender", "Female"),
-             accum=accum_sum("cnt", 1.0))
-        .run()
-    )
+    res = _session(engine).query("bi1", tag=tag_name, date=date)
     counts = res.accumulators.get("cnt", np.zeros(1))
     return {
         "n_persons": int(res.vset.size()),
@@ -35,39 +96,18 @@ def bi1_music_women(engine, tag_name: str = "Music", date: int = 20100101):
 
 
 def bi2_tag_activity(engine, date_lo: int = 20120101, date_hi: int = 20151231):
-    """Comment volume per tag inside a date window."""
-    res = (
-        Query(engine)
-        .vertices("Comment")
-        .hop("HasCreator", direction="out",
-             edge_where=ge("creationDate", date_lo) & le("creationDate", date_hi))
-        .run()
-    )
-    active = res.frames[0].u_set(engine.topology.n_vertices("Comment"))
-    # count tags only over the date-active comments
-    frame = engine.edge_scan(active, "HasTag", "out")
-    engine.register_accum("Tag", "tag_cnt", op="sum")
-    engine.accums.update("Tag", "tag_cnt", frame.v, 1.0)
-    counts = engine.accums.array("Tag", "tag_cnt")
-    out = {
-        "n_active_comments": int(active.size()),
+    res = _session(engine).query("bi2", lo=date_lo, hi=date_hi)
+    counts = res.accumulators["tag_cnt"]
+    return {
+        # SELECT c projects the date-active comments (forward-matched seed)
+        "n_active_comments": int(res.vset.size()),
         "n_tags_touched": int((counts > 0).sum()),
         "top_tag_count": float(counts.max()) if len(counts) else 0.0,
     }
-    engine.accums.reset("Tag", "tag_cnt")
-    return out
 
 
 def bi3_person_engagement(engine, min_len: int = 500):
-    """Per-person total length of their long comments (cross-entity ACCUM)."""
-    res = (
-        Query(engine)
-        .vertices("Comment")
-        .hop("HasCreator", direction="out",
-             source_where=gt("length", min_len),
-             accum=accum_sum("tot_len", "u.length"))
-        .run()
-    )
+    res = _session(engine).query("bi3", min_len=min_len)
     tot = res.accumulators["tot_len"]
     return {
         "n_persons": int((tot > 0).sum()),
@@ -76,13 +116,7 @@ def bi3_person_engagement(engine, min_len: int = 500):
 
 
 def bi4_city_social(engine, city: str = "city_1"):
-    """Friend counts of persons in one city (1-hop Knows aggregation)."""
-    res = (
-        Query(engine)
-        .vertices("Person", where=eq("locationCity", city))
-        .hop("Knows", direction="out", accum=accum_sum("deg", 1.0, target="u"))
-        .run()
-    )
+    res = _session(engine).query("bi4", city=city)
     deg = res.accumulators["deg"]
     return {
         "n_friend_edges": float(deg.sum()),
@@ -91,38 +125,13 @@ def bi4_city_social(engine, city: str = "city_1"):
 
 
 def bi5_influencer_tags(engine, min_degree: int = 10, date: int = 20140101):
-    """Tags used by comments of well-connected persons (3 hops with
-    accumulator-driven filtering)."""
-    # hop 1: find high-out-degree persons via Knows aggregation
-    res = (
-        Query(engine)
-        .vertices("Person")
-        .hop("Knows", direction="out", accum=accum_sum("deg", 1.0, target="u"))
-        .run()
-    )
-    deg = res.accumulators["deg"]
-    n_p = engine.topology.n_vertices("Person")
-    from repro.core.types import VSet
-    influencers = VSet.from_dense_ids("Person", n_p, np.flatnonzero(deg >= min_degree))
-    # hop 2: their recent comments
-    frame = engine.edge_scan(
-        influencers, "HasCreator", "in",
-        edge_columns=["creationDate"],
-        edge_filter=lambda fr: fr["e.creationDate"] > date,
-    )
-    comments = frame.v_set(engine.topology.n_vertices("Comment"))
-    # hop 3: tags of those comments
-    frame2 = engine.edge_scan(comments, "HasTag", "out")
-    engine.register_accum("Tag", "inf_cnt", op="sum")
-    engine.accums.update("Tag", "inf_cnt", frame2.v, 1.0)
-    counts = engine.accums.array("Tag", "inf_cnt")
-    out = {
-        "n_influencers": int(influencers.size()),
-        "n_comments": int(comments.size()),
+    res = _session(engine).query("bi5", min_degree=min_degree, date=date)
+    counts = res.accumulators["inf_cnt"]
+    return {
+        "n_influencers": int(res.alias_sets["s"].size()),
+        "n_comments": int(res.alias_sets["c"].size()),
         "n_tags": int((counts > 0).sum()),
     }
-    engine.accums.reset("Tag", "inf_cnt")
-    return out
 
 
 BI_QUERIES = {

@@ -98,6 +98,14 @@ class GraphLakeEngine:
     def current_epoch(self):
         return self.epochs.current()
 
+    def session(self, options=None):
+        """This engine's cached :class:`~repro.gsql.session.GraphSession` —
+        the GSQL front end (DESIGN.md §8).  ``options`` only applies on the
+        first call (it seeds the session's defaults)."""
+        from repro.gsql.session import GraphSession
+
+        return GraphSession.for_engine(self, options)
+
     def adopt_topology(self, topology: GraphTopology) -> None:
         """Swap in a freshly rebuilt builder topology (the epoch manager's
         non-incremental fallback).  Accumulator state is dropped — a rebuild
@@ -170,11 +178,12 @@ class GraphLakeEngine:
 
     def vertex_map(self, vset: VSet, columns=(), filter_fn=None, map_fn=None,
                    bounds=None, counters=None, pipeline: Optional[bool] = None,
-                   epoch=None):
+                   epoch=None, deadline: Optional[float] = None):
         return vertex_map(
             self._topo(epoch), self.cache, vset, columns,
             filter_fn=filter_fn, map_fn=map_fn, prefetcher=self.prefetcher,
             bounds=bounds, counters=counters, pool=self._query_pool(pipeline),
+            deadline=deadline,
         )
 
     def edge_scan(
@@ -191,13 +200,14 @@ class GraphLakeEngine:
         counters=None,
         pipeline: Optional[bool] = None,
         epoch=None,
+        deadline: Optional[float] = None,
     ) -> EdgeFrame:
         return edge_scan(
             self._topo(epoch), self.cache, frontier, edge_type, direction,
             edge_columns=edge_columns, u_columns=u_columns, v_columns=v_columns,
             edge_filter=edge_filter, prefetcher=self.prefetcher,
             strategy=strategy, plan=plan, counters=counters,
-            pool=self._query_pool(pipeline),
+            pool=self._query_pool(pipeline), deadline=deadline,
         )
 
     def read_vertex_column(self, vertex_type: str, dense_ids, column: str,

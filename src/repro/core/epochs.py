@@ -107,6 +107,10 @@ class AdvanceReport:
     edges_added: int = 0
     csr_extended: list = dataclasses.field(default_factory=list)
     cache_units_evicted: int = 0
+    # whether the persisted topology blobs + MANIFEST were refreshed to the
+    # new epoch ("delta" | "full" | ""), so second connections stay on the
+    # fast load_materialized path instead of a stale blob
+    rematerialized: str = ""
     wall_s: float = 0.0
 
 
@@ -437,6 +441,16 @@ class EpochManager:
             if not rebuild:
                 self._carry_plane(cur, new_epoch, ediffs, report)
             self._publish(new_epoch)
+            # keep the persisted topology in lockstep with the published
+            # epoch: a second connection must never pay a first-connection
+            # build (or load a stale blob) just because this engine advanced
+            if eng.materialize_topology and eng._file_filter is None:
+                if rebuild:
+                    topo.materialize(store, pool=pool)
+                    report.rematerialized = "full"
+                else:
+                    report.rematerialized = topo.rematerialize_delta(
+                        store, pool=pool)["mode"]
             report.to_epoch = new_epoch.epoch_id
             report.wall_s = time.perf_counter() - t0
             return report
@@ -481,6 +495,10 @@ class EpochManager:
         eng = self.engine
         new_topo = GraphTopology(eng.schema)
         new_topo.build(eng.store, eng.lake, pool=eng.pool)
+        # stay monotonic across the swap: materialized blob keys carry the
+        # version, so a rebuilt topology restarting at v1 would overwrite
+        # blobs the published manifest still references (torn loads)
+        new_topo.version = max(new_topo.version, eng.topology.version + 1)
         eng.adopt_topology(new_topo)
         return new_topo
 

@@ -19,7 +19,29 @@ the pre-pushdown full-read behavior.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
+
+
+class QueryTimeoutError(TimeoutError):
+    """``ExecOptions.timeout_s`` exceeded.
+
+    Raised at *stage boundaries* — before each E/U/V/ACCUM stage read of a
+    staged ``edge_scan``, before the reads of the legacy path and
+    ``vertex_map``, and between hops/statements in the executor — so a
+    timed-out query stops before issuing its next batch of lake reads
+    rather than mid-decode.  The serving layer reports it as a typed
+    per-request error without killing the worker.
+    """
+
+
+def check_deadline(deadline: Optional[float]) -> None:
+    """Raise :class:`QueryTimeoutError` when ``time.monotonic()`` has passed
+    ``deadline`` (``None`` = no timeout)."""
+    if deadline is not None and time.monotonic() > deadline:
+        raise QueryTimeoutError(
+            f"query exceeded its timeout (deadline {deadline:.3f}, "
+            f"now {time.monotonic():.3f})")
 
 
 def _as_float(v) -> Optional[float]:

@@ -44,6 +44,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.cache.manager import CacheManager
+from repro.core.plan import check_deadline
 from repro.core.read_pipeline import (
     ReadContext,
     execute_plan,
@@ -144,6 +145,7 @@ def vertex_map(
     bounds: Optional[dict] = None,
     counters: Optional[dict] = None,
     pool=None,
+    deadline: Optional[float] = None,
 ):
     """Apply a UDF over an active vertex set (paper §6.1).
 
@@ -154,7 +156,10 @@ def vertex_map(
     ``bounds`` (column -> ``ColumnBounds``, only sensible with ``filter_fn``)
     enables zone-map chunk pruning on the column reads: definitively rejected
     rows are dropped from the output without the UDF seeing real values.
+    ``deadline`` (monotonic seconds) enforces ``ExecOptions.timeout_s`` at
+    the read boundary.
     """
+    check_deadline(deadline)
     if prefetcher is not None:
         prefetcher.prefetch_vertices(vset, columns, bounds=bounds, topo=topology)
     ids = vset.ids()
@@ -214,6 +219,7 @@ def edge_scan(
     plan=None,
     counters: Optional[dict] = None,
     pool=None,
+    deadline: Optional[float] = None,
 ) -> EdgeFrame:
     """Scan the edges incident to ``frontier`` (paper §6.1).
 
@@ -239,7 +245,11 @@ def edge_scan(
     ``read_v_values`` overrides far-side attribute reads — the distributed
     engine injects the two-pass remote fetch here (paper §6.2).  ``pool``
     selects the parallel chunk pipeline for every attribute read.
+    ``deadline`` (monotonic seconds) enforces ``ExecOptions.timeout_s`` at
+    every stage boundary — a timed-out scan stops before its next batch of
+    lake reads.
     """
+    check_deadline(deadline)
     et = topology.schema.edge_types[edge_type]
     if direction == "out":
         u_type, v_type = et.src_type, et.dst_type
@@ -250,6 +260,7 @@ def edge_scan(
         return _edge_scan_staged(
             topology, cache, frontier, edge_type, direction, plan,
             prefetcher, read_v_values, strategy, counters, u_type, v_type, pool,
+            deadline=deadline,
         )
 
     if prefetcher is not None:
@@ -269,6 +280,7 @@ def edge_scan(
     columns = {f"e.{c}": by_col[c] for c in edge_columns}
 
     # endpoint materialization (vertex rows via graph-aware cache units)
+    check_deadline(deadline)
     u_vals, _ = read_vertex_columns_pruned(
         topology, cache, u_type, u, list(u_columns), counters=counters,
         pool=pool, ctx=ctx,
@@ -300,6 +312,7 @@ def edge_scan(
 def _edge_scan_staged(
     topology, cache, frontier, edge_type, direction, plan,
     prefetcher, read_v_values, strategy, counters, u_type, v_type, pool=None,
+    deadline=None,
 ) -> EdgeFrame:
     """Staged late-materialization EdgeScan (DESIGN.md §4).
 
@@ -347,6 +360,7 @@ def _edge_scan_staged(
         columns = {k: vals[keep] for k, vals in columns.items()}
 
     if plan.edge_columns:
+        check_deadline(deadline)
         e_cols, rej = read_edge_columns_pruned(
             topology, cache, edge_type, eid, plan.edge_columns,
             bounds=plan.edge_bounds, counters=counters, pool=pool, ctx=ctx,
@@ -354,6 +368,7 @@ def _edge_scan_staged(
         _evaluate(plan.edge_pred, "e", {f"e.{c}": a for c, a in e_cols.items()}, rej)
 
     if plan.u_columns:
+        check_deadline(deadline)
         u_cols, rej = read_vertex_columns_pruned(
             topology, cache, u_type, u, plan.u_columns,
             bounds=plan.u_bounds, counters=counters, pool=pool, ctx=ctx,
@@ -361,6 +376,7 @@ def _edge_scan_staged(
         _evaluate(plan.source_pred, "u", {f"u.{c}": a for c, a in u_cols.items()}, rej)
 
     if plan.v_columns:
+        check_deadline(deadline)
         if read_v_values is not None:
             v_cols = {c: read_v_values(v_type, v, c) for c in plan.v_columns}
             rej = np.zeros(len(v), dtype=bool)
@@ -372,6 +388,8 @@ def _edge_scan_staged(
         _evaluate(plan.target_pred, "v", {f"v.{c}": a for c, a in v_cols.items()}, rej)
 
     # ACCUM-only columns: needed by no predicate -> final survivors only
+    if plan.accum_edge_columns or plan.accum_u_columns or plan.accum_v_columns:
+        check_deadline(deadline)
     if plan.accum_edge_columns:
         e_cols, _ = read_edge_columns_pruned(
             topology, cache, edge_type, eid, plan.accum_edge_columns,

@@ -1,49 +1,75 @@
-"""Declarative multi-hop pattern queries — the GSQL-block analogue (paper §6).
+"""Declarative multi-hop pattern queries — the execution core behind both
+query front ends (paper §6).
 
-A query is a sequence of blocks; each block takes an input vertex set,
-traverses one edge type (VertexMap + EdgeScan underneath), applies WHERE
-predicates over edge/endpoint columns, optionally updates ACCUM state on an
-endpoint, and yields the next vertex set.  The paper's running example
+Two front ends construct the same :class:`~repro.gsql.ir.LogicalQuery` IR
+and compile to the same execution blocks (DESIGN.md §8):
 
-    SELECT p FROM (t:Tag) <-[e1:HasTag]- (c:Comment) -[e2:HasCreator]-> (p:Person)
-    WHERE t.name == "Music" AND e2.date > ... AND p.gender == "Female"
-    ACCUM p.@sum += 1
+- **GSQL text** (the paper's headline interface), via
+  ``repro.gsql``::
 
-is expressed as::
+      session = repro.connect(store, schema)
+      session.query('''
+          SELECT p FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p
+          WHERE t.name == $tag AND e2.creationDate > $date
+            AND p.gender == "Female"
+          ACCUM p.@cnt += 1
+      ''', tag="Music", date=20100101)
 
-    q = (Query(engine)
-         .vertices("Tag", where=eq("name", "Music"))
-         .hop("HasTag", direction="in")
-         .hop("HasCreator", direction="out",
-              edge_where=gt("date", d), target_where=eq("gender", "Female"),
-              accum=accum_sum("cnt", 1.0)))
-    result = q.run()
+- the **fluent builder** (this module), a thin constructor over the same
+  blocks::
+
+      q = (Query(engine)
+           .vertices("Tag", where=eq("name", "Music"))
+           .hop("HasTag", direction="in")
+           .hop("HasCreator", direction="out",
+                edge_where=gt("creationDate", d), target_where=eq("gender", "Female"),
+                accum=accum_sum("cnt", 1.0)))
+      result = q.run()
+
+Either way execution flows through :func:`execute_compiled` over
+``_SeedBlock`` / ``_HopBlock`` sequences — one execution path, two front
+ends — so text queries are bit-identical to their builder equivalents.
 
 Predicates compose with ``&`` / ``|``; they compile to vectorized masks over
-materialized frames.
+materialized frames.  The standard comparison builders additionally carry a
+declarative ``spec`` so builder chains can round-trip through the IR
+(``Query.to_ir()`` -> ``LogicalQuery.render()`` -> ``parse()``).
 
-**Predicate pushdown (DESIGN.md §4).**  ``run()`` plans every hop before
-executing it: the WHERE conjuncts are already split by prefix (``e.`` /
-``u.`` / ``v.``) at the API level, so the planner's job is staging — pred
-columns vs ACCUM-only columns per prefix — plus compiling each boundable
-conjunct to :class:`~repro.core.plan.ColumnBounds` via ``Predicate.bounds()``.
+**Predicate pushdown (DESIGN.md §4).**  Every hop is planned before it
+executes: the WHERE conjuncts are already split by prefix (``e.`` / ``u.`` /
+``v.``), so the planner's job is staging — pred columns vs ACCUM-only
+columns per prefix — plus compiling each boundable conjunct to
+:class:`~repro.core.plan.ColumnBounds` via ``Predicate.bounds()``.
 ``eq``/``gt``/``ge``/``lt``/``le``/``isin`` and their ``&``-compositions
 produce usable bounds; ``|``-compositions, ``ne`` and opaque UDF predicates
 degrade safely to no-prune (empty bounds).  The staged plan drives
 ``edge_scan``'s late materialization and the zone-map chunk skipping in the
-read/prefetch path; ``run(pushdown=False)`` forces the legacy
+read/prefetch path; ``ExecOptions(pushdown=False)`` forces the legacy
 full-materialization path (the parity baseline).
+
+**Execution knobs** live in :class:`ExecOptions` (per-session defaults on
+:class:`~repro.gsql.session.GraphSession`, overridable per call).  The old
+per-run ``Query.run(pushdown=..., pipeline=...)`` kwargs remain as
+deprecation shims.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core.accumulators import AccumSpec
-from repro.core.plan import ColumnBounds, ScanPlan, merge_bounds, new_pruning_counters
+from repro.core.plan import (
+    ColumnBounds,
+    ScanPlan,
+    check_deadline,
+    merge_bounds,
+    new_pruning_counters,
+)
 from repro.core.types import VSet
 
 
@@ -59,10 +85,15 @@ class Predicate:
         fn: Callable[[dict, str], np.ndarray],
         columns: tuple[str, ...],
         bounds: Optional[dict] = None,
+        spec=None,
     ):
         self._fn = fn
         self.columns = columns  # bare column names this predicate touches
         self._bounds = dict(bounds) if bounds else {}
+        # declarative shape for IR round-tripping: ("cmp", col, op, value) |
+        # ("in", col, values) | ("and"|"or", left, right); None for opaque
+        # UDFs — those execute fine but cannot render as GSQL text
+        self.spec = spec
 
     def bounds(self) -> dict[str, ColumnBounds]:
         """Column -> zone-map bounds implied by this predicate.
@@ -77,6 +108,11 @@ class Predicate:
     def evaluate(self, frame: dict, prefix: str) -> np.ndarray:
         return self._fn(frame, prefix)
 
+    def _compose_spec(self, kind: str, other: "Predicate"):
+        if self.spec is None or other.spec is None:
+            return None
+        return (kind, self.spec, other.spec)
+
     def __and__(self, other: "Predicate") -> "Predicate":
         # AND is at least as restrictive as each side: bounds intersect, and
         # a one-sided bound stays usable even if the other side is opaque.
@@ -84,6 +120,7 @@ class Predicate:
             lambda f, p: self.evaluate(f, p) & other.evaluate(f, p),
             self.columns + other.columns,
             bounds=merge_bounds(self._bounds, other.bounds()),
+            spec=self._compose_spec("and", other),
         )
 
     def __or__(self, other: "Predicate") -> "Predicate":
@@ -91,6 +128,7 @@ class Predicate:
         return Predicate(
             lambda f, p: self.evaluate(f, p) | other.evaluate(f, p),
             self.columns + other.columns,
+            spec=self._compose_spec("or", other),
         )
 
 
@@ -101,7 +139,8 @@ def _col(frame: dict, prefix: str, column: str) -> np.ndarray:
     return frame[column]
 
 
-def _cmp(column: str, op: Callable, bounds_of: Optional[Callable] = None) -> Callable[..., Predicate]:
+def _cmp(column: str, op: Callable, op_text: str,
+         bounds_of: Optional[Callable] = None) -> Callable[..., Predicate]:
     def make(value) -> Predicate:
         def fn(frame, prefix):
             col = _col(frame, prefix, column)
@@ -110,35 +149,36 @@ def _cmp(column: str, op: Callable, bounds_of: Optional[Callable] = None) -> Cal
                 return op(col, str(value))
             return op(col, value)
         b = {column: bounds_of(value)} if bounds_of is not None else None
-        return Predicate(fn, (column,), bounds=b)
+        return Predicate(fn, (column,), bounds=b,
+                         spec=("cmp", column, op_text, value))
     return make
 
 
 def eq(column: str, value) -> Predicate:
-    return _cmp(column, np.equal,
+    return _cmp(column, np.equal, "==",
                 lambda v: ColumnBounds(values=frozenset([v])))(value)
 
 
 def ne(column: str, value) -> Predicate:
-    return _cmp(column, np.not_equal)(value)
+    return _cmp(column, np.not_equal, "!=")(value)
 
 
 def gt(column: str, value) -> Predicate:
-    return _cmp(column, np.greater,
+    return _cmp(column, np.greater, ">",
                 lambda v: ColumnBounds(lo=v, lo_strict=True))(value)
 
 
 def ge(column: str, value) -> Predicate:
-    return _cmp(column, np.greater_equal, lambda v: ColumnBounds(lo=v))(value)
+    return _cmp(column, np.greater_equal, ">=", lambda v: ColumnBounds(lo=v))(value)
 
 
 def lt(column: str, value) -> Predicate:
-    return _cmp(column, np.less,
+    return _cmp(column, np.less, "<",
                 lambda v: ColumnBounds(hi=v, hi_strict=True))(value)
 
 
 def le(column: str, value) -> Predicate:
-    return _cmp(column, np.less_equal, lambda v: ColumnBounds(hi=v))(value)
+    return _cmp(column, np.less_equal, "<=", lambda v: ColumnBounds(hi=v))(value)
 
 
 def isin(column: str, values) -> Predicate:
@@ -154,7 +194,8 @@ def isin(column: str, values) -> Predicate:
         return np.asarray([x in values for x in col.tolist()], dtype=bool)
 
     return Predicate(fn, (column,),
-                     bounds={column: ColumnBounds(values=frozenset(values))})
+                     bounds={column: ColumnBounds(values=frozenset(values))},
+                     spec=("in", column, tuple(sorted(values, key=repr))))
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +224,8 @@ def accum_min(name: str, value, target: str = "v") -> AccumUpdate:
 
 
 # ---------------------------------------------------------------------------
-# query blocks
+# execution blocks — what the GSQL compiler and the fluent builder both
+# lower to (the IR's execution targets, DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -191,6 +233,10 @@ class _SeedBlock:
     vertex_type: str
     where: Optional[Predicate]
     raw_ids: Optional[np.ndarray]
+    # accumulator conjuncts (name, cmp-op text, value): filter the seed set
+    # against runtime @accum state without touching the lake (BI5's
+    # "high-degree persons" stage)
+    accum_where: Optional[list] = None
 
 
 @dataclasses.dataclass
@@ -201,6 +247,65 @@ class _HopBlock:
     source_where: Optional[Predicate]
     target_where: Optional[Predicate]
     accum: Optional[AccumUpdate]
+
+
+@dataclasses.dataclass
+class _PostAccumBlock:
+    """POST-ACCUM: one aggregation hop seeded from an already-matched alias
+    (vertex position ``source`` of the statement's path) — it updates
+    accumulators and appends its frame, but never moves the result set."""
+
+    source: int
+    hop: _HopBlock
+    target_alias: Optional[str] = None
+
+
+@dataclasses.dataclass
+class CompiledStatement:
+    """One SELECT statement lowered to execution blocks."""
+
+    seed: _SeedBlock
+    hops: list[_HopBlock] = dataclasses.field(default_factory=list)
+    # vertex position (0 = seed) whose forward-matched set becomes the
+    # statement's result vset; -1 = last position (builder default)
+    select: int = -1
+    # alias name per vertex position (None = unnamed, builder chains)
+    vertex_aliases: list = dataclasses.field(default_factory=list)
+    post: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class CompiledQuery:
+    """A full query: statements sharing one accumulator space."""
+
+    statements: list
+    # (vertex_type, accum name) pairs the query writes — what a session
+    # resets before running so repeated queries are deterministic
+    accum_targets: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ExecOptions:
+    """Per-execution knobs, owned by the session (DESIGN.md §8).
+
+    ``pushdown=False`` forces the legacy full-materialization scan path (no
+    staging, no zone-map pruning) — the pushdown parity baseline.
+    ``pipeline`` pins the parallel chunk-pipelined read path on/off
+    (``None`` defers to the ``pipe`` perf flag; ``False`` is the pipelining
+    parity baseline, DESIGN.md §5).  All paths return bit-identical
+    results.  ``timeout_s`` bounds wall time: exceeded deadlines raise
+    :class:`~repro.core.plan.QueryTimeoutError` at the next stage boundary
+    (E/U/V/ACCUM stage reads in ``edge_scan``, hop and statement edges in
+    the executor)."""
+
+    pushdown: bool = True
+    pipeline: Optional[bool] = None
+    timeout_s: Optional[float] = None
+
+    def deadline(self) -> Optional[float]:
+        if self.timeout_s is None:
+            return None
+        return time.monotonic() + self.timeout_s
 
 
 @dataclasses.dataclass
@@ -217,15 +322,19 @@ class QueryResult:
     # subsystem (query ran straight against the mutable topology)
     epoch_id: int = -1
     staleness_s: float = 0.0
+    # named vertex aliases -> vertex sets (GSQL front end): the seed alias
+    # maps to the filtered seed set, every other alias to the set that
+    # reached it (its hop's surviving far side)
+    alias_sets: dict = dataclasses.field(default_factory=dict)
 
 
 def plan_hop(hop: "_HopBlock") -> ScanPlan:
     """Compile one hop block into a staged :class:`ScanPlan`.
 
-    The WHERE is already split per prefix at the builder level; planning
-    stages the columns (predicate columns materialize in their stage,
-    ACCUM-only columns for final survivors) and compiles each conjunct's
-    zone-map bounds.
+    The WHERE is already split per prefix at the front end; planning stages
+    the columns (predicate columns materialize in their stage, ACCUM-only
+    columns for final survivors) and compiles each conjunct's zone-map
+    bounds.
     """
     e_cols = list(dict.fromkeys(hop.edge_where.columns)) if hop.edge_where else []
     u_cols = list(dict.fromkeys(hop.source_where.columns)) if hop.source_where else []
@@ -250,6 +359,234 @@ def plan_hop(hop: "_HopBlock") -> ScanPlan:
         v_bounds=hop.target_where.bounds() if hop.target_where else {},
     )
 
+
+# ---------------------------------------------------------------------------
+# the executor — one path under both front ends
+# ---------------------------------------------------------------------------
+
+_ACC_CMP = {
+    "==": np.equal, "!=": np.not_equal, ">": np.greater, ">=": np.greater_equal,
+    "<": np.less, "<=": np.less_equal,
+}
+
+
+def execute_compiled(engine, compiled: CompiledQuery,
+                     options: Optional[ExecOptions] = None,
+                     epoch=None, private_accums: bool = False) -> QueryResult:
+    """Run a compiled query against the engine.
+
+    Every run executes against one snapshot-pinned epoch (DESIGN.md §7): by
+    default the engine's current epoch is acquired for the whole run —
+    covering *all* statements of a multi-statement query — and released
+    afterwards, so commits (and ``advance()``) landing mid-query can never
+    tear the result.  Pass ``epoch`` (an explicitly acquired
+    :class:`~repro.core.epochs.GraphEpoch`) to time-travel onto an older
+    pinned view; the caller then owns its release.
+
+    ``private_accums=True`` (the session path) runs the query against a
+    fresh accumulator store sized to the pinned epoch: results are a pure
+    function of (query, params, epoch), concurrent queries can never
+    observe each other's partial accumulator state, and the returned arrays
+    are never mutated by later queries.  The default shares the engine's
+    store — the legacy builder semantics (cumulative across runs), which
+    ``engine.register_accum`` consumers rely on.  Either store is captured
+    *once* here: a full-rebuild ``advance()`` swapping ``engine.accums``
+    mid-query cannot hand later hops a renumbered dense space.
+    """
+    options = options or ExecOptions()
+    deadline = options.deadline()
+    counters = new_pruning_counters()
+    mgr = getattr(engine, "epochs", None)
+    acquired = None
+    if epoch is None and mgr is not None:
+        epoch = acquired = mgr.acquire()
+    try:
+        from repro.core.accumulators import Accumulators
+
+        accums = Accumulators(epoch if epoch is not None else engine.topology) \
+            if private_accums else engine.accums
+        accum_out: dict[str, np.ndarray] = {}
+        frames: list = []
+        alias_sets: dict = {}
+        n_scanned = 0
+        vset = None
+        for stmt in compiled.statements:
+            check_deadline(deadline)
+            vset, n = _run_statement(
+                engine, stmt, accums, counters, options, epoch, deadline,
+                accum_out, frames, alias_sets,
+            )
+            n_scanned += n
+        return QueryResult(
+            vset=vset, accumulators=accum_out, n_edges_scanned=n_scanned,
+            frames=frames, pruning=counters,
+            epoch_id=epoch.epoch_id if epoch is not None else -1,
+            staleness_s=epoch.staleness_s() if epoch is not None else 0.0,
+            alias_sets=alias_sets,
+        )
+    finally:
+        if acquired is not None:
+            mgr.release(acquired)
+
+
+def _run_statement(eng, stmt: CompiledStatement, accums, counters, options,
+                   epoch, deadline, accum_out, frames, alias_sets):
+    # ``accums`` is the store execute_compiled pinned for the whole query: a
+    # full-rebuild advance() swaps eng.accums (renumbered dense space), and
+    # this query's dense ids only mean anything in the store that matches
+    # its pinned epoch
+    seed = stmt.seed
+    topo = epoch if epoch is not None else eng.topology
+    pushdown, pipeline = options.pushdown, options.pipeline
+
+    if seed.raw_ids is not None:
+        vset = eng.vset_from_raw_ids(seed.vertex_type, seed.raw_ids, epoch=epoch)
+    else:
+        vset = eng.all_vertices(seed.vertex_type, epoch=epoch)
+    if seed.where is not None:
+        vset, _ = eng.vertex_map(
+            vset,
+            columns=list(dict.fromkeys(seed.where.columns)),
+            filter_fn=lambda fr: seed.where.evaluate(fr, ""),
+            bounds=seed.where.bounds() if pushdown else None,
+            counters=counters, pipeline=pipeline, epoch=epoch,
+            deadline=deadline,
+        )
+    if seed.accum_where:
+        n = topo.n_vertices(seed.vertex_type)
+        mask = vset.mask.copy()
+        for name, op, value in seed.accum_where:
+            if accums.has(seed.vertex_type, name):
+                arr = accums.ensure_capacity(seed.vertex_type, name, n)[:n]
+            else:  # never written -> every slot sits at the sum identity
+                arr = np.zeros(n)
+            mask &= _ACC_CMP[op](arr, value)
+        vset = VSet(seed.vertex_type, mask)
+    seed_set = vset
+
+    aliases = stmt.vertex_aliases or [None] * (len(stmt.hops) + 1)
+    if aliases[0] is not None:
+        alias_sets[aliases[0]] = seed_set
+
+    # forward-matched set per vertex position: position i>0 is the set its
+    # hop reached; position 0 (computed lazily — it costs a np.unique) is
+    # the seed vertices with at least one edge surviving hop 1
+    matched: list = [None] * (len(stmt.hops) + 1)
+    matched[0] = seed_set
+    n_scanned = 0
+    first_frame = None
+    for hop_i, hop in enumerate(stmt.hops):
+        check_deadline(deadline)
+        frame, u_type, v_type = _exec_hop(
+            eng, vset, hop, counters, options, epoch, deadline)
+        if hop_i == 0:
+            first_frame = frame
+        n_scanned += len(frame)
+        frames.append(frame)
+        _apply_accum(accums, topo, hop, frame, u_type, v_type, accum_out)
+        n_v = topo.n_vertices(v_type)
+        vset = frame.v_set(n_v)
+        matched[hop_i + 1] = vset
+        if aliases[hop_i + 1] is not None:
+            alias_sets[aliases[hop_i + 1]] = vset
+
+    def matched_set(pos: int) -> VSet:
+        if pos == 0 and stmt.hops:
+            # lazily refine: seed vertices that kept an edge through hop 1
+            return first_frame.u_set(topo.n_vertices(seed.vertex_type))
+        return matched[pos]
+
+    for pb in stmt.post:
+        check_deadline(deadline)
+        src = matched_set(pb.source)
+        frame, u_type, v_type = _exec_hop(
+            eng, src, pb.hop, counters, options, epoch, deadline)
+        n_scanned += len(frame)
+        frames.append(frame)
+        _apply_accum(accums, topo, pb.hop, frame, u_type, v_type, accum_out)
+        if pb.target_alias is not None:
+            alias_sets[pb.target_alias] = frame.v_set(topo.n_vertices(v_type))
+
+    select = stmt.select if stmt.select >= 0 else len(stmt.hops)
+    return matched_set(select), n_scanned
+
+
+def _exec_hop(eng, vset, hop: _HopBlock, counters, options, epoch, deadline):
+    """One EdgeScan hop: staged pushdown plan, or the legacy
+    full-materialization path when ``options.pushdown`` is off."""
+    et = eng.schema.edge_types[hop.edge_type]
+    u_type = et.src_type if hop.direction == "out" else et.dst_type
+    v_type = et.dst_type if hop.direction == "out" else et.src_type
+
+    if options.pushdown:
+        frame = eng.edge_scan(
+            vset, hop.edge_type, hop.direction,
+            plan=plan_hop(hop), counters=counters, pipeline=options.pipeline,
+            epoch=epoch, deadline=deadline,
+        )
+        return frame, u_type, v_type
+
+    edge_cols, u_cols, v_cols = set(), set(), set()
+    if hop.edge_where is not None:
+        edge_cols.update(hop.edge_where.columns)
+    if hop.source_where is not None:
+        u_cols.update(hop.source_where.columns)
+    if hop.target_where is not None:
+        v_cols.update(hop.target_where.columns)
+    if hop.accum is not None and isinstance(hop.accum.value, str):
+        pfx, col = hop.accum.value.split(".", 1)
+        {"e": edge_cols, "u": u_cols, "v": v_cols}[pfx].add(col)
+
+    def _filter(frame, hop=hop):
+        n = len(frame["u"])
+        keep = np.ones(n, dtype=bool)
+        if hop.edge_where is not None:
+            keep &= hop.edge_where.evaluate(frame, "e")
+        if hop.source_where is not None:
+            keep &= hop.source_where.evaluate(frame, "u")
+        if hop.target_where is not None:
+            keep &= hop.target_where.evaluate(frame, "v")
+        return keep
+
+    frame = eng.edge_scan(
+        vset, hop.edge_type, hop.direction,
+        edge_columns=sorted(edge_cols),
+        u_columns=sorted(u_cols),
+        v_columns=sorted(v_cols),
+        edge_filter=_filter,
+        counters=counters, pipeline=options.pipeline,
+        epoch=epoch, deadline=deadline,
+    )
+    return frame, u_type, v_type
+
+
+def _apply_accum(accums, topo, hop: _HopBlock, frame, u_type, v_type, accum_out):
+    if hop.accum is None:
+        return
+    a = hop.accum
+    if a.target == "v":
+        tgt_type, tgt_ids = v_type, frame.v
+    else:
+        tgt_type, tgt_ids = u_type, frame.u
+    if not accums.has(tgt_type, a.name):
+        accums.register(AccumSpec(tgt_type, a.name, op=a.op, dtype=a.dtype))
+    if isinstance(a.value, str):
+        pfx, col = a.value.split(".", 1)
+        vals = frame.columns[f"{pfx}.{col}"]
+    else:
+        vals = a.value
+    accums.update(tgt_type, a.name, tgt_ids, vals)
+    # the result view is sized to *this* epoch's dense space, so it always
+    # aligns with the result vset's mask even when a later epoch has
+    # already grown the shared array
+    n_tgt = topo.n_vertices(tgt_type)
+    accums.ensure_capacity(tgt_type, a.name, n_tgt)
+    accum_out[a.name] = accums.array(tgt_type, a.name)[:n_tgt]
+
+
+# ---------------------------------------------------------------------------
+# the fluent builder front end
+# ---------------------------------------------------------------------------
 
 class Query:
     def __init__(self, engine):
@@ -279,136 +616,148 @@ class Query:
         )
         return self
 
-    # -- execution ----------------------------------------------------------------
+    # -- lowering ---------------------------------------------------------------
 
-    def run(self, pushdown: bool = True,
-            pipeline: Optional[bool] = None, epoch=None) -> QueryResult:
-        """Execute the query.  ``pushdown=False`` forces the legacy
-        full-materialization scan path (no staging, no zone-map pruning) —
-        the baseline the pushdown parity tests and benchmarks compare
-        against.  ``pipeline`` pins the parallel chunk-pipelined read path
-        on/off per run (``None`` defers to the ``pipe`` perf flag; the
-        sequential path is the pipelining parity baseline, DESIGN.md §5).
-        All paths return bit-identical results.
-
-        Every run executes against one snapshot-pinned epoch (DESIGN.md §7):
-        by default the engine's current epoch is acquired for the whole run
-        and released afterwards, so commits (and ``advance()``) landing
-        mid-query can never tear the result — the next run simply picks up
-        the newer epoch.  Pass ``epoch`` (an explicitly acquired
-        ``GraphEpoch``) to time-travel onto an older pinned view; the caller
-        then owns its release."""
-        eng = self.engine
-        seed = self._seed
-        if seed is None:
+    def compiled(self) -> CompiledQuery:
+        """This chain as a single-statement :class:`CompiledQuery` — the
+        exact blocks the GSQL compiler would emit for the equivalent text."""
+        if self._seed is None:
             raise ValueError("query has no seed block")
-        counters = new_pruning_counters()
+        return CompiledQuery(
+            statements=[CompiledStatement(seed=self._seed, hops=list(self._hops))],
+        )
 
-        mgr = getattr(eng, "epochs", None)
-        acquired = None
-        if epoch is None and mgr is not None:
-            epoch = acquired = mgr.acquire()
-        try:
-            return self._run_pinned(eng, seed, counters, pushdown, pipeline, epoch)
-        finally:
-            if acquired is not None:
-                mgr.release(acquired)
+    def to_ir(self):
+        """This chain as a :class:`~repro.gsql.ir.LogicalQuery`.
 
-    def _run_pinned(self, eng, seed, counters, pushdown, pipeline, epoch) -> QueryResult:
-        topo = epoch if epoch is not None else eng.topology
-        # pin the accumulator store too: a full-rebuild advance() swaps
-        # eng.accums (renumbered dense space), and this query's dense ids
-        # only mean anything in the store that matches its pinned epoch
-        accums = eng.accums
-        if seed.raw_ids is not None:
-            vset = eng.vset_from_raw_ids(seed.vertex_type, seed.raw_ids, epoch=epoch)
-        else:
-            vset = eng.all_vertices(seed.vertex_type, epoch=epoch)
-        if seed.where is not None:
-            vset, _ = eng.vertex_map(
-                vset,
-                columns=list(dict.fromkeys(seed.where.columns)),
-                filter_fn=lambda fr: seed.where.evaluate(fr, ""),
-                bounds=seed.where.bounds() if pushdown else None,
-                counters=counters, pipeline=pipeline, epoch=epoch,
-            )
+        Only declarative chains convert: opaque UDF predicates (no
+        ``spec``) and ``raw_ids`` seeds raise ``ValueError``.  The result
+        renders to GSQL text that parses back to an equal IR — the
+        round-trip property the GSQL tests fuzz.
+        """
+        from repro.gsql import ir
 
-        accum_out: dict[str, np.ndarray] = {}
-        frames = []
-        n_scanned = 0
-        for hop_i, hop in enumerate(self._hops):
-            et = eng.schema.edge_types[hop.edge_type]
-            u_type = et.src_type if hop.direction == "out" else et.dst_type
+        if self._seed is None:
+            raise ValueError("query has no seed block")
+        if self._seed.raw_ids is not None:
+            raise ValueError("raw_ids seeds are not representable in GSQL text")
+
+        schema = self.engine.schema
+        v_aliases = ["s"] + [f"v{i + 1}" for i in range(len(self._hops))]
+        vtypes = [self._seed.vertex_type]
+        hop_pats = []
+        conds: list = []
+        accums: list = []
+
+        def add_pred(pred: Optional[Predicate], alias: str):
+            if pred is None:
+                return
+            conds.extend(_spec_to_conds(pred.spec, alias))
+
+        add_pred(self._seed.where, "s")
+        if self._seed.accum_where:
+            for name, op, value in self._seed.accum_where:
+                conds.append(ir.Cmp(ref=ir.ColRef("s", name, is_accum=True),
+                                    op=op, value=value))
+
+        for i, hop in enumerate(self._hops):
+            et = schema.edge_types[hop.edge_type]
+            if hop.direction not in ("out", "in"):
+                raise ValueError(f"direction {hop.direction!r} is not renderable")
             v_type = et.dst_type if hop.direction == "out" else et.src_type
-
-            if pushdown:
-                frame = eng.edge_scan(
-                    vset, hop.edge_type, hop.direction,
-                    plan=plan_hop(hop), counters=counters, pipeline=pipeline,
-                    epoch=epoch,
-                )
-            else:
-                edge_cols, u_cols, v_cols = set(), set(), set()
-                if hop.edge_where is not None:
-                    edge_cols.update(hop.edge_where.columns)
-                if hop.source_where is not None:
-                    u_cols.update(hop.source_where.columns)
-                if hop.target_where is not None:
-                    v_cols.update(hop.target_where.columns)
-                if hop.accum is not None and isinstance(hop.accum.value, str):
-                    pfx, col = hop.accum.value.split(".", 1)
-                    {"e": edge_cols, "u": u_cols, "v": v_cols}[pfx].add(col)
-
-                def _filter(frame, hop=hop):
-                    n = len(frame["u"])
-                    keep = np.ones(n, dtype=bool)
-                    if hop.edge_where is not None:
-                        keep &= hop.edge_where.evaluate(frame, "e")
-                    if hop.source_where is not None:
-                        keep &= hop.source_where.evaluate(frame, "u")
-                    if hop.target_where is not None:
-                        keep &= hop.target_where.evaluate(frame, "v")
-                    return keep
-
-                frame = eng.edge_scan(
-                    vset, hop.edge_type, hop.direction,
-                    edge_columns=sorted(edge_cols),
-                    u_columns=sorted(u_cols),
-                    v_columns=sorted(v_cols),
-                    edge_filter=_filter,
-                    counters=counters, pipeline=pipeline,
-                    epoch=epoch,
-                )
-            n_scanned += len(frame)
-            frames.append(frame)
-
+            u_type = et.src_type if hop.direction == "out" else et.dst_type
+            if u_type != vtypes[-1]:
+                raise ValueError(
+                    f"hop {i + 1} ({hop.edge_type}, {hop.direction}) expects a "
+                    f"{u_type} frontier, got {vtypes[-1]}")
+            vtypes.append(v_type)
+            e_alias = f"e{i + 1}"
+            hop_pats.append(ir.HopPat(edge_type=hop.edge_type, alias=e_alias,
+                                      direction=hop.direction))
+            add_pred(hop.edge_where, e_alias)
+            add_pred(hop.source_where, v_aliases[i])
+            add_pred(hop.target_where, v_aliases[i + 1])
             if hop.accum is not None:
                 a = hop.accum
-                if a.target == "v":
-                    tgt_type, tgt_ids = v_type, frame.v
-                else:
-                    tgt_type, tgt_ids = u_type, frame.u
-                if (tgt_type, a.name) not in accums._arrays:
-                    accums.register(AccumSpec(tgt_type, a.name, op=a.op, dtype=a.dtype))
+                if a.op not in ir.ACCUM_OPS:
+                    raise ValueError(f"accumulator op {a.op!r} is not renderable")
+                tgt_alias = v_aliases[i + 1] if a.target == "v" else v_aliases[i]
                 if isinstance(a.value, str):
                     pfx, col = a.value.split(".", 1)
-                    vals = frame.columns[f"{pfx}.{col}"]
+                    value = ir.ColRef(
+                        {"u": v_aliases[i], "v": v_aliases[i + 1], "e": e_alias}[pfx],
+                        col)
                 else:
-                    vals = a.value
-                accums.update(tgt_type, a.name, tgt_ids, vals)
-                # the result view is sized to *this* epoch's dense space, so
-                # it always aligns with the result vset's mask even when a
-                # later epoch has already grown the shared array
-                n_tgt = topo.n_vertices(tgt_type)
-                accums.ensure_capacity(tgt_type, a.name, n_tgt)
-                accum_out[a.name] = accums.array(tgt_type, a.name)[:n_tgt]
+                    value = a.value
+                accums.append(ir.AccumStmt(
+                    target=ir.ColRef(tgt_alias, a.name, is_accum=True),
+                    op=a.op, value=value))
 
-            n_v = topo.n_vertices(v_type)
-            vset = frame.v_set(n_v)
-
-        return QueryResult(
-            vset=vset, accumulators=accum_out, n_edges_scanned=n_scanned,
-            frames=frames, pruning=counters,
-            epoch_id=epoch.epoch_id if epoch is not None else -1,
-            staleness_s=epoch.staleness_s() if epoch is not None else 0.0,
+        stmt = ir.StatementIR(
+            select_alias=v_aliases[-1],
+            vertices=tuple(ir.VertexPat(vtype=t, alias=a)
+                           for t, a in zip(vtypes, v_aliases)),
+            hops=tuple(hop_pats),
+            where=tuple(conds),
+            accums=tuple(accums),
         )
+        return ir.LogicalQuery(statements=(stmt,))
+
+    # -- execution ----------------------------------------------------------------
+
+    def run(self, options: Optional[ExecOptions] = None, *,
+            pushdown: Optional[bool] = None,
+            pipeline: Optional[bool] = None, epoch=None) -> QueryResult:
+        """Execute the query via :func:`execute_compiled`.
+
+        ``pushdown``/``pipeline`` are deprecation shims — they fold into an
+        :class:`ExecOptions` (the session-owned home of execution knobs);
+        pass ``options`` (or run through a
+        :class:`~repro.gsql.session.GraphSession`) instead.  ``epoch``
+        time-travels onto an explicitly acquired pinned view (the caller
+        owns its release)."""
+        if pushdown is not None or pipeline is not None:
+            warnings.warn(
+                "Query.run(pushdown=..., pipeline=...) is deprecated; pass "
+                "ExecOptions (or set session defaults via repro.connect())",
+                DeprecationWarning, stacklevel=2)
+            base = options or ExecOptions()
+            options = dataclasses.replace(
+                base,
+                pushdown=base.pushdown if pushdown is None else pushdown,
+                pipeline=base.pipeline if pipeline is None else pipeline,
+            )
+        return execute_compiled(self.engine, self.compiled(),
+                                options=options, epoch=epoch)
+
+
+def _spec_to_conds(spec, alias: str) -> list:
+    """A Predicate's declarative ``spec`` -> IR conjuncts for one alias."""
+    from repro.gsql import ir
+
+    if spec is None:
+        raise ValueError("opaque (UDF) predicates are not representable in GSQL")
+    kind = spec[0]
+    if kind == "cmp":
+        _, col, op, value = spec
+        return [ir.Cmp(ref=ir.ColRef(alias, col), op=op, value=value)]
+    if kind == "in":
+        _, col, values = spec
+        return [ir.InSet(ref=ir.ColRef(alias, col), values=tuple(values))]
+    if kind == "and":
+        return _spec_to_conds(spec[1], alias) + _spec_to_conds(spec[2], alias)
+    if kind == "or":
+        items = []
+        for side in (spec[1], spec[2]):
+            cs = _spec_to_conds(side, alias)
+            if len(cs) != 1:
+                # (a & b) | c has no GSQL spelling in the subset — the
+                # grammar's OR joins simple comparisons only
+                raise ValueError("OR over an AND-composition is not "
+                                 "representable in GSQL")
+            if isinstance(cs[0], ir.OrCond):
+                items.extend(cs[0].items)
+            else:
+                items.append(cs[0])
+        return [ir.OrCond(items=tuple(items))]
+    raise ValueError(f"unknown predicate spec {spec!r}")

@@ -268,11 +268,29 @@ class GraphTopology:
 
     # ---------------------------------------------------------- materialization
 
-    def _manifest(self) -> dict:
+    def _blob_key(self, ename: str, i: int) -> str:
+        # blob keys carry the topology version: a re-materialization never
+        # overwrites a blob an already-published MANIFEST references, so a
+        # concurrently-loading second connection can't read a torn mix of
+        # old manifest + new blobs (superseded blobs are simply orphaned)
+        return f"topology/{ename}/{i:05d}-v{self.version}.el"
+
+    def _csr_key(self, ename: str) -> str:
+        return f"topology/csr/{ename}-v{self.version}.csr"
+
+    def _manifest(self, edge_list_keys: Optional[dict] = None) -> dict:
         return {
             "n_dangling": self._n_dangling,
             "next_file_id": self._next_file_id,
             "edge_snapshot_ids": self._edge_snapshot_ids,
+            # which topology state these blobs serialize; lets the delta
+            # re-materialization after an epoch advance (DESIGN.md §7) diff
+            # what is already persisted instead of re-uploading everything
+            "topology_version": self.version,
+            "edge_sources": {
+                ename: [el.file_key for el in els]
+                for ename, els in self.edge_lists.items()
+            },
             "vertex_types": {
                 name: {
                     "table": vt.table,
@@ -290,14 +308,14 @@ class GraphTopology:
                 }
                 for name, vt in self.vertex_info.items()
             },
-            "edge_lists": {
-                ename: [f"topology/{ename}/{i:05d}.el" for i in range(len(els))]
+            "edge_lists": edge_list_keys if edge_list_keys is not None else {
+                ename: [self._blob_key(ename, i) for i in range(len(els))]
                 for ename, els in self.edge_lists.items()
             },
             # mirrors the materialize() upload guard: with the csr flag off
             # no blobs are written, so none may be referenced
             "csr": {
-                ename: f"topology/csr/{ename}.csr"
+                ename: self._csr_key(ename)
                 for ename in (self.plane.built_csrs() if perf_enabled("csr") else ())
             },
         }
@@ -317,7 +335,7 @@ class GraphTopology:
             for ename, els in self.edge_lists.items():
                 for i, el in enumerate(els):
                     futs.append(
-                        pool.submit(store.put, f"topology/{ename}/{i:05d}.el", el.to_bytes())
+                        pool.submit(store.put, self._blob_key(ename, i), el.to_bytes())
                     )
             for f in futs:
                 f.result()
@@ -330,7 +348,7 @@ class GraphTopology:
                 for ename in self.edge_lists:
                     csr = self.plane.csr(ename)
                     csr_futs.append(
-                        pool.submit(store.put, f"topology/csr/{ename}.csr", csr.to_bytes())
+                        pool.submit(store.put, self._csr_key(ename), csr.to_bytes())
                     )
                 for f in csr_futs:
                     f.result()
@@ -341,6 +359,74 @@ class GraphTopology:
                 pool.close()
         self.timings["csr_build_s"] = csr_s
         self.timings["materialize_s"] = time.perf_counter() - t0 - csr_s
+
+    def rematerialize_delta(self, store: ObjectStore,
+                            pool: Optional[IOPool] = None) -> dict:
+        """Refresh the persisted topology after an incremental epoch advance
+        (ROADMAP: stale-manifest gap) — so a second connection pays the fast
+        ``load_materialized`` path against the *current* lake state instead
+        of a stale blob (or, worse, a full first-connection build).
+
+        Append-only deltas upload only the new tail blobs of each changed
+        edge type — the manifest keeps referencing the already-persisted
+        prefix blobs, which stay valid because per-file edge lists are
+        immutable.  Removals serialize that edge type's whole run under
+        fresh version-suffixed keys (never overwriting blobs the published
+        manifest references — a concurrently-loading second connection
+        reads either the old consistent set or, after the final manifest
+        swap, the new one).  The manifest is always rewritten — it is tiny
+        — and its CSR references are dropped: persisted CSR blobs serialize
+        a superseded topology, and re-serializing one per advance would
+        dwarf the delta itself, so a post-advance second connection
+        rebuilds CSR lazily.
+
+        Returns upload stats.  Falls back to a full :meth:`materialize` when
+        no (new-format) manifest exists yet.
+        """
+        t0 = time.perf_counter()
+        if not self.is_materialized(store):
+            self.materialize(store, pool=pool)
+            return {"mode": "full", "blobs_uploaded": -1,
+                    "wall_s": time.perf_counter() - t0}
+        man = json.loads(store.get("topology/MANIFEST.json"))
+        old_sources = man.get("edge_sources")
+        own = pool is None
+        pool = pool or IOPool(n_threads=8)
+        uploaded = 0
+        try:
+            if old_sources is None:
+                self.materialize(store, pool=pool)
+                return {"mode": "full", "blobs_uploaded": -1,
+                        "wall_s": time.perf_counter() - t0}
+            futs = []
+            keys_by_type: dict[str, list[str]] = {}
+            for ename, els in self.edge_lists.items():
+                cur = [el.file_key for el in els]
+                old = old_sources.get(ename, [])
+                old_keys = man["edge_lists"].get(ename, [])
+                # append-only: the persisted prefix blobs stay referenced,
+                # only the tail uploads; anything else (removal/reorder):
+                # serialize the whole run fresh
+                if cur[:len(old)] == old and len(old_keys) == len(old):
+                    keys, start = list(old_keys), len(old)
+                else:
+                    keys, start = [], 0
+                for i in range(start, len(els)):
+                    key = self._blob_key(ename, i)
+                    keys.append(key)
+                    futs.append(pool.submit(store.put, key, els[i].to_bytes()))
+                keys_by_type[ename] = keys
+            for f in futs:
+                f.result()
+            uploaded = len(futs)
+            new_man = self._manifest(edge_list_keys=keys_by_type)
+            new_man["csr"] = {}   # stale for this version; rebuilt lazily
+            store.put("topology/MANIFEST.json", json.dumps(new_man).encode())
+        finally:
+            if own:
+                pool.close()
+        return {"mode": "delta", "blobs_uploaded": uploaded,
+                "wall_s": time.perf_counter() - t0}
 
     @staticmethod
     def is_materialized(store: ObjectStore) -> bool:

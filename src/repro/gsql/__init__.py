@@ -1,0 +1,49 @@
+"""GSQL front end (paper §6): textual query language -> logical IR -> compiled
+scan plans.
+
+The package is layered so that ``repro.core`` can depend on the IR without
+cycles:
+
+- :mod:`repro.gsql.ir` — the declarative :class:`LogicalQuery` IR (pure data,
+  no engine imports).  ``repro.core.query``'s fluent builder constructs the
+  same IR (``Query.to_ir()``), so text and builder are two front ends over
+  one execution path.
+- :mod:`repro.gsql.lexer` / :mod:`repro.gsql.parser` — GSQL text -> IR, with
+  line/column-positioned syntax errors.
+- :mod:`repro.gsql.compiler` — IR -> ``repro.core.query`` execution blocks,
+  with parse-time schema validation (unknown vertex/edge types and columns
+  fail here, never mid-scan) and ``$param`` binding.
+- :mod:`repro.gsql.session` — the :class:`GraphSession` facade
+  (``repro.connect() -> session.query()/install()/explain()``) that owns
+  epoch acquisition and per-session :class:`~repro.core.query.ExecOptions`.
+"""
+
+from __future__ import annotations
+
+from repro.gsql.ir import LogicalQuery  # noqa: F401  (pure-data, cycle-free)
+
+_LAZY = {
+    "parse": ("repro.gsql.parser", "parse"),
+    "GSQLError": ("repro.gsql.errors", "GSQLError"),
+    "GSQLSyntaxError": ("repro.gsql.errors", "GSQLSyntaxError"),
+    "GSQLCompileError": ("repro.gsql.errors", "GSQLCompileError"),
+    "compile_query": ("repro.gsql.compiler", "compile_query"),
+    "validate_query": ("repro.gsql.compiler", "validate_query"),
+    "Catalog": ("repro.gsql.compiler", "Catalog"),
+    "GraphSession": ("repro.gsql.session", "GraphSession"),
+    "connect": ("repro.gsql.session", "connect"),
+}
+
+__all__ = ["LogicalQuery", *_LAZY]
+
+
+def __getattr__(name: str):
+    # lazy exports: importing repro.gsql from repro.core.query must not pull
+    # the compiler (which imports repro.core.query) back in mid-import
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

@@ -1,0 +1,494 @@
+"""GSQL compiler: :class:`~repro.gsql.ir.LogicalQuery` IR -> the execution
+blocks of :mod:`repro.core.query` (DESIGN.md §8).
+
+The compiler is where *everything fails early*: unknown vertex/edge types,
+unknown columns, alias misuse, unresolvable hop directions and parameter
+problems all raise :class:`~repro.gsql.errors.GSQLCompileError` with the
+offending token's line/column — before a single lake read.  What survives
+compiles to exactly the ``_SeedBlock``/``_HopBlock`` sequences the fluent
+builder produces, so text queries execute bit-identically to builder chains.
+
+Conjunct placement: each top-level WHERE conjunct references exactly one
+alias and attaches to that alias's earliest evaluation point — the seed's
+``where`` (a VertexMap filter) for the seed alias, a hop's ``edge_where``
+for its edge alias, and a hop's ``target_where`` for the vertex alias the
+hop introduces.  ``alias.@accum`` conjuncts (runtime accumulator state, no
+lake column behind them) are only meaningful on a seed: they filter the
+seed set against the accumulator array directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+from repro.core import query as q
+from repro.gsql import ir
+from repro.gsql.errors import GSQLCompileError
+
+_PRED = {"==": q.eq, "!=": q.ne, ">": q.gt, ">=": q.ge, "<": q.lt, "<=": q.le}
+
+
+# ---------------------------------------------------------------------------
+# validation surface
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Catalog:
+    """What parse-time validation checks against: the graph schema plus the
+    per-table column sets of every mapped lake table."""
+
+    schema: object                      # repro.core.types.GraphSchema
+    vertex_columns: dict[str, frozenset]
+    edge_columns: dict[str, frozenset]
+
+    @staticmethod
+    def from_engine(engine) -> "Catalog":
+        vcols = {
+            name: frozenset(c.name for c in engine.lake.table(vt.table).schema().columns)
+            for name, vt in engine.schema.vertex_types.items()
+        }
+        ecols = {
+            name: frozenset(c.name for c in engine.lake.table(et.table).schema().columns)
+            for name, et in engine.schema.edge_types.items()
+        }
+        return Catalog(schema=engine.schema, vertex_columns=vcols,
+                       edge_columns=ecols)
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def compile_query(lq: ir.LogicalQuery, catalog: Catalog,
+                  params: Optional[dict] = None) -> q.CompiledQuery:
+    """Validate + lower a query, binding ``$params`` from ``params``."""
+    params = params or {}
+    unknown = set(params) - lq.param_names()
+    if unknown:
+        raise GSQLCompileError(
+            f"unknown parameter(s): {', '.join('$' + p for p in sorted(unknown))}")
+
+    def binder(p: ir.Param):
+        if p.name not in params:
+            raise GSQLCompileError(f"unbound parameter ${p.name}", *p.pos)
+        return params[p.name]
+
+    return _compile(lq, catalog, binder)
+
+
+def validate_query(lq: ir.LogicalQuery, catalog: Catalog) -> set:
+    """Install-time validation: full schema/alias/direction checking with
+    parameters left unbound.  Returns the query's parameter names."""
+    _compile(lq, catalog, lambda p: 0)   # dummy binding; result discarded
+    return lq.param_names()
+
+
+def _compile(lq: ir.LogicalQuery, catalog: Catalog, binder) -> q.CompiledQuery:
+    statements = []
+    accum_targets: list = []
+    for st in lq.statements:
+        statements.append(_compile_statement(st, catalog, binder, accum_targets))
+    return q.CompiledQuery(statements=statements, accum_targets=accum_targets)
+
+
+class _Scope:
+    """Alias table of one statement: vertex positions + edge hops."""
+
+    def __init__(self, catalog: Catalog):
+        self.catalog = catalog
+        self.vertex: dict[str, int] = {}     # alias -> path position
+        self.vtypes: list[str] = []          # vtype per position
+        self.edge: dict[str, int] = {}       # alias -> hop index
+        self.etypes: list[str] = []          # edge type per hop
+
+    def add_vertex(self, pat: ir.VertexPat) -> int:
+        if pat.vtype not in self.catalog.vertex_columns:
+            raise GSQLCompileError(f"unknown vertex type {pat.vtype!r}", *pat.pos)
+        if pat.alias in self.vertex or pat.alias in self.edge:
+            raise GSQLCompileError(f"duplicate alias {pat.alias!r}", *pat.pos)
+        self.vertex[pat.alias] = len(self.vtypes)
+        self.vtypes.append(pat.vtype)
+        return len(self.vtypes) - 1
+
+    def add_edge(self, pat: ir.HopPat) -> int:
+        if pat.edge_type not in self.catalog.edge_columns:
+            raise GSQLCompileError(f"unknown edge type {pat.edge_type!r}", *pat.pos)
+        if pat.alias is not None:
+            if pat.alias in self.vertex or pat.alias in self.edge:
+                raise GSQLCompileError(f"duplicate alias {pat.alias!r}", *pat.pos)
+            self.edge[pat.alias] = len(self.etypes)
+        self.etypes.append(pat.edge_type)
+        return len(self.etypes) - 1
+
+    def check_column(self, ref: ir.ColRef) -> None:
+        """Schema-validate one ``alias.column`` reference (parse-time, never
+        mid-scan).  Accumulator refs are runtime state — no column check."""
+        if ref.is_accum:
+            return
+        if ref.alias in self.vertex:
+            vtype = self.vtypes[self.vertex[ref.alias]]
+            if ref.column not in self.catalog.vertex_columns[vtype]:
+                raise GSQLCompileError(
+                    f"vertex type {vtype!r} has no column {ref.column!r}",
+                    *ref.pos)
+        elif ref.alias in self.edge:
+            etype = self.etypes[self.edge[ref.alias]]
+            if ref.column not in self.catalog.edge_columns[etype]:
+                raise GSQLCompileError(
+                    f"edge type {etype!r} has no column {ref.column!r}",
+                    *ref.pos)
+        else:
+            raise GSQLCompileError(f"unknown alias {ref.alias!r}", *ref.pos)
+
+
+def _resolve_direction(hop: ir.HopPat, u_vtype: str, v_vtype: str,
+                       catalog: Catalog) -> str:
+    et = catalog.schema.edge_types[hop.edge_type]
+    out_ok = et.src_type == u_vtype and et.dst_type == v_vtype
+    in_ok = et.dst_type == u_vtype and et.src_type == v_vtype
+    if hop.direction == "out":
+        if not out_ok:
+            raise GSQLCompileError(
+                f"-({hop.edge_type})-> expects {et.src_type} on the left and "
+                f"{et.dst_type} on the right, got {u_vtype} and {v_vtype}",
+                *hop.pos)
+        return "out"
+    if hop.direction == "in":
+        if not in_ok:
+            raise GSQLCompileError(
+                f"<-({hop.edge_type})- expects {et.dst_type} on the left and "
+                f"{et.src_type} on the right, got {u_vtype} and {v_vtype}",
+                *hop.pos)
+        return "in"
+    if out_ok and in_ok:
+        raise GSQLCompileError(
+            f"-({hop.edge_type})- is ambiguous between {u_vtype} vertices "
+            f"(it connects {et.src_type} to {et.dst_type} of the same type); "
+            f"write -({hop.edge_type})-> or <-({hop.edge_type})-", *hop.pos)
+    if out_ok:
+        return "out"
+    if in_ok:
+        return "in"
+    raise GSQLCompileError(
+        f"edge type {hop.edge_type!r} connects {et.src_type} to "
+        f"{et.dst_type}; it cannot link {u_vtype} to {v_vtype}", *hop.pos)
+
+
+def _bind_value(value, binder):
+    return binder(value) if isinstance(value, ir.Param) else value
+
+
+def _simple_pred(cond, binder) -> q.Predicate:
+    if isinstance(cond, ir.Cmp):
+        if isinstance(cond.value, ir.ColRef):
+            raise GSQLCompileError(
+                "column-to-column comparisons are not supported in the GSQL "
+                "subset; compare each column against a value or $param",
+                *cond.pos)
+        return _PRED[cond.op](cond.ref.column, _bind_value(cond.value, binder))
+    if isinstance(cond, ir.InSet):
+        return q.isin(cond.ref.column,
+                      [_bind_value(v, binder) for v in cond.values])
+    raise GSQLCompileError("unsupported condition", *cond.pos)
+
+
+def _cond_alias(cond) -> ir.ColRef:
+    """The single alias a conjunct binds to (its attachment point)."""
+    refs = cond.refs()
+    aliases = {r.alias for r in refs}
+    if len(aliases) != 1:
+        raise GSQLCompileError(
+            f"a WHERE conjunct must reference exactly one alias, got "
+            f"{', '.join(sorted(aliases))} — split it with AND", *cond.pos)
+    return refs[0]
+
+
+def _and(a: Optional[q.Predicate], b: q.Predicate) -> q.Predicate:
+    return b if a is None else a & b
+
+
+def _compile_statement(st: ir.StatementIR, catalog: Catalog, binder,
+                       accum_targets: list) -> q.CompiledStatement:
+    scope = _Scope(catalog)
+    for v in st.vertices:
+        scope.add_vertex(v)
+    directions = []
+    for i, hop in enumerate(st.hops):
+        scope.add_edge(hop)
+        directions.append(_resolve_direction(
+            hop, scope.vtypes[i], scope.vtypes[i + 1], catalog))
+
+    seed = q._SeedBlock(vertex_type=scope.vtypes[0], where=None, raw_ids=None,
+                        accum_where=[])
+    hops = [
+        q._HopBlock(edge_type=h.edge_type, direction=d, edge_where=None,
+                    source_where=None, target_where=None, accum=None)
+        for h, d in zip(st.hops, directions)
+    ]
+
+    def attach(cond) -> None:
+        ref = _cond_alias(cond)
+        if ref.is_accum:
+            if isinstance(cond, ir.OrCond) or not isinstance(cond, ir.Cmp):
+                raise GSQLCompileError(
+                    "accumulator predicates must be simple comparisons",
+                    *cond.pos)
+            if scope.vertex.get(ref.alias) != 0:
+                raise GSQLCompileError(
+                    f"accumulator predicate on {ref.render()}: @-state filters "
+                    f"are only supported on the statement's seed vertex "
+                    f"(run them as an earlier statement's seed)", *ref.pos)
+            value = _bind_value(cond.value, binder)
+            try:
+                value = float(value)
+            except (TypeError, ValueError):
+                raise GSQLCompileError(
+                    f"accumulator predicate {ref.render()} needs a numeric "
+                    f"value, got {value!r}", *cond.pos)
+            seed.accum_where.append((ref.column, cond.op, value))
+            return
+        if isinstance(cond, ir.OrCond):
+            for item in cond.items:
+                if item.ref.is_accum:
+                    raise GSQLCompileError(
+                        "accumulator references cannot appear inside OR",
+                        *item.ref.pos)
+                scope.check_column(item.ref)
+            pred = functools.reduce(
+                lambda a, b: a | b,
+                (_simple_pred(item, binder) for item in cond.items))
+        else:
+            scope.check_column(cond.ref)
+            pred = _simple_pred(cond, binder)
+        if ref.alias in scope.edge:
+            h = hops[scope.edge[ref.alias]]
+            h.edge_where = _and(h.edge_where, pred)
+        else:
+            pos = scope.vertex[ref.alias]
+            if pos == 0:
+                seed.where = _and(seed.where, pred)
+            else:
+                h = hops[pos - 1]
+                h.target_where = _and(h.target_where, pred)
+
+    for cond in st.where:
+        attach(cond)
+
+    for a in st.accums:
+        _attach_accum(a, scope, hops, None, binder, accum_targets, catalog)
+
+    if st.select_alias not in scope.vertex:
+        raise GSQLCompileError(
+            f"SELECT alias {st.select_alias!r} is not a vertex alias of the "
+            f"pattern", *st.pos)
+    select = scope.vertex[st.select_alias]
+
+    post_blocks = []
+    for pb in st.post:
+        post_blocks.append(_compile_post(pb, scope, catalog, binder,
+                                         accum_targets))
+
+    aliases = [v.alias for v in st.vertices]
+    return q.CompiledStatement(
+        seed=seed, hops=hops, select=select, vertex_aliases=aliases,
+        post=post_blocks,
+    )
+
+
+def _attach_accum(a: ir.AccumStmt, scope: _Scope, hops: list,
+                  force_hop: Optional[int], binder, accum_targets: list,
+                  catalog: Catalog) -> None:
+    """Place one ACCUM update on the hop that introduces its target alias."""
+    alias = a.target.alias
+    if alias not in scope.vertex:
+        raise GSQLCompileError(
+            f"ACCUM target {a.target.render()}: {alias!r} is not a vertex "
+            f"alias", *a.target.pos)
+    pos = scope.vertex[alias]
+    if force_hop is not None:
+        hop_idx = force_hop
+        target = "v" if pos == len(scope.vtypes) - 1 else "u"
+    elif pos == 0:
+        if not hops:
+            raise GSQLCompileError(
+                "ACCUM needs at least one hop to aggregate over", *a.pos)
+        hop_idx, target = 0, "u"
+    else:
+        hop_idx, target = pos - 1, "v"
+    hop = hops[hop_idx]
+    if hop.accum is not None:
+        raise GSQLCompileError(
+            f"hop {hop_idx + 1} already has an ACCUM update; one per hop",
+            *a.pos)
+
+    value = a.value
+    if isinstance(value, ir.ColRef):
+        if value.is_accum:
+            raise GSQLCompileError(
+                "ACCUM values cannot read other accumulators", *value.pos)
+        scope.check_column(value)
+        # the value must come from this hop's own frame: its endpoints or
+        # its edge
+        u_pos, v_pos = hop_idx, hop_idx + 1
+        if value.alias in scope.edge and scope.edge[value.alias] == hop_idx:
+            value = f"e.{value.column}"
+        elif scope.vertex.get(value.alias) == u_pos:
+            value = f"u.{value.column}"
+        elif scope.vertex.get(value.alias) == v_pos:
+            value = f"v.{value.column}"
+        else:
+            raise GSQLCompileError(
+                f"ACCUM value {value.render()} must reference the "
+                f"accumulating hop's endpoints or edge", *value.pos)
+    else:
+        value = _bind_value(value, binder)
+
+    hop.accum = q.AccumUpdate(name=a.target.column, op=a.op, value=value,
+                              target=target)
+    tgt_vtype = scope.vtypes[pos]
+    for other_vtype, other_name in accum_targets:
+        if other_name == a.target.column and other_vtype != tgt_vtype:
+            # QueryResult.accumulators is keyed by bare name; two vertex
+            # types sharing one name would silently shadow each other
+            raise GSQLCompileError(
+                f"accumulator @{a.target.column} is used on both "
+                f"{other_vtype} and {tgt_vtype} in one query; rename one",
+                *a.target.pos)
+    if (tgt_vtype, a.target.column) not in accum_targets:
+        accum_targets.append((tgt_vtype, a.target.column))
+
+
+def _compile_post(pb: ir.PostAccumIR, scope: _Scope, catalog: Catalog,
+                  binder, accum_targets: list) -> q._PostAccumBlock:
+    if pb.source_alias not in scope.vertex:
+        raise GSQLCompileError(
+            f"POST-ACCUM source {pb.source_alias!r} is not a vertex alias of "
+            f"the pattern", *pb.pos)
+    source = scope.vertex[pb.source_alias]
+
+    # the post hop gets its own mini-scope: source alias + new target alias
+    sub = _Scope(catalog)
+    sub.add_vertex(ir.VertexPat(vtype=scope.vtypes[source],
+                                alias=pb.source_alias, pos=pb.pos))
+    sub.add_vertex(pb.target)
+    sub.add_edge(pb.hop)
+    direction = _resolve_direction(pb.hop, sub.vtypes[0], sub.vtypes[1], catalog)
+    hop = q._HopBlock(edge_type=pb.hop.edge_type, direction=direction,
+                      edge_where=None, source_where=None, target_where=None,
+                      accum=None)
+
+    for cond in pb.where:
+        ref = _cond_alias(cond)
+        if ref.is_accum:
+            raise GSQLCompileError(
+                "POST-ACCUM WHERE cannot reference accumulators", *ref.pos)
+        if isinstance(cond, ir.OrCond):
+            for item in cond.items:
+                sub.check_column(item.ref)
+            pred = functools.reduce(
+                lambda a, b: a | b,
+                (_simple_pred(item, binder) for item in cond.items))
+        else:
+            sub.check_column(cond.ref)
+            pred = _simple_pred(cond, binder)
+        if ref.alias in sub.edge:
+            hop.edge_where = _and(hop.edge_where, pred)
+        elif sub.vertex[ref.alias] == 0:
+            hop.source_where = _and(hop.source_where, pred)
+        else:
+            hop.target_where = _and(hop.target_where, pred)
+
+    for a in pb.accums:
+        _attach_accum(a, sub, [hop], 0, binder, accum_targets, catalog)
+
+    return q._PostAccumBlock(source=source, hop=hop,
+                             target_alias=pb.target.alias)
+
+
+# ---------------------------------------------------------------------------
+# explain
+# ---------------------------------------------------------------------------
+
+def _render_bound(col: str, b) -> str:
+    if b.values is not None:
+        vals = sorted(b.values, key=repr)
+        shown = ", ".join(repr(v) for v in vals[:6])
+        if len(vals) > 6:
+            shown += f", ... ({len(vals)} values)"
+        return f"{col} in {{{shown}}}"
+    parts = []
+    if b.lo is not None:
+        parts.append(f"{col} {'>' if b.lo_strict else '>='} {b.lo!r}")
+    if b.hi is not None:
+        parts.append(f"{col} {'<' if b.hi_strict else '<='} {b.hi!r}")
+    return " and ".join(parts) if parts else f"{col}: unbounded"
+
+
+def _render_bounds(bounds: dict) -> str:
+    if not bounds:
+        return "no zone-map bounds"
+    return "; ".join(_render_bound(c, b) for c, b in sorted(bounds.items()))
+
+
+def _topology_line() -> str:
+    from repro import perf_flags
+    from repro.core.topology_plane import TopologyPlane
+
+    if perf_flags.enabled("csr"):
+        thr = TopologyPlane.threshold()
+        return (f"adaptive: CSR adjacency gather when frontier selectivity "
+                f"<= {thr:g}, else edge-list scan with Min-Max portion pruning")
+    return "edge-list scan with Min-Max portion pruning (csr flag off)"
+
+
+def _explain_hop(lines: list, label: str, hop, indent: str = "  ") -> None:
+    plan = q.plan_hop(hop)
+    lines.append(f"{indent}{label}: -({hop.edge_type})- direction={hop.direction}")
+    lines.append(f"{indent}  topology: {_topology_line()}")
+    for stage, cols, bounds in (
+        ("E", plan.edge_columns, plan.edge_bounds),
+        ("U", plan.u_columns, plan.u_bounds),
+        ("V", plan.v_columns, plan.v_bounds),
+    ):
+        if cols:
+            lines.append(f"{indent}  stage {stage}: columns={list(cols)} "
+                         f"[{_render_bounds(bounds)}]")
+        else:
+            lines.append(f"{indent}  stage {stage}: no columns (pass-through)")
+    acc_cols = (list(plan.accum_edge_columns) + list(plan.accum_u_columns)
+                + list(plan.accum_v_columns))
+    if hop.accum is not None:
+        a = hop.accum
+        lines.append(f"{indent}  accum: {a.target}.@{a.name} {a.op}= {a.value!r}"
+                     + (f" (late-materialized columns: {acc_cols})" if acc_cols
+                        else ""))
+
+
+def explain_compiled(compiled: q.CompiledQuery) -> str:
+    """Human-readable compiled plan: per hop, the staged column sets, the
+    compiled zone-map bounds and the topology-representation dispatch rule
+    (the ``session.explain()`` payload)."""
+    lines: list[str] = []
+    for si, st in enumerate(compiled.statements):
+        aliases = st.vertex_aliases or []
+        sel = aliases[st.select] if aliases and st.select < len(aliases) else st.select
+        lines.append(f"statement {si + 1}: select {sel!r} "
+                     f"({len(st.hops)} hop{'s' if len(st.hops) != 1 else ''})")
+        seed = st.seed
+        seed_desc = f"  seed {seed.vertex_type}"
+        if seed.where is not None:
+            seed_desc += (f": filter columns={sorted(set(seed.where.columns))} "
+                          f"[{_render_bounds(seed.where.bounds())}]")
+        if seed.accum_where:
+            seed_desc += " accum-filter " + " and ".join(
+                f"@{n} {op} {v!r}" for n, op, v in seed.accum_where)
+        lines.append(seed_desc)
+        for hi, hop in enumerate(st.hops):
+            _explain_hop(lines, f"hop {hi + 1}", hop)
+        for pi, pb in enumerate(st.post):
+            src = aliases[pb.source] if aliases else pb.source
+            lines.append(f"  post-accum {pi + 1}: from {src!r}")
+            _explain_hop(lines, "hop", pb.hop, indent="    ")
+    return "\n".join(lines)

@@ -1,0 +1,32 @@
+"""GSQL error types, all carrying a 1-based (line, col) source position.
+
+Every failure a query text can produce is raised *before* any lake read:
+lexing/parsing problems as :class:`GSQLSyntaxError`, schema or
+parameter-binding problems as :class:`GSQLCompileError`.  Both render the
+position in their message so callers (and tests) can point at the offending
+token.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+class GSQLError(Exception):
+    """Base of every GSQL front-end error."""
+
+    def __init__(self, message: str, line: Optional[int] = None,
+                 col: Optional[int] = None):
+        self.line = line
+        self.col = col
+        if line is not None:
+            message = f"{message} (line {line}, col {col})"
+        super().__init__(message)
+
+
+class GSQLSyntaxError(GSQLError):
+    """Malformed query text (lexer/parser)."""
+
+
+class GSQLCompileError(GSQLError):
+    """Well-formed text that fails schema validation or parameter binding."""

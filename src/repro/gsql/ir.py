@@ -1,0 +1,274 @@
+"""The LogicalQuery IR — the declarative form every query takes before
+compilation (DESIGN.md §8).
+
+Pure data: this module imports nothing from ``repro.core`` (or the parser /
+compiler), so both front ends can build it — the GSQL parser from text, and
+``repro.core.query.Query.to_ir()`` from fluent-builder chains — without
+import cycles.  Structural equality ignores source positions (``pos`` fields
+compare as equal), which is what makes the round-trip property testable:
+
+    builder -> IR -> render() -> parse() -> IR   must compare equal.
+
+A query is a sequence of SELECT statements sharing one accumulator space
+(BI5-style multi-stage queries: an early statement computes ``@deg``, a
+later one filters its seed on it).  Each statement is a seed + linear hop
+path, a WHERE conjunction whose conjuncts each bind to one alias, ACCUM
+updates, and optional POST-ACCUM blocks (a post-hop aggregation seeded from
+an already-matched alias — BI2's second aggregation, declaratively).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+_NOPOS = (0, 0)
+
+
+def _pos_field():
+    # source position for error messages; excluded from structural equality
+    return dataclasses.field(default=_NOPOS, compare=False, repr=False)
+
+
+# ---------------------------------------------------------------------------
+# values
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A ``$name`` placeholder, bound at compile time."""
+
+    name: str
+    pos: tuple = _pos_field()
+
+
+@dataclasses.dataclass(frozen=True)
+class ColRef:
+    """``alias.column`` or ``alias.@accum`` reference."""
+
+    alias: str
+    column: str
+    is_accum: bool = False
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        return f"{self.alias}.{'@' if self.is_accum else ''}{self.column}"
+
+
+Value = Union[int, float, str, bool, Param]
+
+
+def render_value(v) -> str:
+    if isinstance(v, Param):
+        return f"${v.name}"
+    if isinstance(v, ColRef):
+        return v.render()
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, str):
+        # single quotes inside fall back to double-quote delimiters; the
+        # grammar has no escape sequences (DESIGN.md §8)
+        return f'"{v}"' if "'" in v else f"'{v}'"
+    if isinstance(v, float):
+        return repr(v)
+    return str(v)
+
+
+# ---------------------------------------------------------------------------
+# conditions
+# ---------------------------------------------------------------------------
+
+CMP_OPS = ("==", "!=", ">", ">=", "<", "<=")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp:
+    """``ref op value`` comparison."""
+
+    ref: ColRef
+    op: str                       # one of CMP_OPS
+    value: Value
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        return f"{self.ref.render()} {self.op} {render_value(self.value)}"
+
+    def refs(self):
+        if isinstance(self.value, ColRef):
+            return (self.ref, self.value)
+        return (self.ref,)
+
+
+@dataclasses.dataclass(frozen=True)
+class InSet:
+    """``ref IN (v1, v2, ...)`` membership."""
+
+    ref: ColRef
+    values: tuple
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        return (f"{self.ref.render()} IN "
+                f"({', '.join(render_value(v) for v in self.values)})")
+
+    def refs(self):
+        return (self.ref,)
+
+
+@dataclasses.dataclass(frozen=True)
+class OrCond:
+    """Disjunction of simple conditions (all over one alias)."""
+
+    items: tuple          # tuple[Cmp | InSet, ...]
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        return "(" + " OR ".join(c.render() for c in self.items) + ")"
+
+    def refs(self):
+        return tuple(r for c in self.items for r in c.refs())
+
+
+Cond = Union[Cmp, InSet, OrCond]
+
+
+# ---------------------------------------------------------------------------
+# accumulators
+# ---------------------------------------------------------------------------
+
+ACCUM_OPS = {"sum": "+=", "max": "MAX=", "min": "MIN=", "or": "OR="}
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumStmt:
+    """``alias.@name op= value`` — value is a literal, ``$param`` or a
+    same-hop ``alias.column`` reference."""
+
+    target: ColRef                # is_accum=True
+    op: str                       # "sum" | "max" | "min" | "or"
+    value: Union[Value, ColRef]
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        return f"{self.target.render()} {ACCUM_OPS[self.op]} {render_value(self.value)}"
+
+
+# ---------------------------------------------------------------------------
+# pattern
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VertexPat:
+    """``Type:alias`` vertex pattern element."""
+
+    vtype: str
+    alias: str
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        return f"{self.vtype}:{self.alias}"
+
+
+@dataclasses.dataclass(frozen=True)
+class HopPat:
+    """One ``-(Edge:alias)-`` link.  ``direction`` is the engine's frontier
+    orientation: ``out`` (``-(E)->``, frontier on the edge's src side),
+    ``in`` (``<-(E)-``), or ``auto`` (plain ``-(E)-``, resolved from the
+    schema at compile time; ambiguous for self-type edges)."""
+
+    edge_type: str
+    alias: Optional[str] = None
+    direction: str = "auto"       # "out" | "in" | "auto"
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        inner = self.edge_type if self.alias is None else f"{self.edge_type}:{self.alias}"
+        if self.direction == "in":
+            return f"<-({inner})-"
+        if self.direction == "out":
+            return f"-({inner})->"
+        return f"-({inner})-"
+
+
+@dataclasses.dataclass(frozen=True)
+class PostAccumIR:
+    """``POST-ACCUM src_alias -(Edge)- Type:t [WHERE ...] ACCUM ...`` — one
+    extra aggregation hop seeded from an alias the main path already
+    matched."""
+
+    source_alias: str
+    hop: HopPat
+    target: VertexPat
+    where: tuple = ()             # tuple[Cond, ...]
+    accums: tuple = ()            # tuple[AccumStmt, ...]
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        s = f"POST-ACCUM {self.source_alias} {self.hop.render()} {self.target.render()}"
+        if self.where:
+            s += " WHERE " + " AND ".join(c.render() for c in self.where)
+        s += " ACCUM " + ", ".join(a.render() for a in self.accums)
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class StatementIR:
+    """One SELECT statement: projection + seed/hop path + clauses."""
+
+    select_alias: str
+    vertices: tuple               # tuple[VertexPat, ...]  (len == hops + 1)
+    hops: tuple = ()              # tuple[HopPat, ...]
+    where: tuple = ()             # tuple[Cond, ...]  (top-level conjunction)
+    accums: tuple = ()            # tuple[AccumStmt, ...]
+    post: tuple = ()              # tuple[PostAccumIR, ...]
+    pos: tuple = _pos_field()
+
+    def render(self) -> str:
+        path = [self.vertices[0].render()]
+        for hop, v in zip(self.hops, self.vertices[1:]):
+            path.append(hop.render())
+            path.append(v.render())
+        s = f"SELECT {self.select_alias} FROM " + " ".join(path)
+        if self.where:
+            s += "\nWHERE " + " AND ".join(c.render() for c in self.where)
+        if self.accums:
+            s += "\nACCUM " + ", ".join(a.render() for a in self.accums)
+        for p in self.post:
+            s += "\n" + p.render()
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalQuery:
+    """A full query: one or more statements over a shared accumulator space."""
+
+    statements: tuple             # tuple[StatementIR, ...]
+
+    def render(self) -> str:
+        """Canonical GSQL text of this IR (parses back to an equal IR)."""
+        return ";\n\n".join(st.render() for st in self.statements)
+
+    def param_names(self) -> set:
+        """Every ``$name`` the query mentions (install-time contract)."""
+        names: set = set()
+
+        def walk_value(v):
+            if isinstance(v, Param):
+                names.add(v.name)
+
+        for st in self.statements:
+            conds = list(st.where)
+            accums = list(st.accums)
+            for p in st.post:
+                conds += list(p.where)
+                accums += list(p.accums)
+            for c in conds:
+                for item in (c.items if isinstance(c, OrCond) else (c,)):
+                    if isinstance(item, Cmp):
+                        walk_value(item.value)
+                    else:
+                        for v in item.values:
+                            walk_value(v)
+            for a in accums:
+                walk_value(a.value)
+        return names

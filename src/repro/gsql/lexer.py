@@ -1,0 +1,111 @@
+"""GSQL lexer: query text -> position-tagged tokens.
+
+Deliberately small: identifiers, numbers, single- or double-quoted strings
+(no escape sequences), ``$param`` markers, the comparison/accumulate
+operators and the handful of punctuation the pattern syntax needs.  ``#``
+starts a line comment.  Every token carries a 1-based ``(line, col)`` so
+parse and compile errors can point at their source.
+
+The link arrows are *not* lexed as units: ``-(HasTag:e)->`` tokenizes as
+``- ( ident : ident ) ->`` and ``<-(...)`` as ``< - (`` — the parser
+assembles them, which keeps ``-`` and ``<`` usable as ordinary operators
+inside WHERE (``a.x < -5``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.gsql.errors import GSQLSyntaxError
+
+# multi-char operators, longest first (``->`` before ``-``, ``==`` before
+# ``=``); ``=`` itself only appears as the tail of MAX= / MIN= / OR=
+_OPERATORS = ("==", "!=", ">=", "<=", "+=", "->", ">", "<", "=", "-",
+              "(", ")", ",", ";", ":", ".", "@", "$")
+
+# token kinds: IDENT NUMBER STRING OP EOF
+EOF = "EOF"
+
+
+@dataclasses.dataclass(frozen=True)
+class Token:
+    kind: str         # "IDENT" | "NUMBER" | "STRING" | "OP" | EOF
+    text: str
+    value: object     # parsed value for NUMBER/STRING, text otherwise
+    line: int
+    col: int
+
+    @property
+    def pos(self) -> tuple:
+        return (self.line, self.col)
+
+
+def _is_ident_start(ch: str) -> bool:
+    return ch.isalpha() or ch == "_"
+
+
+def _is_ident(ch: str) -> bool:
+    return ch.isalnum() or ch == "_"
+
+
+def tokenize(text: str) -> list[Token]:
+    tokens: list[Token] = []
+    line, col = 1, 1
+    i, n = 0, len(text)
+
+    def advance(k: int) -> None:
+        nonlocal i, line, col
+        for _ in range(k):
+            if text[i] == "\n":
+                line, col = line + 1, 1
+            else:
+                col += 1
+            i += 1
+
+    while i < n:
+        ch = text[i]
+        if ch in " \t\r\n":
+            advance(1)
+            continue
+        if ch == "#":                       # line comment
+            while i < n and text[i] != "\n":
+                advance(1)
+            continue
+        tl, tc = line, col
+        if _is_ident_start(ch):
+            j = i
+            while j < n and _is_ident(text[j]):
+                j += 1
+            word = text[i:j]
+            advance(j - i)
+            tokens.append(Token("IDENT", word, word, tl, tc))
+            continue
+        if ch.isdigit():
+            j = i
+            while j < n and (text[j].isdigit() or text[j] == "."):
+                j += 1
+            raw = text[i:j]
+            advance(j - i)
+            if raw.count(".") > 1:
+                raise GSQLSyntaxError(f"malformed number {raw!r}", tl, tc)
+            value: object = float(raw) if "." in raw else int(raw)
+            tokens.append(Token("NUMBER", raw, value, tl, tc))
+            continue
+        if ch in "'\"":
+            j = text.find(ch, i + 1)
+            if j < 0:
+                raise GSQLSyntaxError("unterminated string literal", tl, tc)
+            value = text[i + 1:j]
+            advance(j + 1 - i)
+            tokens.append(Token("STRING", value, value, tl, tc))
+            continue
+        for op in _OPERATORS:
+            if text.startswith(op, i):
+                advance(len(op))
+                tokens.append(Token("OP", op, op, tl, tc))
+                break
+        else:
+            raise GSQLSyntaxError(f"unexpected character {ch!r}", tl, tc)
+
+    tokens.append(Token(EOF, "", None, line, col))
+    return tokens

@@ -1,0 +1,330 @@
+"""Recursive-descent GSQL parser: tokens -> :class:`LogicalQuery` IR.
+
+Grammar (DESIGN.md §8; keywords are case-insensitive, ``#`` comments):
+
+    query      := statement (';' statement)* [';']
+    statement  := SELECT alias FROM path
+                  [WHERE cond] [ACCUM accum (',' accum)*] postaccum*
+    path       := vertex (link vertex)*
+    vertex     := TypeName ':' alias
+    link       := '-' '(' EdgeName [':' alias] ')' '-' ['>']     # auto / out
+                | '<' '-' '(' EdgeName [':' alias] ')' '-'      # in
+    cond       := disj (AND disj)*
+    disj       := prim (OR prim)*
+    prim       := '(' cond ')' | comparison
+    comparison := ref cmpop value | ref IN '(' value (',' value)* ')'
+    ref        := alias '.' ['@'] column
+    cmpop      := '==' | '!=' | '>' | '>=' | '<' | '<='
+    value      := ['-'] number | string | '$' ident | TRUE | FALSE
+    accum      := ref accop (value | ref)                        # ref is alias.@name
+    accop      := '+=' | MAX '=' | MIN '=' | OR '='
+    postaccum  := POST '-' ACCUM alias link vertex [WHERE cond]
+                  ACCUM accum (',' accum)*
+
+Parsing is purely syntactic — alias scoping, schema existence, direction
+resolution and parameter binding are the compiler's job — except for one
+structural rule enforced here because the IR cannot represent its violation:
+OR only joins *simple* comparisons (no nested AND), matching the planner's
+"a disjunction compiles to one alias's predicate" contract.
+"""
+
+from __future__ import annotations
+
+from repro.gsql import ir
+from repro.gsql.errors import GSQLSyntaxError
+from repro.gsql.lexer import EOF, Token, tokenize
+
+# note: POST is *not* reserved — it only acts as a keyword when the full
+# ``POST - ACCUM`` sequence follows, so "Post" stays usable as a type name
+_KEYWORDS = {"SELECT", "FROM", "WHERE", "ACCUM", "AND", "OR", "IN",
+             "TRUE", "FALSE", "MAX", "MIN"}
+
+
+class _Parser:
+    def __init__(self, text: str):
+        self.tokens = tokenize(text)
+        self.i = 0
+
+    # -- token helpers ---------------------------------------------------------
+
+    def peek(self, ahead: int = 0) -> Token:
+        return self.tokens[min(self.i + ahead, len(self.tokens) - 1)]
+
+    def next(self) -> Token:
+        t = self.peek()
+        self.i += 1
+        return t
+
+    def at_kw(self, word: str, ahead: int = 0) -> bool:
+        t = self.peek(ahead)
+        return t.kind == "IDENT" and t.text.upper() == word
+
+    def at_op(self, op: str, ahead: int = 0) -> bool:
+        t = self.peek(ahead)
+        return t.kind == "OP" and t.text == op
+
+    def expect_kw(self, word: str) -> Token:
+        if not self.at_kw(word):
+            t = self.peek()
+            raise GSQLSyntaxError(f"expected {word}, found {t.text or 'end of query'!r}",
+                                  t.line, t.col)
+        return self.next()
+
+    def expect_op(self, op: str) -> Token:
+        if not self.at_op(op):
+            t = self.peek()
+            raise GSQLSyntaxError(f"expected {op!r}, found {t.text or 'end of query'!r}",
+                                  t.line, t.col)
+        return self.next()
+
+    def ident(self, what: str) -> Token:
+        t = self.peek()
+        if t.kind != "IDENT":
+            raise GSQLSyntaxError(f"expected {what}, found {t.text or 'end of query'!r}",
+                                  t.line, t.col)
+        if t.text.upper() in _KEYWORDS:
+            raise GSQLSyntaxError(f"expected {what}, found keyword {t.text!r}",
+                                  t.line, t.col)
+        return self.next()
+
+    # -- grammar ---------------------------------------------------------------
+
+    def query(self) -> ir.LogicalQuery:
+        statements = [self.statement()]
+        while self.at_op(";"):
+            self.next()
+            if self.peek().kind == EOF:
+                break
+            statements.append(self.statement())
+        t = self.peek()
+        if t.kind != EOF:
+            raise GSQLSyntaxError(f"unexpected {t.text!r} after statement "
+                                  f"(missing ';'?)", t.line, t.col)
+        return ir.LogicalQuery(statements=tuple(statements))
+
+    def statement(self) -> ir.StatementIR:
+        kw = self.expect_kw("SELECT")
+        select = self.ident("result alias").text
+        self.expect_kw("FROM")
+        vertices = [self.vertex()]
+        hops = []
+        while self.at_op("-") or self.at_op("<"):
+            hops.append(self.link())
+            vertices.append(self.vertex())
+        where = self.where_clause()
+        accums = self.accum_clause()
+        post = []
+        while self.at_kw("POST") and self.at_op("-", 1) and self.at_kw("ACCUM", 2):
+            post.append(self.post_accum())
+        return ir.StatementIR(
+            select_alias=select, vertices=tuple(vertices), hops=tuple(hops),
+            where=where, accums=accums, post=tuple(post), pos=kw.pos,
+        )
+
+    def vertex(self) -> ir.VertexPat:
+        t = self.ident("vertex type")
+        self.expect_op(":")
+        alias = self.ident("vertex alias").text
+        return ir.VertexPat(vtype=t.text, alias=alias, pos=t.pos)
+
+    def link(self) -> ir.HopPat:
+        start = self.peek()
+        reverse = False
+        if self.at_op("<"):
+            self.next()
+            reverse = True
+        self.expect_op("-")
+        self.expect_op("(")
+        et = self.ident("edge type")
+        alias = None
+        if self.at_op(":"):
+            self.next()
+            alias = self.ident("edge alias").text
+        self.expect_op(")")
+        if reverse:
+            self.expect_op("-")
+            direction = "in"
+        elif self.at_op("->"):
+            self.next()
+            direction = "out"
+        else:
+            self.expect_op("-")
+            direction = "auto"
+        return ir.HopPat(edge_type=et.text, alias=alias, direction=direction,
+                         pos=start.pos)
+
+    def where_clause(self) -> tuple:
+        if not self.at_kw("WHERE"):
+            return ()
+        self.next()
+        conds = [self.disjunction()]
+        while self.at_kw("AND"):
+            self.next()
+            conds.append(self.disjunction())
+        # flatten parenthesized conjunctions back into the top-level list
+        flat = []
+        for c in conds:
+            flat.extend(c if isinstance(c, list) else [c])
+        return tuple(flat)
+
+    def disjunction(self):
+        """One AND-conjunct: a comparison, an OR-chain, or a parenthesized
+        group (which may itself be a conjunction -> returned as a list)."""
+        first = self.prim()
+        if not self.at_kw("OR"):
+            return first
+        items = first if isinstance(first, list) else [first]
+        if len(items) > 1:
+            t = self.peek()
+            raise GSQLSyntaxError(
+                "OR cannot join an AND-group; parenthesize each disjunct",
+                t.line, t.col)
+        pos = items[0].pos
+        while self.at_kw("OR"):
+            self.next()
+            t_start = self.peek()
+            nxt = self.prim()
+            if isinstance(nxt, (list, ir.OrCond)):
+                raise GSQLSyntaxError(
+                    "OR only joins simple comparisons", t_start.line, t_start.col)
+            items.append(nxt)
+        return ir.OrCond(items=tuple(items), pos=pos)
+
+    def prim(self):
+        if self.at_op("("):
+            self.next()
+            conds = [self.disjunction()]
+            while self.at_kw("AND"):
+                self.next()
+                conds.append(self.disjunction())
+            self.expect_op(")")
+            flat = []
+            for c in conds:
+                flat.extend(c if isinstance(c, list) else [c])
+            return flat if len(flat) > 1 else flat[0]
+        return self.comparison()
+
+    def comparison(self):
+        ref = self.colref()
+        if self.at_kw("IN"):
+            kw = self.next()
+            self.expect_op("(")
+            values = [self.value()]
+            while self.at_op(","):
+                self.next()
+                values.append(self.value())
+            self.expect_op(")")
+            return ir.InSet(ref=ref, values=tuple(values), pos=kw.pos)
+        t = self.peek()
+        if t.kind == "OP" and t.text in ir.CMP_OPS:
+            self.next()
+            # the value side may be another column reference — parsed so the
+            # compiler can reject it with a schema-aware message
+            v = self.peek()
+            if v.kind == "IDENT" and v.text.upper() not in _KEYWORDS \
+                    and self.at_op(".", ahead=1):
+                value: object = self.colref()
+            else:
+                value = self.value()
+            return ir.Cmp(ref=ref, op=t.text, value=value, pos=ref.pos)
+        raise GSQLSyntaxError(
+            f"expected comparison operator, found {t.text or 'end of query'!r}",
+            t.line, t.col)
+
+    def colref(self) -> ir.ColRef:
+        alias = self.ident("alias")
+        self.expect_op(".")
+        is_accum = False
+        if self.at_op("@"):
+            self.next()
+            is_accum = True
+        col = self.ident("column name")
+        return ir.ColRef(alias=alias.text, column=col.text, is_accum=is_accum,
+                         pos=alias.pos)
+
+    def value(self):
+        t = self.peek()
+        if t.kind == "OP" and t.text == "-":
+            self.next()
+            num = self.peek()
+            if num.kind != "NUMBER":
+                raise GSQLSyntaxError("expected number after unary '-'",
+                                      num.line, num.col)
+            self.next()
+            return -num.value
+        if t.kind == "NUMBER" or t.kind == "STRING":
+            self.next()
+            return t.value
+        if t.kind == "OP" and t.text == "$":
+            self.next()
+            name = self.ident("parameter name")
+            return ir.Param(name=name.text, pos=t.pos)
+        if self.at_kw("TRUE"):
+            self.next()
+            return True
+        if self.at_kw("FALSE"):
+            self.next()
+            return False
+        raise GSQLSyntaxError(
+            f"expected a value, found {t.text or 'end of query'!r}",
+            t.line, t.col)
+
+    def accum_clause(self) -> tuple:
+        if not self.at_kw("ACCUM"):
+            return ()
+        self.next()
+        accums = [self.accum_stmt()]
+        while self.at_op(","):
+            self.next()
+            accums.append(self.accum_stmt())
+        return tuple(accums)
+
+    def accum_stmt(self) -> ir.AccumStmt:
+        target = self.colref()
+        if not target.is_accum:
+            raise GSQLSyntaxError(
+                f"ACCUM target must be an accumulator "
+                f"({target.alias}.@name, not {target.render()})",
+                *target.pos)
+        t = self.peek()
+        if self.at_op("+="):
+            self.next()
+            op = "sum"
+        elif t.kind == "IDENT" and t.text.upper() in ("MAX", "MIN", "OR"):
+            self.next()
+            self.expect_op("=")
+            op = t.text.lower()
+        else:
+            raise GSQLSyntaxError(
+                f"expected '+=', 'MAX=', 'MIN=' or 'OR=', "
+                f"found {t.text or 'end of query'!r}", t.line, t.col)
+        # value may be a literal, a $param, or a same-hop column reference
+        v = self.peek()
+        if v.kind == "IDENT" and v.text.upper() not in _KEYWORDS \
+                and self.at_op(".", ahead=1):
+            value: object = self.colref()
+        else:
+            value = self.value()
+        return ir.AccumStmt(target=target, op=op, value=value, pos=target.pos)
+
+    def post_accum(self) -> ir.PostAccumIR:
+        kw = self.expect_kw("POST")
+        self.expect_op("-")
+        self.expect_kw("ACCUM")
+        source = self.ident("source alias").text
+        hop = self.link()
+        target = self.vertex()
+        where = self.where_clause()
+        self.expect_kw("ACCUM")
+        accums = [self.accum_stmt()]
+        while self.at_op(","):
+            self.next()
+            accums.append(self.accum_stmt())
+        return ir.PostAccumIR(source_alias=source, hop=hop, target=target,
+                              where=where, accums=tuple(accums), pos=kw.pos)
+
+
+def parse(text: str) -> ir.LogicalQuery:
+    """GSQL text -> :class:`~repro.gsql.ir.LogicalQuery` (syntax only;
+    schema validation and ``$param`` binding happen in the compiler)."""
+    return _Parser(text).query()

@@ -1,0 +1,168 @@
+"""GraphSession — the unified query facade (DESIGN.md §8).
+
+One object owns everything a caller used to wire by hand: engine lifetime,
+epoch acquisition per query, per-session :class:`~repro.core.query.ExecOptions`
+defaults (pushdown / pipeline / timeout instead of scattered ``run()``
+kwargs), the parse-time validation catalog, and the registry of *installed*
+queries — named, pre-validated GSQL texts the serving layer executes with
+bound parameters (the paper's "install once, serve many" flow)::
+
+    session = repro.connect(store, ldbc_graph_schema())
+    session.install("bi1", \"\"\"
+        SELECT p FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p
+        WHERE t.name == $tag AND e2.creationDate > $date
+          AND p.gender == "Female"
+        ACCUM p.@cnt += 1
+    \"\"\")
+    res = session.query("bi1", tag="Music", date=20100101)
+    print(session.explain("bi1", tag="Music", date=20100101))
+
+``query()`` accepts either an installed name or literal GSQL text.  Every
+execution pins one epoch for the whole (possibly multi-statement) query and
+resets the accumulators the query writes before running, so repeated calls
+are deterministic (the raw builder path mutates accumulators cumulatively).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.query import CompiledQuery, ExecOptions, QueryResult, execute_compiled
+from repro.gsql import ir
+from repro.gsql.compiler import Catalog, compile_query, explain_compiled, validate_query
+from repro.gsql.parser import parse
+
+
+@dataclasses.dataclass
+class InstalledQuery:
+    """A named, parse-time-validated GSQL query."""
+
+    name: str
+    text: str
+    query_ir: ir.LogicalQuery
+    param_names: frozenset
+
+
+class GraphSession:
+    """The single public execution entry over one engine."""
+
+    def __init__(self, engine, options: Optional[ExecOptions] = None,
+                 own_engine: bool = False):
+        self.engine = engine
+        self.options = options or ExecOptions()
+        self._own_engine = own_engine
+        self._installed: dict[str, InstalledQuery] = {}
+        self._catalog: Optional[Catalog] = None
+
+    # -- lifecycle --------------------------------------------------------------
+
+    @classmethod
+    def for_engine(cls, engine, options: Optional[ExecOptions] = None
+                   ) -> "GraphSession":
+        """The engine's cached session (created on first use) — what the BI
+        wrappers and the server use so every caller shares one installed-query
+        registry and one options default."""
+        session = getattr(engine, "_gsql_session", None)
+        if session is None:
+            session = cls(engine, options)
+            engine._gsql_session = session
+        return session
+
+    def close(self) -> None:
+        if self._own_engine:
+            self.engine.close()
+
+    def __enter__(self) -> "GraphSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- catalog ----------------------------------------------------------------
+
+    def catalog(self) -> Catalog:
+        """The validation catalog (schema + lake-table column sets), built
+        lazily and cached — table schemas are immutable in this lake."""
+        if self._catalog is None:
+            self._catalog = Catalog.from_engine(self.engine)
+        return self._catalog
+
+    # -- install ----------------------------------------------------------------
+
+    def install(self, name: str, text: str) -> InstalledQuery:
+        """Parse + schema-validate a query and register it under ``name``.
+
+        Validation covers everything except parameter values (those bind per
+        ``query()`` call), so a bad installed query fails here — at install
+        time — never while serving."""
+        query_ir = parse(text)
+        param_names = frozenset(validate_query(query_ir, self.catalog()))
+        iq = InstalledQuery(name=name, text=text, query_ir=query_ir,
+                           param_names=param_names)
+        self._installed[name] = iq
+        return iq
+
+    def installed_queries(self) -> dict[str, InstalledQuery]:
+        return dict(self._installed)
+
+    def is_installed(self, name: str) -> bool:
+        return name in self._installed
+
+    # -- execution --------------------------------------------------------------
+
+    def _resolve_ir(self, text_or_name: str) -> ir.LogicalQuery:
+        iq = self._installed.get(text_or_name)
+        if iq is not None:
+            return iq.query_ir
+        return parse(text_or_name)
+
+    def _compile(self, text_or_name: str, params: dict) -> CompiledQuery:
+        return compile_query(self._resolve_ir(text_or_name), self.catalog(),
+                             params)
+
+    def query(self, text_or_name: str, options: Optional[ExecOptions] = None,
+              epoch=None, **params) -> QueryResult:
+        """Execute an installed query (by name) or literal GSQL text.
+
+        The session acquires one snapshot-pinned epoch for the whole query
+        (pass ``epoch`` to time-travel onto an explicitly acquired one) and
+        runs it against a *private* accumulator store sized to that epoch:
+        results are a pure function of (text, params, epoch), concurrent
+        server workers can never observe each other's partial accumulator
+        state, and the arrays a result carries are never mutated by later
+        queries.  ``options`` overrides the session defaults for this call
+        only."""
+        compiled = self._compile(text_or_name, params)
+        return execute_compiled(self.engine, compiled,
+                                options=options or self.options, epoch=epoch,
+                                private_accums=True)
+
+    def explain(self, text_or_name: str, **params) -> str:
+        """The compiled plan of a query: per hop, the staged column sets,
+        compiled zone-map bounds and topology dispatch rule — without
+        executing anything."""
+        return explain_compiled(self._compile(text_or_name, params))
+
+
+def connect(store, schema, options: Optional[ExecOptions] = None,
+            **engine_kwargs) -> GraphSession:
+    """Open a :class:`GraphSession` over a lake: build the engine, run
+    startup (first or second connection, paper §4.3), and hand back the
+    session facade.  ``session.close()`` closes the engine it owns.
+
+    ``engine_kwargs`` pass through to
+    :class:`~repro.core.engine.GraphLakeEngine` (``cache_config``,
+    ``n_io_threads``, ``materialize_topology``, ...).
+    """
+    from repro.core.engine import GraphLakeEngine
+
+    engine = GraphLakeEngine(store, schema, **engine_kwargs)
+    engine.startup()
+    session = GraphSession(engine, options, own_engine=True)
+    engine._gsql_session = session
+    return session
+
+
+# re-exported for convenience: sessions and options travel together
+__all__ = ["GraphSession", "InstalledQuery", "ExecOptions", "connect"]

@@ -158,6 +158,35 @@ class LakeTable:
 
     _COMMIT_RETRIES = 64
 
+    def recover_orphan_version(self) -> int:
+        """Janitor: finish the VERSION swap of a committer that crashed
+        after winning the metadata CAS (ROADMAP open item).
+
+        The crash window is tiny but real: ``_commit`` writes
+        ``metadata/v<N+1>.json`` (the CAS win) and then moves ``VERSION``.
+        A crash in between leaves the table *wedged*: every future committer
+        reads ``VERSION == N``, loses the put-if-absent on ``v<N+1>`` forever
+        and exhausts its retries, while the crashed committer's snapshot —
+        durably written — stays invisible.
+
+        Recovery is the swap the winner would have done, fenced by a CAS on
+        VERSION's current content so a slow-but-alive winner (or another
+        janitor) racing us can never move the pointer backwards.  Rolling
+        forward is always safe: ``v<N+1>`` is immutable and complete before
+        the CAS that created it returns.  Returns how many versions were
+        rolled forward (0 = nothing orphaned).
+        """
+        recovered = 0
+        while True:
+            version = self.current_version()
+            if not self.store.exists(self._meta_key(version + 1)):
+                return recovered
+            if self.store.put_if(self._version_key(),
+                                 str(version + 1).encode(),
+                                 expected=str(version).encode()):
+                recovered += 1
+            # CAS failure: someone else advanced VERSION — loop re-reads
+
     def _commit(self, build: Callable[[dict, str], Snapshot]) -> Snapshot:
         """Optimistic commit loop fenced by a conditional put.
 
@@ -166,9 +195,14 @@ class LakeTable:
         returns it.  The new metadata version file is then created with
         put-if-absent: exactly one racing committer wins each version; a
         loser re-reads the advanced snapshot log and rebuilds its commit on
-        top, so no concurrent snapshot is ever dropped.  The VERSION pointer
-        is only ever moved by the version's unique winner, so it advances
-        monotonically one step at a time.
+        top, so no concurrent snapshot is ever dropped.
+
+        Every VERSION move is a CAS on its current content, and a loser
+        whose ``v<N+1>`` already exists runs the janitor
+        (:meth:`recover_orphan_version`) before retrying — so a committer
+        crashing between its metadata CAS win and its VERSION swap delays
+        the next writer by one roll-forward instead of wedging the table,
+        and the crashed commit's snapshot survives into the log.
         """
         token = uuid.uuid4().hex[:8]
         for _ in range(self._COMMIT_RETRIES):
@@ -177,11 +211,15 @@ class LakeTable:
             snap = build(meta, token)
             payload = json.dumps(meta).encode()
             if not self.store.put_if(self._meta_key(version + 1), payload, expected=None):
-                # lost the race for version+1 — wait for the winner's VERSION
-                # swap to land, then retry on top of it
+                # lost the race for version+1: either the winner is about to
+                # move VERSION, or it crashed and never will — roll forward
+                # on its behalf (CAS-fenced, so a live winner racing us is
+                # harmless), then retry on top of the advanced log
+                self.recover_orphan_version()
                 time.sleep(0.0005)
                 continue
-            self.store.put(self._version_key(), str(version + 1).encode())
+            self.store.put_if(self._version_key(), str(version + 1).encode(),
+                              expected=str(version).encode())
             return snap
         raise RuntimeError(
             f"commit contention on table {self.name}: "

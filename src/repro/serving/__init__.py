@@ -1,5 +1,5 @@
 """Serving layer: batched graph-analytics query serving over GraphLake."""
 
-from repro.serving.server import QueryServer, ServerConfig
+from repro.serving.server import QueryServer, ServerConfig, ServerOverloadedError
 
-__all__ = ["QueryServer", "ServerConfig"]
+__all__ = ["QueryServer", "ServerConfig", "ServerOverloadedError"]

@@ -23,6 +23,22 @@ therefore picks up lake commits continuously — no engine restart — and
 every ``repro.core.query.QueryResult`` carries the epoch id + staleness it
 was served at.  The interval comes from ``ServerConfig.refresh_interval_s``
 or, when unset, the ``refresh`` perf flag (``refresh=<seconds>``).
+
+**Installed queries (DESIGN.md §8).**  The server fronts a
+:class:`~repro.gsql.session.GraphSession`: any query *installed* on the
+session (named, pre-validated GSQL text) is servable by name with bound
+parameters — ``submit("bi1", tag="Music", date=20100101)`` — and executes
+through ``session.query()``, the stack's single execution entry.  Plain
+callables (``query_fns``) remain for result-shaping wrappers; they receive
+the engine.
+
+**Admission control + timeouts.**  ``submit()`` never blocks the client: a
+full bounded queue raises :class:`ServerOverloadedError` (typed, so callers
+can shed load / retry with backoff) instead of parking the caller until a
+worker drains.  ``ServerConfig.timeout_s`` bounds each installed query's
+execution (``ExecOptions.timeout_s`` checked at ``edge_scan`` stage
+boundaries); a timed-out request comes back as a failed ``QueryResult``
+naming :class:`~repro.core.plan.QueryTimeoutError`, and the worker lives on.
 """
 
 from __future__ import annotations
@@ -34,6 +50,14 @@ import time
 from typing import Callable, Optional
 
 from repro import perf_flags
+from repro.core.query import ExecOptions
+from repro.gsql.session import GraphSession
+
+
+class ServerOverloadedError(RuntimeError):
+    """The bounded request queue is full — the server sheds the request
+    instead of blocking the submitting client (backpressure surfaces at the
+    edge, where the caller can retry, rather than as hidden queueing)."""
 
 
 @dataclasses.dataclass
@@ -43,6 +67,9 @@ class ServerConfig:
     # background epoch-refresh interval; None defers to the ``refresh`` perf
     # flag (its numeric value, default 30 s), <= 0 disables outright
     refresh_interval_s: Optional[float] = None
+    # per-query execution timeout for installed queries (None = no bound);
+    # overrides the session's ExecOptions.timeout_s while serving
+    timeout_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -56,13 +83,27 @@ class QueryResult:
 
 
 class QueryServer:
-    """query_fns: name -> fn(engine, **params) -> value."""
+    """Serves a session's installed GSQL queries by name, plus optional
+    result-shaping callables (``query_fns``: name -> fn(engine, **params)).
+    ``backend`` is a :class:`GraphSession` or a bare engine (a cached
+    session is created for it); installed names resolve through
+    ``session.query()``, callables win on a name clash."""
 
-    def __init__(self, engine, query_fns: dict[str, Callable],
+    def __init__(self, backend, query_fns: Optional[dict[str, Callable]] = None,
                  config: Optional[ServerConfig] = None):
-        self.engine = engine
-        self.query_fns = query_fns
+        if isinstance(backend, GraphSession):
+            self.session = backend
+        else:
+            self.session = GraphSession.for_engine(backend)
+        self.engine = self.session.engine
+        self.query_fns = query_fns or {}
         self.config = config or ServerConfig()
+        # serving-time execution defaults: the session's, capped by the
+        # server's per-query timeout when one is configured
+        self._exec_options: Optional[ExecOptions] = None
+        if self.config.timeout_s is not None:
+            self._exec_options = dataclasses.replace(
+                self.session.options, timeout_s=self.config.timeout_s)
         self._q: queue.Queue = queue.Queue(maxsize=self.config.max_queue)
         self._results: dict[int, QueryResult] = {}
         self._done = threading.Event()
@@ -82,7 +123,7 @@ class QueryServer:
         interval = self.config.refresh_interval_s
         if interval is None and perf_flags.enabled("refresh"):
             interval = perf_flags.value("refresh", 30.0)
-        if interval is not None and interval > 0 and hasattr(engine, "advance"):
+        if interval is not None and interval > 0 and hasattr(self.engine, "advance"):
             self._refresher = threading.Thread(
                 target=self._refresh_loop, args=(float(interval),), daemon=True
             )
@@ -91,10 +132,17 @@ class QueryServer:
     # -- client API -------------------------------------------------------------
 
     def submit(self, query: str, **params) -> int:
+        """Enqueue one request; raises :class:`ServerOverloadedError` when
+        the bounded queue is full (admission control — never blocks)."""
         with self._lock:
             rid = self._next_id
             self._next_id += 1
-        self._q.put((rid, query, params, time.perf_counter()))
+        try:
+            self._q.put_nowait((rid, query, params, time.perf_counter()))
+        except queue.Full:
+            raise ServerOverloadedError(
+                f"request queue full ({self.config.max_queue} pending); "
+                f"shed request {rid!r} ({query})") from None
         return rid
 
     def result(self, rid: int, timeout_s: float = 60.0) -> QueryResult:
@@ -107,8 +155,20 @@ class QueryServer:
         raise TimeoutError(f"request {rid}")
 
     def run_batch(self, requests: list[tuple[str, dict]]) -> list[QueryResult]:
-        """Submit a batch, wait for all, return results in order."""
-        rids = [self.submit(q, **p) for q, p in requests]
+        """Submit a batch, wait for all, return results in order.
+
+        A batch driver *chooses* to wait, so overload here backs off and
+        retries instead of propagating :class:`ServerOverloadedError` —
+        batches larger than the bounded queue drain through it; only direct
+        ``submit()`` callers see admission rejections."""
+        rids = []
+        for q, p in requests:
+            while True:
+                try:
+                    rids.append(self.submit(q, **p))
+                    break
+                except ServerOverloadedError:
+                    time.sleep(0.001)
         return [self.result(r) for r in rids]
 
     def close(self) -> None:
@@ -145,10 +205,15 @@ class QueryServer:
             rid, name, params, t_submit = item
             t_start = time.perf_counter()
             try:
-                fn = self.query_fns[name]
-                value = fn(self.engine, **params)
+                if name in self.query_fns:
+                    value = self.query_fns[name](self.engine, **params)
+                elif self.session.is_installed(name):
+                    value = self.session.query(name, options=self._exec_options,
+                                               **params)
+                else:
+                    raise KeyError(f"no installed query or handler named {name!r}")
                 ok, err = True, None
-            except Exception as e:  # report, don't kill the worker
+            except Exception as e:  # report (typed), don't kill the worker
                 value, ok, err = None, False, f"{type(e).__name__}: {e}"
             t_end = time.perf_counter()
             with self._lock:

