@@ -1,0 +1,308 @@
+"""Shared-scan serving benchmark (DESIGN.md §9): one chunk pass serves
+every concurrent rider.
+
+Three sweeps snapshotted into ``BENCH_serving.json`` (override with
+``REPRO_BENCH_SERVING_SNAPSHOT``):
+
+- the **shared-scan sweep**: ``session.query_batch`` over varied-parameter
+  riders verified bit-identical to solo ``session.query`` on the same epoch
+  (vset, frames, every column, accumulators), plus the chunk-counter
+  contract — same-parameter riders share exactly one fetch/decode pass, so
+  the batch's ``chunks_read`` equals a single solo run's, not R times it;
+- the **throughput sweep**: closed-loop concurrent clients replaying one
+  installed template against a batching server vs an unbatched server
+  (same worker count), asserting the ISSUE 6 acceptance floor — batched
+  throughput >= ``min_speedup`` x unbatched at 16 clients;
+- the **fixed-QPS sweep**: an open-loop arrival process over a *mixed*
+  installed-template workload at a fixed request rate, reporting sustained
+  throughput and p50/p99 latency for both server arms (report-only: tail
+  latency under open-loop load is jitter-prone, so no floor is asserted).
+
+``run(quick=True)`` is the CI gate mode — small scale, fewer requests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_store, make_engine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.gsql.session import GraphSession
+from repro.serving.server import QueryServer, ServerConfig, latency_stats
+
+SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_SERVING_SNAPSHOT", "BENCH_serving.json")
+
+HOT_TEMPLATE = """
+    SELECT p FROM Comment:c -(HasCreator:e)- Person:p
+    WHERE e.creationDate > $thr
+    ACCUM p.@cnt += 1
+"""
+TAG_TEMPLATE = """
+    SELECT p FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p
+    WHERE t.name == $tag AND e2.creationDate > $date
+    ACCUM p.@deg += 1
+"""
+
+
+def _setup(sf: float, row_group_rows: int = 512):
+    store = fresh_store(f"serving_{sf}")
+    generate_ldbc(store, scale_factor=sf, n_files=3,
+                  row_group_rows=row_group_rows)
+    eng = make_engine(store, ldbc_graph_schema())
+    eng.startup()
+    session = GraphSession.for_engine(eng)
+    session.install("hot", HOT_TEMPLATE)
+    session.install("tag", TAG_TEMPLATE)
+    return eng, session
+
+
+def _date_quantiles(eng, fracs):
+    comments = eng.all_vertices("Comment")
+    dates = eng.read_vertex_column("Comment", comments.ids(), "creationDate")
+    return [float(np.quantile(dates, f)) for f in fracs]
+
+
+def _assert_result_parity(b, s) -> None:
+    assert np.array_equal(b.vset.ids(), s.vset.ids())
+    assert b.n_edges_scanned == s.n_edges_scanned
+    for fb, fs in zip(b.frames, s.frames):
+        assert np.array_equal(fb.u, fs.u) and np.array_equal(fb.v, fs.v)
+        assert set(fb.columns) == set(fs.columns)
+        for k in fb.columns:
+            assert np.array_equal(fb.columns[k], fs.columns[k]), k
+    assert set(b.accumulators) == set(s.accumulators)
+    for k in b.accumulators:
+        assert np.array_equal(b.accumulators[k], s.accumulators[k]), k
+
+
+def shared_scan_sweep(sf: float = 0.004, n_riders: int = 8) -> dict:
+    """Bit-parity + shared-pass chunk counters for ``query_batch``."""
+    eng, session = _setup(sf)
+    t0 = time.perf_counter()
+    thrs = _date_quantiles(eng, np.linspace(0.2, 0.9, n_riders))
+
+    # --- varied-parameter riders: every rider bit-identical to its solo run
+    eng.cache.drop_all()
+    batched = session.query_batch("hot", [{"thr": t} for t in thrs])
+    for t, res in zip(thrs, batched):
+        solo = session.query("hot", epoch=None, thr=t)
+        _assert_result_parity(res, solo)
+
+    # --- same-parameter riders: the union chunk set *is* the solo chunk
+    # set, so the shared pass reads exactly one run's worth of chunks while
+    # serving all riders
+    eng.cache.drop_all()
+    solo = session.query("hot", thr=thrs[0])
+    solo_chunks = solo.pruning["chunks_read"]
+    eng.cache.drop_all()
+    same = session.query_batch("hot", [{"thr": thrs[0]}] * n_riders)
+    batch_chunks = same[0].pruning["chunks_read"]
+    assert batch_chunks == solo_chunks, (
+        f"shared pass read {batch_chunks} chunks for {n_riders} riders; a "
+        f"single solo run reads {solo_chunks} — the pass is not shared")
+    for res in same:
+        _assert_result_parity(res, solo)
+
+    row = {
+        "n_riders": n_riders,
+        "solo_chunks_read": solo_chunks,
+        "batch_chunks_read": batch_chunks,
+        "chunks_per_rider": batch_chunks / n_riders,
+        "batch_rows_decoded": same[0].pruning["rows_decoded"],
+    }
+    emit("shared_scan_chunks_read", float(batch_chunks),
+         f"riders={n_riders};solo={solo_chunks};"
+         f"per_rider={row['chunks_per_rider']:.2f}")
+    eng.close()
+    return {
+        "bench": "serving_shared_scan_sweep",
+        "sf": sf,
+        "wall_s": time.perf_counter() - t0,
+        "rows": [row],
+    }
+
+
+def _closed_loop(session, window_ms: float, n_clients: int,
+                 reqs_per_client: int, n_workers: int, thrs) -> dict:
+    srv = QueryServer(session, config=ServerConfig(
+        n_workers=n_workers, max_queue=4096, batch_window_ms=window_ms))
+    results: list[list] = [[] for _ in range(n_clients)]
+
+    def client(i: int) -> None:
+        for _ in range(reqs_per_client):
+            rid = srv.submit("hot", thr=thrs[i % len(thrs)])
+            results[i].append(srv.result(rid))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    flat = [r for per in results for r in per]
+    assert all(r.ok for r in flat), [r.error for r in flat if not r.ok][:3]
+    stats = dict(srv.stats)
+    lat = latency_stats(flat)
+    srv.close()
+    return {
+        "window_ms": window_ms,
+        "n_requests": len(flat),
+        "wall_s": wall,
+        "throughput_qps": len(flat) / wall,
+        "p50_s": lat["p50_s"],
+        "p99_s": lat["p99_s"],
+        "mean_queued_s": lat["mean_queued_s"],
+        "batches": stats["batches"],
+        "batched_requests": stats["batched_requests"],
+        "solo_requests": stats["solo_requests"],
+        "max_batch_riders": stats["max_batch_riders"],
+    }
+
+
+def throughput_sweep(sf: float = 0.004, n_clients: int = 16,
+                     reqs_per_client: int = 8, n_workers: int = 2,
+                     window_ms: float = 2.0,
+                     min_speedup: float = 2.0) -> dict:
+    """Closed-loop clients replaying one installed template: the ISSUE 6
+    acceptance floor — batching must at least double sustained throughput
+    at 16 concurrent clients over the same worker pool."""
+    eng, session = _setup(sf)
+    t0 = time.perf_counter()
+    # selective thresholds (top 1-20% of edges): the serving-shaped regime —
+    # each rider keeps a small survivor set, so the shared gather dominates
+    # and the per-rider mask/frame work stays cheap.  Low-selectivity riders
+    # shift cost into per-rider result materialization, which batching
+    # cannot share (it is each rider's own output).
+    thrs = _date_quantiles(eng, np.linspace(0.8, 0.99, n_clients))
+    # warm the decoded cache so both arms measure execution, not first-touch
+    # I/O; then best-of-2 per arm to damp scheduler wake-up jitter
+    for t in thrs:
+        session.query("hot", thr=t)
+
+    def arm(window: float) -> dict:
+        a = _closed_loop(session, window, n_clients, reqs_per_client,
+                         n_workers, thrs)
+        b = _closed_loop(session, window, n_clients, reqs_per_client,
+                         n_workers, thrs)
+        return a if a["throughput_qps"] >= b["throughput_qps"] else b
+
+    unbatched = arm(0.0)
+    batched = arm(window_ms)
+    speedup = batched["throughput_qps"] / unbatched["throughput_qps"]
+    emit("serving_batched_qps", batched["throughput_qps"],
+         f"unbatched={unbatched['throughput_qps']:.0f}qps;"
+         f"speedup={speedup:.1f}x;batches={batched['batches']};"
+         f"max_riders={batched['max_batch_riders']}")
+    assert batched["batches"] >= 1 and batched["batched_requests"] > 0, batched
+    assert unbatched["batches"] == 0, unbatched
+    assert speedup >= min_speedup, (
+        f"batched serving only {speedup:.2f}x over unbatched "
+        f"(floor {min_speedup}x): batched={batched} unbatched={unbatched}")
+    eng.close()
+    return {
+        "bench": "serving_throughput_sweep",
+        "sf": sf,
+        "n_clients": n_clients,
+        "n_workers": n_workers,
+        "reqs_per_client": reqs_per_client,
+        "speedup": speedup,
+        "min_speedup": min_speedup,
+        "wall_s": time.perf_counter() - t0,
+        "rows": [unbatched, batched],
+    }
+
+
+def qps_sweep(sf: float = 0.004, qps: float = 300.0,
+              duration_s: float = 1.5, n_workers: int = 2,
+              window_ms: float = 4.0) -> dict:
+    """Open-loop fixed-QPS arrivals over a mixed installed-template
+    workload; reports sustained throughput and p50/p99 per arm."""
+    eng, session = _setup(sf)
+    t0 = time.perf_counter()
+    thrs = _date_quantiles(eng, [0.5, 0.8])
+    workload = [("hot", {"thr": thrs[0]}), ("hot", {"thr": thrs[1]}),
+                ("tag", {"tag": "Music", "date": 20100101})]
+    for name, params in workload:
+        session.query(name, **params)  # warm
+
+    def arm(window: float) -> dict:
+        srv = QueryServer(session, config=ServerConfig(
+            n_workers=n_workers, max_queue=4096, batch_window_ms=window))
+        rids = []
+        interval = 1.0 / qps
+        t_start = time.perf_counter()
+        i = 0
+        while True:
+            now = time.perf_counter() - t_start
+            if now >= duration_s:
+                break
+            target = i * interval
+            if now < target:
+                time.sleep(target - now)
+            name, params = workload[i % len(workload)]
+            rids.append(srv.submit(name, **params))
+            i += 1
+        results = [srv.result(rid) for rid in rids]
+        wall = time.perf_counter() - t_start
+        assert all(r.ok for r in results), \
+            [r.error for r in results if not r.ok][:3]
+        lat = latency_stats(results)
+        stats = dict(srv.stats)
+        srv.close()
+        return {
+            "window_ms": window,
+            "offered_qps": qps,
+            "n_requests": len(results),
+            "sustained_qps": len(results) / wall,
+            "p50_s": lat["p50_s"],
+            "p99_s": lat["p99_s"],
+            "mean_queued_s": lat["mean_queued_s"],
+            "batches": stats["batches"],
+            "batched_requests": stats["batched_requests"],
+        }
+
+    unbatched = arm(0.0)
+    batched = arm(window_ms)
+    emit("serving_qps_p99_ms", batched["p99_s"] * 1e3,
+         f"unbatched_p99={unbatched['p99_s']*1e3:.1f}ms;"
+         f"offered={qps:.0f}qps;"
+         f"sustained={batched['sustained_qps']:.0f}qps")
+    eng.close()
+    return {
+        "bench": "serving_qps_sweep",
+        "sf": sf,
+        "wall_s": time.perf_counter() - t0,
+        "rows": [unbatched, batched],
+    }
+
+
+def _write_snapshot(snap: dict) -> None:
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snap, f, indent=2)
+    emit("serving_snapshot", 0.0, SNAPSHOT_PATH)
+
+
+def run(sf: float = 0.01, quick: bool = False) -> None:
+    snap = {}
+    if quick:
+        snap["shared_scan_sweep"] = shared_scan_sweep(sf=0.004)
+        snap["throughput_sweep"] = throughput_sweep(sf=0.004,
+                                                    reqs_per_client=6)
+        snap["qps_sweep"] = qps_sweep(sf=0.004, qps=200.0, duration_s=1.0)
+    else:
+        snap["shared_scan_sweep"] = shared_scan_sweep(sf=sf, n_riders=16)
+        snap["throughput_sweep"] = throughput_sweep(sf=sf,
+                                                    reqs_per_client=12)
+        snap["qps_sweep"] = qps_sweep(sf=sf)
+    _write_snapshot(snap)
+
+
+if __name__ == "__main__":
+    run()

@@ -131,6 +131,40 @@ class ColumnBounds:
         return ColumnBounds(lo, hi, lo_strict, hi_strict, values)
 
 
+@dataclasses.dataclass(frozen=True)
+class AnyOfBounds:
+    """Disjunction of per-rider constraints on one column (DESIGN.md §9).
+
+    A shared-scan batch fetches a chunk when *any* rider could use its rows,
+    so the union bound may only reject a chunk every rider's own bound
+    rejects.  Still conservative: each member is conservative, and the AND
+    of conservative rejects is conservative for the OR of the constraints.
+    Duck-typed to :class:`ColumnBounds` for the one method the zone-map test
+    calls.
+    """
+
+    members: tuple
+
+    def rejects(self, min_value, max_value) -> bool:
+        return all(m.rejects(min_value, max_value) for m in self.members)
+
+
+def union_bounds_maps(bounds_list: list) -> dict:
+    """Per-column OR of rider bounds maps — the bounds a shared scan prunes
+    with.  A column missing from any rider's map is unconstrained for that
+    rider, hence unconstrained in the union and dropped entirely."""
+    bounds_list = [b or {} for b in bounds_list]
+    if not bounds_list:
+        return {}
+    if len(bounds_list) == 1:
+        return dict(bounds_list[0])
+    shared = set(bounds_list[0])
+    for b in bounds_list[1:]:
+        shared &= set(b)
+    return {col: AnyOfBounds(tuple(b[col] for b in bounds_list))
+            for col in shared}
+
+
 def group_rejected(meta, row_group: int, bounds: Optional[dict]) -> bool:
     """The one zone-map test both the read path and the prefetcher apply:
     True iff some bounded column's chunk statistics in this row group prove
@@ -164,15 +198,39 @@ def zone_map_rejects(meta, row_group: int, bounds, columns, n_req: int,
     """
     if not group_rejected(meta, row_group, bounds):
         return False
-    if counters is not None:
-        counters["chunks_skipped"] += len(columns)
-        counters["rows_pruned"] += n_req
-        for c in columns:
-            try:
-                counters["bytes_skipped"] += meta.chunk(c, row_group).length
-            except KeyError:
-                pass
+    _count_skipped(counters, meta, row_group, columns, n_req)
     return True
+
+
+def _count_skipped(counters: Optional[dict], meta, row_group: int, columns,
+                   n_req: int) -> None:
+    if counters is None:
+        return
+    counters["chunks_skipped"] += len(columns)
+    counters["rows_pruned"] += n_req
+    for c in columns:
+        try:
+            counters["bytes_skipped"] += meta.chunk(c, row_group).length
+        except KeyError:
+            pass
+
+
+def zone_map_rejects_multi(meta, row_group: int, bounds_list: list, columns,
+                           n_req: int, counters: Optional[dict],
+                           ) -> tuple[bool, list[bool]]:
+    """Per-rider zone-map verdicts for one row group of a shared scan.
+
+    Returns ``(skip, per_rider)``: ``per_rider[r]`` is rider *r*'s own
+    :func:`group_rejected` verdict — its rows in this group provably fail
+    rider *r*'s conjunct, fetched or not — and ``skip`` is their AND: the
+    group is fetched for nobody only when *every* rider rejects it.  Only a
+    real skip books pruning counters (the batch pays one fetch for the
+    group otherwise, however many riders reject it)."""
+    per_rider = [group_rejected(meta, row_group, b) for b in bounds_list]
+    skip = all(per_rider)
+    if skip:
+        _count_skipped(counters, meta, row_group, columns, n_req)
+    return skip, per_rider
 
 
 def merge_bounds(a: dict, b: dict) -> dict:

@@ -44,12 +44,14 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.cache.manager import CacheManager
-from repro.core.plan import check_deadline
+from repro.core.plan import check_deadline, union_bounds_maps
 from repro.core.read_pipeline import (
     ReadContext,
     execute_plan,
     plan_edge_read,
+    plan_edge_read_multi,
     plan_vertex_read,
+    plan_vertex_read_multi,
 )
 from repro.core.types import VSet
 
@@ -112,6 +114,39 @@ def read_edge_columns_pruned(
                           bounds=bounds, counters=counters)
     out = execute_plan(plan, cache, counters=counters, pool=pool, ctx=ctx)
     return _finalize(out, plan.n), plan.reject
+
+
+def read_vertex_columns_multi(
+    topology, cache: CacheManager, vertex_type: str, dense_ids: np.ndarray,
+    columns: Sequence[str], bounds_list: Sequence[Optional[dict]],
+    counters: Optional[dict] = None, pool=None,
+    ctx: Optional[ReadContext] = None,
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Shared-scan vertex read: one fetch pass, R riders (DESIGN.md §9).
+
+    Identical to :func:`read_vertex_columns_pruned` except pruning takes one
+    bounds map *per rider*: a chunk is skipped only when every rider rejects
+    it, and the returned ``(R, n)`` reject matrix carries each rider's own
+    definitive verdicts (rider *r* must not consult values its row flags)."""
+    plan, rejects = plan_vertex_read_multi(
+        topology, vertex_type, dense_ids, columns, bounds_list,
+        counters=counters)
+    out = execute_plan(plan, cache, counters=counters, pool=pool, ctx=ctx)
+    return _finalize(out, plan.n), rejects
+
+
+def read_edge_columns_multi(
+    topology, cache: CacheManager, edge_type: str, eids: np.ndarray,
+    columns: Sequence[str], bounds_list: Sequence[Optional[dict]],
+    counters: Optional[dict] = None, pool=None,
+    ctx: Optional[ReadContext] = None,
+) -> tuple[dict[str, np.ndarray], np.ndarray]:
+    """Shared-scan edge read — :func:`read_vertex_columns_multi` for global
+    edge ids."""
+    plan, rejects = plan_edge_read_multi(
+        topology, edge_type, eids, columns, bounds_list, counters=counters)
+    out = execute_plan(plan, cache, counters=counters, pool=pool, ctx=ctx)
+    return _finalize(out, plan.n), rejects
 
 
 def read_edge_columns_by_eid(
@@ -307,6 +342,198 @@ def edge_scan(
         columns = {k: vals[keep] for k, vals in columns.items()}
 
     return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns)
+
+
+# ---------------------------------------------------------------------------
+# shared-scan batched EdgeScan (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchedScan:
+    """One shared pass serving R rider queries.
+
+    ``u``/``v``/``columns`` hold the *union* survivors — every row at least
+    one rider kept — and ``alive`` is the (R, E) rider mask: row *j* belongs
+    to rider *r*'s solo result iff ``alive[r, j]``.  Slicing the shared
+    arrays by a rider's mask yields exactly that rider's solo
+    :class:`EdgeFrame` (rows stay in canonical global-edge-id order, so the
+    restriction preserves solo row order bit-for-bit).  The stacked
+    accumulator path consumes the mask form directly — the masking
+    formulation of DESIGN.md §2, lifted across queries.
+    """
+
+    u: np.ndarray
+    v: np.ndarray
+    u_type: str
+    v_type: str
+    columns: dict[str, np.ndarray]
+    alive: np.ndarray               # (R, E) per-rider keep masks
+
+    @property
+    def n_riders(self) -> int:
+        return self.alive.shape[0]
+
+    def frame(self, r: int) -> EdgeFrame:
+        m = self.alive[r]
+        return EdgeFrame(
+            u=self.u[m], v=self.v[m], u_type=self.u_type, v_type=self.v_type,
+            columns={k: vals[m] for k, vals in self.columns.items()})
+
+
+def _union_frontier(frontiers: Sequence[VSet]) -> VSet:
+    mask = frontiers[0].mask.copy()
+    for f in frontiers[1:]:
+        mask |= f.mask
+    return VSet(frontiers[0].vertex_type, mask)
+
+
+def _union_cols(col_lists) -> tuple:
+    # riders of one installed template request identical column sets; keep
+    # first-seen order (the per-plan tuples are already sorted)
+    return tuple(dict.fromkeys(c for cols in col_lists for c in cols))
+
+
+def edge_scan_batched(
+    topology,
+    cache: CacheManager,
+    frontiers: Sequence[VSet],
+    edge_type: str,
+    direction: str,
+    plans: Sequence,
+    prefetcher=None,
+    strategy: str = "auto",
+    counters: Optional[dict] = None,
+    pool=None,
+    deadline: Optional[float] = None,
+) -> BatchedScan:
+    """One EdgeScan pass shared by R rider queries (DESIGN.md §9).
+
+    The staged pushdown scan (:func:`_edge_scan_staged`) generalized across
+    queries: gather once over the *union* frontier, fetch/decode each stage's
+    chunk union once (multi-rider zone maps — a chunk is skipped only when
+    every rider's bounds reject it), then evaluate each rider's conjunct
+    vectorized over the shared rows and AND it into that rider's ``alive``
+    mask together with the rider's own definitive reject row.  Rows dead for
+    *every* rider compress away between stages, so each stage's reads cover
+    exactly the union of the rows the solo scans would read.
+
+    Parity with R solo scans is structural, not numeric: gathers return rows
+    in canonical global-edge-id order, predicates are row-local (the GSQL
+    subset guarantees it — no cross-row UDFs reach this path), and rejects
+    are per-rider conservative, so restricting the shared pass to one
+    rider's mask commutes with running that rider alone.
+    """
+    check_deadline(deadline)
+    union = _union_frontier(frontiers)
+    e_cols = _union_cols([p.edge_columns for p in plans])
+    u_cols = _union_cols([p.u_columns for p in plans])
+    v_cols = _union_cols([p.v_columns for p in plans])
+    if prefetcher is not None:
+        prefetcher.prefetch_edges(
+            union, edge_type,
+            e_cols + _union_cols([p.accum_edge_columns for p in plans]),
+            direction=direction,
+            bounds=union_bounds_maps([p.edge_bounds for p in plans]),
+            topo=topology,
+        )
+        prefetcher.prefetch_vertices(
+            union, u_cols + _union_cols([p.accum_u_columns for p in plans]),
+            bounds=union_bounds_maps([p.u_bounds for p in plans]),
+            topo=topology,
+        )
+
+    et = topology.schema.edge_types[edge_type]
+    if direction == "out":
+        u_type, v_type = et.src_type, et.dst_type
+    else:
+        u_type, v_type = et.dst_type, et.src_type
+
+    view = topology.plane.view(
+        edge_type, strategy, frontier=union, direction=direction
+    )
+    u, v, eid = view.gather(union, direction=direction)
+    alive = np.stack([f.mask[u] for f in frontiers]) if len(u) \
+        else np.zeros((len(frontiers), 0), dtype=bool)
+    ctx = ReadContext()
+    columns: dict[str, np.ndarray] = {}
+
+    def _evaluate(preds, prefix, prefix_cols, rejects):
+        """AND each rider's verdict into its alive row, then drop rows no
+        rider keeps."""
+        nonlocal u, v, eid, alive, columns
+        columns.update(prefix_cols)
+        if len(u):
+            frame = dict(columns)
+            frame["u"] = u
+            frame["v"] = v
+            for r, pred in enumerate(preds):
+                if pred is None:
+                    continue
+                keep = np.asarray(pred.evaluate(frame, prefix), dtype=bool)
+                alive[r] &= keep & ~rejects[r]
+        keep_any = alive.any(axis=0)
+        if keep_any.all():
+            return
+        u, v, eid = u[keep_any], v[keep_any], eid[keep_any]
+        alive = alive[:, keep_any]
+        columns = {k: vals[keep_any] for k, vals in columns.items()}
+
+    if e_cols:
+        check_deadline(deadline)
+        cols, rejects = read_edge_columns_multi(
+            topology, cache, edge_type, eid, e_cols,
+            [p.edge_bounds for p in plans], counters=counters, pool=pool,
+            ctx=ctx,
+        )
+        _evaluate([p.edge_pred for p in plans], "e",
+                  {f"e.{c}": a for c, a in cols.items()}, rejects)
+
+    if u_cols:
+        check_deadline(deadline)
+        cols, rejects = read_vertex_columns_multi(
+            topology, cache, u_type, u, u_cols,
+            [p.u_bounds for p in plans], counters=counters, pool=pool, ctx=ctx,
+        )
+        _evaluate([p.source_pred for p in plans], "u",
+                  {f"u.{c}": a for c, a in cols.items()}, rejects)
+
+    if v_cols:
+        check_deadline(deadline)
+        cols, rejects = read_vertex_columns_multi(
+            topology, cache, v_type, v, v_cols,
+            [p.v_bounds for p in plans], counters=counters, pool=pool, ctx=ctx,
+        )
+        _evaluate([p.target_pred for p in plans], "v",
+                  {f"v.{c}": a for c, a in cols.items()}, rejects)
+
+    # ACCUM-only columns: union of final survivors (each rider's slice only
+    # ever consults rows its own mask kept)
+    acc_e = _union_cols([p.accum_edge_columns for p in plans])
+    acc_u = _union_cols([p.accum_u_columns for p in plans])
+    acc_v = _union_cols([p.accum_v_columns for p in plans])
+    if acc_e or acc_u or acc_v:
+        check_deadline(deadline)
+    if acc_e:
+        cols, _ = read_edge_columns_multi(
+            topology, cache, edge_type, eid, acc_e, [{}], counters=counters,
+            pool=pool, ctx=ctx,
+        )
+        columns.update({f"e.{c}": a for c, a in cols.items()})
+    if acc_u:
+        cols, _ = read_vertex_columns_multi(
+            topology, cache, u_type, u, acc_u, [{}], counters=counters,
+            pool=pool, ctx=ctx,
+        )
+        columns.update({f"u.{c}": a for c, a in cols.items()})
+    if acc_v:
+        cols, _ = read_vertex_columns_multi(
+            topology, cache, v_type, v, acc_v, [{}], counters=counters,
+            pool=pool, ctx=ctx,
+        )
+        columns.update({f"v.{c}": a for c, a in cols.items()})
+
+    return BatchedScan(u=u, v=v, u_type=u_type, v_type=v_type,
+                       columns=columns, alive=alive)
 
 
 def _edge_scan_staged(

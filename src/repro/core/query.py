@@ -69,6 +69,7 @@ from repro.core.plan import (
     check_deadline,
     merge_bounds,
     new_pruning_counters,
+    union_bounds_maps,
 )
 from repro.core.types import VSet
 
@@ -582,6 +583,302 @@ def _apply_accum(accums, topo, hop: _HopBlock, frame, u_type, v_type, accum_out)
     n_tgt = topo.n_vertices(tgt_type)
     accums.ensure_capacity(tgt_type, a.name, n_tgt)
     accum_out[a.name] = accums.array(tgt_type, a.name)[:n_tgt]
+
+
+# ---------------------------------------------------------------------------
+# the shared-scan batched executor (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _batch_shape(cq: CompiledQuery) -> tuple:
+    """The structural skeleton riders must share to execute as one pass:
+    everything about a compiled query *except* its bound parameter values."""
+    def hop_shape(h: _HopBlock):
+        a = h.accum
+        return (h.edge_type, h.direction,
+                h.edge_where is not None, h.source_where is not None,
+                h.target_where is not None,
+                None if a is None else
+                (a.name, a.op, a.target, a.dtype,
+                 a.value if isinstance(a.value, str) else "<const>"))
+
+    def stmt_shape(s: CompiledStatement):
+        return (s.seed.vertex_type, s.seed.where is not None,
+                s.seed.raw_ids is not None,
+                tuple((n, op) for n, op, _ in (s.seed.accum_where or ())),
+                tuple(hop_shape(h) for h in s.hops), s.select,
+                tuple(s.vertex_aliases),
+                tuple((p.source, p.target_alias, hop_shape(p.hop))
+                      for p in s.post))
+
+    return tuple(stmt_shape(s) for s in cq.statements)
+
+
+def _assert_batchable(compiled_list: list) -> None:
+    ref = _batch_shape(compiled_list[0])
+    for i, cq in enumerate(compiled_list[1:], start=1):
+        if _batch_shape(cq) != ref:
+            raise ValueError(
+                "shared-scan batch requires riders compiled from one query "
+                f"template (rider {i} differs structurally from rider 0); "
+                "riders may only differ in bound parameter values")
+    for cq in compiled_list:
+        for s in cq.statements:
+            if s.seed.raw_ids is not None:
+                raise ValueError(
+                    "raw_ids seeds cannot ride a shared-scan batch")
+
+
+def execute_compiled_batch(engine, compiled_list: list,
+                           options: Optional[ExecOptions] = None,
+                           epoch=None) -> list[QueryResult]:
+    """Run R compiled riders of one query template as a single shared pass
+    (DESIGN.md §9).
+
+    All riders pin the *same* epoch — acquired once here — and each gets a
+    private accumulator store, so per-rider results match
+    ``session.query()`` run solo on that epoch bit-for-bit: one gather over
+    the union frontier, one chunk fetch/decode pass per stage (a chunk is
+    skipped only when every rider's zone-map bounds reject it), per-rider
+    masks over the shared decoded columns, and a stacked accumulator update.
+
+    Riders must share the template's structure (:func:`_assert_batchable`);
+    only bound parameter values may differ.  A single rider, or
+    ``pushdown=False`` (the batched path is staged-scan-only), degenerates
+    to sequential solo execution on one pinned epoch.  Pruning counters are
+    the *batch's* — each rider's ``QueryResult.pruning`` is a copy of the
+    shared pass's counters, which is exactly what "one pass served N
+    riders" looks like (the serving benchmark asserts on it).
+    """
+    options = options or ExecOptions()
+    if not compiled_list:
+        return []
+    mgr = getattr(engine, "epochs", None)
+    acquired = None
+    if epoch is None and mgr is not None:
+        epoch = acquired = mgr.acquire()
+    try:
+        if len(compiled_list) == 1 or not options.pushdown:
+            return [execute_compiled(engine, cq, options=options, epoch=epoch,
+                                     private_accums=True)
+                    for cq in compiled_list]
+        _assert_batchable(compiled_list)
+        from repro.core.accumulators import Accumulators
+
+        deadline = options.deadline()
+        counters = new_pruning_counters()
+        n_riders = len(compiled_list)
+        accums_list = [Accumulators(epoch if epoch is not None
+                                    else engine.topology)
+                       for _ in range(n_riders)]
+        accum_outs: list[dict] = [{} for _ in range(n_riders)]
+        frames_list: list[list] = [[] for _ in range(n_riders)]
+        alias_sets_list: list[dict] = [{} for _ in range(n_riders)]
+        n_scanned = [0] * n_riders
+        vsets: list = [None] * n_riders
+        for si in range(len(compiled_list[0].statements)):
+            check_deadline(deadline)
+            stmts = [cq.statements[si] for cq in compiled_list]
+            vsets = _run_statement_batched(
+                engine, stmts, accums_list, counters, options, epoch,
+                deadline, accum_outs, frames_list, alias_sets_list, n_scanned,
+            )
+        return [
+            QueryResult(
+                vset=vsets[r], accumulators=accum_outs[r],
+                n_edges_scanned=n_scanned[r], frames=frames_list[r],
+                pruning=dict(counters),
+                epoch_id=epoch.epoch_id if epoch is not None else -1,
+                staleness_s=epoch.staleness_s() if epoch is not None else 0.0,
+                alias_sets=alias_sets_list[r],
+            )
+            for r in range(n_riders)
+        ]
+    finally:
+        if acquired is not None:
+            mgr.release(acquired)
+
+
+def _run_statement_batched(eng, stmts, accums_list, counters, options, epoch,
+                           deadline, accum_outs, frames_list, alias_sets_list,
+                           n_scanned):
+    """Lockstep batched :func:`_run_statement`: riders advance hop by hop
+    through one shared scan per hop, each tracking its own frontier,
+    matched sets, aliases and accumulators."""
+    from repro.core.primitives import edge_scan_batched, read_vertex_columns_multi
+
+    n_riders = len(stmts)
+    topo = epoch if epoch is not None else eng.topology
+    pool = eng._query_pool(options.pipeline)
+    seed0 = stmts[0].seed
+    base = eng.all_vertices(seed0.vertex_type, epoch=epoch)
+
+    # seed stage: one shared column read over the base set, per-rider
+    # evaluation — vertex_map's filter path lifted across riders
+    wheres = [s.seed.where for s in stmts]
+    if any(w is not None for w in wheres):
+        check_deadline(deadline)
+        columns = list(dict.fromkeys(
+            c for w in wheres if w is not None for c in w.columns))
+        bounds_list = [w.bounds() if w is not None else {} for w in wheres]
+        if eng.prefetcher is not None:
+            eng.prefetcher.prefetch_vertices(
+                base, columns, bounds=union_bounds_maps(bounds_list),
+                topo=eng._topo(epoch))
+        ids = base.ids()
+        cols, rejects = read_vertex_columns_multi(
+            eng._topo(epoch), eng.cache, seed0.vertex_type, ids, columns,
+            bounds_list, counters=counters, pool=pool,
+        )
+        frame = {"id": ids, **cols}
+        vsets = []
+        for r, w in enumerate(wheres):
+            if w is None:
+                vsets.append(base)
+                continue
+            keep = np.asarray(w.evaluate(frame, ""), dtype=bool) & ~rejects[r]
+            vsets.append(VSet.from_dense_ids(
+                seed0.vertex_type, len(base.mask), ids[keep]))
+    else:
+        vsets = [base] * n_riders
+
+    for r, s in enumerate(stmts):
+        seed = s.seed
+        if seed.accum_where:
+            n = topo.n_vertices(seed.vertex_type)
+            mask = vsets[r].mask.copy()
+            for name, op, value in seed.accum_where:
+                if accums_list[r].has(seed.vertex_type, name):
+                    arr = accums_list[r].ensure_capacity(
+                        seed.vertex_type, name, n)[:n]
+                else:  # never written -> every slot sits at the sum identity
+                    arr = np.zeros(n)
+                mask &= _ACC_CMP[op](arr, value)
+            vsets[r] = VSet(seed.vertex_type, mask)
+    seed_sets = list(vsets)
+
+    n_hops = len(stmts[0].hops)
+    rider_aliases = [s.vertex_aliases or [None] * (n_hops + 1) for s in stmts]
+    for r in range(n_riders):
+        if rider_aliases[r][0] is not None:
+            alias_sets_list[r][rider_aliases[r][0]] = seed_sets[r]
+
+    matched = [[None] * (n_hops + 1) for _ in range(n_riders)]
+    first_frames: list = [None] * n_riders
+    for r in range(n_riders):
+        matched[r][0] = seed_sets[r]
+
+    for hop_i in range(n_hops):
+        check_deadline(deadline)
+        hops = [s.hops[hop_i] for s in stmts]
+        scan = edge_scan_batched(
+            eng._topo(epoch), eng.cache, vsets, hops[0].edge_type,
+            hops[0].direction, [plan_hop(h) for h in hops],
+            prefetcher=eng.prefetcher, counters=counters, pool=pool,
+            deadline=deadline,
+        )
+        rider_frames = [scan.frame(r) for r in range(n_riders)]
+        _apply_accum_batched(accums_list, topo, hops, scan, accum_outs)
+        n_v = topo.n_vertices(scan.v_type)
+        for r in range(n_riders):
+            if hop_i == 0:
+                first_frames[r] = rider_frames[r]
+            frames_list[r].append(rider_frames[r])
+            n_scanned[r] += len(rider_frames[r])
+            vsets[r] = rider_frames[r].v_set(n_v)
+            matched[r][hop_i + 1] = vsets[r]
+            if rider_aliases[r][hop_i + 1] is not None:
+                alias_sets_list[r][rider_aliases[r][hop_i + 1]] = vsets[r]
+
+    def matched_set(r: int, pos: int) -> VSet:
+        if pos == 0 and n_hops:
+            # lazily refine: seed vertices that kept an edge through hop 1
+            return first_frames[r].u_set(topo.n_vertices(seed0.vertex_type))
+        return matched[r][pos]
+
+    for pb_i in range(len(stmts[0].post)):
+        check_deadline(deadline)
+        pbs = [s.post[pb_i] for s in stmts]
+        hops = [pb.hop for pb in pbs]
+        srcs = [matched_set(r, pbs[r].source) for r in range(n_riders)]
+        scan = edge_scan_batched(
+            eng._topo(epoch), eng.cache, srcs, hops[0].edge_type,
+            hops[0].direction, [plan_hop(h) for h in hops],
+            prefetcher=eng.prefetcher, counters=counters, pool=pool,
+            deadline=deadline,
+        )
+        rider_frames = [scan.frame(r) for r in range(n_riders)]
+        _apply_accum_batched(accums_list, topo, hops, scan, accum_outs)
+        n_v = topo.n_vertices(scan.v_type)
+        for r in range(n_riders):
+            frames_list[r].append(rider_frames[r])
+            n_scanned[r] += len(rider_frames[r])
+            if pbs[r].target_alias is not None:
+                alias_sets_list[r][pbs[r].target_alias] = \
+                    rider_frames[r].v_set(n_v)
+
+    sel = stmts[0].select if stmts[0].select >= 0 else n_hops
+    return [matched_set(r, sel) for r in range(n_riders)]
+
+
+def _apply_accum_batched(accums_list, topo, hops, scan, accum_outs):
+    """Stacked accumulator update over one shared scan.
+
+    ``sum`` riders update through a single flattened bincount — the numpy
+    mirror of ``kernels.ops.stacked_segment_sum`` (rider r's segments live
+    at offset ``r * cap``), with dead rows contributing the identity instead
+    of being sliced away (the masking formulation, DESIGN.md §2/§9).  The
+    ordered-traversal ops (max/min/or) update per rider on their masked
+    slice — same ``np.<op>.at`` path as solo.
+    """
+    a0 = hops[0].accum
+    if a0 is None:    # riders share the template's accum shape (batchable)
+        return
+    if a0.target == "v":
+        tgt_type, tgt_ids = scan.v_type, scan.v
+    else:
+        tgt_type, tgt_ids = scan.u_type, scan.u
+    n_riders, n_rows = scan.alive.shape
+    for accums in accums_list:
+        if not accums.has(tgt_type, a0.name):
+            accums.register(AccumSpec(tgt_type, a0.name, op=a0.op,
+                                      dtype=a0.dtype))
+
+    def rider_values(r: int):
+        a = hops[r].accum
+        if isinstance(a.value, str):
+            pfx, col = a.value.split(".", 1)
+            return scan.columns[f"{pfx}.{col}"]
+        return a.value
+
+    if n_rows:
+        if a0.op == "sum":
+            vals = np.stack([
+                np.broadcast_to(np.asarray(rider_values(r), dtype=np.float64),
+                                (n_rows,))
+                for r in range(n_riders)
+            ])
+            contrib = np.where(scan.alive, vals, 0.0)
+            cap = int(tgt_ids.max()) + 1
+            seg = tgt_ids[None, :] + (np.arange(n_riders) * cap)[:, None]
+            stacked = np.bincount(
+                seg.ravel(), weights=contrib.ravel(),
+                minlength=n_riders * cap).reshape(n_riders, cap)
+            for r, accums in enumerate(accums_list):
+                arr = accums.ensure_capacity(tgt_type, a0.name, cap)
+                arr[:cap] += stacked[r].astype(arr.dtype, copy=False)
+        else:
+            for r, accums in enumerate(accums_list):
+                m = scan.alive[r]
+                vals = rider_values(r)
+                if isinstance(vals, np.ndarray):
+                    vals = vals[m]
+                accums.update(tgt_type, a0.name, tgt_ids[m], vals)
+
+    # result views sized to this epoch's dense space (see _apply_accum)
+    n_tgt = topo.n_vertices(tgt_type)
+    for r, accums in enumerate(accums_list):
+        accums.ensure_capacity(tgt_type, a0.name, n_tgt)
+        accum_outs[r][a0.name] = accums.array(tgt_type, a0.name)[:n_tgt]
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,7 @@ import numpy as np
 
 from repro.core.cache.manager import CacheManager
 from repro.core.cache.units import ChunkRef
-from repro.core.plan import zone_map_rejects
+from repro.core.plan import zone_map_rejects_multi
 from repro import perf_flags
 
 
@@ -94,17 +94,29 @@ class ReadContext:
 # planning
 # ---------------------------------------------------------------------------
 
-def plan_vertex_read(
+def plan_vertex_read_multi(
     topology, vertex_type: str, dense_ids: np.ndarray, columns: Sequence[str],
-    bounds: Optional[dict] = None, counters: Optional[dict] = None,
-) -> ChunkFetchPlan:
-    """Partition a dense-id point-lookup request into per-chunk requests."""
+    bounds_list: Sequence[Optional[dict]], counters: Optional[dict] = None,
+) -> tuple[ChunkFetchPlan, np.ndarray]:
+    """Multi-rider variant of :func:`plan_vertex_read` (DESIGN.md §9).
+
+    One shared request row set, one bounds map per rider.  A row group is
+    dropped from the plan only when *every* rider's bounds reject it; the
+    returned ``(R, n)`` reject matrix flags each rider's rows whenever that
+    rider's own bounds reject the owning group — fetched for another rider
+    or not — so restricting the shared output by rider *r*'s row of the
+    matrix reproduces rider *r*'s solo read verdicts exactly.  The plan's
+    own ``reject`` is the all-rider AND (rows of truly skipped chunks)."""
+    bounds_list = [b or {} for b in bounds_list]
+    n_riders = len(bounds_list)
     dense_ids = np.asarray(dense_ids, dtype=np.int64)
     n = len(dense_ids)
-    reject = np.zeros(n, dtype=bool)
+    rejects = np.zeros((n_riders, n), dtype=bool)
     requests: list[ChunkRequest] = []
     if n == 0 or not columns:
-        return ChunkFetchPlan(n, list(columns), requests, reject)
+        return ChunkFetchPlan(n, list(columns), requests,
+                              rejects.all(axis=0)), rejects
+    any_bounds = any(bounds_list)
     file_ids, rows = topology.dense_to_file_row(vertex_type, dense_ids)
     for fid in np.unique(file_ids):
         finfo = topology.file_registry.get(int(fid))
@@ -119,28 +131,50 @@ def plan_vertex_read(
             if not in_g.any():
                 continue
             pos = idx_f[in_g]
-            if bounds and zone_map_rejects(meta, g.index, bounds, columns,
-                                           int(in_g.sum()), counters):
-                reject[pos] = True
-                continue
+            if any_bounds:
+                skip, per_rider = zone_map_rejects_multi(
+                    meta, g.index, bounds_list, columns, int(in_g.sum()),
+                    counters)
+                for r, rej in enumerate(per_rider):
+                    if rej:
+                        rejects[r, pos] = True
+                if skip:
+                    continue
             local = rows_f[in_g] - g.first_row
             for c in columns:
                 requests.append(ChunkRequest(
                     ChunkRef(finfo.key, c, g.index), meta, "vertex", local, pos))
-    return ChunkFetchPlan(n, list(columns), requests, reject)
+    return ChunkFetchPlan(n, list(columns), requests,
+                          rejects.all(axis=0)), rejects
 
 
-def plan_edge_read(
-    topology, edge_type: str, eids: np.ndarray, columns: Sequence[str],
+def plan_vertex_read(
+    topology, vertex_type: str, dense_ids: np.ndarray, columns: Sequence[str],
     bounds: Optional[dict] = None, counters: Optional[dict] = None,
 ) -> ChunkFetchPlan:
-    """Partition a global-edge-id request into per-chunk requests."""
+    """Partition a dense-id point-lookup request into per-chunk requests."""
+    plan, rejects = plan_vertex_read_multi(
+        topology, vertex_type, dense_ids, columns, [bounds], counters=counters)
+    plan.reject = rejects[0]
+    return plan
+
+
+def plan_edge_read_multi(
+    topology, edge_type: str, eids: np.ndarray, columns: Sequence[str],
+    bounds_list: Sequence[Optional[dict]], counters: Optional[dict] = None,
+) -> tuple[ChunkFetchPlan, np.ndarray]:
+    """Multi-rider variant of :func:`plan_edge_read` — same union-skip /
+    per-rider-reject contract as :func:`plan_vertex_read_multi`."""
+    bounds_list = [b or {} for b in bounds_list]
+    n_riders = len(bounds_list)
     eids = np.asarray(eids, dtype=np.int64)
     n = len(eids)
-    reject = np.zeros(n, dtype=bool)
+    rejects = np.zeros((n_riders, n), dtype=bool)
     requests: list[ChunkRequest] = []
     if n == 0 or not columns:
-        return ChunkFetchPlan(n, list(columns), requests, reject)
+        return ChunkFetchPlan(n, list(columns), requests,
+                              rejects.all(axis=0)), rejects
+    any_bounds = any(bounds_list)
     offsets = topology.plane.eid_offsets(edge_type)
     lists = topology.all_edge_lists(edge_type)
     list_idx = np.searchsorted(offsets, eids, side="right") - 1
@@ -155,15 +189,32 @@ def plan_edge_read(
             if not in_g.any():
                 continue
             gpos = pos[in_g]
-            if bounds and zone_map_rejects(meta, g.index, bounds, columns,
-                                           int(in_g.sum()), counters):
-                reject[gpos] = True
-                continue
+            if any_bounds:
+                skip, per_rider = zone_map_rejects_multi(
+                    meta, g.index, bounds_list, columns, int(in_g.sum()),
+                    counters)
+                for r, rej in enumerate(per_rider):
+                    if rej:
+                        rejects[r, gpos] = True
+                if skip:
+                    continue
             local = local_rows[in_g] - g.first_row
             for c in columns:
                 requests.append(ChunkRequest(
                     ChunkRef(el.file_key, c, g.index), meta, "edge", local, gpos))
-    return ChunkFetchPlan(n, list(columns), requests, reject)
+    return ChunkFetchPlan(n, list(columns), requests,
+                          rejects.all(axis=0)), rejects
+
+
+def plan_edge_read(
+    topology, edge_type: str, eids: np.ndarray, columns: Sequence[str],
+    bounds: Optional[dict] = None, counters: Optional[dict] = None,
+) -> ChunkFetchPlan:
+    """Partition a global-edge-id request into per-chunk requests."""
+    plan, rejects = plan_edge_read_multi(
+        topology, edge_type, eids, columns, [bounds], counters=counters)
+    plan.reject = rejects[0]
+    return plan
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.query import CompiledQuery, ExecOptions, QueryResult, execute_compiled
+from repro.core.query import (
+    CompiledQuery,
+    ExecOptions,
+    QueryResult,
+    execute_compiled,
+    execute_compiled_batch,
+)
 from repro.gsql import ir
 from repro.gsql.compiler import Catalog, compile_query, explain_compiled, validate_query
 from repro.gsql.parser import parse
@@ -137,6 +143,26 @@ class GraphSession:
         return execute_compiled(self.engine, compiled,
                                 options=options or self.options, epoch=epoch,
                                 private_accums=True)
+
+    def query_batch(self, text_or_name: str, params_list: list,
+                    options: Optional[ExecOptions] = None,
+                    epoch=None) -> list[QueryResult]:
+        """Execute one installed query (or literal text) for many parameter
+        bindings as a *single shared-scan pass* (DESIGN.md §9).
+
+        Each entry of ``params_list`` is one rider's parameter dict; the
+        riders compile from the same template, pin one epoch together, and
+        execute through
+        :func:`~repro.core.query.execute_compiled_batch` — one gather per
+        hop over the union frontier, one chunk fetch/decode pass per stage,
+        per-rider masks — with each rider's result bit-identical to a solo
+        ``query()`` call on that epoch.  The serving layer's batch scheduler
+        is the intended caller; it groups concurrent same-template requests
+        into one ``query_batch``."""
+        compiled = [self._compile(text_or_name, p) for p in params_list]
+        return execute_compiled_batch(self.engine, compiled,
+                                      options=options or self.options,
+                                      epoch=epoch)
 
     def explain(self, text_or_name: str, **params) -> str:
         """The compiled plan of a query: per hop, the staged column sets,

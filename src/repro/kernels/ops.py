@@ -120,6 +120,41 @@ def csr_segment_sum(values: jax.Array, indptr: jax.Array, num_segments: int) -> 
     return _ref.csr_segment_sum(values, indptr, num_segments)
 
 
+def stacked_segment_sum(values: jax.Array, segment_ids: jax.Array,
+                        num_segments: int) -> jax.Array:
+    """Segment sum for a *stack* of riders sharing one edge stream.
+
+    ``values`` is (R, E) — R riders' per-edge contributions over the same
+    (E,) ``segment_ids`` (the shared-scan batch layout: dead rider/edge
+    pairs pre-zeroed by the caller's ``alive`` mask).  Returns (R, N).
+
+    One transpose turns this into the (E, D) layout ``segment_sum`` already
+    dispatches to the Pallas edge kernel, with riders riding the feature
+    axis — the batch reuses the solo kernel instead of growing a new one.
+    """
+    return segment_sum(values.T, segment_ids, num_segments).T
+
+
+# ---------------------------------------------------------------------------
+# pytree stacking (batched rider state)
+# ---------------------------------------------------------------------------
+
+def tree_stack(trees: list):
+    """Stack a list of identically-structured pytrees leaf-wise: R trees of
+    (leaf_shape) -> one tree of (R, *leaf_shape).  The shared-scan batch
+    path uses this to run R riders' frontier/accumulator state through one
+    traced program."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
+
+
+def tree_unstack(tree) -> list:
+    """Inverse of :func:`tree_stack`: one tree of (R, *leaf_shape) back to
+    a list of R per-rider trees."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    return [treedef.unflatten([leaf[i] for leaf in leaves]) for i in range(n)]
+
+
 # ---------------------------------------------------------------------------
 # embedding bag
 # ---------------------------------------------------------------------------

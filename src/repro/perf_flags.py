@@ -44,6 +44,15 @@ record exact before/after deltas:
                    overrides the interval (default 30); an explicit
                    ``ServerConfig.refresh_interval_s`` wins over the flag.
 
+- ``batch``      — shared-scan multi-query batching in the query server
+                   (DESIGN.md §9): concurrent requests for the same
+                   installed template group within a short window and
+                   execute as one pass — one gather, one union chunk-fetch
+                   plan, per-rider masks.  ``batch=<window_ms>`` overrides
+                   the batching window (default 2 ms); an explicit
+                   ``ServerConfig.batch_window_ms`` wins over the flag.
+                   Off = the per-request parity path.
+
 Default: all on.  ``REPRO_OPTS=""`` disables all (baseline);
 ``REPRO_OPTS="tri,chunkloss"`` enables a subset.
 
@@ -51,20 +60,46 @@ A flag can carry a numeric tunable: ``REPRO_OPTS="csr=0.02"`` enables
 ``csr`` *and* overrides its selectivity threshold — one entry, so tuning a
 flag can never accidentally change which flags are on.  ``value(name,
 default)`` reads the numeric part (default when absent or bare).
+
+Unrecognized names in ``REPRO_OPTS`` warn once per distinct setting: a typo
+(``REPRO_OPTS=pip``) silently disabling every other optimization is exactly
+the kind of misconfiguration a perf loop must not chase for a day.
 """
 
 from __future__ import annotations
 
 import os
+import warnings
 
 _ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr",
-        "pipe", "refresh")
+        "pipe", "refresh", "batch")
+
+# recognized but not default-on (capacity trades etc.) — never warned about
+_KNOWN_OFF = ("kv_int8",)
+
+# REPRO_OPTS strings already checked for typos (warn once per distinct value)
+_checked: set = set()
+
+
+def _check_names(raw: str) -> None:
+    if raw in _checked:
+        return
+    _checked.add(raw)
+    names = {x.strip().split("=", 1)[0] for x in raw.split(",") if x.strip()}
+    unknown = names - set(_ALL) - set(_KNOWN_OFF)
+    if unknown:
+        warnings.warn(
+            f"REPRO_OPTS names unrecognized flag(s) {sorted(unknown)} — known "
+            f"flags: {', '.join(_ALL + _KNOWN_OFF)}.  Listed flags still "
+            f"apply, but everything not listed is OFF; check for typos.",
+            UserWarning, stacklevel=3)
 
 
 def enabled(flag: str) -> bool:
     raw = os.environ.get("REPRO_OPTS")
     if raw is None:
         return flag in _ALL
+    _check_names(raw)
     chosen = {x.strip().split("=", 1)[0] for x in raw.split(",") if x.strip()}
     return flag in chosen
 
@@ -72,6 +107,8 @@ def enabled(flag: str) -> bool:
 def value(name: str, default: float) -> float:
     """Numeric tunable attached to a flag (``name=<float>`` entries)."""
     raw = os.environ.get("REPRO_OPTS") or ""
+    if raw:
+        _check_names(raw)
     for part in raw.split(","):
         if "=" in part:
             k, v = part.split("=", 1)

@@ -1,5 +1,12 @@
 """Serving layer: batched graph-analytics query serving over GraphLake."""
 
-from repro.serving.server import QueryServer, ServerConfig, ServerOverloadedError
+from repro.serving.server import (
+    QueryServer,
+    ServerConfig,
+    ServerOverloadedError,
+    TenantQuotaExceededError,
+    latency_stats,
+)
 
-__all__ = ["QueryServer", "ServerConfig", "ServerOverloadedError"]
+__all__ = ["QueryServer", "ServerConfig", "ServerOverloadedError",
+           "TenantQuotaExceededError", "latency_stats"]

@@ -203,3 +203,48 @@ def test_ops_dispatch_interpret(monkeypatch):
     monkeypatch.setenv("REPRO_PALLAS", "off")
     got2 = ops.edge_segment_sum(values, dst, 32)
     np.testing.assert_allclose(got2, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stacked segment sum + pytree stacking (shared-scan batch layout)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,e,n", [(1, 64, 16), (3, 700, 50), (8, 4096, 512)])
+def test_stacked_segment_sum(monkeypatch, r, e, n):
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    rng = _rng(2)
+    vals = jnp.asarray(rng.standard_normal((r, e)), dtype=jnp.float32)
+    ids = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    got = np.asarray(ops.stacked_segment_sum(vals, ids, n))
+    want = np.stack([
+        np.bincount(np.asarray(ids), weights=np.asarray(vals)[i],
+                    minlength=n)[:n]
+        for i in range(r)
+    ]).astype(np.float32)
+    assert got.shape == (r, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    monkeypatch.setenv("REPRO_PALLAS", "off")
+    got2 = np.asarray(ops.stacked_segment_sum(vals, ids, n))
+    np.testing.assert_allclose(got2, want, rtol=1e-5, atol=1e-5)
+
+
+def test_tree_stack_unstack_roundtrip():
+    from repro.kernels import ops
+
+    trees = [
+        {"frontier": jnp.arange(6, dtype=jnp.float32) * i,
+         "acc": (jnp.ones((2, 3)) * i, jnp.zeros((4,)) + i)}
+        for i in range(5)
+    ]
+    stacked = ops.tree_stack(trees)
+    assert stacked["frontier"].shape == (5, 6)
+    assert stacked["acc"][0].shape == (5, 2, 3)
+    back = ops.tree_unstack(stacked)
+    assert len(back) == 5
+    for orig, got in zip(trees, back):
+        assert jax.tree.structure(orig) == jax.tree.structure(got)
+        for a, b in zip(jax.tree.leaves(orig), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,419 @@
+"""Tests: shared-scan batch execution (DESIGN.md §9) and the batching
+server — parity, scheduler grouping, priority lanes, tenant quotas,
+queue-time accounting, TTL eviction, and perf-flag hygiene."""
+
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.engine import GraphLakeEngine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.gsql.session import GraphSession
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.serving.server import (
+    QueryServer,
+    ServerConfig,
+    ServerOverloadedError,
+    TenantQuotaExceededError,
+    latency_stats,
+)
+
+HOT = """
+    SELECT p FROM Comment:c -(HasCreator:e)- Person:p
+    WHERE e.creationDate > $thr
+    ACCUM p.@cnt += 1
+"""
+TWO_HOP = """
+    SELECT p FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p
+    WHERE t.name == $tag AND e2.creationDate > $date
+    ACCUM p.@deg += 1
+"""
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    store = ObjectStore(StoreConfig(root=str(tmp_path_factory.mktemp("lake"))))
+    generate_ldbc(store, scale_factor=0.004, n_files=3, row_group_rows=512)
+    eng = GraphLakeEngine(store, ldbc_graph_schema())
+    eng.startup()
+    yield eng
+    eng.close()
+
+
+@pytest.fixture(scope="module")
+def session(engine):
+    s = GraphSession.for_engine(engine)
+    s.install("hot", HOT)
+    s.install("two_hop", TWO_HOP)
+    return s
+
+
+def _assert_identical(a, b):
+    assert np.array_equal(a.vset.ids(), b.vset.ids())
+    assert a.n_edges_scanned == b.n_edges_scanned
+    for fa, fb in zip(a.frames, b.frames):
+        assert np.array_equal(fa.u, fb.u) and np.array_equal(fa.v, fb.v)
+        assert set(fa.columns) == set(fb.columns)
+        for k in fa.columns:
+            assert np.array_equal(fa.columns[k], fb.columns[k]), k
+    assert set(a.accumulators) == set(b.accumulators)
+    for k in a.accumulators:
+        assert np.array_equal(a.accumulators[k], b.accumulators[k]), k
+
+
+# ---------------------------------------------------------------------------
+# query_batch parity
+# ---------------------------------------------------------------------------
+
+def test_query_batch_bit_parity_varied_params(session):
+    params = [{"thr": 20090101 + i * 5000} for i in range(5)]
+    batched = session.query_batch("hot", params)
+    for p, res in zip(params, batched):
+        _assert_identical(res, session.query("hot", **p))
+
+
+def test_query_batch_two_hop_parity(session):
+    params = [{"tag": "Music", "date": 20090101},
+              {"tag": "Music", "date": 20110101}]
+    batched = session.query_batch("two_hop", params)
+    for p, res in zip(params, batched):
+        _assert_identical(res, session.query("two_hop", **p))
+
+
+def test_query_batch_single_rider_matches_solo(session):
+    [res] = session.query_batch("hot", [{"thr": 20100101}])
+    _assert_identical(res, session.query("hot", thr=20100101))
+
+
+def test_query_batch_shared_pass_counters(session):
+    """Same-parameter riders: the shared pass reads one solo run's worth of
+    chunks, and every rider reports the shared pass's counters."""
+    eng = session.engine
+    eng.cache.drop_all()
+    solo = session.query("hot", thr=20100101)
+    eng.cache.drop_all()
+    riders = session.query_batch("hot", [{"thr": 20100101}] * 6)
+    assert riders[0].pruning["chunks_read"] == solo.pruning["chunks_read"]
+    for r in riders[1:]:
+        assert r.pruning == riders[0].pruning
+
+
+def test_query_batch_mixed_shapes_rejected(session):
+    with pytest.raises(ValueError, match="one query template"):
+        from repro.core.query import execute_compiled_batch
+        compiled = [session._compile("hot", {"thr": 1}),
+                    session._compile("two_hop",
+                                     {"tag": "Music", "date": 20100101})]
+        execute_compiled_batch(session.engine, compiled)
+
+
+# ---------------------------------------------------------------------------
+# server: batch scheduler
+# ---------------------------------------------------------------------------
+
+def test_server_forms_batches(session):
+    srv = QueryServer(session, config=ServerConfig(
+        n_workers=2, batch_window_ms=20.0))
+    try:
+        rids = [srv.submit("hot", thr=20090101 + i * 1000) for i in range(8)]
+        results = [srv.result(r) for r in rids]
+        assert all(r.ok for r in results), [r.error for r in results]
+        assert srv.stats["batches"] >= 1
+        assert srv.stats["batched_requests"] >= 2
+        assert srv.stats["max_batch_riders"] >= 2
+        solo = session.query("hot", thr=20090101)
+        _assert_identical(results[0].value, solo)
+    finally:
+        srv.close()
+
+
+def test_server_batching_off_is_per_request(session):
+    srv = QueryServer(session, config=ServerConfig(
+        n_workers=2, batch_window_ms=0.0))
+    try:
+        rids = [srv.submit("hot", thr=20090101 + i * 1000) for i in range(4)]
+        assert all(srv.result(r).ok for r in rids)
+        assert srv.stats["batches"] == 0
+        assert srv.stats["solo_requests"] == 4
+    finally:
+        srv.close()
+
+
+def test_server_max_batch_riders_caps_group(session):
+    srv = QueryServer(session, config=ServerConfig(
+        n_workers=1, batch_window_ms=50.0, max_batch_riders=3))
+    try:
+        rids = [srv.submit("hot", thr=20090101 + i) for i in range(6)]
+        assert all(srv.result(r).ok for r in rids)
+        assert srv.stats["max_batch_riders"] <= 3
+        assert srv.stats["batches"] >= 2
+    finally:
+        srv.close()
+
+
+def test_server_priority_lanes(engine):
+    """With one worker pinned on a blocker, a later priority-0 request
+    dispatches before the earlier priority-5 one."""
+    order = []
+    gate = threading.Event()
+
+    def blocker(engine):
+        gate.wait(2.0)
+        return "unblocked"
+
+    def note(engine, tag):
+        order.append(tag)
+        return tag
+
+    srv = QueryServer(engine, {"blocker": blocker, "note": note},
+                      ServerConfig(n_workers=1, batch_window_ms=0.0))
+    try:
+        b = srv.submit("blocker")
+        time.sleep(0.05)          # ensure the worker picked up the blocker
+        lo = srv.submit("note", priority=5, tag="lo")
+        hi = srv.submit("note", priority=0, tag="hi")
+        time.sleep(0.05)          # let both enqueue before the gate opens
+        gate.set()
+        assert srv.result(b).value == "unblocked"
+        assert srv.result(hi).ok and srv.result(lo).ok
+        assert order == ["hi", "lo"]
+    finally:
+        gate.set()
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# server: admission control, quotas, accounting
+# ---------------------------------------------------------------------------
+
+def test_tenant_quota_typed_shed(engine):
+    gate = threading.Event()
+
+    def blocker(engine):
+        gate.wait(2.0)
+        return "ok"
+
+    srv = QueryServer(engine, {"blocker": blocker},
+                      ServerConfig(n_workers=1, batch_window_ms=0.0,
+                                   tenant_quota=2))
+    try:
+        r1 = srv.submit("blocker", tenant="acme")
+        r2 = srv.submit("blocker", tenant="acme")
+        with pytest.raises(TenantQuotaExceededError):
+            srv.submit("blocker", tenant="acme")
+        # quota is per tenant: another tenant is admitted
+        r3 = srv.submit("blocker", tenant="other")
+        assert srv.stats["shed_tenant_quota"] == 1
+        gate.set()
+        assert all(srv.result(r).ok for r in (r1, r2, r3))
+        # completions release the quota: the tenant may submit again
+        gate.set()
+        r4 = srv.submit("blocker", tenant="acme")
+        assert srv.result(r4).ok
+    finally:
+        gate.set()
+        srv.close()
+
+
+def test_overload_shed_keeps_rid_accounting(engine):
+    """ServerOverloadedError must not corrupt request-id accounting: shed
+    submissions burn no result slots, later requests complete normally."""
+    gate = threading.Event()
+
+    def blocker(engine):
+        gate.wait(2.0)
+        return "ok"
+
+    srv = QueryServer(engine, {"blocker": blocker},
+                      ServerConfig(n_workers=1, max_queue=1,
+                                   batch_window_ms=0.0))
+    try:
+        first = srv.submit("blocker")
+        time.sleep(0.05)            # worker holds `first`; queue is empty
+        second = srv.submit("blocker")   # fills max_queue=1
+        shed = 0
+        for _ in range(4):
+            try:
+                srv.submit("blocker")
+            except ServerOverloadedError:
+                shed += 1
+        assert shed >= 1
+        assert srv.stats["shed_queue_full"] == shed
+        gate.set()
+        res_first, res_second = srv.result(first), srv.result(second)
+        assert res_first.ok and res_second.ok
+        assert res_first.request_id == first
+        assert res_second.request_id == second
+        # after the shed storm, the server still serves fresh requests
+        again = srv.submit("blocker")
+        assert again > second
+        assert srv.result(again).ok
+        # no abandoned result slots: shed requests never complete
+        assert not srv._results and not srv._done_at
+    finally:
+        gate.set()
+        srv.close()
+
+
+def test_latency_accounting_under_concurrent_load(session):
+    srv = QueryServer(session, config=ServerConfig(
+        n_workers=2, batch_window_ms=5.0))
+    results = []
+    res_lock = threading.Lock()
+
+    def client(i):
+        rid = srv.submit("hot", thr=20090101 + (i % 4) * 3000)
+        r = srv.result(rid)
+        with res_lock:
+            results.append(r)
+
+    try:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(12)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        assert all(r.ok for r in results)
+        assert len({r.request_id for r in results}) == 12
+        for r in results:
+            assert r.queued_s >= 0.0 and r.service_s > 0.0
+            assert r.queued_s + r.service_s <= wall + 0.05
+        stats = latency_stats(results)
+        assert stats["count"] == 12
+        assert stats["p99_s"] >= stats["p50_s"]
+        assert stats["mean_queued_s"] >= 0.0
+    finally:
+        srv.close()
+
+
+def test_total_timeout_expires_in_queue(engine):
+    """A request whose queue wait exhausts total_timeout_s fails without
+    executing and is counted in expired_in_queue."""
+    gate = threading.Event()
+    ran = []
+
+    def blocker(engine):
+        gate.wait(2.0)
+        return "ok"
+
+    def never(engine):
+        ran.append(1)
+        return "ran"
+
+    srv = QueryServer(engine, {"blocker": blocker, "never": never},
+                      ServerConfig(n_workers=1, batch_window_ms=0.0,
+                                   total_timeout_s=0.05))
+    try:
+        b = srv.submit("blocker")
+        time.sleep(0.02)
+        doomed = srv.submit("never")
+        time.sleep(0.15)            # its budget burns away in the queue
+        gate.set()
+        assert srv.result(b).ok
+        res = srv.result(doomed)
+        assert not res.ok and "QueryTimeoutError" in res.error
+        assert not ran                      # it never executed
+        assert srv.stats["expired_in_queue"] == 1
+    finally:
+        gate.set()
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# server: results lifecycle
+# ---------------------------------------------------------------------------
+
+def test_result_event_wakes_before_completion_poll(engine):
+    """result() called before completion parks on an Event and returns
+    promptly once the query finishes (no polling interval quantization)."""
+    def quick(engine):
+        time.sleep(0.05)
+        return 42
+
+    srv = QueryServer(engine, {"quick": quick},
+                      ServerConfig(n_workers=1, batch_window_ms=0.0))
+    try:
+        rid = srv.submit("quick")
+        t0 = time.perf_counter()
+        res = srv.result(rid, timeout_s=5.0)
+        waited = time.perf_counter() - t0
+        assert res.ok and res.value == 42
+        assert waited < 1.0
+    finally:
+        srv.close()
+
+
+def test_result_ttl_eviction_counted(engine):
+    def quick(engine):
+        return 1
+
+    srv = QueryServer(engine, {"quick": quick},
+                      ServerConfig(n_workers=1, batch_window_ms=0.0,
+                                   result_ttl_s=0.05))
+    try:
+        rid = srv.submit("quick")
+        deadline = time.monotonic() + 5.0
+        while (srv.stats["evicted_results"] == 0
+               and time.monotonic() < deadline):
+            time.sleep(0.05)      # TTL sweep rides the scheduler heartbeat
+        assert srv.stats["evicted_results"] == 1
+        assert not srv._results and not srv._done_at
+        with pytest.raises(TimeoutError):
+            srv.result(rid, timeout_s=0.05)
+        # completion (not collection) released the tenant slot
+        assert not srv._tenant_inflight
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# perf_flags hygiene
+# ---------------------------------------------------------------------------
+
+def test_perf_flags_warn_on_unknown_name(monkeypatch):
+    from repro import perf_flags
+
+    monkeypatch.setenv("REPRO_OPTS", "pushdwon,batch")
+    perf_flags._checked.discard("pushdwon,batch")
+    with pytest.warns(UserWarning, match="pushdwon"):
+        assert perf_flags.enabled("batch")
+    # warn-once per distinct REPRO_OPTS string
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert not perf_flags.enabled("pushdown")
+
+
+def test_perf_flags_known_names_silent(monkeypatch):
+    from repro import perf_flags
+
+    monkeypatch.setenv("REPRO_OPTS", "batch=5,pushdown")
+    perf_flags._checked.discard("batch=5,pushdown")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert perf_flags.enabled("batch")
+        assert perf_flags.value("batch", 2.0) == 5.0
+        assert perf_flags.enabled("pushdown")
+
+
+def test_batch_flag_sets_server_window(session, monkeypatch):
+    from repro import perf_flags
+
+    monkeypatch.setenv("REPRO_OPTS", "batch=7")
+    perf_flags._checked.add("batch=7")
+    srv = QueryServer(session, config=ServerConfig(n_workers=1))
+    try:
+        assert srv._window_s == pytest.approx(0.007)
+    finally:
+        srv.close()
+    monkeypatch.setenv("REPRO_OPTS", "")
+    srv2 = QueryServer(session, config=ServerConfig(n_workers=1))
+    try:
+        assert srv2._window_s == 0.0
+    finally:
+        srv2.close()

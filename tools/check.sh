@@ -33,6 +33,16 @@ from benchmarks.bench_refresh import run
 run(quick=True)
 PY
 
+echo "== shared-scan serving: batched vs unbatched throughput (quick mode) =="
+# writes the BENCH_serving.json snapshot: query_batch bit-parity vs solo
+# runs, the shared-pass chunk-counter contract (same-parameter riders cost
+# one solo run's chunks), and the closed-loop throughput floor — batched
+# serving >= 2x unbatched at 16 concurrent clients on the same worker pool.
+python - <<'PY'
+from benchmarks.bench_serving import run
+run(quick=True)
+PY
+
 echo "== tier-1 tests (slow SPMD dry-runs deselected) =="
 # test_archs_smoke / test_train_substrate and one misc test fail in this
 # container for environment reasons (installed jax predates APIs the model
