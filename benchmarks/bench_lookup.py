@@ -1,0 +1,160 @@
+"""Point-lookup tier benchmark (DESIGN.md §10): plan-cached fast path vs
+the full engine on the same installed templates.
+
+Closed-loop p50/p99 over a warm cache for three representative templates —
+a green point lookup, a green single-hop neighbor read, and a yellow
+single-hop with an edge predicate + accumulator (pays the single-chunk
+column path) — each measured through ``session.lookup()`` (IDM probe + CSR
+slice, no compile, no staged scan) and through ``session.query()`` (the
+full lex -> parse -> compile -> staged-scan engine).
+
+Every measured pair is asserted **bit-identical** first (vset, alias sets,
+``n_edges_scanned``, accumulator arrays), and the green templates assert
+the ISSUE 7 acceptance floor: fast-path p50 >= ``MIN_SPEEDUP`` x the full
+engine's p50 on a warm cache.  Results snapshot into ``BENCH_lookup.json``
+(override with ``REPRO_BENCH_LOOKUP_SNAPSHOT``).
+
+``run(quick=True)`` is the CI gate mode — small scale, fewer calls.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_store, make_engine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.gsql.session import GraphSession
+
+SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_LOOKUP_SNAPSHOT",
+                               "BENCH_lookup.json")
+
+# the acceptance floor: warm-cache p50 of a green lookup vs the full engine
+MIN_SPEEDUP = 10.0
+
+TEMPLATES = [
+    ("point", "SELECT p FROM Person:p WHERE p.id == $pid", "green"),
+    ("neighbors",
+     "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c WHERE p.id == $pid",
+     "green"),
+    ("filtered_count",
+     "SELECT p FROM Person:p <-(HasCreator:e)- Comment:c "
+     "WHERE p.id == $pid AND e.creationDate > $d ACCUM p.@n += 1",
+     "yellow"),
+]
+
+
+def _setup(sf: float):
+    store = fresh_store(f"lookup_{sf}")
+    generate_ldbc(store, scale_factor=sf, n_files=3, row_group_rows=512)
+    eng = make_engine(store, ldbc_graph_schema())
+    eng.startup()
+    session = GraphSession.for_engine(eng)
+    for name, text, tier in TEMPLATES:
+        iq = session.install(name, text)
+        assert iq.route.tier == tier, (name, iq.route)
+    return store, eng, session
+
+
+def _params(session, name: str, pid: int) -> dict:
+    return {"pid": pid, "d": 20100101} if name == "filtered_count" \
+        else {"pid": pid}
+
+
+def _assert_parity(fast, full, name: str) -> None:
+    assert fast.route == "lookup" and full.route == "full", name
+    np.testing.assert_array_equal(fast.vset.mask, full.vset.mask)
+    assert fast.n_edges_scanned == full.n_edges_scanned, name
+    assert set(fast.accumulators) == set(full.accumulators), name
+    for k in fast.accumulators:
+        np.testing.assert_array_equal(fast.accumulators[k],
+                                      full.accumulators[k])
+    assert set(fast.alias_sets) == set(full.alias_sets), name
+    for k in fast.alias_sets:
+        np.testing.assert_array_equal(fast.alias_sets[k].mask,
+                                      full.alias_sets[k].mask)
+
+
+def _percentiles(lats: list) -> tuple[float, float]:
+    lats = sorted(lats)
+    pick = lambda q: lats[min(len(lats) - 1, int(q * len(lats)))]
+    return pick(0.50), pick(0.99)
+
+
+def lookup_sweep(sf: float = 0.01, n_calls: int = 400,
+                 n_parity: int = 8) -> dict:
+    store, eng, session = _setup(sf)
+    t0 = time.perf_counter()
+    person_ids = eng.topology.idm.raw_ids("Person")
+    pids = person_ids[np.linspace(0, len(person_ids) - 1,
+                                  num=min(32, len(person_ids)),
+                                  dtype=np.int64)]
+    rows = []
+    try:
+        for name, _text, tier in TEMPLATES:
+            # bit-parity first — a fast wrong answer is not a result
+            for pid in pids[:n_parity]:
+                p = _params(session, name, int(pid))
+                _assert_parity(session.lookup(name, **p),
+                               session.query(name, **p), name)
+            # warm everything both paths touch (plan caches, CSR, columns)
+            for pid in pids:
+                p = _params(session, name, int(pid))
+                session.lookup(name, **p)
+                session.query(name, **p)
+            lk, fl = [], []
+            for i in range(n_calls):
+                p = _params(session, name, int(pids[i % len(pids)]))
+                t = time.perf_counter()
+                session.lookup(name, **p)
+                lk.append(time.perf_counter() - t)
+                t = time.perf_counter()
+                session.query(name, **p)
+                fl.append(time.perf_counter() - t)
+            lk50, lk99 = _percentiles(lk)
+            fl50, fl99 = _percentiles(fl)
+            speedup = fl50 / lk50
+            rows.append({
+                "template": name,
+                "tier": tier,
+                "lookup_p50_us": lk50 * 1e6,
+                "lookup_p99_us": lk99 * 1e6,
+                "full_p50_us": fl50 * 1e6,
+                "full_p99_us": fl99 * 1e6,
+                "speedup_p50": speedup,
+                "n_calls": n_calls,
+            })
+            emit(f"lookup_{name}_{tier}", lk50 * 1e6,
+                 f"full_p50={fl50 * 1e6:.1f}us speedup={speedup:.1f}x")
+            if tier == "green":
+                assert speedup >= MIN_SPEEDUP, (
+                    f"{name}: warm-cache fast-path p50 speedup "
+                    f"{speedup:.1f}x below the {MIN_SPEEDUP:.0f}x floor "
+                    f"(lookup {lk50 * 1e6:.1f}us vs full {fl50 * 1e6:.1f}us)")
+    finally:
+        eng.close()
+    return {"sf": sf, "min_speedup": MIN_SPEEDUP,
+            "wall_s": time.perf_counter() - t0, "rows": rows}
+
+
+def _write_snapshot(snap: dict) -> None:
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snap, f, indent=2)
+    emit("lookup_snapshot", 0.0, SNAPSHOT_PATH)
+
+
+def run(sf: float = 0.01, quick: bool = False) -> None:
+    snap = {}
+    if quick:
+        snap["lookup_sweep"] = lookup_sweep(sf=0.004, n_calls=150,
+                                            n_parity=4)
+    else:
+        snap["lookup_sweep"] = lookup_sweep(sf=sf)
+    _write_snapshot(snap)
+
+
+if __name__ == "__main__":
+    run()

@@ -108,9 +108,9 @@ def selectivity_sweep(sf: float = 0.02, row_group_rows: int = 512) -> dict:
              .hop("HasCreator", direction="out",
                   edge_where=gt("creationDate", thr)))
         eng.cache.drop_all()
-        res_off, t_off = timed(q.run, pushdown=False)
+        res_off, t_off = timed(q.run, ExecOptions(pushdown=False))
         eng.cache.drop_all()
-        res_on, t_on = timed(q.run, pushdown=True)
+        res_on, t_on = timed(q.run, ExecOptions(pushdown=True))
         _assert_parity(res_off, res_on)
         row = {
             "keep_frac": keep_frac,
@@ -197,7 +197,7 @@ def pipeline_sweep(
         for _ in range(repeats):
             eng.cache.drop_all()
             store.reset_counters()
-            r, wall = timed(q.run, pipeline=pipelined)
+            r, wall = timed(q.run, ExecOptions(pipeline=pipelined))
             if wall < best:
                 best, res, io_s = wall, r, store.counters["simulated_wait_s"]
         return res, best, io_s

@@ -15,6 +15,16 @@ _LAZY = {
     "connect": ("repro.gsql.session", "connect"),
     "GraphSession": ("repro.gsql.session", "GraphSession"),
     "ExecOptions": ("repro.core.query", "ExecOptions"),
+    # the consolidated typed-error hierarchy (repro/errors.py): everything
+    # the engine raises on purpose derives from ReproError
+    "ReproError": ("repro.errors", "ReproError"),
+    "GSQLError": ("repro.errors", "GSQLError"),
+    "GSQLSyntaxError": ("repro.errors", "GSQLSyntaxError"),
+    "GSQLCompileError": ("repro.errors", "GSQLCompileError"),
+    "QueryTimeoutError": ("repro.errors", "QueryTimeoutError"),
+    "ServerOverloadedError": ("repro.errors", "ServerOverloadedError"),
+    "TenantQuotaExceededError": ("repro.errors", "TenantQuotaExceededError"),
+    "MissingTableError": ("repro.errors", "MissingTableError"),
 }
 
 

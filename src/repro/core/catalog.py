@@ -24,9 +24,9 @@ class SyncReport:
     vertex_changes_detected: bool = False
 
 
-class MissingTableError(RuntimeError):
-    """A schema-mapped table does not exist in the lake — a configuration
-    error, never silently treated as 'no snapshots yet'."""
+# MissingTableError now lives in repro.errors (the consolidated typed-error
+# surface, common ReproError base); re-exported here for one release.
+from repro.errors import MissingTableError  # noqa: F401
 
 
 class GraphCatalog:

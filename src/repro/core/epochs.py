@@ -165,6 +165,12 @@ class GraphEpoch:
         # built (or carried forward) against the pinned edge lists, never
         # against the mutating builder topology
         self.plane = TopologyPlane(self)
+        # armed lookup plans (core/lookup.py), keyed by template name: the
+        # fast path's epoch-bound state lives *on* the epoch, so advance()
+        # invalidates by publishing a new (empty-cached) epoch, and retire
+        # drops the CSR/IDM references along with the plane
+        self.lookup_plans: dict = {}
+        self.lookup_lock = threading.Lock()
 
     # -- the GraphTopology read surface (duck-typed) -------------------------
 
@@ -253,6 +259,8 @@ class EpochManager:
         epoch.retired = True
         epoch._edge_lists = {}
         epoch.plane.invalidate()
+        with epoch.lookup_lock:
+            epoch.lookup_plans.clear()
         self.stats["retired"] += 1
 
     # -- bootstrap ---------------------------------------------------------------

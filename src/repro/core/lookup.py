@@ -1,0 +1,573 @@
+"""The point-lookup serving tier: plan-cached fast path for installed
+point / single-hop templates (DESIGN.md §10).
+
+The full engine pays lex -> parse -> compile -> staged-scan for every
+request, which is the right trade for analytics and exactly the wrong one
+for the dominant production traffic shape — "get this vertex", "get its
+neighbors, maybe filtered, maybe counted".  This module executes those
+shapes directly against what the engine already holds decoded in memory:
+
+- the pinned epoch's per-edge-type CSR (``core/csr.py``) — point adjacency
+  is an array-offset slice, never a scan;
+- the epoch's frozen Vertex IDM — the ``vertex_id -> dense-id`` probe is
+  one binary search;
+- already-decoded cached columns, read through the zone-map-guided
+  single-chunk path of ``core/read_pipeline.py`` on a cache miss (the
+  requested dense ids resolve to exactly the (file, row-group) chunks they
+  live in — nothing else is fetched).
+
+Templates are classified at ``install()`` time (``gsql/compiler.py``):
+
+- **green** — point lookup or single-hop whose predicates all sit on the
+  primary key and whose accumulator (if any) adds a constant: executes
+  with *no lake column access at all* (IDM probe + CSR slice + result
+  buffer);
+- **yellow** — the same shapes needing a column fetch (non-key predicates,
+  column-valued ACCUM): executes through the single-chunk read path, warm
+  cache hits stay sub-millisecond, a miss pays one chunk fetch;
+- **red** — everything else: routed to the existing full engine unchanged.
+
+Green/yellow templates compile once into a :class:`LookupPlan` (pure data,
+no engine references).  Execution *arms* the plan against one pinned epoch
+— resolving the CSR, the IDM and the dense-space sizes — and caches the
+armed form on the epoch itself (``GraphEpoch.lookup_plans``), so the cache
+is invalidated by construction when ``advance()`` publishes a new epoch,
+and lazily when a re-install swaps the plan object.  Results are
+bit-identical to the full engine on the same epoch: same vset, same
+accumulator arrays, same ``n_edges_scanned``, same alias sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core.plan import ColumnBounds, merge_bounds, new_pruning_counters
+from repro.core.query import QueryResult
+from repro.core.types import VSet
+from repro.errors import GSQLCompileError
+
+
+# ---------------------------------------------------------------------------
+# plan (pure data — what install-time classification produces)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamRef:
+    """A ``$name`` placeholder inside a :class:`LookupPlan`, bound per call."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Conjunct:
+    """One pushable WHERE conjunct: ``column op value``.
+
+    ``op`` is one of ``== != > >= < <= in``; for ``in``, ``value`` is a
+    tuple of candidates.  Values (or candidates) may be :class:`ParamRef`.
+    """
+
+    column: str
+    op: str
+    value: object
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumPlan:
+    """The single ``sum`` accumulator a lookup template may carry."""
+
+    name: str
+    target: str                 # "u" (seed side) | "v" (far side)
+    # constant / ParamRef, or a ("e"|"u"|"v", column) reference
+    value: object
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """Install-time traffic-light verdict for one template."""
+
+    tier: str                   # "green" | "yellow" | "red"
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupPlan:
+    """A green/yellow template compiled for the fast path (install-time)."""
+
+    name: str
+    tier: str                   # "green" | "yellow"
+    kind: str                   # "point" | "hop"
+    vertex_type: str            # seed vertex type
+    pk_value: object            # seed primary-key equality (literal/ParamRef)
+    seed_where: tuple = ()      # extra Conjuncts over seed vertex columns
+    edge_type: Optional[str] = None
+    direction: str = "out"      # resolved frontier orientation of the hop
+    target_type: Optional[str] = None
+    edge_where: tuple = ()      # Conjuncts over edge columns
+    target_where: tuple = ()    # Conjuncts over far-side vertex columns
+    accum: Optional[AccumPlan] = None
+    select: int = 0             # vertex position of the result set (0|1)
+    aliases: tuple = ()         # vertex alias per position
+    param_names: frozenset = frozenset()
+
+
+# ---------------------------------------------------------------------------
+# binding + evaluation (mirrors core/query.py Predicate semantics exactly —
+# the fast path must be bit-identical to the staged scan)
+# ---------------------------------------------------------------------------
+
+def _bind(value, params: dict):
+    if isinstance(value, ParamRef):
+        try:
+            return params[value.name]
+        except KeyError:
+            raise GSQLCompileError(f"unbound parameter ${value.name}") from None
+    return value
+
+
+_NUMPY_CMP = {
+    "==": np.equal, "!=": np.not_equal, ">": np.greater,
+    ">=": np.greater_equal, "<": np.less, "<=": np.less_equal,
+}
+
+
+def _eval_conjunct(col: np.ndarray, op: str, value) -> np.ndarray:
+    if op == "in":
+        values = set(value)
+        test = np.asarray(sorted(values, key=repr))
+        if col.dtype != object and test.dtype.kind in "biuf":
+            return np.isin(col, test)
+        return np.asarray([x in values for x in col.tolist()], dtype=bool)
+    fn = _NUMPY_CMP[op]
+    if col.dtype == object:
+        col = np.asarray([str(x) for x in col])
+        return fn(col, str(value))
+    return fn(col, value)
+
+
+def _conjunct_bounds(op: str, value) -> Optional[ColumnBounds]:
+    if op == "==":
+        return ColumnBounds(values=frozenset([value]))
+    if op == "in":
+        return ColumnBounds(values=frozenset(value))
+    if op == ">":
+        return ColumnBounds(lo=value, lo_strict=True)
+    if op == ">=":
+        return ColumnBounds(lo=value)
+    if op == "<":
+        return ColumnBounds(hi=value, hi_strict=True)
+    if op == "<=":
+        return ColumnBounds(hi=value)
+    return None                  # "!=" degrades to no-prune, like ne()
+
+
+def _bind_conjuncts(conjuncts: tuple, params: dict) -> list:
+    """(column, op, bound value) triples with parameters substituted."""
+    out = []
+    for c in conjuncts:
+        if c.op == "in":
+            value = tuple(_bind(v, params) for v in c.value)
+        else:
+            value = _bind(c.value, params)
+        out.append((c.column, c.op, value))
+    return out
+
+
+def _bounds_map(bound_conjuncts: list) -> dict:
+    """Per-column zone-map bounds of a conjunction (AND = intersect)."""
+    out: dict = {}
+    for column, op, value in bound_conjuncts:
+        b = _conjunct_bounds(op, value)
+        if b is not None:
+            out = merge_bounds(out, {column: b})
+    return out
+
+
+def _apply_conjuncts(columns: dict, reject: np.ndarray,
+                     bound_conjuncts: list) -> np.ndarray:
+    """Survivor mask: zone-map-rejected rows definitively fail; the rest
+    evaluate against the fetched values (same protocol as the staged scan)."""
+    mask = ~np.asarray(reject, dtype=bool)
+    for column, op, value in bound_conjuncts:
+        mask &= _eval_conjunct(columns[column], op, value)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# arming — plan + epoch -> directly executable state, cached on the epoch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ArmedLookup:
+    """A LookupPlan resolved against one pinned epoch."""
+
+    plan: LookupPlan
+    idm: object                      # the IDM matching the epoch's registry
+    csr: object                      # CSRIndex (hop plans) | None (point)
+    n_seed: int                      # seed type's dense-space size
+    n_target: int                    # far side's dense-space size (hop) | 0
+    # the probe table: sorted raw pk values and their dense ids under THIS
+    # epoch's file registry (-1 = the raw id's file is not pinned here).
+    # Precomputed once at arm time so a probe is a single binary search —
+    # the per-call LUT rebuild of ``tid_to_dense_for`` is the difference
+    # between ~5us and ~50us per lookup.
+    probe_raw: np.ndarray = None
+    probe_dense: np.ndarray = None
+
+
+def _resolve_idm(engine, epoch, vertex_type: str):
+    """The IDM whose file-id assignments match the epoch — the same
+    resolution ``engine.vset_from_raw_ids`` uses."""
+    idm = getattr(epoch, "idm", None) if epoch is not None else None
+    if idm is None or idm.n_mapped(vertex_type) == 0:
+        topo = engine.topology
+        if topo.idm is None or topo.idm.n_mapped(vertex_type) == 0:
+            topo._rebuild_idm(engine.store)
+        idm = topo.idm
+    return idm
+
+
+def arm_lookup(engine, plan: LookupPlan, epoch) -> ArmedLookup:
+    """Resolve (and cache) a plan's epoch-bound execution state.
+
+    The armed form lives on the epoch itself (``epoch.lookup_plans``), so
+    ``advance()`` invalidates it by publishing a fresh epoch, and a
+    re-install invalidates it lazily — a cached entry is only reused when
+    it was armed from the *same* plan object."""
+    cache = getattr(epoch, "lookup_plans", None)
+    lock = getattr(epoch, "lookup_lock", None)
+    if cache is not None:
+        with lock:
+            entry = cache.get(plan.name)
+        if entry is not None and entry.plan is plan:
+            return entry
+    topo = epoch if epoch is not None else engine.topology
+    csr = None
+    n_target = 0
+    if plan.kind == "hop":
+        plane = topo.plane
+        csr = plane.csr(plan.edge_type)           # built once, then cached
+        n_target = topo.n_vertices(plan.target_type)
+    idm = _resolve_idm(engine, epoch, plan.vertex_type)
+    probe_raw, probe_dense = _build_probe_table(idm, topo, plan.vertex_type)
+    armed = ArmedLookup(
+        plan=plan,
+        idm=idm,
+        csr=csr,
+        n_seed=topo.n_vertices(plan.vertex_type),
+        n_target=n_target,
+        probe_raw=probe_raw,
+        probe_dense=probe_dense,
+    )
+    if cache is not None:
+        with lock:
+            cache[plan.name] = armed
+    return armed
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def _build_probe_table(idm, topo, vertex_type: str):
+    """Sorted ``(raw pk, dense id)`` arrays for one epoch's registry.
+
+    Raw ids whose file is not pinned by this epoch (the shared IDM was
+    extended by a later incremental advance) map to -1: unknown here,
+    exactly like the full engine seeding through this epoch's own files."""
+    from repro.core.types import split_transformed
+
+    if idm.n_mapped(vertex_type) == 0:
+        e = np.empty(0, dtype=np.int64)
+        return e, e
+    raw = idm.raw_ids(vertex_type)                # sorted ascending (a copy)
+    file_ids, rows = split_transformed(idm.translate(vertex_type, raw))
+    max_fid = int(file_ids.max()) if len(file_ids) else 0
+    lut = np.full(max_fid + 1, -1, dtype=np.int64)
+    for f in topo.vertex_info[vertex_type].files:
+        if f.file_id <= max_fid:
+            lut[f.file_id] = f.dense_offset
+    offs = lut[np.minimum(file_ids, max_fid)]
+    dense = np.where(offs >= 0, offs + rows, -1)
+    return raw, dense.astype(np.int64)
+
+
+def _probe(armed: ArmedLookup, pk) -> Optional[int]:
+    """``vertex_id -> dense-id`` probe — one binary search over the armed
+    table; None when the id is unknown to this epoch (the full engine's
+    seed filter matches nothing either)."""
+    try:
+        pk = int(pk)
+    except (TypeError, ValueError, OverflowError):
+        return None
+    raw = armed.probe_raw
+    pos = int(raw.searchsorted(pk))
+    if pos >= len(raw) or int(raw[pos]) != pk:
+        return None
+    dense = int(armed.probe_dense[pos])
+    return dense if dense >= 0 else None
+
+
+def execute_lookup(engine, plan: LookupPlan, params: Optional[dict] = None,
+                   epoch=None) -> QueryResult:
+    """Run one green/yellow template through the fast path.
+
+    Pins one epoch for the whole lookup (pass ``epoch`` to time-travel onto
+    an explicitly acquired one), arms the plan against it, and produces a
+    :class:`~repro.core.query.QueryResult` bit-identical to
+    ``session.query()`` on the same epoch — stamped ``route="lookup"`` and
+    the plan's tier.
+    """
+    params = params or {}
+    unknown = set(params) - set(plan.param_names)
+    if unknown:
+        raise GSQLCompileError(
+            f"unknown parameter(s): {', '.join('$' + p for p in sorted(unknown))}")
+    mgr = getattr(engine, "epochs", None)
+    acquired = None
+    if epoch is None and mgr is not None:
+        epoch = acquired = mgr.acquire()
+    try:
+        return _execute_pinned(engine, plan, params, epoch)
+    finally:
+        if acquired is not None:
+            mgr.release(acquired)
+
+
+def _execute_pinned(engine, plan: LookupPlan, params: dict, epoch) -> QueryResult:
+    from repro.core.primitives import (
+        EdgeFrame,
+        read_edge_columns_pruned,
+        read_vertex_columns_pruned,
+    )
+
+    armed = arm_lookup(engine, plan, epoch)
+    topo = epoch if epoch is not None else engine.topology
+    counters = new_pruning_counters()
+
+    def result(vset, accums, n_scanned, frames, alias_sets):
+        return QueryResult(
+            vset=vset, accumulators=accums, n_edges_scanned=n_scanned,
+            frames=frames, pruning=counters,
+            epoch_id=epoch.epoch_id if epoch is not None else -1,
+            staleness_s=epoch.staleness_s() if epoch is not None else 0.0,
+            alias_sets=alias_sets, route="lookup", tier=plan.tier,
+        )
+
+    accums: dict = {}
+    if plan.accum is not None:
+        n_acc = armed.n_target if plan.accum.target == "v" else armed.n_seed
+        accums[plan.accum.name] = np.zeros(n_acc, dtype=np.float64)
+
+    def empty():
+        # the full engine still runs the hop over an empty frontier when the
+        # seed misses: both aliases land in alias_sets (empty), the frame is
+        # present (empty), accumulator arrays sit at the identity
+        seed_set = VSet.empty(plan.vertex_type, armed.n_seed)
+        alias_sets = {plan.aliases[0]: seed_set} if plan.aliases else {}
+        vset, frames = seed_set, []
+        if plan.kind == "hop":
+            empty_ids = np.empty(0, dtype=np.int64)
+            frames = [EdgeFrame(u=empty_ids, v=empty_ids,
+                                u_type=plan.vertex_type,
+                                v_type=plan.target_type, columns={})]
+            far_set = VSet.empty(plan.target_type, armed.n_target)
+            if len(plan.aliases) > 1 and plan.aliases[1] is not None:
+                alias_sets[plan.aliases[1]] = far_set
+            if plan.select == 1:
+                vset = far_set
+            else:
+                vset = VSet.empty(plan.vertex_type, armed.n_seed)
+        return result(vset, accums, 0, frames, alias_sets)
+
+    # -- seed: IDM probe + (yellow) single-chunk predicate fetch --------------
+    dense = _probe(armed, _bind(plan.pk_value, params))
+    if dense is None:
+        return empty()
+    if plan.seed_where:
+        conj = _bind_conjuncts(plan.seed_where, params)
+        cols, reject = read_vertex_columns_pruned(
+            topo, engine.cache, plan.vertex_type,
+            np.asarray([dense], dtype=np.int64),
+            [c for c, _, _ in conj], bounds=_bounds_map(conj),
+            counters=counters)
+        if not _apply_conjuncts(cols, reject, conj)[0]:
+            return empty()
+
+    seed_set = VSet.from_dense_ids(plan.vertex_type, armed.n_seed, [dense])
+    alias_sets: dict = {}
+    if plan.aliases:
+        alias_sets[plan.aliases[0]] = seed_set
+
+    if plan.kind == "point":
+        return result(seed_set, accums, 0, [], alias_sets)
+
+    # -- hop: CSR adjacency slice + (yellow) edge/far-side predicate fetch ----
+    # single-seed special case of CSRIndex.expand: one contiguous indptr
+    # range, same (u, v, eid) ordering, none of the ragged-gather machinery
+    csr = armed.csr
+    if plan.direction == "out":
+        indptr, far, eids = csr.fwd_indptr, csr.fwd_dst, csr.fwd_eid
+    else:
+        indptr, far, eids = csr.rev_indptr, csr.rev_src, csr.rev_eid
+    lo, hi = int(indptr[dense]), int(indptr[dense + 1])
+    v, eid = far[lo:hi], eids[lo:hi]
+    u = np.full(hi - lo, dense, dtype=np.int64)
+    frame_cols: dict = {}
+    if plan.edge_where or plan.target_where:   # yellow: predicate fetch+filter
+        alive = np.ones(len(v), dtype=bool)
+        if plan.edge_where and len(eid):
+            conj = _bind_conjuncts(plan.edge_where, params)
+            cols, reject = read_edge_columns_pruned(
+                topo, engine.cache, plan.edge_type, eid,
+                [c for c, _, _ in conj], bounds=_bounds_map(conj),
+                counters=counters)
+            alive &= _apply_conjuncts(cols, reject, conj)
+            for c, arr in cols.items():
+                frame_cols[f"e.{c}"] = arr
+        if plan.target_where and alive.any():
+            conj = _bind_conjuncts(plan.target_where, params)
+            cols, reject = read_vertex_columns_pruned(
+                topo, engine.cache, plan.target_type, v,
+                [c for c, _, _ in conj], bounds=_bounds_map(conj),
+                counters=counters)
+            alive &= _apply_conjuncts(cols, reject, conj)
+            for c, arr in cols.items():
+                frame_cols[f"v.{c}"] = arr
+        elif plan.target_where:
+            alive[:] = False
+        u, v, eid = u[alive], v[alive], eid[alive]
+        frame_cols = {k: arr[alive] for k, arr in frame_cols.items()}
+
+    # -- accumulate (late materialization: value columns for survivors only) --
+    if plan.accum is not None:
+        a = plan.accum
+        arr = accums[a.name]
+        tgt_ids = v if a.target == "v" else u
+        if len(tgt_ids):
+            if isinstance(a.value, tuple):
+                pfx, col = a.value
+                key = f"{pfx}.{col}"
+                if key not in frame_cols:
+                    if pfx == "e":
+                        cols, _ = read_edge_columns_pruned(
+                            topo, engine.cache, plan.edge_type, eid, [col],
+                            counters=counters)
+                    else:
+                        vtype = plan.target_type if pfx == "v" else plan.vertex_type
+                        ids = v if pfx == "v" else u
+                        cols, _ = read_vertex_columns_pruned(
+                            topo, engine.cache, vtype, ids, [col],
+                            counters=counters)
+                    frame_cols[key] = cols[col]
+                vals = np.asarray(frame_cols[key], dtype=np.float64)
+            else:
+                vals = float(_bind(a.value, params))
+            np.add.at(arr, tgt_ids, vals)
+
+    u_type, v_type = plan.vertex_type, plan.target_type
+    frame = EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type,
+                      columns=frame_cols)
+    # same masks as frame.v_set()/u_set(), minus the redundant np.unique
+    # (from_dense_ids scatters into a bitmap, so duplicates are free)
+    v_set = VSet.from_dense_ids(v_type, armed.n_target, v)
+    if len(plan.aliases) > 1 and plan.aliases[1] is not None:
+        alias_sets[plan.aliases[1]] = v_set
+
+    if plan.select == 1:
+        vset = v_set
+    else:
+        # seed vertices with at least one surviving edge (matched_set(0))
+        vset = VSet.from_dense_ids(u_type, armed.n_seed, u)
+    return result(vset, accums, len(frame), [frame], alias_sets)
+
+
+# ---------------------------------------------------------------------------
+# the primitive lookup surface (GraphSession.get_vertex / .neighbors and the
+# GNN sampler draw from here — no template required)
+# ---------------------------------------------------------------------------
+
+def point_get(engine, vertex_type: str, vertex_id, columns=(),
+              epoch=None) -> Optional[dict]:
+    """Fetch one vertex by primary key: IDM probe + single-chunk column
+    reads.  Returns ``{"dense_id": ..., <column>: value, ...}`` or ``None``
+    when the id is unknown to the pinned epoch."""
+    from repro.core.primitives import read_vertex_columns_pruned
+
+    mgr = getattr(engine, "epochs", None)
+    acquired = None
+    if epoch is None and mgr is not None:
+        epoch = acquired = mgr.acquire()
+    try:
+        topo = epoch if epoch is not None else engine.topology
+        idm = _resolve_idm(engine, epoch, vertex_type)
+        try:
+            tids = idm.translate(
+                vertex_type, np.asarray([vertex_id], dtype=np.int64),
+                allow_dangling=False)
+        except (KeyError, ValueError, OverflowError, TypeError):
+            return None
+        dense = int(topo.tid_to_dense(vertex_type, tids)[0])
+        out = {"dense_id": dense}
+        if columns:
+            cols, _ = read_vertex_columns_pruned(
+                topo, engine.cache, vertex_type,
+                np.asarray([dense], dtype=np.int64), list(columns))
+            for c in columns:
+                out[c] = cols[c][0] if hasattr(cols[c], "__len__") else cols[c]
+        return out
+    finally:
+        if acquired is not None:
+            mgr.release(acquired)
+
+
+def neighbor_ids(engine, edge_type: str, vertex_id, direction: str = "out",
+                 epoch=None) -> np.ndarray:
+    """Dense ids of one vertex's neighbors — a CSR adjacency slice.
+
+    ``direction="out"`` treats ``vertex_id`` as the edge type's source side
+    and returns destinations; ``"in"`` the reverse.  Unknown ids yield an
+    empty array (parity with an empty seed match)."""
+    mgr = getattr(engine, "epochs", None)
+    acquired = None
+    if epoch is None and mgr is not None:
+        epoch = acquired = mgr.acquire()
+    try:
+        topo = epoch if epoch is not None else engine.topology
+        et = engine.schema.edge_types[edge_type]
+        seed_type = et.src_type if direction == "out" else et.dst_type
+        idm = _resolve_idm(engine, epoch, seed_type)
+        try:
+            tids = idm.translate(
+                seed_type, np.asarray([vertex_id], dtype=np.int64),
+                allow_dangling=False)
+        except (KeyError, ValueError, OverflowError, TypeError):
+            return np.empty(0, dtype=np.int64)
+        dense = int(topo.tid_to_dense(seed_type, tids)[0])
+        return topo.plane.csr(edge_type).neighbors(dense, direction).copy()
+    finally:
+        if acquired is not None:
+            mgr.release(acquired)
+
+
+def csr_adjacency(engine, edge_type: str, direction: str = "out",
+                  epoch=None) -> tuple[np.ndarray, np.ndarray]:
+    """The epoch CSR's ``(indptr, neighbors)`` arrays for one direction —
+    the zero-copy adjacency the GNN sampler draws from (``data/sampler.py``)
+    instead of re-sorting raw topology arrays."""
+    mgr = getattr(engine, "epochs", None)
+    acquired = None
+    if epoch is None and mgr is not None:
+        epoch = acquired = mgr.acquire()
+    try:
+        topo = epoch if epoch is not None else engine.topology
+        csr = topo.plane.csr(edge_type)
+        if direction == "out":
+            return csr.fwd_indptr, csr.fwd_dst
+        return csr.rev_indptr, csr.rev_src
+    finally:
+        if acquired is not None:
+            mgr.release(acquired)

@@ -23,16 +23,9 @@ import time
 from typing import Optional
 
 
-class QueryTimeoutError(TimeoutError):
-    """``ExecOptions.timeout_s`` exceeded.
-
-    Raised at *stage boundaries* — before each E/U/V/ACCUM stage read of a
-    staged ``edge_scan``, before the reads of the legacy path and
-    ``vertex_map``, and between hops/statements in the executor — so a
-    timed-out query stops before issuing its next batch of lake reads
-    rather than mid-decode.  The serving layer reports it as a typed
-    per-request error without killing the worker.
-    """
+# QueryTimeoutError now lives in repro.errors (the consolidated typed-error
+# surface, common ReproError base); re-exported here for one release.
+from repro.errors import QueryTimeoutError  # noqa: F401
 
 
 def check_deadline(deadline: Optional[float]) -> None:

@@ -48,16 +48,14 @@ read/prefetch path; ``ExecOptions(pushdown=False)`` forces the legacy
 full-materialization path (the parity baseline).
 
 **Execution knobs** live in :class:`ExecOptions` (per-session defaults on
-:class:`~repro.gsql.session.GraphSession`, overridable per call).  The old
-per-run ``Query.run(pushdown=..., pipeline=...)`` kwargs remain as
-deprecation shims.
+:class:`~repro.gsql.session.GraphSession`, overridable per call) — the one
+place they travel; ``Query.run`` takes an ``ExecOptions``, nothing else.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Callable, Optional
 
 import numpy as np
@@ -327,6 +325,12 @@ class QueryResult:
     # maps to the filtered seed set, every other alias to the set that
     # reached it (its hop's surviving far side)
     alias_sets: dict = dataclasses.field(default_factory=dict)
+    # which execution path produced this result ("full" engine vs the
+    # plan-cached "lookup" fast path) and the template's traffic-light tier
+    # at install time ("green"/"yellow"/"red", "" = ad-hoc). Observability
+    # stamps only — result contents are bit-identical across routes.
+    route: str = "full"
+    tier: str = ""
 
 
 def plan_hop(hop: "_HopBlock") -> ScanPlan:
@@ -1003,27 +1007,12 @@ class Query:
     # -- execution ----------------------------------------------------------------
 
     def run(self, options: Optional[ExecOptions] = None, *,
-            pushdown: Optional[bool] = None,
-            pipeline: Optional[bool] = None, epoch=None) -> QueryResult:
+            epoch=None) -> QueryResult:
         """Execute the query via :func:`execute_compiled`.
 
-        ``pushdown``/``pipeline`` are deprecation shims — they fold into an
-        :class:`ExecOptions` (the session-owned home of execution knobs);
-        pass ``options`` (or run through a
-        :class:`~repro.gsql.session.GraphSession`) instead.  ``epoch``
-        time-travels onto an explicitly acquired pinned view (the caller
-        owns its release)."""
-        if pushdown is not None or pipeline is not None:
-            warnings.warn(
-                "Query.run(pushdown=..., pipeline=...) is deprecated; pass "
-                "ExecOptions (or set session defaults via repro.connect())",
-                DeprecationWarning, stacklevel=2)
-            base = options or ExecOptions()
-            options = dataclasses.replace(
-                base,
-                pushdown=base.pushdown if pushdown is None else pushdown,
-                pipeline=base.pipeline if pipeline is None else pipeline,
-            )
+        Execution knobs travel in :class:`ExecOptions` (or as session
+        defaults via ``repro.connect()``).  ``epoch`` time-travels onto an
+        explicitly acquired pinned view (the caller owns its release)."""
         return execute_compiled(self.engine, self.compiled(),
                                 options=options, epoch=epoch)
 

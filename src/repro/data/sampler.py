@@ -35,6 +35,24 @@ class NeighborSampler:
         np.cumsum(counts, out=self.indptr[1:])
         self.n_nodes = n_nodes
 
+    @classmethod
+    def from_lookup(cls, session, edge_type: str,
+                    direction: str = "out") -> "NeighborSampler":
+        """Draw adjacency from the engine's lookup service instead of raw
+        edge arrays: the pinned epoch's CSR (``core/lookup.csr_adjacency``)
+        is the same stable-argsort build this constructor would redo, so the
+        sampler adopts its ``(indptr, neighbors)`` arrays zero-copy — and
+        samples identically for the same rng seed."""
+        from repro.core.lookup import csr_adjacency
+
+        engine = session.engine if hasattr(session, "engine") else session
+        indptr, far = csr_adjacency(engine, edge_type, direction=direction)
+        sampler = cls.__new__(cls)
+        sampler.indptr = np.asarray(indptr, dtype=np.int64)
+        sampler.dst_sorted = np.asarray(far, dtype=np.int64)
+        sampler.n_nodes = len(sampler.indptr) - 1
+        return sampler
+
     def _sample_neighbors(self, rng, nodes: np.ndarray, fanout: int):
         """For each node, sample up to `fanout` out-neighbors (vectorized)."""
         starts = self.indptr[nodes]

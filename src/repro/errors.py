@@ -1,0 +1,107 @@
+"""The consolidated typed-error surface of the repro package.
+
+Every error the engine raises on purpose derives from :class:`ReproError`,
+so callers embedding the engine can catch one base instead of hunting
+per-module exception types::
+
+    try:
+        session.query("bi1", tag="Music")
+    except repro.ReproError as e:
+        ...   # any engine-originated failure: GSQL, timeout, serving, catalog
+
+The concrete types keep their historical stdlib bases (``TimeoutError``,
+``RuntimeError``) so pre-consolidation ``except`` clauses continue to match,
+and the old defining modules (``repro.gsql.errors``, ``repro.core.plan``,
+``repro.serving.server``, ``repro.core.catalog``) re-export them for one
+release — import from here going forward.
+
+This module is imported by the lowest layers of the package, so it must
+stay dependency-free: stdlib only, nothing from ``repro.*``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+class ReproError(Exception):
+    """Base of every intentional error the repro engine raises."""
+
+
+# ---------------------------------------------------------------------------
+# GSQL front end (formerly repro/gsql/errors.py)
+# ---------------------------------------------------------------------------
+
+class GSQLError(ReproError):
+    """Base of every GSQL front-end error, carrying a 1-based (line, col)
+    source position when one is known.  Every failure a query text can
+    produce is raised *before* any lake read."""
+
+    def __init__(self, message: str, line: Optional[int] = None,
+                 col: Optional[int] = None):
+        self.line = line
+        self.col = col
+        if line is not None:
+            message = f"{message} (line {line}, col {col})"
+        super().__init__(message)
+
+
+class GSQLSyntaxError(GSQLError):
+    """Malformed query text (lexer/parser)."""
+
+
+class GSQLCompileError(GSQLError):
+    """Well-formed text that fails schema validation or parameter binding."""
+
+
+# ---------------------------------------------------------------------------
+# execution (formerly repro/core/plan.py)
+# ---------------------------------------------------------------------------
+
+class QueryTimeoutError(ReproError, TimeoutError):
+    """``ExecOptions.timeout_s`` exceeded.
+
+    Raised at *stage boundaries* — before each E/U/V/ACCUM stage read of a
+    staged ``edge_scan``, before the reads of the legacy path and
+    ``vertex_map``, and between hops/statements in the executor — so a
+    timed-out query stops before issuing its next batch of lake reads
+    rather than mid-decode.  The serving layer reports it as a typed
+    per-request error without killing the worker.
+    """
+
+
+# ---------------------------------------------------------------------------
+# serving (formerly repro/serving/server.py)
+# ---------------------------------------------------------------------------
+
+class ServerOverloadedError(ReproError, RuntimeError):
+    """The bounded request queue is full — the server sheds the request
+    instead of blocking the submitting client (backpressure surfaces at the
+    edge, where the caller can retry, rather than as hidden queueing)."""
+
+
+class TenantQuotaExceededError(ServerOverloadedError):
+    """The submitting tenant already holds ``tenant_quota`` requests in
+    flight — per-tenant admission control, so one hot tenant sheds onto
+    itself instead of filling the shared queue."""
+
+
+# ---------------------------------------------------------------------------
+# catalog (formerly repro/core/catalog.py)
+# ---------------------------------------------------------------------------
+
+class MissingTableError(ReproError, RuntimeError):
+    """A schema-mapped table does not exist in the lake — a configuration
+    error, never silently treated as 'no snapshots yet'."""
+
+
+__all__ = [
+    "ReproError",
+    "GSQLError",
+    "GSQLSyntaxError",
+    "GSQLCompileError",
+    "QueryTimeoutError",
+    "ServerOverloadedError",
+    "TenantQuotaExceededError",
+    "MissingTableError",
+]

@@ -408,6 +408,136 @@ def _compile_post(pb: ir.PostAccumIR, scope: _Scope, catalog: Catalog,
 
 
 # ---------------------------------------------------------------------------
+# traffic-light route classification (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def compile_lookup(lq: ir.LogicalQuery, catalog: Catalog, name: str):
+    """Install-time traffic-light classification of one validated template.
+
+    Returns ``(RouteDecision, Optional[LookupPlan])``: a plan for the
+    **green**/**yellow** tiers (point lookup or single hop, executable by
+    ``core/lookup.py`` against the pinned epoch's CSR + IDM), ``None`` for
+    **red** (the full engine).  Callers run :func:`validate_query` first —
+    this sees only well-formed queries, so every red verdict is a *shape*
+    decision, never an error path.
+    """
+    from repro.core.lookup import (
+        AccumPlan, Conjunct, LookupPlan, ParamRef, RouteDecision,
+    )
+
+    def red(reason: str):
+        return RouteDecision(tier="red", reason=reason), None
+
+    if len(lq.statements) != 1:
+        return red("multi-statement queries run the full engine")
+    st = lq.statements[0]
+    if st.post:
+        return red("POST-ACCUM blocks run the full engine")
+    if len(st.hops) > 1:
+        return red("multi-hop patterns run the full engine")
+
+    scope = _Scope(catalog)
+    for v_pat in st.vertices:
+        scope.add_vertex(v_pat)
+    direction = "out"
+    if st.hops:
+        scope.add_edge(st.hops[0])
+        direction = _resolve_direction(
+            st.hops[0], scope.vtypes[0], scope.vtypes[1], catalog)
+
+    def lower(value):
+        return ParamRef(value.name) if isinstance(value, ir.Param) else value
+
+    seed_vtype = scope.vtypes[0]
+    pk_col = catalog.schema.vertex_types[seed_vtype].primary_key
+    pk_value = None
+    seed_where: list = []
+    edge_where: list = []
+    target_where: list = []
+    for cond in st.where:
+        if isinstance(cond, ir.OrCond):
+            return red("OR conditions run the full engine")
+        ref = _cond_alias(cond)
+        if ref.is_accum:
+            return red("accumulator-state predicates run the full engine")
+        if isinstance(cond, ir.Cmp):
+            if isinstance(cond.value, ir.ColRef):
+                return red("column-to-column comparisons run the full engine")
+            # the seed's primary-key equality IS the lookup: it becomes the
+            # IDM probe (the IDM is built from the pk column, so the probe
+            # and the pk-column filter select the same dense id)
+            if (pk_value is None and cond.op == "=="
+                    and scope.vertex.get(ref.alias) == 0
+                    and ref.column == pk_col):
+                pk_value = lower(cond.value)
+                continue
+            conj = Conjunct(column=ref.column, op=cond.op,
+                            value=lower(cond.value))
+        elif isinstance(cond, ir.InSet):
+            conj = Conjunct(column=ref.column, op="in",
+                            value=tuple(lower(v) for v in cond.values))
+        else:
+            return red("unsupported condition shape runs the full engine")
+        if ref.alias in scope.edge:
+            edge_where.append(conj)
+        elif scope.vertex.get(ref.alias) == 0:
+            seed_where.append(conj)
+        else:
+            target_where.append(conj)
+    if pk_value is None:
+        return red("no primary-key equality on the seed vertex — not a "
+                   "point shape")
+
+    accum = None
+    if st.accums:
+        if len(st.accums) > 1 or not st.hops:
+            return red("multiple ACCUM updates run the full engine")
+        a = st.accums[0]
+        if a.op != "sum":
+            return red(f"ACCUM op {a.op!r} runs the full engine (fast path "
+                       f"covers sum/count)")
+        value = a.value
+        if isinstance(value, ir.ColRef):
+            if value.alias in scope.edge:
+                value = ("e", value.column)
+            elif scope.vertex.get(value.alias) == 0:
+                value = ("u", value.column)
+            else:
+                value = ("v", value.column)
+        else:
+            value = lower(value)
+        accum = AccumPlan(
+            name=a.target.column,
+            target="u" if scope.vertex[a.target.alias] == 0 else "v",
+            value=value,
+        )
+
+    needs_columns = bool(seed_where or edge_where or target_where) or (
+        accum is not None and isinstance(accum.value, tuple))
+    tier = "yellow" if needs_columns else "green"
+    reason = ("single-chunk column fetch on the fast path" if needs_columns
+              else "IDM probe + CSR slice, no lake column access")
+    plan = LookupPlan(
+        name=name,
+        tier=tier,
+        kind="hop" if st.hops else "point",
+        vertex_type=seed_vtype,
+        pk_value=pk_value,
+        seed_where=tuple(seed_where),
+        edge_type=st.hops[0].edge_type if st.hops else None,
+        direction=direction,
+        target_type=scope.vtypes[1] if st.hops else None,
+        edge_where=tuple(edge_where),
+        target_where=tuple(target_where),
+        accum=accum,
+        select=scope.vertex[st.select_alias],
+        aliases=tuple(v.alias for v in st.vertices),
+        param_names=frozenset(lq.param_names()),
+    )
+    return RouteDecision(tier=tier, reason=reason), plan
+
+
+# ---------------------------------------------------------------------------
 # explain
 # ---------------------------------------------------------------------------
 

@@ -1,32 +1,12 @@
-"""GSQL error types, all carrying a 1-based (line, col) source position.
+"""GSQL error types — re-exported from :mod:`repro.errors`.
 
-Every failure a query text can produce is raised *before* any lake read:
-lexing/parsing problems as :class:`GSQLSyntaxError`, schema or
-parameter-binding problems as :class:`GSQLCompileError`.  Both render the
-position in their message so callers (and tests) can point at the offending
-token.
+The typed error surface was consolidated under a common
+:class:`~repro.errors.ReproError` base; this module remains as an import
+shim for one release.  Import from ``repro.errors`` going forward.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from repro.errors import GSQLCompileError, GSQLError, GSQLSyntaxError
 
-
-class GSQLError(Exception):
-    """Base of every GSQL front-end error."""
-
-    def __init__(self, message: str, line: Optional[int] = None,
-                 col: Optional[int] = None):
-        self.line = line
-        self.col = col
-        if line is not None:
-            message = f"{message} (line {line}, col {col})"
-        super().__init__(message)
-
-
-class GSQLSyntaxError(GSQLError):
-    """Malformed query text (lexer/parser)."""
-
-
-class GSQLCompileError(GSQLError):
-    """Well-formed text that fails schema validation or parameter binding."""
+__all__ = ["GSQLError", "GSQLSyntaxError", "GSQLCompileError"]

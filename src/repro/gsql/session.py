@@ -28,6 +28,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.lookup import (
+    LookupPlan,
+    RouteDecision,
+    execute_lookup,
+    neighbor_ids,
+    point_get,
+)
 from repro.core.query import (
     CompiledQuery,
     ExecOptions,
@@ -36,18 +43,31 @@ from repro.core.query import (
     execute_compiled_batch,
 )
 from repro.gsql import ir
-from repro.gsql.compiler import Catalog, compile_query, explain_compiled, validate_query
+from repro.gsql.compiler import (
+    Catalog,
+    compile_lookup,
+    compile_query,
+    explain_compiled,
+    validate_query,
+)
 from repro.gsql.parser import parse
 
 
 @dataclasses.dataclass
 class InstalledQuery:
-    """A named, parse-time-validated GSQL query."""
+    """A named, parse-time-validated GSQL query.
+
+    ``route`` is the install-time traffic-light verdict (DESIGN.md §10):
+    green/yellow templates carry a ``lookup_plan`` and serve through the
+    plan-cached fast path of :mod:`repro.core.lookup`; red templates run the
+    full engine."""
 
     name: str
     text: str
     query_ir: ir.LogicalQuery
     param_names: frozenset
+    route: Optional[RouteDecision] = None
+    lookup_plan: Optional[LookupPlan] = None
 
 
 class GraphSession:
@@ -101,16 +121,44 @@ class GraphSession:
 
         Validation covers everything except parameter values (those bind per
         ``query()`` call), so a bad installed query fails here — at install
-        time — never while serving."""
+        time — never while serving.  Install also *classifies* the template
+        (green/yellow/red, DESIGN.md §10) and compiles the fast-path
+        :class:`~repro.core.lookup.LookupPlan` for the green/yellow tiers.
+
+        Idempotent on identical text: re-installing the same name with the
+        same query returns the existing registration (armed plan caches stay
+        warm).  Different text replaces the registration and invalidates the
+        current epoch's armed plan — the new plan object never matches the
+        cached entry's identity, and we also drop the stale entry eagerly."""
+        existing = self._installed.get(name)
+        if existing is not None and existing.text == text:
+            return existing
         query_ir = parse(text)
         param_names = frozenset(validate_query(query_ir, self.catalog()))
+        route, plan = compile_lookup(query_ir, self.catalog(), name)
         iq = InstalledQuery(name=name, text=text, query_ir=query_ir,
-                           param_names=param_names)
+                           param_names=param_names, route=route,
+                           lookup_plan=plan)
         self._installed[name] = iq
+        if existing is not None:
+            self._drop_armed(name)
         return iq
+
+    def _drop_armed(self, name: str) -> None:
+        """Evict ``name``'s armed plan from the current epoch (re-install)."""
+        mgr = getattr(self.engine, "epochs", None)
+        epoch = mgr.current() if mgr is not None else None
+        if epoch is not None and getattr(epoch, "lookup_plans", None) is not None:
+            with epoch.lookup_lock:
+                epoch.lookup_plans.pop(name, None)
 
     def installed_queries(self) -> dict[str, InstalledQuery]:
         return dict(self._installed)
+
+    def installed(self, name: str) -> Optional[InstalledQuery]:
+        """The registration for ``name``, or ``None`` (no copy — the serving
+        layer consults this per request to route lookups)."""
+        return self._installed.get(name)
 
     def is_installed(self, name: str) -> bool:
         return name in self._installed
@@ -140,9 +188,76 @@ class GraphSession:
         queries.  ``options`` overrides the session defaults for this call
         only."""
         compiled = self._compile(text_or_name, params)
-        return execute_compiled(self.engine, compiled,
-                                options=options or self.options, epoch=epoch,
-                                private_accums=True)
+        res = execute_compiled(self.engine, compiled,
+                               options=options or self.options, epoch=epoch,
+                               private_accums=True)
+        iq = self._installed.get(text_or_name)
+        if iq is not None and iq.route is not None:
+            res.tier = iq.route.tier    # route stays "full" — this IS the engine
+        return res
+
+    # -- the point-lookup tier (DESIGN.md §10) ----------------------------------
+
+    def route_of(self, name: str) -> RouteDecision:
+        """The install-time traffic-light verdict for an installed name."""
+        return self._installed[name].route
+
+    def lookup(self, name: str, options: Optional[ExecOptions] = None,
+               epoch=None, **params) -> QueryResult:
+        """Execute an installed template through the serving fast path.
+
+        Green/yellow templates bypass the compiler and the staged scan
+        entirely — IDM probe + CSR slice (+ single-chunk column fetch for
+        yellow) against one pinned epoch — and return a
+        :class:`~repro.core.query.QueryResult` bit-identical to ``query()``
+        on the same epoch, stamped ``route="lookup"``.  Red templates fall
+        through to the full engine (``route="full"``), so callers can use
+        ``lookup()`` unconditionally."""
+        iq = self._installed.get(name)
+        if iq is None:
+            raise KeyError(f"no installed query named {name!r}")
+        if iq.lookup_plan is None:
+            return self.query(name, options=options, epoch=epoch, **params)
+        return execute_lookup(self.engine, iq.lookup_plan, params, epoch=epoch)
+
+    def get_vertex(self, vertex_type: str, vertex_id, columns=(),
+                   epoch=None) -> Optional[dict]:
+        """Point-read one vertex by primary key: IDM probe + (optionally)
+        single-chunk column reads.  ``None`` when the id is unknown to the
+        pinned epoch."""
+        return point_get(self.engine, vertex_type, vertex_id,
+                         columns=columns, epoch=epoch)
+
+    def neighbors(self, edge_type: str, vertex_id, direction: str = "out",
+                  ids: str = "raw", epoch=None):
+        """One vertex's neighbors over ``edge_type`` — a CSR adjacency slice
+        against the pinned epoch, no scan, no compile.
+
+        ``ids="raw"`` (default) returns primary-key ids (one single-chunk
+        pk-column fetch); ``ids="dense"`` returns the engine's dense ids for
+        free.  Unknown seed ids return an empty array."""
+        mgr = getattr(self.engine, "epochs", None)
+        acquired = None
+        if epoch is None and mgr is not None:
+            # one pin covers the slice and the pk fetch — they must not
+            # straddle an advance()
+            epoch = acquired = mgr.acquire()
+        try:
+            dense = neighbor_ids(self.engine, edge_type, vertex_id,
+                                 direction=direction, epoch=epoch)
+            if ids == "dense" or not len(dense):
+                return dense
+            from repro.core.primitives import read_vertex_values
+
+            et = self.engine.schema.edge_types[edge_type]
+            far_type = et.dst_type if direction == "out" else et.src_type
+            pk = self.engine.schema.vertex_types[far_type].primary_key
+            topo = epoch if epoch is not None else self.engine.topology
+            return read_vertex_values(topo, self.engine.cache, far_type,
+                                      dense, pk)
+        finally:
+            if acquired is not None:
+                mgr.release(acquired)
 
     def query_batch(self, text_or_name: str, params_list: list,
                     options: Optional[ExecOptions] = None,

@@ -20,6 +20,15 @@ epoch.  The window comes from ``ServerConfig.batch_window_ms`` or, when
 unset, the ``batch`` perf flag (``batch=<window_ms>``, default 2 ms);
 ``<= 0`` or the flag off restores the per-request path.
 
+**Point-lookup routing (DESIGN.md §10).**  Requests for installed
+green/yellow templates — point lookups and single-hop reads classified at
+``install()`` time — route *around* the batching scheduler: they dispatch
+immediately (never waiting out ``batch_window_ms``) and execute through
+``session.lookup()``'s plan-cached fast path (IDM probe + CSR slice against
+the pinned epoch, no compile, no staged scan).  ``stats["lookup_requests"]``
+/ ``stats["route_green"]`` / ``stats["route_yellow"]`` count them; results
+are bit-identical to the full engine, stamped ``route="lookup"``.
+
 **Priority lanes + tenant quotas.**  Requests carry a ``priority`` lane
 (0 = high, larger = later; batches never mix lanes) and a ``tenant`` label:
 with ``ServerConfig.tenant_quota`` set, a tenant may only hold that many
@@ -75,21 +84,16 @@ import time
 from typing import Callable, Optional
 
 from repro import perf_flags
-from repro.core.plan import QueryTimeoutError
 from repro.core.query import ExecOptions
+# the server's typed errors now live in repro.errors (the consolidated
+# typed-error surface, common ReproError base); re-exported here for one
+# release
+from repro.errors import (  # noqa: F401
+    QueryTimeoutError,
+    ServerOverloadedError,
+    TenantQuotaExceededError,
+)
 from repro.gsql.session import GraphSession
-
-
-class ServerOverloadedError(RuntimeError):
-    """The bounded request queue is full — the server sheds the request
-    instead of blocking the submitting client (backpressure surfaces at the
-    edge, where the caller can retry, rather than as hidden queueing)."""
-
-
-class TenantQuotaExceededError(ServerOverloadedError):
-    """The submitting tenant already holds ``tenant_quota`` requests in
-    flight — per-tenant admission control, so one hot tenant sheds onto
-    itself instead of filling the shared queue."""
 
 
 @dataclasses.dataclass
@@ -170,7 +174,8 @@ class QueryServer:
         self._window_s = max(0.0, float(window)) / 1000.0
         self._q: queue.Queue = queue.Queue(maxsize=self.config.max_queue)
         # scheduler -> workers: ((priority, seq), unit); unit is
-        # ("single", req) | ("batch", [reqs]) | None (worker shutdown)
+        # ("lookup", req) | ("single", req) | ("batch", [reqs]) | None
+        # (worker shutdown)
         self._exec_q: queue.PriorityQueue = queue.PriorityQueue()
         self._seq = 0
         self._results: dict[int, QueryResult] = {}
@@ -188,6 +193,9 @@ class QueryServer:
             "shed_tenant_quota": 0,  # TenantQuotaExceededError
             "expired_in_queue": 0,   # total budget gone before dispatch
             "evicted_results": 0,    # TTL-evicted uncollected results
+            "lookup_requests": 0,    # served by the point-lookup fast path
+            "route_green": 0,        # ... of which needed no lake columns
+            "route_yellow": 0,       # ... of which paid a column fetch path
         }
         self._scheduler = threading.Thread(target=self._schedule, daemon=True)
         self._scheduler.start()
@@ -309,6 +317,16 @@ class QueryServer:
 
     # -- scheduler ----------------------------------------------------------------
 
+    def _lookup_fast(self, req: _Request) -> bool:
+        """True when the request serves through the point-lookup tier
+        (DESIGN.md §10): an installed green/yellow template.  Lookups route
+        *around* the batching scheduler — a sub-millisecond point read must
+        never wait out ``batch_window_ms`` behind a scan it doesn't need."""
+        if req.name in self.query_fns:
+            return False
+        iq = self.session.installed(req.name)
+        return iq is not None and iq.lookup_plan is not None
+
     def _batchable(self, req: _Request) -> bool:
         return (self._window_s > 0
                 and req.name not in self.query_fns
@@ -350,7 +368,9 @@ class QueryServer:
             if req is None:
                 closing = True
             elif req is not False:
-                if self._batchable(req):
+                if self._lookup_fast(req):
+                    self._dispatch(req.priority, ("lookup", req))
+                elif self._batchable(req):
                     key = (req.name, req.priority)
                     bucket = buckets.setdefault(key, [])
                     if not bucket:
@@ -473,6 +493,25 @@ class QueryServer:
             self.stats["solo_requests"] += 1
         self._complete(req, ok, value, err, t_start, time.perf_counter())
 
+    def _run_lookup(self, req: _Request) -> None:
+        """One point-lookup request: session fast path, no compile, no
+        batch window, same completion/accounting protocol as solo."""
+        t_start = time.perf_counter()
+        live, _ = self._split_expired([req], t_start)
+        if not live:
+            return
+        try:
+            value = self.session.lookup(
+                req.name, options=self._options_for([req]), **req.params)
+            ok, err = True, None
+        except Exception as e:  # report (typed), don't kill the worker
+            value, ok, err = None, False, f"{type(e).__name__}: {e}"
+        with self._lock:
+            self.stats["lookup_requests"] += 1
+            if ok and value is not None and value.tier in ("green", "yellow"):
+                self.stats[f"route_{value.tier}"] += 1
+        self._complete(req, ok, value, err, t_start, time.perf_counter())
+
     def _run_shared(self, reqs: list[_Request]) -> None:
         """One shared-scan pass for a group of same-template riders."""
         t_start = time.perf_counter()
@@ -502,7 +541,9 @@ class QueryServer:
             if unit is None:
                 return
             kind, payload = unit
-            if kind == "single":
+            if kind == "lookup":
+                self._run_lookup(payload)
+            elif kind == "single":
                 self._run_single(payload)
             elif len(payload) == 1:   # one-rider bucket: the solo path
                 self._run_single(payload[0])

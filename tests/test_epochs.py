@@ -9,7 +9,7 @@ import pytest
 
 from repro.core.csr import CSRIndex
 from repro.core.engine import GraphLakeEngine
-from repro.core.query import Predicate, Query, eq, gt
+from repro.core.query import ExecOptions, Predicate, Query, eq, gt
 from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
 from repro.lakehouse.objectstore import ObjectStore, StoreConfig
 from repro.lakehouse.table import LakeCatalog
@@ -104,7 +104,7 @@ def test_commit_mid_query_yields_pre_commit_results(store, ldbc, engine):
 
     # a pass-through predicate for the *reference* run
     mid_hop_pred = Predicate(lambda fr, p: np.ones(len(fr["u"]), dtype=bool), ())
-    res_ref = build_query().run(pushdown=False)
+    res_ref = build_query().run(ExecOptions(pushdown=False))
 
     # now a side-effecting predicate: the first evaluation (mid-query,
     # between hop 1 and hop 2) commits new Comment vertices + HasCreator
@@ -120,7 +120,7 @@ def test_commit_mid_query_yields_pre_commit_results(store, ldbc, engine):
         return np.ones(len(frame["u"]), dtype=bool)
 
     mid_hop_pred = Predicate(commit_midway, ())
-    res_torn = build_query().run(pushdown=False)
+    res_torn = build_query().run(ExecOptions(pushdown=False))
     assert fired["done"], "the mid-query commit hook never fired"
 
     # bit-identical to the pre-commit epoch, and pinned to it
@@ -129,7 +129,7 @@ def test_commit_mid_query_yields_pre_commit_results(store, ldbc, engine):
 
     # the *next* run picks up the already-published epoch and sees new data
     mid_hop_pred = Predicate(lambda fr, p: np.ones(len(fr["u"]), dtype=bool), ())
-    res_fresh = build_query().run(pushdown=False)
+    res_fresh = build_query().run(ExecOptions(pushdown=False))
     assert res_fresh.epoch_id > res_torn.epoch_id
     count = Query(engine).vertices("Comment").hop("HasCreator").run()
     assert count.n_edges_scanned == ldbc.n_comments + 25

@@ -1,0 +1,69 @@
+"""Tests: the consolidated typed-error surface (``repro/errors.py``) —
+every intentional engine error derives from ``ReproError``, stdlib bases
+survive for old ``except`` clauses, and the pre-consolidation import
+locations keep re-exporting the same classes."""
+
+import pytest
+
+import repro
+from repro.errors import (
+    GSQLCompileError,
+    GSQLError,
+    GSQLSyntaxError,
+    MissingTableError,
+    QueryTimeoutError,
+    ReproError,
+    ServerOverloadedError,
+    TenantQuotaExceededError,
+)
+
+
+def test_everything_derives_from_repro_error():
+    for exc in (GSQLError, GSQLSyntaxError, GSQLCompileError,
+                QueryTimeoutError, ServerOverloadedError,
+                TenantQuotaExceededError, MissingTableError):
+        assert issubclass(exc, ReproError), exc
+
+
+def test_stdlib_bases_survive_for_old_except_clauses():
+    assert issubclass(QueryTimeoutError, TimeoutError)
+    assert issubclass(ServerOverloadedError, RuntimeError)
+    assert issubclass(TenantQuotaExceededError, ServerOverloadedError)
+    assert issubclass(MissingTableError, RuntimeError)
+    assert issubclass(GSQLSyntaxError, GSQLError)
+    assert issubclass(GSQLCompileError, GSQLError)
+
+
+def test_gsql_error_position_rendering():
+    assert "line 3, col 7" in str(GSQLSyntaxError("bad token", 3, 7))
+    assert str(GSQLCompileError("no such column")) == "no such column"
+
+
+def test_old_locations_reexport_the_same_classes():
+    from repro.core import catalog, plan
+    from repro.gsql import errors as gsql_errors
+    from repro.serving import server
+
+    assert plan.QueryTimeoutError is QueryTimeoutError
+    assert catalog.MissingTableError is MissingTableError
+    assert server.ServerOverloadedError is ServerOverloadedError
+    assert server.TenantQuotaExceededError is TenantQuotaExceededError
+    assert gsql_errors.GSQLError is GSQLError
+    assert gsql_errors.GSQLSyntaxError is GSQLSyntaxError
+    assert gsql_errors.GSQLCompileError is GSQLCompileError
+
+
+def test_package_level_exports():
+    for name in ("ReproError", "GSQLError", "GSQLSyntaxError",
+                 "GSQLCompileError", "QueryTimeoutError",
+                 "ServerOverloadedError", "TenantQuotaExceededError",
+                 "MissingTableError"):
+        assert getattr(repro, name) is getattr(
+            __import__("repro.errors", fromlist=[name]), name)
+
+
+def test_one_except_catches_the_engine():
+    with pytest.raises(ReproError):
+        raise TenantQuotaExceededError("quota")
+    with pytest.raises(ReproError):
+        raise GSQLSyntaxError("parse", 1, 1)

@@ -317,13 +317,17 @@ def test_builder_timeout_via_options(session):
         q.run(options=ExecOptions(timeout_s=0.0))
 
 
-def test_run_kwargs_deprecation_shim(session):
+def test_run_kwargs_shims_retired(session):
+    """The deprecated ``run(pushdown=..., pipeline=...)`` kwargs are gone:
+    execution knobs travel in ExecOptions only."""
     q = Query(session.engine).vertices("Comment").hop(
         "HasCreator", edge_where=gt("creationDate", 20150101))
-    with pytest.warns(DeprecationWarning):
-        legacy = q.run(pushdown=False)
-    modern = q.run(options=ExecOptions(pushdown=False))
-    np.testing.assert_array_equal(legacy.vset.ids(), modern.vset.ids())
+    with pytest.raises(TypeError):
+        q.run(pushdown=False)
+    with pytest.raises(TypeError):
+        q.run(pipeline=True)
+    res = q.run(options=ExecOptions(pushdown=False))
+    assert res.route == "full"
 
 
 # ---------------------------------------------------------------------------

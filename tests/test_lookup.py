@@ -1,0 +1,386 @@
+"""Tests: the point-lookup serving tier (DESIGN.md §10) — traffic-light
+route classification at install time, fast-path vs full-engine bit-parity
+(vset / accumulators / n_edges_scanned / alias sets / result stamps),
+parity and plan-cache invalidation across advance(), concurrent lookups
+during an epoch swap, install idempotence, server routing around the batch
+window, and the sampler drawing adjacency from the lookup service."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.engine import GraphLakeEngine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.data.sampler import NeighborSampler
+from repro.gsql.errors import GSQLCompileError
+from repro.gsql.session import GraphSession
+from repro.lakehouse.table import LakeCatalog
+from repro.serving.server import QueryServer, ServerConfig
+
+
+@pytest.fixture
+def store(tmp_path):
+    from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+
+    return ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+
+
+@pytest.fixture
+def ldbc(store):
+    return generate_ldbc(store, scale_factor=0.004, n_files=2,
+                         row_group_rows=256)
+
+
+@pytest.fixture
+def session(store, ldbc):
+    eng = GraphLakeEngine(store, ldbc.schema, materialize_topology=False)
+    eng.startup()
+    s = GraphSession(eng)
+    yield s
+    eng.close()
+
+
+def _person(session, i=0):
+    return int(session.engine.topology.idm.raw_ids("Person")[i])
+
+
+def _assert_result_parity(fast, full):
+    """The fast path must be bit-identical to the full engine on the same
+    epoch (pruning counters legitimately differ — green never reads)."""
+    np.testing.assert_array_equal(fast.vset.mask, full.vset.mask)
+    assert fast.vset.vertex_type == full.vset.vertex_type
+    assert fast.n_edges_scanned == full.n_edges_scanned
+    assert set(fast.accumulators) == set(full.accumulators)
+    for k in fast.accumulators:
+        np.testing.assert_array_equal(fast.accumulators[k],
+                                      full.accumulators[k])
+    assert set(fast.alias_sets) == set(full.alias_sets)
+    for k in fast.alias_sets:
+        np.testing.assert_array_equal(fast.alias_sets[k].mask,
+                                      full.alias_sets[k].mask)
+
+
+# ---------------------------------------------------------------------------
+# route classification (the traffic-light table)
+# ---------------------------------------------------------------------------
+
+CLASSIFICATION_TABLE = [
+    # (gsql, expected tier)
+    ("SELECT p FROM Person:p WHERE p.id == $pid", "green"),
+    ("SELECT c FROM Person:p <-(HasCreator:e)- Comment:c WHERE p.id == $pid",
+     "green"),
+    ("SELECT p FROM Person:p <-(HasCreator:e)- Comment:c WHERE p.id == $pid "
+     "ACCUM p.@deg += 1", "green"),
+    # non-key predicates / column-valued ACCUM need a column fetch: yellow
+    ("SELECT p FROM Person:p WHERE p.id == $pid AND p.gender == \"Female\"",
+     "yellow"),
+    ("SELECT c FROM Person:p <-(HasCreator:e)- Comment:c WHERE p.id == $pid "
+     "AND e.creationDate > $d", "yellow"),
+    ("SELECT c FROM Person:p <-(HasCreator:e)- Comment:c WHERE p.id == $pid "
+     "AND c.length >= $L", "yellow"),
+    ("SELECT p FROM Person:p <-(HasCreator:e)- Comment:c WHERE p.id == $pid "
+     "ACCUM p.@len += c.length", "yellow"),
+    # everything else runs the full engine: red
+    ("SELECT p FROM Person:p WHERE p.gender == \"Female\"", "red"),
+    ("SELECT p FROM Tag:t -(HasTag:e1)- Comment:c -(HasCreator:e2)- Person:p "
+     "WHERE t.name == $tag", "red"),
+    ("SELECT p FROM Person:p WHERE p.id == $pid OR p.gender == \"Female\"",
+     "red"),
+]
+
+
+def test_route_classification_table(session):
+    for i, (text, tier) in enumerate(CLASSIFICATION_TABLE):
+        iq = session.install(f"route_case_{i}", text)
+        assert iq.route.tier == tier, (text, iq.route)
+        assert (iq.lookup_plan is not None) == (tier != "red")
+        if iq.lookup_plan is not None:
+            assert iq.lookup_plan.tier == tier
+
+
+# ---------------------------------------------------------------------------
+# fast path vs full engine: bit-parity
+# ---------------------------------------------------------------------------
+
+def test_point_lookup_parity_and_stamps(session):
+    pid = _person(session)
+    session.install("pt", "SELECT p FROM Person:p WHERE p.id == $pid")
+    fast = session.lookup("pt", pid=pid)
+    full = session.query("pt", pid=pid)
+    _assert_result_parity(fast, full)
+    assert fast.vset.size() == 1
+    # route/tier stamps: contents identical, provenance visible
+    assert (fast.route, fast.tier) == ("lookup", "green")
+    assert (full.route, full.tier) == ("full", "green")
+    assert fast.epoch_id == full.epoch_id
+    # green executes with no lake column access at all
+    assert fast.pruning["chunks_read"] == 0
+    assert fast.pruning["rows_decoded"] == 0
+
+
+def test_single_hop_parity(session):
+    pid = _person(session)
+    session.install(
+        "nb", "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c "
+              "WHERE p.id == $pid")
+    fast = session.lookup("nb", pid=pid)
+    full = session.query("nb", pid=pid)
+    _assert_result_parity(fast, full)
+    assert fast.n_edges_scanned > 0
+    assert fast.tier == "green"
+
+
+def test_yellow_hop_accum_parity(session):
+    pid = _person(session)
+    session.install(
+        "cnt", "SELECT p FROM Person:p <-(HasCreator:e)- Comment:c "
+               "WHERE p.id == $pid AND e.creationDate > $d "
+               "ACCUM p.@n += 1")
+    fast = session.lookup("cnt", pid=pid, d=20100101)
+    full = session.query("cnt", pid=pid, d=20100101)
+    _assert_result_parity(fast, full)
+    assert fast.tier == "yellow"
+    assert fast.accumulators["n"].sum() > 0
+    # the accumulator key survives even when every edge is filtered out
+    none = session.lookup("cnt", pid=pid, d=99999999)
+    assert none.accumulators["n"].sum() == 0
+    _assert_result_parity(none, session.query("cnt", pid=pid, d=99999999))
+
+
+def test_column_valued_accum_and_target_where_parity(session):
+    pid = _person(session)
+    session.install(
+        "w", "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c "
+             "WHERE p.id == $pid AND c.length > $L ACCUM c.@w += c.length")
+    fast = session.lookup("w", pid=pid, L=5)
+    full = session.query("w", pid=pid, L=5)
+    _assert_result_parity(fast, full)
+
+
+def test_unknown_vertex_id_matches_empty_full_result(session):
+    session.install("pt", "SELECT p FROM Person:p WHERE p.id == $pid")
+    session.install(
+        "nb", "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c "
+              "WHERE p.id == $pid")
+    for name in ("pt", "nb"):
+        fast = session.lookup(name, pid=987654321)
+        full = session.query(name, pid=987654321)
+        _assert_result_parity(fast, full)
+        assert fast.vset.size() == 0
+
+
+def test_red_template_falls_through_to_full_engine(session):
+    session.install(
+        "red", "SELECT p FROM Tag:t -(HasTag:e1)- Comment:c "
+               "-(HasCreator:e2)- Person:p WHERE t.name == $tag")
+    res = session.lookup("red", tag="Music")
+    assert (res.route, res.tier) == ("full", "red")
+    _assert_result_parity(res, session.query("red", tag="Music"))
+
+
+def test_lookup_rejects_unknown_params(session):
+    session.install("pt", "SELECT p FROM Person:p WHERE p.id == $pid")
+    with pytest.raises(GSQLCompileError, match="unknown parameter"):
+        session.lookup("pt", pid=1, bogus=2)
+    with pytest.raises(GSQLCompileError, match="unbound parameter"):
+        session.lookup("pt")
+    with pytest.raises(KeyError):
+        session.lookup("never_installed", pid=1)
+
+
+# ---------------------------------------------------------------------------
+# install(): idempotence + plan-cache invalidation
+# ---------------------------------------------------------------------------
+
+def test_install_idempotent_on_identical_text(session):
+    text = "SELECT p FROM Person:p WHERE p.id == $pid"
+    a = session.install("pt", text)
+    session.lookup("pt", pid=_person(session))      # arm the plan
+    assert session.install("pt", text) is a          # same object, cache warm
+    epoch = session.engine.current_epoch()
+    assert "pt" in epoch.lookup_plans
+
+
+def test_reinstall_with_changed_text_swaps_plan(session):
+    pid = _person(session)
+    session.install("q", "SELECT p FROM Person:p WHERE p.id == $pid")
+    r1 = session.lookup("q", pid=pid)
+    assert r1.vset.vertex_type == "Person"
+    epoch = session.engine.current_epoch()
+    assert epoch.lookup_plans["q"].plan.kind == "point"
+    # different text under the same name: the armed entry must not leak
+    session.install(
+        "q", "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c "
+             "WHERE p.id == $pid")
+    assert "q" not in epoch.lookup_plans
+    r2 = session.lookup("q", pid=pid)
+    assert r2.vset.vertex_type == "Comment"
+    _assert_result_parity(r2, session.query("q", pid=pid))
+
+
+# ---------------------------------------------------------------------------
+# epochs: parity across advance(), concurrent lookups during the swap
+# ---------------------------------------------------------------------------
+
+def _append_comments_and_edges(store, eng, ldbc, n_new=25, date=20230601):
+    new_cids = np.arange(ldbc.n_comments + 1, ldbc.n_comments + n_new + 1,
+                         dtype=np.int64) * 10 + 3
+    lake = LakeCatalog(store)
+    lake.table("Comment").append_files([{
+        "id": new_cids,
+        "creationDate": np.full(n_new, date, dtype=np.int64),
+        "length": np.arange(n_new, dtype=np.int64) + 1,
+        "browserUsed": np.array(["Chrome"] * n_new, dtype=object),
+    }])
+    person_raw = eng.topology.idm.raw_ids("Person")
+    lake.table("Comment_HasCreator_Person").append_files([{
+        "src": new_cids,
+        "dst": person_raw[np.arange(n_new) % len(person_raw)],
+        "creationDate": np.full(n_new, date, dtype=np.int64),
+    }])
+
+
+def test_parity_across_advance(store, ldbc, session):
+    pid = _person(session)
+    session.install(
+        "nb", "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c "
+              "WHERE p.id == $pid")
+    before = session.lookup("nb", pid=pid)
+    old_epoch = session.engine.current_epoch()
+    assert "nb" in old_epoch.lookup_plans        # armed on the old epoch
+
+    _append_comments_and_edges(store, session.engine, ldbc)
+    report = session.engine.advance()
+    assert report.changed
+
+    # the new epoch starts with an empty plan cache (invalidation by
+    # construction); the first lookup re-arms against the new CSR/IDM
+    new_epoch = session.engine.current_epoch()
+    assert new_epoch is not old_epoch
+    assert "nb" not in new_epoch.lookup_plans
+    after = session.lookup("nb", pid=pid)
+    assert "nb" in new_epoch.lookup_plans
+    _assert_result_parity(after, session.query("nb", pid=pid))
+    assert after.epoch_id > before.epoch_id
+    # person 0 authored some of the appended comments -> more neighbors
+    assert after.n_edges_scanned > before.n_edges_scanned
+
+
+def test_concurrent_lookups_during_epoch_swap(store, ldbc, session):
+    pid = _person(session)
+    session.install(
+        "nb", "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c "
+              "WHERE p.id == $pid")
+    n_before = session.lookup("nb", pid=pid).n_edges_scanned
+    stop = threading.Event()
+    failures: list = []
+    counts: set = set()
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                res = session.lookup("nb", pid=pid)
+                counts.add((res.epoch_id, res.n_edges_scanned))
+            except Exception as e:  # noqa: BLE001 - the test records any
+                failures.append(repr(e))
+                return
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    _append_comments_and_edges(store, session.engine, ldbc)
+    session.engine.advance()
+    for _ in range(50):             # let lookups land on the new epoch
+        session.lookup("nb", pid=pid)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not failures, failures
+    # every observed (epoch, count) pair is one of the two consistent
+    # snapshots — never a torn mix
+    n_after = session.lookup("nb", pid=pid).n_edges_scanned
+    by_epoch = {}
+    for eid, n in counts:
+        by_epoch.setdefault(eid, set()).add(n)
+    for eid, ns in by_epoch.items():
+        assert len(ns) == 1, f"torn counts {ns} within epoch {eid}"
+    assert n_after > n_before
+
+
+# ---------------------------------------------------------------------------
+# primitive lookups: get_vertex / neighbors
+# ---------------------------------------------------------------------------
+
+def test_get_vertex_and_neighbors(session):
+    pid = _person(session)
+    v = session.get_vertex("Person", pid, columns=("gender", "birthday"))
+    assert v is not None and {"dense_id", "gender", "birthday"} <= set(v)
+    assert session.get_vertex("Person", 987654321) is None
+
+    dense = session.neighbors("HasCreator", pid, direction="in", ids="dense")
+    raw = session.neighbors("HasCreator", pid, direction="in", ids="raw")
+    assert len(dense) == len(raw)
+    # parity with the full engine's hop over the same seed
+    session.install(
+        "nb", "SELECT c FROM Person:p <-(HasCreator:e)- Comment:c "
+              "WHERE p.id == $pid")
+    full = session.query("nb", pid=pid)
+    np.testing.assert_array_equal(np.unique(dense), full.vset.ids())
+    assert len(session.neighbors("HasCreator", 987654321, direction="in")) == 0
+
+
+# ---------------------------------------------------------------------------
+# serving: lookups route around the batch window
+# ---------------------------------------------------------------------------
+
+def test_server_routes_lookups_around_batching(session):
+    pid = _person(session)
+    session.install("pt", "SELECT p FROM Person:p WHERE p.id == $pid")
+    session.install(
+        "red", "SELECT p FROM Tag:t -(HasTag:e1)- Comment:c "
+               "-(HasCreator:e2)- Person:p WHERE t.name == $tag")
+    server = QueryServer(session, config=ServerConfig(
+        n_workers=2, batch_window_ms=50.0, refresh_interval_s=0.0))
+    try:
+        rids = [server.submit("pt", pid=pid) for _ in range(6)]
+        results = [server.result(r) for r in rids]
+        assert all(r.ok for r in results)
+        for r in results:
+            assert r.value.route == "lookup"
+            assert r.value.tier == "green"
+        # lookups never waited out the 50 ms batch window
+        assert server.stats["lookup_requests"] == 6
+        assert server.stats["route_green"] == 6
+        assert server.stats["batches"] == 0
+        # a red template still takes the normal scheduler path
+        rid = server.submit("red", tag="Music")
+        res = server.result(rid)
+        assert res.ok and res.value.route == "full"
+        assert server.stats["lookup_requests"] == 6   # unchanged
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# the GNN sampler draws adjacency from the lookup service
+# ---------------------------------------------------------------------------
+
+def test_sampler_from_lookup_matches_manual_build(session):
+    eng = session.engine
+    epoch = eng.current_epoch()
+    csr = epoch.plane.csr("HasCreator")
+    src = np.repeat(np.arange(len(csr.fwd_indptr) - 1),
+                    np.diff(csr.fwd_indptr))
+    manual = NeighborSampler(src, csr.fwd_dst,
+                             n_nodes=len(csr.fwd_indptr) - 1)
+    via_lookup = NeighborSampler.from_lookup(session, "HasCreator",
+                                             direction="out")
+    np.testing.assert_array_equal(manual.indptr, via_lookup.indptr)
+    np.testing.assert_array_equal(manual.dst_sorted, via_lookup.dst_sorted)
+    seeds = np.arange(min(8, via_lookup.n_nodes), dtype=np.int64)
+    a = manual.sample(seeds, fanout=(4, 2), n_pad=256, e_pad=512, seed=7)
+    b = via_lookup.sample(seeds, fanout=(4, 2), n_pad=256, e_pad=512, seed=7)
+    np.testing.assert_array_equal(a.src, b.src)
+    np.testing.assert_array_equal(a.dst, b.dst)
+    np.testing.assert_array_equal(a.node_ids, b.node_ids)

@@ -16,7 +16,7 @@ from repro.core.engine import GraphLakeEngine
 from repro.core.plan import ColumnBounds
 from repro.core.primitives import read_edge_columns_pruned
 from repro.core.query import (
-    Predicate, Query, accum_sum, eq, ge, gt, isin, le, lt, ne,
+    ExecOptions, Predicate, Query, accum_sum, eq, ge, gt, isin, le, lt, ne,
 )
 from repro.core.topology import GraphTopology
 from repro.core.types import VSet
@@ -57,12 +57,12 @@ def _run_both(engine, build, accum=None):
     before resetting so the parity check compares real per-run results.
     """
     engine.cache.drop_all()
-    res_off = build().run(pushdown=False)
+    res_off = build().run(ExecOptions(pushdown=False))
     res_off.accumulators = {k: v.copy() for k, v in res_off.accumulators.items()}
     if accum is not None:
         engine.accums.reset(*accum)
     engine.cache.drop_all()
-    res_on = build().run(pushdown=True)
+    res_on = build().run(ExecOptions(pushdown=True))
     res_on.accumulators = {k: v.copy() for k, v in res_on.accumulators.items()}
     if accum is not None:
         engine.accums.reset(*accum)

@@ -8,7 +8,7 @@ from repro.core.engine import GraphLakeEngine
 from repro.core.cache.manager import CacheConfig
 from repro.core.plan import ColumnBounds
 from repro.core.primitives import read_edge_columns_pruned, read_vertex_columns_pruned
-from repro.core.query import Query, eq, gt
+from repro.core.query import ExecOptions, Query, eq, gt
 from repro.core.read_pipeline import ReadContext, plan_edge_read, plan_vertex_read
 from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
 from repro.lakehouse.io_pool import IOPool
@@ -112,11 +112,11 @@ def test_query_parity_pipelined_vs_sequential(engine):
                      target_where=eq("gender", "Female")))
 
     engine.cache.drop_all()
-    res_seq = q().run(pipeline=False)
+    res_seq = q().run(ExecOptions(pipeline=False))
     engine.cache.drop_all()
-    res_pipe = q().run(pipeline=True)
+    res_pipe = q().run(ExecOptions(pipeline=True))
     engine.cache.drop_all()
-    res_legacy = q().run(pushdown=False, pipeline=True)
+    res_legacy = q().run(ExecOptions(pushdown=False, pipeline=True))
 
     for other in (res_pipe, res_legacy):
         assert res_seq.n_edges_scanned == other.n_edges_scanned
@@ -130,8 +130,8 @@ def test_query_parity_pipelined_vs_sequential(engine):
 
 
 def test_explicit_pipeline_overrides_disabled_flag(lake, monkeypatch):
-    """run(pipeline=True) must pipeline even under REPRO_OPTS="" (all flags
-    off) — the flag is only the default for pipeline=None.  Regression: the
+    """run(ExecOptions(pipeline=True)) must pipeline even under REPRO_OPTS=""
+    (all flags off) — the flag is only the default for pipeline=None.  Regression: the
     executor used to re-check the flag and silently fall back to sequential,
     which made the benchmark's pinned pipelined arm measure nothing."""
     monkeypatch.setenv("REPRO_OPTS", "")
@@ -145,7 +145,7 @@ def test_explicit_pipeline_overrides_disabled_flag(lake, monkeypatch):
         res_default = q.run()                 # pipeline=None + flag off: sequential
         assert eng.pool.stats["tasks"] == tasks_before
         eng.cache.drop_all()
-        res_forced = q.run(pipeline=True)     # explicit override: pipelined
+        res_forced = q.run(ExecOptions(pipeline=True))  # explicit override: pipelined
         assert eng.pool.stats["tasks"] > tasks_before
         assert res_default.n_edges_scanned == res_forced.n_edges_scanned
         for fa, fb in zip(res_default.frames, res_forced.frames):
@@ -184,7 +184,7 @@ def test_self_loop_hop_fetches_each_chunk_once(engine):
            .hop("Knows", direction="out",
                 source_where=gt("birthday", 0),
                 target_where=gt("birthday", 0))
-           ).run(pipeline=True)
+           ).run(ExecOptions(pipeline=True))
     n_birthday_chunks = sum(
         1 for meta in engine.topology.vertex_file_metas.values()
         for c in meta.chunks if c.column == "birthday")

@@ -43,6 +43,16 @@ from benchmarks.bench_serving import run
 run(quick=True)
 PY
 
+echo "== point-lookup tier: fast path vs full engine (quick mode) =="
+# writes the BENCH_lookup.json snapshot: bit-parity of the plan-cached
+# lookup path against the full engine on green/yellow templates, then the
+# warm-cache closed-loop p50 sweep asserting the >=10x speedup floor for
+# green (point + single-hop) lookups.
+python - <<'PY'
+from benchmarks.bench_lookup import run
+run(quick=True)
+PY
+
 echo "== tier-1 tests (slow SPMD dry-runs deselected) =="
 # test_archs_smoke / test_train_substrate and one misc test fail in this
 # container for environment reasons (installed jax predates APIs the model
