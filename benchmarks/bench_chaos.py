@@ -1,0 +1,170 @@
+"""Chaos benchmark: success rate and p99 inflation vs injected fault rate
+(DESIGN.md §11).
+
+Runs the same cold-cache scan query against one LDBC lake through store
+handles with increasing seeded transient-fault schedules (``transient_chaos``:
+transient errors at the rate, torn reads at rate/2, 10x latency spikes at
+2x rate, all on ``tables/`` reads), under a small modeled store latency so
+spikes and backoff register in wall time.  The cache is dropped between
+requests so every request re-reads the lake — faults keep firing for the
+whole run instead of only during warmup.
+
+Floors asserted (the ISSUE 8 acceptance bar):
+
+- **100% success** at every swept rate (5-10% transient): retries + typed
+  classification absorb every injected fault, zero user-visible failures;
+- **bit-parity**: every request's result ids match the fault-free run;
+- **bounded p99 inflation**: p99 at the highest rate stays under
+  ``max_p99_inflation`` x the fault-free p99 (plus a small absolute grace
+  for timer noise) — backoff is bounded, not a meltdown;
+- the injector actually fired (a dead injector cannot silently pass).
+
+Snapshot written to ``BENCH_chaos.json`` (override with
+``REPRO_BENCH_CHAOS_SNAPSHOT``); ``run(quick=True)`` is the CI-gate mode.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_ROOT, emit, fresh_store, make_engine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.gsql.session import GraphSession
+from repro.lakehouse.faults import transient_chaos
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.retry import default_policy
+
+SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_CHAOS_SNAPSHOT", "BENCH_chaos.json")
+
+QUERY = ("SELECT c FROM Tag:t -(HasTag:e)- Comment:c "
+         "WHERE t.name == $tag")
+# real LDBC tag names (data/ldbc.py _TAG_NAMES) so every request's result
+# set is non-empty and parity-under-faults is asserted on real ids
+TAGS = ("Music", "Sports", "Politics", "Movies",
+        "Science", "Travel", "Food", "Art")
+
+
+def _chaos_handle(root: str, rate: float, seed: int) -> ObjectStore:
+    """A store handle over the shared lake bytes: seeded faults on tables/
+    plus a small modeled latency so spikes/backoff show up in wall time."""
+    return ObjectStore(StoreConfig(
+        root=root,
+        request_latency_s=0.0003,
+        latency_scale=1.0,
+        faults=transient_chaos(rate, seed=seed) if rate > 0 else None,
+    ))
+
+
+def _pct(lats: list, q: float) -> float:
+    s = sorted(lats)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+def chaos_sweep(
+    sf: float = 0.004,
+    rates: tuple = (0.0, 0.05, 0.10),
+    n_requests: int = 30,
+    seed: int = 11,
+    max_p99_inflation: float = 25.0,
+) -> dict:
+    root = os.path.join(BENCH_ROOT, "chaos")
+    gen_store = fresh_store("chaos")
+    generate_ldbc(gen_store, scale_factor=sf, n_files=2, row_group_rows=256)
+    t0 = time.perf_counter()
+
+    rows = []
+    baseline_ids = None
+    baseline_p99 = None
+    for rate in rates:
+        store = _chaos_handle(root, rate, seed)
+        retry_before = default_policy().snapshot()
+        eng = make_engine(store, ldbc_graph_schema(), materialize=False,
+                          prefetch=False)
+        eng.startup()
+        session = GraphSession(eng)
+        session.install("scan", QUERY)
+        lats, failures, ids = [], 0, None
+        try:
+            for i in range(n_requests):
+                eng.cache.drop_all()   # cold lake read every request
+                t1 = time.perf_counter()
+                try:
+                    res = session.query("scan", tag=TAGS[i % len(TAGS)])
+                    got = res.vset.ids()
+                except Exception as e:   # a user-visible failure
+                    failures += 1
+                    emit("chaos_request_failed", 0.0,
+                         f"rate={rate};{type(e).__name__}: {e}")
+                    continue
+                finally:
+                    lats.append(time.perf_counter() - t1)
+                if i == 0:
+                    ids = np.array(got)
+        finally:
+            eng.close()
+        retry_after = default_policy().snapshot()
+        retries = retry_after["retries"] - retry_before["retries"]
+        fault_snap = store.faults.snapshot() if store.faults else {}
+        success_rate = (n_requests - failures) / n_requests
+        p50, p99 = _pct(lats, 0.50), _pct(lats, 0.99)
+        row = {
+            "rate": rate,
+            "n_requests": n_requests,
+            "success_rate": success_rate,
+            "p50_s": p50,
+            "p99_s": p99,
+            "retries": retries,
+            "giveups": retry_after["giveups"] - retry_before["giveups"],
+            "faults": fault_snap,
+        }
+        rows.append(row)
+        emit(f"chaos_rate_{rate:g}_p99_ms", p99 * 1e3,
+             f"success={success_rate:.3f};retries={retries};"
+             f"fired={sum(fault_snap.get(c, 0) for c in ('transient', 'torn', 'spike', 'missing'))}")
+
+        # -- floors ----------------------------------------------------------
+        assert success_rate == 1.0, (
+            f"user-visible failures at rate {rate}: {row}")
+        if rate == 0.0:
+            assert ids is not None and ids.size > 0, (
+                "fault-free scan returned no ids — parity would be vacuous")
+            baseline_ids = ids
+            baseline_p99 = p99
+        else:
+            assert np.array_equal(ids, baseline_ids), (
+                f"result drift under faults at rate {rate}")
+            assert store.faults.fired("transient") > 0, (
+                "injector never fired — the sweep tested nothing")
+            assert retries > 0, "faults fired but no retry ever ran"
+            assert p99 <= max_p99_inflation * baseline_p99 + 0.25, (
+                f"p99 inflation unbounded at rate {rate}: "
+                f"{p99:.3f}s vs fault-free {baseline_p99:.3f}s")
+
+    return {
+        "bench": "chaos_success_and_p99_vs_fault_rate",
+        "wall_s": time.perf_counter() - t0,
+        "seed": seed,
+        "rows": rows,
+    }
+
+
+def _write_snapshot(snap: dict) -> None:
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snap, f, indent=2)
+    emit("chaos_snapshot", 0.0, SNAPSHOT_PATH)
+
+
+def run(quick: bool = False) -> None:
+    snap = {"chaos_sweep": chaos_sweep(
+        sf=0.004 if quick else 0.01,
+        n_requests=20 if quick else 60,
+    )}
+    _write_snapshot(snap)
+
+
+if __name__ == "__main__":
+    run()

@@ -25,6 +25,15 @@ _LAZY = {
     "ServerOverloadedError": ("repro.errors", "ServerOverloadedError"),
     "TenantQuotaExceededError": ("repro.errors", "TenantQuotaExceededError"),
     "MissingTableError": ("repro.errors", "MissingTableError"),
+    # lake-I/O fault taxonomy (DESIGN.md §11)
+    "LakeError": ("repro.errors", "LakeError"),
+    "TransientLakeError": ("repro.errors", "TransientLakeError"),
+    "MissingObjectError": ("repro.errors", "MissingObjectError"),
+    "LakeCorruptionError": ("repro.errors", "LakeCorruptionError"),
+    "FaultInjector": ("repro.lakehouse.faults", "FaultInjector"),
+    "FaultRule": ("repro.lakehouse.faults", "FaultRule"),
+    "transient_chaos": ("repro.lakehouse.faults", "transient_chaos"),
+    "RetryPolicy": ("repro.lakehouse.retry", "RetryPolicy"),
 }
 
 

@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.cache.units import ChunkRef, EdgeCacheUnit, NaiveChunkReader, VertexCacheUnit
 from repro.lakehouse.columnfile import ColumnFileMeta
 from repro.lakehouse.objectstore import ObjectStore
+from repro.lakehouse.retry import lake_get
 
 
 @dataclasses.dataclass
@@ -205,7 +206,10 @@ class CacheManager:
                 self.stats["disk_hits"] += 1
                 return raw
         chunk = meta.chunk(ref.column, ref.row_group)
-        raw = self.store.get(meta.key, offset=chunk.offset, length=chunk.length)
+        # lake_get retries transient faults and rejects short (torn) reads
+        # against the chunk length, so truncated bytes never enter the cache
+        raw = lake_get(self.store, meta.key,
+                       offset=chunk.offset, length=chunk.length)
         with self._lock:
             self.stats["lake_fetches"] += 1
             self._disk_put_raw(key, raw)

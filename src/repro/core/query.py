@@ -331,6 +331,10 @@ class QueryResult:
     # stamps only — result contents are bit-identical across routes.
     route: str = "full"
     tier: str = ""
+    # True when the serving layer's refresh breaker was open and the result
+    # was served from the last good pinned epoch (staleness_s stays honest —
+    # it keeps growing while degraded); DESIGN.md §11
+    degraded: bool = False
 
 
 def plan_hop(hop: "_HopBlock") -> ScanPlan:

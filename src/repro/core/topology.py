@@ -38,6 +38,7 @@ from repro.core.vertex_idm import VertexIDM
 from repro.lakehouse.columnfile import ColumnFileMeta, read_column_chunk, read_footer
 from repro.lakehouse.io_pool import IOPool, prefetch_iter
 from repro.lakehouse.objectstore import ObjectStore
+from repro.lakehouse.retry import lake_get, lake_get_json
 from repro.lakehouse.table import LakeCatalog
 
 
@@ -388,7 +389,7 @@ class GraphTopology:
             self.materialize(store, pool=pool)
             return {"mode": "full", "blobs_uploaded": -1,
                     "wall_s": time.perf_counter() - t0}
-        man = json.loads(store.get("topology/MANIFEST.json"))
+        man = lake_get_json(store, "topology/MANIFEST.json")
         old_sources = man.get("edge_sources")
         own = pool is None
         pool = pool or IOPool(n_threads=8)
@@ -440,7 +441,7 @@ class GraphTopology:
     ) -> None:
         """Second-connection startup: load persisted topology, skip rebuild."""
         t0 = time.perf_counter()
-        man = json.loads(store.get("topology/MANIFEST.json"))
+        man = lake_get_json(store, "topology/MANIFEST.json")
         self._n_dangling = man["n_dangling"]
         self._next_file_id = man["next_file_id"]
         self._edge_snapshot_ids = dict(man["edge_snapshot_ids"])
@@ -467,7 +468,7 @@ class GraphTopology:
         pool = pool or IOPool(n_threads=8)
         try:
             for ename, keys in man["edge_lists"].items():
-                blobs = [pool.submit(store.get, k) for k in keys]
+                blobs = [pool.submit(lake_get, store, k) for k in keys]
                 self.edge_lists[ename] = [EdgeList.from_bytes(b.result()) for b in blobs]
             self.plane.invalidate()
             # restore CSR indexes persisted alongside the edge lists — the
@@ -476,7 +477,7 @@ class GraphTopology:
             if perf_enabled("csr"):
                 for ename, key in man.get("csr", {}).items():
                     if store.exists(key):
-                        self.plane.attach_csr(ename, CSRIndex.from_bytes(store.get(key)))
+                        self.plane.attach_csr(ename, CSRIndex.from_bytes(lake_get(store, key)))
             # footers for vertex files are still needed for attribute access
             all_keys = [f.key for vt in self.vertex_info.values() for f in vt.files]
             for key, meta in prefetch_iter(pool, all_keys, lambda k: read_footer(store, k), depth=8):

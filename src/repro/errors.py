@@ -95,6 +95,50 @@ class MissingTableError(ReproError, RuntimeError):
     error, never silently treated as 'no snapshots yet'."""
 
 
+# ---------------------------------------------------------------------------
+# lake I/O (DESIGN.md §11): the fault taxonomy the retry layer classifies
+# ---------------------------------------------------------------------------
+
+class LakeError(ReproError):
+    """Base of every typed lake-I/O failure.
+
+    Carries the object ``key`` involved and an ``attempt_trace`` (one line
+    per failed attempt when the retry layer re-raises), so a surfaced error
+    says *which* object failed and *what was tried* — callers never have to
+    pattern-match stdlib exception text to find out.
+    """
+
+    def __init__(self, message: str, key: Optional[str] = None,
+                 attempts: Optional[list] = None):
+        self.key = key
+        self.attempt_trace = list(attempts or [])
+        if key is not None:
+            message = f"{message} [key={key}]"
+        if self.attempt_trace:
+            message = (f"{message} (after {len(self.attempt_trace)} attempts: "
+                       + " | ".join(self.attempt_trace) + ")")
+        super().__init__(message)
+
+
+class TransientLakeError(LakeError, ConnectionError):
+    """A retryable store fault: throttled GET, connection reset, torn
+    (short) read of an immutable object.  The retry policy's *only*
+    retryable class — everything else fails fast."""
+
+
+class MissingObjectError(LakeError, FileNotFoundError):
+    """The requested key does not exist in the store (fatal — retrying
+    cannot make an object appear).  Keeps ``FileNotFoundError`` as a base so
+    pre-consolidation ``except`` clauses continue to match; raw
+    ``FileNotFoundError``/``OSError`` never escape ``ObjectStore`` anymore."""
+
+
+class LakeCorruptionError(LakeError, ValueError):
+    """The object exists and was read in full, but its contents are not
+    what the format promises (bad magic, undecodable footer/chunk).  Fatal:
+    the bytes are durably wrong, a retry re-reads the same corruption."""
+
+
 __all__ = [
     "ReproError",
     "GSQLError",
@@ -104,4 +148,8 @@ __all__ = [
     "ServerOverloadedError",
     "TenantQuotaExceededError",
     "MissingTableError",
+    "LakeError",
+    "TransientLakeError",
+    "MissingObjectError",
+    "LakeCorruptionError",
 ]

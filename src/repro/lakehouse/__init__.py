@@ -10,7 +10,9 @@ This package implements the storage layer GraphLake reads from:
 - ``objectstore`` — object store with a configurable latency/bandwidth model
                     (stands in for S3) plus a local-disk tier,
 - ``io_pool``     — async I/O thread pool used to pipeline downloads with compute,
-- ``writer``      — bulk table writer used by the dataset generators.
+- ``writer``      — bulk table writer used by the dataset generators,
+- ``faults``      — seeded deterministic fault injection on the store,
+- ``retry``       — typed retry/backoff every lake read flows through.
 """
 
 from repro.lakehouse.encoding import Encoding, encode_column, decode_column
@@ -22,7 +24,9 @@ from repro.lakehouse.columnfile import (
     read_footer,
     write_column_file,
 )
+from repro.lakehouse.faults import FaultInjector, FaultRule, transient_chaos
 from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.retry import RetryPolicy, default_policy, lake_get, retry_stats
 from repro.lakehouse.table import LakeTable, TableSchema, ColumnSpec, LakeCatalog
 from repro.lakehouse.io_pool import IOPool
 from repro.lakehouse.writer import write_table
@@ -45,4 +49,11 @@ __all__ = [
     "LakeCatalog",
     "IOPool",
     "write_table",
+    "FaultInjector",
+    "FaultRule",
+    "transient_chaos",
+    "RetryPolicy",
+    "default_policy",
+    "lake_get",
+    "retry_stats",
 ]

@@ -14,6 +14,12 @@ Readers follow the S3 access pattern the paper describes in §4.2:
   1. suffix request for (footer_len, magic),
   2. request for the footer bytes,
   3. ranged requests for the column chunks actually needed.
+
+Every read goes through :func:`~repro.lakehouse.retry.lake_get` with the
+expected byte count, so transient faults retry and torn (short) reads are
+detected *before* decoding.  A full-length read whose contents still fail
+the format's promises (bad magic, undecodable footer or chunk) is the
+fatal class: :class:`~repro.errors.LakeCorruptionError`.
 """
 
 from __future__ import annotations
@@ -25,8 +31,10 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.errors import LakeCorruptionError
 from repro.lakehouse.encoding import Encoding, choose_encoding, decode_column, encode_column
 from repro.lakehouse.objectstore import ObjectStore
+from repro.lakehouse.retry import lake_get
 
 MAGIC = b"RPF1"
 
@@ -154,13 +162,20 @@ def write_column_file(
 
 def read_footer(store: ObjectStore, key: str) -> ColumnFileMeta:
     """Read footer via the 2-request suffix pattern (paper §4.2)."""
-    tail = store.get(key, offset=-8)  # footer_len + magic
+    tail = lake_get(store, key, offset=-8, expect_len=8)  # footer_len + magic
     (footer_len,) = struct.unpack_from("<I", tail, 0)
     if tail[4:] != MAGIC:
-        raise ValueError(f"bad column file magic in {key}")
+        # the full 8 tail bytes arrived (short reads retried above), so the
+        # magic mismatch is durable on-disk corruption, not a torn response
+        raise LakeCorruptionError("bad column file magic", key=key)
     total = store.size(key)
-    footer = store.get(key, offset=total - 8 - footer_len, length=footer_len)
-    return ColumnFileMeta.from_json(json.loads(footer.decode("utf-8")))
+    footer = lake_get(store, key, offset=total - 8 - footer_len, length=footer_len)
+    try:
+        return ColumnFileMeta.from_json(json.loads(footer.decode("utf-8")))
+    except (ValueError, KeyError, TypeError, UnicodeDecodeError) as e:
+        raise LakeCorruptionError(
+            f"undecodable column file footer ({type(e).__name__})", key=key
+        ) from e
 
 
 def read_column_chunk(
@@ -172,8 +187,13 @@ def read_column_chunk(
 ) -> np.ndarray:
     """Ranged-read one column chunk and decode it (optionally a prefix)."""
     c = meta.chunk(column, row_group)
-    raw = store.get(meta.key, offset=c.offset, length=c.length)
-    return decode_column(raw, row_limit=row_limit)
+    raw = lake_get(store, meta.key, offset=c.offset, length=c.length)
+    try:
+        return decode_column(raw, row_limit=row_limit)
+    except (ValueError, struct.error) as e:
+        raise LakeCorruptionError(
+            f"undecodable column chunk {column}/rg{row_group} "
+            f"({type(e).__name__})", key=meta.key) from e
 
 
 def read_column_chunk_raw(
@@ -181,7 +201,7 @@ def read_column_chunk_raw(
 ) -> bytes:
     """Fetch the encoded bytes of a chunk without decoding (disk-tier cache)."""
     c = meta.chunk(column, row_group)
-    return store.get(meta.key, offset=c.offset, length=c.length)
+    return lake_get(store, meta.key, offset=c.offset, length=c.length)
 
 
 def read_columns(

@@ -1,0 +1,164 @@
+"""Seeded, deterministic fault injection for the object store (DESIGN.md §11).
+
+The paper's whole premise is querying graphs over *remote* Lakehouse
+storage, where throttled GETs, latency spikes and torn reads are the steady
+state — so the reproduction injects them on purpose.  A
+:class:`FaultInjector` installs on :class:`~repro.lakehouse.objectstore.
+ObjectStore` (via ``StoreConfig.faults`` or the ``chaos`` perf flag) and
+intercepts every ``get`` / ``put`` / ``put_if``, drawing from a seeded RNG
+against per-key-prefix :class:`FaultRule` rates:
+
+- **transient** — raises :class:`~repro.errors.TransientLakeError`
+  (throttle / connection reset); the retry layer's bread and butter;
+- **spike**     — multiplies the store's modeled latency for this one
+  request (``spike_mult`` on the latency model; a no-op when the latency
+  model is off, so unit tests stay fast);
+- **torn**      — the returned bytes are truncated (``get`` only): the
+  short-read the checked readers detect and classify as transient;
+- **missing**   — raises :class:`~repro.errors.MissingObjectError`: the
+  fatal class, for testing that fatal faults surface typed and untried.
+
+Per-class / per-rule counters record exactly what fired, so chaos tests can
+assert both "faults actually happened" and "no user-visible failure
+happened anyway".  Draws are serialized under a lock from one seeded
+``random.Random``: a single-threaded op sequence is exactly reproducible;
+under concurrency the *schedule* of which op draws which fault depends on
+interleaving, but rates, counters and determinism-per-seed are preserved —
+and the engine above must produce bit-identical results either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+from typing import Optional, Sequence
+
+from repro.errors import MissingObjectError, TransientLakeError
+
+FAULT_CLASSES = ("transient", "spike", "torn", "missing")
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """Fault rates for one key prefix (first matching rule wins)."""
+
+    prefix: str = ""                 # "" matches every key
+    ops: tuple = ("get",)            # which store ops this rule intercepts
+    transient_rate: float = 0.0
+    spike_rate: float = 0.0
+    spike_mult: float = 10.0         # latency-model multiplier while spiking
+    torn_rate: float = 0.0           # get only: truncate the returned bytes
+    missing_rate: float = 0.0
+    max_faults: Optional[int] = None  # cap total injections for this rule
+
+
+@dataclasses.dataclass
+class FaultDecision:
+    """What the store should do to the intercepted op (transient/missing
+    faults raise inside :meth:`FaultInjector.intercept` instead)."""
+
+    torn: bool = False
+    spike_mult: float = 1.0
+
+
+class FaultInjector:
+    def __init__(self, rules: Sequence[FaultRule], seed: int = 0):
+        self.rules = list(rules)
+        self.seed = seed
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.counters = {c: 0 for c in FAULT_CLASSES}
+        self.counters["ops_seen"] = 0
+        # per-(rule index, class) fire counts — tests assert exactly what fired
+        self.per_rule: list[dict] = [
+            {c: 0 for c in FAULT_CLASSES} for _ in self.rules
+        ]
+
+    def _rule_for(self, op: str, key: str) -> Optional[tuple[int, FaultRule]]:
+        for i, rule in enumerate(self.rules):
+            if op in rule.ops and key.startswith(rule.prefix):
+                return i, rule
+        return None
+
+    def fired(self, cls: Optional[str] = None) -> int:
+        """Total injections (optionally of one class) — what chaos tests
+        assert to prove the schedule actually exercised the engine."""
+        with self._lock:
+            if cls is not None:
+                return self.counters[cls]
+            return sum(self.counters[c] for c in FAULT_CLASSES)
+
+    def intercept(self, op: str, key: str) -> FaultDecision:
+        """Decide (and partly apply) the fault for one store op.
+
+        Raises for transient/missing faults; returns a
+        :class:`FaultDecision` telling the store to tear the read and/or
+        spike its modeled latency.  At most one fault class fires per op
+        (classes are drawn in a fixed order), so counters partition cleanly.
+        """
+        hit = self._rule_for(op, key)
+        with self._lock:
+            self.counters["ops_seen"] += 1
+            if hit is None:
+                return FaultDecision()
+            i, rule = hit
+            if rule.max_faults is not None and \
+                    sum(self.per_rule[i][c] for c in FAULT_CLASSES) >= rule.max_faults:
+                return FaultDecision()
+            draw = self._rng.random()
+            # one draw walks the class ladder: deterministic per seed, one
+            # fault max per op
+            edge = rule.transient_rate
+            if draw < edge:
+                self.counters["transient"] += 1
+                self.per_rule[i]["transient"] += 1
+                raise TransientLakeError(
+                    f"injected transient fault (op={op})", key=key)
+            edge += rule.missing_rate
+            if draw < edge:
+                self.counters["missing"] += 1
+                self.per_rule[i]["missing"] += 1
+                raise MissingObjectError(
+                    f"injected missing-key fault (op={op})", key=key)
+            decision = FaultDecision()
+            edge += rule.torn_rate
+            if op == "get" and draw < edge:
+                self.counters["torn"] += 1
+                self.per_rule[i]["torn"] += 1
+                decision.torn = True
+                return decision
+            edge += rule.spike_rate
+            if draw < edge:
+                self.counters["spike"] += 1
+                self.per_rule[i]["spike"] += 1
+                decision.spike_mult = rule.spike_mult
+            return decision
+
+    def tear(self, data: bytes) -> bytes:
+        """Truncate a read result — at least one byte, up to a third — so a
+        checked reader always sees fewer bytes than it asked for."""
+        if not data:
+            return data
+        cut = max(1, len(data) // 3)
+        return data[: len(data) - cut]
+
+    def snapshot(self) -> dict:
+        """Counters for health/bench reporting (copy, lock-consistent)."""
+        with self._lock:
+            return dict(self.counters)
+
+
+def transient_chaos(rate: float, seed: int = 0,
+                    prefix: str = "tables/") -> FaultInjector:
+    """The default chaos schedule (``chaos`` perf flag / ``chaos=<rate>``):
+    transient faults + latency spikes + torn reads on lake-table reads at
+    the given rate each (spikes at 2x the rate — cheap, non-erroring)."""
+    return FaultInjector([FaultRule(
+        prefix=prefix, ops=("get",),
+        transient_rate=rate, torn_rate=rate / 2, spike_rate=2 * rate,
+    )], seed=seed)
+
+
+__all__ = ["FaultRule", "FaultDecision", "FaultInjector", "transient_chaos",
+           "FAULT_CLASSES"]

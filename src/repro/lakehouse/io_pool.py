@@ -10,9 +10,11 @@ around ``concurrent.futures.ThreadPoolExecutor`` with:
 - a ``map_pipelined`` helper that runs ``fetch`` on I/O threads and ``compute``
   on the caller thread, keeping ``depth`` fetches in flight ahead of compute —
   the exact producer/consumer structure of the startup loader.
-- speculative ``fetch_with_backup``: if a fetch exceeds a deadline, a backup
-  request is issued and the first completion wins (straggler mitigation for
-  slow object-store reads).
+- hedged ``fetch_with_backup``: if a fetch exceeds a deadline *or fails
+  with a retryable fault*, a backup request is issued and the first
+  **successful** completion wins (straggler + fault mitigation for slow
+  object-store reads); the loser's exception is always consumed, never
+  leaked to the pool as an unraised-future warning.
 """
 
 from __future__ import annotations
@@ -32,7 +34,8 @@ class IOPool:
         self._pool = ThreadPoolExecutor(max_workers=n_threads, thread_name_prefix="io")
         self._sem = threading.Semaphore(max_in_flight)
         self._lock = threading.Lock()
-        self.stats = {"tasks": 0, "io_seconds": 0.0, "backup_fetches": 0, "backup_wins": 0}
+        self.stats = {"tasks": 0, "io_seconds": 0.0, "backup_fetches": 0,
+                      "backup_wins": 0, "hedged_errors": 0}
 
     def close(self) -> None:
         self._pool.shutdown(wait=True)
@@ -104,24 +107,48 @@ class IOPool:
             results.append(compute(item, payload))
         return results
 
-    # -- speculative fetch (straggler mitigation) -------------------------------
+    # -- hedged fetch (straggler + fault mitigation) ----------------------------
 
     def fetch_with_backup(
         self, fn: Callable[[], R], backup_after_s: float = 0.25
     ) -> R:
+        """Run ``fn`` with a hedged backup; first *success* wins.
+
+        The backup launches when the primary is still running at
+        ``backup_after_s`` (classic straggler hedge) — or immediately when
+        the primary *fails* before the deadline (error-promoted hedge: a
+        failed future is never returned as the "winner" while an untried
+        backup could still succeed).  Loser exceptions are consumed via a
+        done-callback so they can't surface as unraised-future warnings.
+        Only when both attempts fail does the primary's exception propagate.
+        """
         primary = self.submit(fn)
         done, _ = wait([primary], timeout=backup_after_s, return_when=FIRST_COMPLETED)
-        if done:
+        if done and primary.exception() is None:
             return primary.result()
         with self._lock:
             self.stats["backup_fetches"] += 1
+            if done:  # primary already failed: hedge promoted by the error
+                self.stats["hedged_errors"] += 1
         backup = self.submit(fn)
-        done, _ = wait([primary, backup], return_when=FIRST_COMPLETED)
-        winner = done.pop()
-        if winner is backup:
-            with self._lock:
-                self.stats["backup_wins"] += 1
-        return winner.result()
+        futures = (primary, backup)
+        pending = {f for f in futures if not f.done()}
+        while True:
+            for fut in futures:  # prefer primary when both landed together
+                if fut.done() and fut.exception() is None:
+                    if fut is backup:
+                        with self._lock:
+                            self.stats["backup_wins"] += 1
+                    loser = backup if fut is primary else primary
+                    loser.add_done_callback(lambda f: f.exception())
+                    return fut.result()
+            if not pending:
+                break
+            _, pending = wait(pending, return_when=FIRST_COMPLETED)
+        # both attempts failed: surface the primary's exception (the backup's
+        # is consumed above the raise so neither future leaks unraised)
+        backup.exception()
+        raise primary.exception()
 
 
 def prefetch_iter(

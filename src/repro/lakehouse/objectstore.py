@@ -10,6 +10,13 @@ pipelined startup (§4.2) overlaps.
 
 The latency model can be disabled (``latency_scale=0``) for unit tests and
 enabled for the startup/cold-run benchmarks.
+
+Chaos: a seeded :class:`~repro.lakehouse.faults.FaultInjector` can be
+installed (``StoreConfig.faults``, or the ``chaos`` / ``chaos=<rate>`` perf
+flag) to inject classified faults — transient errors, latency spikes, torn
+reads, missing keys — on get/put/put_if (DESIGN.md §11).  Missing files
+never escape as raw ``FileNotFoundError``/``OSError``: ``get``/``size``
+map them into the typed :class:`~repro.errors.MissingObjectError`.
 """
 
 from __future__ import annotations
@@ -20,6 +27,10 @@ import threading
 import time
 from typing import Optional
 
+from repro import perf_flags
+from repro.errors import MissingObjectError
+from repro.lakehouse.faults import FaultDecision, FaultInjector, transient_chaos
+
 
 @dataclasses.dataclass
 class StoreConfig:
@@ -28,6 +39,8 @@ class StoreConfig:
     bandwidth_bytes_per_s: float = 1.1e9  # sustained transfer rate
     latency_scale: float = 0.0            # 0 => latency model off (unit tests)
     parallel_streams: int = 8             # concurrent streams the link sustains
+    faults: Optional[FaultInjector] = None  # chaos injector (None = perf flag)
+    fault_seed: int = 0                   # seed for the flag-built injector
 
 
 class ObjectStore:
@@ -42,6 +55,11 @@ class ObjectStore:
         os.makedirs(config.root, exist_ok=True)
         self._lock = threading.Lock()
         self._cas_lock = threading.Lock()   # serializes conditional puts
+        self.faults = config.faults
+        if self.faults is None and perf_flags.enabled("chaos"):
+            self.faults = transient_chaos(
+                rate=float(perf_flags.value("chaos", 0.05)),
+                seed=config.fault_seed)
         self.counters = {
             "get_requests": 0,
             "put_requests": 0,
@@ -58,17 +76,25 @@ class ObjectStore:
             raise ValueError(f"bad key {key!r}")
         return os.path.join(self.config.root, key)
 
-    def _simulate(self, n_bytes: int) -> None:
+    def _simulate(self, n_bytes: int, mult: float = 1.0) -> None:
+        # ``mult`` > 1 models an injected latency spike: the spike scales the
+        # *modeled* wait, so it is a no-op when the latency model is off and
+        # unit tests stay fast
         cfg = self.config
         if cfg.latency_scale <= 0:
             return
-        wait = cfg.latency_scale * (
+        wait = mult * cfg.latency_scale * (
             cfg.request_latency_s
             + n_bytes / (cfg.bandwidth_bytes_per_s / max(1, cfg.parallel_streams))
         )
         with self._lock:
             self.counters["simulated_wait_s"] += wait
         time.sleep(wait)
+
+    def _intercept(self, op: str, key: str) -> FaultDecision:
+        if self.faults is None:
+            return FaultDecision()
+        return self.faults.intercept(op, key)
 
     def _count(self, **deltas) -> None:
         with self._lock:
@@ -78,6 +104,7 @@ class ObjectStore:
     # -- API ----------------------------------------------------------------
 
     def put(self, key: str, data: bytes) -> None:
+        decision = self._intercept("put", key)
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         tmp = path + f".tmp.{threading.get_ident()}"
@@ -85,7 +112,7 @@ class ObjectStore:
             f.write(data)
         os.replace(tmp, path)  # atomic publish, like S3 PUT visibility
         self._count(put_requests=1, bytes_written=len(data))
-        self._simulate(len(data))
+        self._simulate(len(data), mult=decision.spike_mult)
 
     def put_if(self, key: str, data: bytes, expected: Optional[bytes]) -> bool:
         """Conditional put (compare-and-swap), like S3's If-Match /
@@ -100,7 +127,8 @@ class ObjectStore:
         lost race is detected and retried instead of silently dropping the
         other committer's snapshot.
         """
-        path = self._path(key)
+        decision = self._intercept("put_if", key)  # fault fires pre-write,
+        path = self._path(key)                     # like a throttled request
         with self._cas_lock:
             try:
                 with open(path, "rb") as f:
@@ -116,23 +144,32 @@ class ObjectStore:
                 f.write(data)
             os.replace(tmp, path)
         self._count(put_requests=1, bytes_written=len(data))
-        self._simulate(len(data))
+        self._simulate(len(data), mult=decision.spike_mult)
         return True
 
     def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        decision = self._intercept("get", key)
         path = self._path(key)
-        with open(path, "rb") as f:
-            if offset < 0:  # suffix read, like HTTP Range: bytes=-N
-                f.seek(offset, os.SEEK_END)
-            else:
-                f.seek(offset)
-            data = f.read() if length is None else f.read(length)
+        try:
+            with open(path, "rb") as f:
+                if offset < 0:  # suffix read, like HTTP Range: bytes=-N
+                    f.seek(offset, os.SEEK_END)
+                else:
+                    f.seek(offset)
+                data = f.read() if length is None else f.read(length)
+        except (FileNotFoundError, IsADirectoryError, NotADirectoryError) as e:
+            raise MissingObjectError("object not found", key=key) from e
+        if decision.torn and self.faults is not None:
+            data = self.faults.tear(data)
         self._count(get_requests=1, bytes_read=len(data))
-        self._simulate(len(data))
+        self._simulate(len(data), mult=decision.spike_mult)
         return data
 
     def size(self, key: str) -> int:
-        return os.path.getsize(self._path(key))
+        try:
+            return os.path.getsize(self._path(key))
+        except OSError as e:
+            raise MissingObjectError("object not found", key=key) from e
 
     def exists(self, key: str) -> bool:
         return os.path.exists(self._path(key))

@@ -1,0 +1,195 @@
+"""Typed retry with exponential backoff + decorrelated jitter (DESIGN.md §11).
+
+Every lake read the engine issues flows through here — the column-file
+readers, the table metadata layer, the cache manager's chunk fetches and
+the topology loaders all call :func:`lake_get` (or wrap their own attempt
+in :meth:`RetryPolicy.call`) instead of raw ``ObjectStore.get``:
+
+- only :class:`~repro.errors.TransientLakeError` retries (throttles,
+  connection resets, short/torn reads detected against the expected byte
+  count); :class:`~repro.errors.MissingObjectError` and
+  :class:`~repro.errors.LakeCorruptionError` fail fast, carrying the key
+  and the trace of any transient attempts that preceded them;
+- backoff is exponential with *decorrelated jitter* (AWS-style:
+  ``sleep = min(cap, uniform(base, 3 * prev))``) from a seeded RNG, so
+  retry storms desynchronize instead of thundering in lockstep;
+- attempts are budget-capped (``retry=<attempts>`` perf flag, default 5;
+  flag off = single attempt, the fail-fast parity baseline) and
+  **deadline-aware**: a caller-supplied monotonic deadline (the query's
+  ``ExecOptions.timeout_s`` budget) is never slept past — an exhausted
+  deadline surfaces as :class:`~repro.errors.QueryTimeoutError`, composing
+  with the executor's stage-boundary checks.
+
+Module-level stats (the default policy's) feed the server's ``health()``
+snapshot: attempts, retries, give-ups, time slept.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Callable, Optional, TypeVar
+
+from repro import perf_flags
+from repro.errors import (
+    LakeCorruptionError,
+    MissingObjectError,
+    QueryTimeoutError,
+    TransientLakeError,
+)
+
+R = TypeVar("R")
+
+
+class RetryPolicy:
+    """Budget-capped, deadline-aware retry for transient lake faults."""
+
+    def __init__(self, max_attempts: int = 5, base_s: float = 0.002,
+                 cap_s: float = 0.050, seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.max_attempts = max(1, int(max_attempts))
+        self.base_s = base_s
+        self.cap_s = cap_s
+        self._sleep = sleep
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.stats = {"calls": 0, "attempts": 0, "retries": 0, "giveups": 0,
+                      "fatal": 0, "deadline_aborts": 0, "slept_s": 0.0}
+
+    def _count(self, **deltas) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                self.stats[k] += v
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self.stats)
+
+    def call(self, fn: Callable[[], R], *, key: Optional[str] = None,
+             deadline: Optional[float] = None) -> R:
+        """Run ``fn`` with retries on transient faults.
+
+        ``deadline`` is a ``time.monotonic()`` instant: backoff sleeps are
+        clipped to it and an attempt is never *started* after it passes
+        (the attempt in flight when it expires still completes — reads are
+        not cancelled mid-flight, mirroring the executor's stage-boundary
+        timeout contract).
+        """
+        self._count(calls=1)
+        trace: list[str] = []
+        prev_sleep = self.base_s
+        last: Optional[TransientLakeError] = None
+        for attempt in range(1, self.max_attempts + 1):
+            self._count(attempts=1)
+            try:
+                return fn()
+            except (MissingObjectError, LakeCorruptionError) as e:
+                # fatal: surface immediately, with the transient attempts
+                # that preceded it on record
+                e.attempt_trace = trace + [f"#{attempt} {type(e).__name__}"]
+                self._count(fatal=1)
+                raise
+            except TransientLakeError as e:
+                last = e
+                trace.append(f"#{attempt} {type(e).__name__}: "
+                             f"{str(e.args[0] if e.args else e)[:80]}")
+            if attempt >= self.max_attempts:
+                break
+            now = time.monotonic()
+            if deadline is not None and now >= deadline:
+                self._count(deadline_aborts=1)
+                raise QueryTimeoutError(
+                    f"deadline exhausted retrying {key or 'lake read'} "
+                    f"({attempt} attempts: " + " | ".join(trace) + ")"
+                ) from last
+            with self._lock:
+                sleep_s = min(self.cap_s,
+                              self._rng.uniform(self.base_s, 3 * prev_sleep))
+            prev_sleep = sleep_s
+            if deadline is not None:
+                sleep_s = min(sleep_s, max(0.0, deadline - now))
+            self._count(retries=1, slept_s=sleep_s)
+            self._sleep(sleep_s)
+        self._count(giveups=1)
+        raise TransientLakeError(
+            f"retry budget exhausted ({self.max_attempts} attempts)",
+            key=key, attempts=trace,
+        ) from last
+
+
+# the shared default policy: rebuilt when the ``retry`` flag changes (tests
+# flip REPRO_OPTS mid-process), shared otherwise so its stats accumulate
+# engine-wide for the health snapshot
+_default: Optional[RetryPolicy] = None
+_default_sig: Optional[tuple] = None
+_default_lock = threading.Lock()
+
+
+def default_policy() -> RetryPolicy:
+    attempts = (int(perf_flags.value("retry", 5))
+                if perf_flags.enabled("retry") else 1)
+    sig = (attempts,)
+    global _default, _default_sig
+    with _default_lock:
+        if _default is None or _default_sig != sig:
+            _default = RetryPolicy(max_attempts=attempts)
+            _default_sig = sig
+        return _default
+
+
+def retry_stats() -> dict:
+    """The default policy's counters (health snapshot / benchmarks)."""
+    return default_policy().snapshot()
+
+
+def lake_get(store, key: str, offset: int = 0, length: Optional[int] = None,
+             *, expect_len: Optional[int] = None,
+             policy: Optional[RetryPolicy] = None,
+             deadline: Optional[float] = None) -> bytes:
+    """``store.get`` with retry + short-read (torn-read) detection.
+
+    When the expected byte count is known (``length``, or ``expect_len``
+    for suffix reads), a response with fewer bytes is classified as a
+    :class:`TransientLakeError` — a torn read of an immutable object is
+    retryable by definition — so truncated bytes can never flow onward
+    into decoders or the cache.
+    """
+    pol = policy or default_policy()
+    want = expect_len if expect_len is not None else length
+
+    def attempt() -> bytes:
+        data = store.get(key, offset=offset, length=length)
+        if want is not None and len(data) != want:
+            raise TransientLakeError(
+                f"short read: {len(data)}/{want} bytes", key=key)
+        return data
+
+    return pol.call(attempt, key=key, deadline=deadline)
+
+
+def lake_get_json(store, key: str, *, policy: Optional[RetryPolicy] = None,
+                  deadline: Optional[float] = None):
+    """Fetch + JSON-decode a metadata object with retry.
+
+    Undecodable JSON is classified *transient*: for an object the format
+    guarantees was written atomically, garbage bytes mean a torn response,
+    and the retry either heals it or surfaces the exhausted budget with the
+    full attempt trace (the "torn manifest" failure mode)."""
+    import json
+
+    pol = policy or default_policy()
+
+    def attempt():
+        data = store.get(key)
+        try:
+            return json.loads(data.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError) as e:
+            raise TransientLakeError(
+                f"torn metadata read ({type(e).__name__})", key=key) from e
+
+    return pol.call(attempt, key=key, deadline=deadline)
+
+
+__all__ = ["RetryPolicy", "default_policy", "retry_stats", "lake_get",
+           "lake_get_json"]

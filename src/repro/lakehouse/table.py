@@ -33,9 +33,11 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.errors import TransientLakeError
 from repro.lakehouse.columnfile import ColumnFileMeta, read_footer, write_column_file
 from repro.lakehouse.encoding import Encoding
 from repro.lakehouse.objectstore import ObjectStore
+from repro.lakehouse.retry import default_policy, lake_get_json
 
 
 @dataclasses.dataclass
@@ -118,10 +120,22 @@ class LakeTable:
         return self.store.exists(self._version_key())
 
     def current_version(self) -> int:
-        return int(self.store.get(self._version_key()).decode())
+        # metadata reads retry transient faults, and an unparsable pointer
+        # is classified transient too (the VERSION object is written
+        # atomically, so garbage means a torn response — see retry.py)
+        key = self._version_key()
+
+        def attempt() -> int:
+            raw = self.store.get(key)
+            try:
+                return int(raw.decode())
+            except (ValueError, UnicodeDecodeError) as e:
+                raise TransientLakeError("torn VERSION read", key=key) from e
+
+        return default_policy().call(attempt, key=key)
 
     def _read_meta(self) -> dict:
-        return json.loads(self.store.get(self._meta_key(self.current_version())))
+        return lake_get_json(self.store, self._meta_key(self.current_version()))
 
     def schema(self) -> TableSchema:
         return TableSchema.from_json(self._read_meta()["schema"])
@@ -141,7 +155,7 @@ class LakeTable:
             snap = self.current_snapshot()
         else:
             snap = next(s for s in self.snapshots() if s.snapshot_id == snapshot_id)
-        manifest = json.loads(self.store.get(snap.manifest_key))
+        manifest = lake_get_json(self.store, snap.manifest_key)
         return list(manifest["files"])
 
     def file_metas(self) -> list[ColumnFileMeta]:
@@ -207,7 +221,7 @@ class LakeTable:
         token = uuid.uuid4().hex[:8]
         for _ in range(self._COMMIT_RETRIES):
             version = self.current_version()
-            meta = json.loads(self.store.get(self._meta_key(version)))
+            meta = lake_get_json(self.store, self._meta_key(version))
             snap = build(meta, token)
             payload = json.dumps(meta).encode()
             if not self.store.put_if(self._meta_key(version + 1), payload, expected=None):
@@ -257,7 +271,7 @@ class LakeTable:
                 base_rows = 0
             else:
                 prev = Snapshot(**meta["snapshots"][-1])
-                manifest = json.loads(self.store.get(prev.manifest_key))
+                manifest = lake_get_json(self.store, prev.manifest_key)
                 base_files = list(manifest["files"])
                 base_rows = prev.n_rows
             snapshot_id = len(meta["snapshots"]) + 1
@@ -292,7 +306,7 @@ class LakeTable:
             if not meta["snapshots"]:
                 raise RuntimeError(f"table {self.name} has no snapshots")
             prev = Snapshot(**meta["snapshots"][-1])
-            manifest = json.loads(self.store.get(prev.manifest_key))
+            manifest = lake_get_json(self.store, prev.manifest_key)
             files = [f for f in manifest["files"] if f != key]
             snapshot_id = len(meta["snapshots"]) + 1
             manifest_key = self._manifest_key(snapshot_id, tok)

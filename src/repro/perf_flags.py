@@ -53,6 +53,20 @@ record exact before/after deltas:
                    ``ServerConfig.batch_window_ms`` wins over the flag.
                    Off = the per-request parity path.
 
+- ``retry``      — typed retry with backoff on every lake read
+                   (DESIGN.md §11): transient store faults (throttles,
+                   torn/short reads) retry with exponential backoff +
+                   decorrelated jitter instead of failing the query.
+                   ``retry=<attempts>`` overrides the attempt budget
+                   (default 5).  Off = fail-fast single attempt.
+
+- ``chaos``      — seeded fault injection on the object store (OFF by
+                   default: a test/benchmark mode, not an optimization).
+                   ``chaos=<rate>`` injects transient faults at the given
+                   rate (default 0.05) on lake-table reads, plus torn reads
+                   at rate/2 and latency spikes at 2x rate, from seed 0
+                   (``StoreConfig.fault_seed``/``faults`` override in code).
+
 Default: all on.  ``REPRO_OPTS=""`` disables all (baseline);
 ``REPRO_OPTS="tri,chunkloss"`` enables a subset.
 
@@ -72,10 +86,10 @@ import os
 import warnings
 
 _ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr",
-        "pipe", "refresh", "batch")
+        "pipe", "refresh", "batch", "retry")
 
-# recognized but not default-on (capacity trades etc.) — never warned about
-_KNOWN_OFF = ("kv_int8",)
+# recognized but not default-on (capacity trades, chaos modes) — never warned
+_KNOWN_OFF = ("kv_int8", "chaos")
 
 # REPRO_OPTS strings already checked for typos (warn once per distinct value)
 _checked: set = set()

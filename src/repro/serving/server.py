@@ -49,6 +49,18 @@ already in flight keep draining on the epoch they pinned at start.  The
 interval comes from ``ServerConfig.refresh_interval_s`` or, when unset, the
 ``refresh`` perf flag (``refresh=<seconds>``).
 
+**Degrade-to-stale (DESIGN.md §11).**  The refresher carries a circuit
+breaker: failed advances back off exponentially and record ``last_error``;
+``breaker_threshold`` *consecutive* failures open the breaker.  Open means
+the server stops paying for doomed refresh attempts and keeps serving the
+last good pinned epoch — results stay bit-correct for that snapshot, with
+``QueryResult.staleness_s`` honestly growing and ``degraded=True`` stamped
+on both the serving envelope and the engine result.  After
+``breaker_cooldown_s`` the refresher goes *half-open*: one probe advance;
+success closes the breaker (degraded stamping stops), failure re-opens it.
+``health()`` snapshots the whole picture: breaker state, last advance
+error, refresh/retry/hedge counters, epoch freshness, queue depth.
+
 **Installed queries (DESIGN.md §8).**  The server fronts a
 :class:`~repro.gsql.session.GraphSession`: any query *installed* on the
 session is servable by name with bound parameters —
@@ -121,6 +133,12 @@ class ServerConfig:
     tenant_quota: Optional[int] = None
     # completed-but-uncollected results are evicted after this many seconds
     result_ttl_s: float = 60.0
+    # refresh circuit breaker (DESIGN.md §11): this many *consecutive*
+    # failed advances open it ...
+    breaker_threshold: int = 3
+    # ... and after this long open, one half-open probe decides whether it
+    # closes (success) or re-opens (failure)
+    breaker_cooldown_s: float = 5.0
 
 
 @dataclasses.dataclass
@@ -131,6 +149,10 @@ class QueryResult:
     error: Optional[str]
     queued_s: float
     service_s: float
+    # True when the refresh breaker was non-closed at execution: the result
+    # was served from the last good pinned epoch (stale but bit-correct for
+    # that snapshot); the engine-level value carries the same stamp
+    degraded: bool = False
 
 
 @dataclasses.dataclass
@@ -205,9 +227,12 @@ class QueryServer:
         ]
         for w in self._workers:
             w.start()
-        # background epoch refresher (DESIGN.md §7)
+        # background epoch refresher (DESIGN.md §7) + circuit breaker (§11)
         self.refresh_stats = {"ticks": 0, "advanced": 0, "errors": 0,
-                              "last_epoch": -1}
+                              "last_epoch": -1, "last_error": None,
+                              "consecutive_failures": 0, "breaker_opens": 0,
+                              "half_open_probes": 0, "breaker_closes": 0}
+        self._breaker_state = "closed"   # "closed" | "open" | "half_open"
         self._refresh_stop = threading.Event()
         self._refresher: Optional[threading.Thread] = None
         interval = self.config.refresh_interval_s
@@ -304,16 +329,90 @@ class QueryServer:
 
     def _refresh_loop(self, interval_s: float) -> None:
         """Periodically advance the engine's epoch: in-flight queries drain
-        on their pinned epoch, the next query picks up the new one."""
-        while not self._refresh_stop.wait(interval_s):
+        on their pinned epoch, the next query picks up the new one.
+
+        Failure handling (DESIGN.md §11): each failed tick records
+        ``last_error`` and doubles the wait (exponential backoff, capped at
+        ``breaker_cooldown_s``-or-32x) instead of hammering a broken lake at
+        full cadence.  ``breaker_threshold`` consecutive failures open the
+        circuit breaker: serving degrades to the last good pinned epoch
+        (results stamped ``degraded``), and after ``breaker_cooldown_s``
+        one half-open probe advance decides re-open vs close.
+        """
+        cfg = self.config
+        wait_s = interval_s
+        while not self._refresh_stop.wait(wait_s):
+            with self._lock:
+                if self._breaker_state == "open":
+                    # cooldown elapsed (wait_s was the cooldown): probe
+                    self._breaker_state = "half_open"
+                    self.refresh_stats["half_open_probes"] += 1
             try:
                 report = self.engine.advance()
+            except Exception as e:  # queries stay on the pinned epoch
+                with self._lock:
+                    self.refresh_stats["errors"] += 1
+                    self.refresh_stats["last_error"] = f"{type(e).__name__}: {e}"
+                    self.refresh_stats["consecutive_failures"] += 1
+                    n = self.refresh_stats["consecutive_failures"]
+                    if (self._breaker_state == "half_open"
+                            or n >= cfg.breaker_threshold):
+                        if self._breaker_state != "open":
+                            if self._breaker_state == "closed":
+                                self.refresh_stats["breaker_opens"] += 1
+                            self._breaker_state = "open"
+                        wait_s = cfg.breaker_cooldown_s
+                    else:
+                        wait_s = min(interval_s * (2 ** n),
+                                     max(cfg.breaker_cooldown_s,
+                                         interval_s * 32))
+                continue
+            with self._lock:
                 self.refresh_stats["ticks"] += 1
                 self.refresh_stats["last_epoch"] = report.to_epoch
+                self.refresh_stats["consecutive_failures"] = 0
+                if self._breaker_state != "closed":
+                    self._breaker_state = "closed"
+                    self.refresh_stats["breaker_closes"] += 1
+                wait_s = interval_s
                 if report.changed:   # last: pollers key off this counter
                     self.refresh_stats["advanced"] += 1
-            except Exception:  # keep refreshing; queries stay on the old epoch
-                self.refresh_stats["errors"] += 1
+
+    def _stamp_degraded(self, value) -> bool:
+        """True (and stamp ``value.degraded``) when the refresh breaker is
+        non-closed: the result is served from the last good pinned epoch."""
+        with self._lock:
+            deg = self._breaker_state != "closed"
+        if deg and value is not None and hasattr(value, "degraded"):
+            value.degraded = True
+        return deg
+
+    def health(self) -> dict:
+        """One self-describing snapshot of the server's resilience state:
+        breaker + refresh history, epoch freshness, queue depth, shed/serve
+        counters, and the lake-I/O retry / hedge / fault-injection counters
+        (DESIGN.md §11)."""
+        from repro.lakehouse.retry import retry_stats
+        with self._lock:
+            out = {
+                "breaker": self._breaker_state,
+                "refresh": dict(self.refresh_stats),
+                "stats": dict(self.stats),
+                "queue_depth": self._q.qsize(),
+            }
+        epochs = getattr(self.engine, "epochs", None)
+        ep = epochs.current() if epochs is not None else None
+        if ep is not None:
+            out["epoch_id"] = ep.epoch_id
+            out["staleness_s"] = ep.staleness_s()
+        out["retry"] = retry_stats()
+        pool = getattr(self.engine, "pool", None)
+        if pool is not None:
+            out["io_pool"] = dict(pool.stats)
+        store = getattr(self.engine, "store", None)
+        if store is not None and getattr(store, "faults", None) is not None:
+            out["faults"] = store.faults.snapshot()
+        return out
 
     # -- scheduler ----------------------------------------------------------------
 
@@ -415,10 +514,12 @@ class QueryServer:
             self._tenant_inflight[tenant] = held - 1
 
     def _complete(self, req: _Request, ok: bool, value, err: Optional[str],
-                  t_start: float, t_end: float) -> None:
+                  t_start: float, t_end: float,
+                  degraded: bool = False) -> None:
         res = QueryResult(
             request_id=req.rid, ok=ok, value=value, error=err,
             queued_s=t_start - req.t_submit, service_s=t_end - t_start,
+            degraded=degraded,
         )
         with self._lock:
             self._results[req.rid] = res
@@ -489,9 +590,11 @@ class QueryServer:
             ok, err = True, None
         except Exception as e:  # report (typed), don't kill the worker
             value, ok, err = None, False, f"{type(e).__name__}: {e}"
+        deg = self._stamp_degraded(value if ok else None)
         with self._lock:
             self.stats["solo_requests"] += 1
-        self._complete(req, ok, value, err, t_start, time.perf_counter())
+        self._complete(req, ok, value, err, t_start, time.perf_counter(),
+                       degraded=deg)
 
     def _run_lookup(self, req: _Request) -> None:
         """One point-lookup request: session fast path, no compile, no
@@ -506,11 +609,13 @@ class QueryServer:
             ok, err = True, None
         except Exception as e:  # report (typed), don't kill the worker
             value, ok, err = None, False, f"{type(e).__name__}: {e}"
+        deg = self._stamp_degraded(value if ok else None)
         with self._lock:
             self.stats["lookup_requests"] += 1
             if ok and value is not None and value.tier in ("green", "yellow"):
                 self.stats[f"route_{value.tier}"] += 1
-        self._complete(req, ok, value, err, t_start, time.perf_counter())
+        self._complete(req, ok, value, err, t_start, time.perf_counter(),
+                       degraded=deg)
 
     def _run_shared(self, reqs: list[_Request]) -> None:
         """One shared-scan pass for a group of same-template riders."""
@@ -533,7 +638,9 @@ class QueryServer:
                 self.stats["max_batch_riders"], len(live))
         t_end = time.perf_counter()
         for req, value, err in zip(live, values, errs):
-            self._complete(req, err is None, value, err, t_start, t_end)
+            deg = self._stamp_degraded(value if err is None else None)
+            self._complete(req, err is None, value, err, t_start, t_end,
+                           degraded=deg)
 
     def _worker(self) -> None:
         while True:

@@ -115,6 +115,78 @@ def test_concurrent_misses_single_flight(store):
     assert len({id(u) for u in units}) == 1  # everyone got the same unit
 
 
+class _FlakyStore:
+    """Delegating store whose first ``fail_times`` gets raise a *fatal*
+    typed error (fatal so the retry layer can't heal it before it reaches
+    the single-flight machinery under test)."""
+
+    def __init__(self, inner, fail_times=1):
+        self._inner = inner
+        self._lock = threading.Lock()
+        self.remaining = fail_times
+
+    def get(self, key, *a, **k):
+        with self._lock:
+            if self.remaining > 0:
+                self.remaining -= 1
+                from repro.errors import MissingObjectError
+                raise MissingObjectError("injected load failure", key=key)
+        return self._inner.get(key, *a, **k)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_single_flight_loader_failure_releases_waiters(store):
+    """ISSUE 8 satellite: when the loading thread's fetch raises, racing
+    waiters must receive the error or retry the load themselves — never
+    hang on the per-key event, and never read a poisoned cached unit."""
+    from repro.errors import MissingObjectError
+
+    meta = _file(store, "t/f0.col")
+    flaky = _FlakyStore(store, fail_times=1)
+    mgr = CacheManager(flaky)
+    ref = ChunkRef("t/f0.col", "c0", 0)
+    barrier = threading.Barrier(8)
+    outcomes = []
+    out_lock = threading.Lock()
+    rows = np.arange(128, dtype=np.int64)
+
+    def worker():
+        barrier.wait()
+        try:
+            u = mgr.get_unit(ref, meta, "vertex")
+            vals, _ = mgr.read_unit(u, rows)
+            with out_lock:
+                outcomes.append(("ok", vals))
+        except MissingObjectError as e:
+            with out_lock:
+                outcomes.append(("err", e))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "waiter hung on a failed single-flight load"
+
+    # exactly the one injected failure surfaced — to whichever thread held
+    # the loading slot — and every other racer retried through to success
+    errs = [o for o in outcomes if o[0] == "err"]
+    oks = [o for o in outcomes if o[0] == "ok"]
+    assert len(errs) == 1 and len(oks) == 7, outcomes
+    expected = oks[0][1]
+    for _, vals in oks[1:]:
+        np.testing.assert_array_equal(vals, expected)
+    # no stuck in-flight marker, no poisoned unit: a fresh caller succeeds
+    assert not mgr._loading
+    u = mgr.get_unit(ref, meta, "vertex")
+    vals, _ = mgr.read_unit(u, rows)
+    np.testing.assert_array_equal(vals, expected)
+    # the failed attempt never counted as a lake fetch or admitted a unit
+    assert mgr.stats["lake_fetches"] == 1
+
+
 def test_get_units_batch_dedup_and_pool(store):
     meta = _file(store, "t/f0.col")
     mgr = CacheManager(store)

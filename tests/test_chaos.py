@@ -1,0 +1,486 @@
+"""Chaos suite (DESIGN.md §11): seeded fault injection on the object store,
+typed retry/backoff, error-aware hedging, and degrade-to-stale serving.
+
+The core contract under test: with a seeded 5-10% transient + torn + spike
+fault schedule on lake-table reads, the full query / batch / lookup /
+advance matrix completes with **zero user-visible failures and bit-parity**
+against fault-free runs — and the counters prove the faults actually fired.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import GraphLakeEngine
+from repro.data.ldbc import generate_ldbc
+from repro.errors import (
+    LakeCorruptionError,
+    MissingObjectError,
+    QueryTimeoutError,
+    ReproError,
+    TransientLakeError,
+)
+from repro.gsql.session import GraphSession
+from repro.lakehouse.faults import FaultInjector, FaultRule, transient_chaos
+from repro.lakehouse.io_pool import IOPool
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.retry import RetryPolicy, default_policy, lake_get
+from repro.lakehouse.table import LakeCatalog
+from repro.serving.server import QueryServer, ServerConfig
+
+
+@pytest.fixture
+def lake_root(tmp_path):
+    root = str(tmp_path / "lake")
+    store = ObjectStore(StoreConfig(root=root))
+    ldbc = generate_ldbc(store, scale_factor=0.004, n_files=2,
+                         row_group_rows=256)
+    return root, ldbc
+
+
+def _chaos_store(root, rate=0.08, seed=7):
+    """A second handle on the same lake bytes, reads faulted on tables/."""
+    return ObjectStore(StoreConfig(
+        root=root, faults=transient_chaos(rate, seed=seed)))
+
+
+def _session(store, schema):
+    eng = GraphLakeEngine(store, schema, materialize_topology=False)
+    eng.startup()
+    return GraphSession(eng)
+
+
+def _assert_parity(a, b):
+    np.testing.assert_array_equal(a.vset.ids(), b.vset.ids())
+    assert a.n_edges_scanned == b.n_edges_scanned
+    assert set(a.accumulators) == set(b.accumulators)
+    for k in a.accumulators:
+        np.testing.assert_array_equal(a.accumulators[k], b.accumulators[k])
+
+
+# ---------------------------------------------------------------------------
+# the injector itself: determinism, counters, classification
+# ---------------------------------------------------------------------------
+
+def _schedule(inj, n=200):
+    out = []
+    for i in range(n):
+        try:
+            d = inj.intercept("get", f"tables/t/part-{i % 5}")
+            out.append(("ok", d.torn, d.spike_mult))
+        except TransientLakeError:
+            out.append(("transient", False, 1.0))
+        except MissingObjectError:
+            out.append(("missing", False, 1.0))
+    return out
+
+
+def test_injector_deterministic_per_seed():
+    rules = [FaultRule(prefix="tables/", transient_rate=0.1, torn_rate=0.05,
+                       spike_rate=0.1, missing_rate=0.02)]
+    a = _schedule(FaultInjector(rules, seed=42))
+    b = _schedule(FaultInjector(rules, seed=42))
+    c = _schedule(FaultInjector(rules, seed=43))
+    assert a == b
+    assert a != c  # different seed, different schedule
+    inj = FaultInjector(rules, seed=42)
+    _schedule(inj)
+    snap = inj.snapshot()
+    assert snap["ops_seen"] == 200
+    # one fault max per op: classes partition the fired count
+    assert inj.fired() == sum(snap[c] for c in
+                              ("transient", "spike", "torn", "missing"))
+    assert inj.fired() > 0
+
+
+def test_injector_prefix_scoping_and_cap():
+    inj = FaultInjector([FaultRule(prefix="tables/", transient_rate=1.0,
+                                   max_faults=3)], seed=0)
+    # off-prefix keys never fault
+    for _ in range(10):
+        inj.intercept("get", "topology/MANIFEST.json")
+    # on-prefix faults stop at the cap
+    fired = 0
+    for _ in range(10):
+        try:
+            inj.intercept("get", "tables/t/x")
+        except TransientLakeError:
+            fired += 1
+    assert fired == 3 == inj.fired("transient")
+
+
+def test_error_taxonomy_bases():
+    t = TransientLakeError("x", key="k")
+    m = MissingObjectError("x", key="k")
+    c = LakeCorruptionError("x", key="k")
+    assert isinstance(t, ConnectionError) and isinstance(t, ReproError)
+    assert isinstance(m, FileNotFoundError) and isinstance(m, ReproError)
+    assert isinstance(c, ValueError) and isinstance(c, ReproError)
+    assert "[key=k]" in str(t)
+
+
+def test_store_maps_raw_filenotfound(tmp_path):
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "s")))
+    with pytest.raises(MissingObjectError) as ei:
+        store.get("tables/nope")
+    assert isinstance(ei.value, FileNotFoundError)
+    assert ei.value.key == "tables/nope"
+    with pytest.raises(MissingObjectError):
+        store.size("tables/nope")
+
+
+# ---------------------------------------------------------------------------
+# retry policy: budget, jitter trace, deadline, fatal fail-fast
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_exhaustion_carries_trace():
+    pol = RetryPolicy(max_attempts=4, base_s=0.0001, cap_s=0.0002)
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise TransientLakeError("throttled", key="tables/k")
+
+    with pytest.raises(TransientLakeError) as ei:
+        pol.call(always_fails, key="tables/k")
+    assert len(calls) == 4
+    assert len(ei.value.attempt_trace) == 4
+    assert "retry budget exhausted" in str(ei.value)
+    s = pol.snapshot()
+    assert s["giveups"] == 1 and s["retries"] == 3 and s["attempts"] == 4
+
+
+def test_retry_heals_transient():
+    pol = RetryPolicy(max_attempts=5, base_s=0.0001, cap_s=0.0002)
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] < 3:
+            raise TransientLakeError("reset")
+        return b"payload"
+
+    assert pol.call(flaky) == b"payload"
+    assert pol.snapshot()["retries"] == 2
+
+
+def test_retry_fatal_fails_fast_with_trace():
+    pol = RetryPolicy(max_attempts=5, base_s=0.0001, cap_s=0.0002)
+    state = {"n": 0}
+
+    def transient_then_fatal():
+        state["n"] += 1
+        if state["n"] == 1:
+            raise TransientLakeError("reset")
+        raise MissingObjectError("gone", key="tables/k")
+
+    with pytest.raises(MissingObjectError) as ei:
+        pol.call(transient_then_fatal, key="tables/k")
+    assert state["n"] == 2  # no retries after the fatal
+    # the fatal error records the transient attempt that preceded it
+    assert len(ei.value.attempt_trace) == 2
+    assert pol.snapshot()["fatal"] == 1
+
+
+def test_retry_deadline_composes_to_timeout():
+    pol = RetryPolicy(max_attempts=50, base_s=0.005, cap_s=0.01)
+
+    def always_fails():
+        raise TransientLakeError("throttled")
+
+    t0 = time.monotonic()
+    with pytest.raises(QueryTimeoutError):
+        pol.call(always_fails, deadline=time.monotonic() + 0.03)
+    assert time.monotonic() - t0 < 1.0  # gave up at the deadline, not at 50
+    assert pol.snapshot()["deadline_aborts"] == 1
+
+
+def test_lake_get_short_read_is_transient(tmp_path):
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "s")))
+    store.put("tables/t/a", b"0123456789")
+    state = {"n": 0}
+    real_get = store.get
+
+    def torn_once(key, offset=0, length=None):
+        state["n"] += 1
+        data = real_get(key, offset=offset, length=length)
+        return data[:-3] if state["n"] == 1 else data
+
+    store.get = torn_once
+    pol = RetryPolicy(max_attempts=3, base_s=0.0001, cap_s=0.0002)
+    assert lake_get(store, "tables/t/a", length=10, policy=pol) == b"0123456789"
+    assert pol.snapshot()["retries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# corruption: durable bad bytes are fatal, typed, not retried forever
+# ---------------------------------------------------------------------------
+
+def test_corrupt_magic_is_fatal(tmp_path):
+    from repro.lakehouse.columnfile import read_footer, write_column_file
+
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "s")))
+    key = "tables/t/f.col"
+    write_column_file(store, key, {"c": np.arange(64, dtype=np.int64)})
+    blob = store.get(key)
+    store.put(key, blob[:-4] + b"XXXX")  # stomp the magic, length intact
+    with pytest.raises(LakeCorruptionError) as ei:
+        read_footer(store, key)
+    assert ei.value.key == key
+
+
+def test_corrupt_footer_is_fatal(tmp_path):
+    from repro.lakehouse.columnfile import read_footer, write_column_file
+    import struct
+
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "s")))
+    key = "tables/t/f.col"
+    write_column_file(store, key, {"c": np.arange(64, dtype=np.int64)})
+    garbage = b"\xff" * 32
+    store.put(key, garbage + struct.pack("<I", len(garbage)) + b"RPF1")
+    with pytest.raises(LakeCorruptionError):
+        read_footer(store, key)
+
+
+# ---------------------------------------------------------------------------
+# hedged reads: failed primary promotes the backup immediately
+# ---------------------------------------------------------------------------
+
+def test_hedge_promotes_backup_on_failed_primary():
+    """ISSUE 8 satellite: a primary failing *before* ``backup_after_s``
+    must not be returned as the winner — the backup launches immediately
+    and its success is the result (no 10 s wait, no leaked exception)."""
+    state = {"n": 0}
+    lock = threading.Lock()
+
+    def fail_once():
+        with lock:
+            state["n"] += 1
+            first = state["n"] == 1
+        if first:
+            raise TransientLakeError("primary throttled")
+        return b"ok"
+
+    with IOPool(n_threads=4) as pool:
+        t0 = time.monotonic()
+        out = pool.fetch_with_backup(fail_once, backup_after_s=10.0)
+        dt = time.monotonic() - t0
+    assert out == b"ok"
+    assert dt < 5.0  # did not wait out the straggler deadline
+    assert pool.stats["hedged_errors"] == 1
+    assert pool.stats["backup_fetches"] == 1
+    assert pool.stats["backup_wins"] == 1
+
+
+def test_hedge_both_fail_raises_primary_error():
+    def always_fails():
+        raise TransientLakeError("down")
+
+    with IOPool(n_threads=4) as pool:
+        with pytest.raises(TransientLakeError):
+            pool.fetch_with_backup(always_fails, backup_after_s=0.01)
+    assert pool.stats["backup_fetches"] == 1
+
+
+def test_hedge_slow_primary_still_wins_backup():
+    """The original straggler path: primary sleeps past the deadline, the
+    backup (fast) wins; the abandoned primary's result is consumed."""
+    state = {"n": 0}
+    lock = threading.Lock()
+
+    def slow_then_fast():
+        with lock:
+            state["n"] += 1
+            first = state["n"] == 1
+        if first:
+            time.sleep(0.3)
+        return b"v"
+
+    with IOPool(n_threads=4) as pool:
+        t0 = time.monotonic()
+        assert pool.fetch_with_backup(slow_then_fast, backup_after_s=0.02) == b"v"
+        assert time.monotonic() - t0 < 0.3
+    assert pool.stats["backup_wins"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the matrix: query / batch / lookup / advance under seeded chaos,
+# bit-parity with the fault-free run
+# ---------------------------------------------------------------------------
+
+QUERIES = {
+    "by_id": "SELECT p FROM Person:p WHERE p.id == $pid",            # lookup
+    "fan": ("SELECT p FROM Person:p <-(HasCreator:e)- Comment:c "
+            "WHERE p.id == $pid ACCUM p.@deg += 1"),                 # lookup
+    "scan": ("SELECT c FROM Tag:t -(HasTag:e)- Comment:c "
+             "WHERE t.name == $tag"),                                # full
+}
+
+
+def _install_all(session):
+    for name, text in QUERIES.items():
+        session.install(name, text)
+
+
+def test_matrix_bit_parity_under_chaos(lake_root):
+    root, ldbc = lake_root
+    clean = _session(ObjectStore(StoreConfig(root=root)), ldbc.schema)
+    chaos_store = _chaos_store(root, rate=0.08, seed=7)
+    retries_before = default_policy().snapshot()["retries"]
+    chaos = _session(chaos_store, ldbc.schema)
+    try:
+        _install_all(clean)
+        _install_all(chaos)
+        pid = int(clean.engine.topology.idm.raw_ids("Person")[0])
+
+        # solo queries (scan hits a real tag so parity is on a non-empty set)
+        assert clean.query("scan", tag="Music").vset.size() > 0
+        for name, params in [("by_id", {"pid": pid}), ("fan", {"pid": pid}),
+                             ("scan", {"tag": "Music"})]:
+            _assert_parity(chaos.query(name, **params),
+                           clean.query(name, **params))
+        # shared-scan batch
+        batch_params = [{"tag": t}
+                        for t in ("Music", "Sports", "Politics", "Movies")]
+        for a, b in zip(chaos.query_batch("scan", batch_params),
+                        clean.query_batch("scan", batch_params)):
+            _assert_parity(a, b)
+        # point-lookup fast path
+        _assert_parity(chaos.lookup("by_id", pid=pid),
+                       clean.lookup("by_id", pid=pid))
+        _assert_parity(chaos.lookup("fan", pid=pid),
+                       clean.lookup("fan", pid=pid))
+
+        # advance: commit new rows through the clean handle, advance both
+        new_cids = (np.arange(20, dtype=np.int64) + ldbc.n_comments + 1) * 10 + 3
+        lake = LakeCatalog(ObjectStore(StoreConfig(root=root)))
+        person_raw = clean.engine.topology.idm.raw_ids("Person")
+        lake.table("Comment").append_files([{
+            "id": new_cids,
+            "creationDate": np.full(20, 20230601, dtype=np.int64),
+            "length": np.arange(20, dtype=np.int64) + 1,
+            "browserUsed": np.array(["Chrome"] * 20, dtype=object),
+        }])
+        lake.table("Comment_HasCreator_Person").append_files([{
+            "src": new_cids,
+            "dst": person_raw[np.arange(20) % len(person_raw)],
+            "creationDate": np.full(20, 20230601, dtype=np.int64),
+        }])
+        assert clean.engine.advance().changed
+        assert chaos.engine.advance().changed  # advance survives the faults
+        _assert_parity(chaos.query("fan", pid=pid),
+                       clean.query("fan", pid=pid))
+
+        # the schedule actually exercised the engine: faults fired, retries
+        # healed them, and none of it surfaced
+        assert chaos_store.faults.fired() > 0, chaos_store.faults.snapshot()
+        assert default_policy().snapshot()["retries"] > retries_before
+    finally:
+        clean.engine.close()
+        chaos.engine.close()
+
+
+def test_missing_fault_surfaces_typed(lake_root):
+    """Fatal faults are NOT retried into oblivion: a missing-key fault
+    surfaces as the typed MissingObjectError immediately."""
+    root, ldbc = lake_root
+    store = ObjectStore(StoreConfig(
+        root=root,
+        faults=FaultInjector([FaultRule(prefix="tables/", missing_rate=1.0)],
+                             seed=0)))
+    with pytest.raises(MissingObjectError) as ei:
+        _session(store, ldbc.schema)
+    assert isinstance(ei.value, FileNotFoundError)
+    assert isinstance(ei.value, ReproError)
+    assert store.faults.fired("missing") == 1  # first touch, no retries
+
+
+# ---------------------------------------------------------------------------
+# degrade-to-stale serving: breaker opens, stale epoch served honestly,
+# half-open probe closes it
+# ---------------------------------------------------------------------------
+
+def _wait_until(cond, timeout_s=10.0):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def test_breaker_opens_serves_degraded_then_recovers(lake_root):
+    root, ldbc = lake_root
+    session = _session(ObjectStore(StoreConfig(root=root)), ldbc.schema)
+    _install_all(session)
+    engine = session.engine
+    pid = int(engine.topology.idm.raw_ids("Person")[0])
+    real_advance = engine.advance
+    fail = {"on": True}
+
+    def flaky_advance():
+        if fail["on"]:
+            raise TransientLakeError("lake unreachable", key="tables/...")
+        return real_advance()
+
+    engine.advance = flaky_advance
+    server = QueryServer(session, config=ServerConfig(
+        n_workers=1, refresh_interval_s=0.01,
+        breaker_threshold=2, breaker_cooldown_s=0.05))
+    try:
+        # consecutive failures open the breaker
+        assert _wait_until(lambda: server.health()["breaker"] == "open")
+        h = server.health()
+        assert h["refresh"]["consecutive_failures"] >= 2
+        assert "TransientLakeError" in h["refresh"]["last_error"]
+        assert h["refresh"]["breaker_opens"] == 1
+
+        # open breaker: results still correct, stamped degraded, honest
+        # staleness from the last good pinned epoch
+        rid = server.submit("by_id", pid=pid)
+        res = server.result(rid)
+        assert res.ok and res.degraded
+        assert res.value.degraded
+        assert res.value.epoch_id == engine.current_epoch().epoch_id
+        assert res.value.staleness_s >= 0.0
+
+        # the lookup fast path carries the stamp too
+        rid = server.submit("fan", pid=pid)
+        res = server.result(rid)
+        assert res.ok and res.degraded and res.value.degraded
+
+        # lake heals: the half-open probe closes the breaker
+        fail["on"] = False
+        assert _wait_until(lambda: server.health()["breaker"] == "closed")
+        h = server.health()
+        assert h["refresh"]["half_open_probes"] >= 1
+        assert h["refresh"]["breaker_closes"] >= 1
+        assert h["refresh"]["consecutive_failures"] == 0
+        rid = server.submit("by_id", pid=pid)
+        res = server.result(rid)
+        assert res.ok and not res.degraded and not res.value.degraded
+    finally:
+        engine.advance = real_advance
+        server.close()
+        engine.close()
+
+
+def test_health_snapshot_shape(lake_root):
+    root, ldbc = lake_root
+    session = _session(ObjectStore(StoreConfig(root=root)), ldbc.schema)
+    server = QueryServer(session, config=ServerConfig(
+        n_workers=1, refresh_interval_s=0.0))  # refresher off
+    try:
+        h = server.health()
+        assert h["breaker"] == "closed"
+        for key in ("refresh", "stats", "queue_depth", "retry",
+                    "epoch_id", "staleness_s", "io_pool"):
+            assert key in h, key
+        assert "last_error" in h["refresh"]
+        assert "hedged_errors" in h["io_pool"]
+        assert "attempts" in h["retry"]
+    finally:
+        server.close()
+        session.engine.close()

@@ -53,6 +53,17 @@ from benchmarks.bench_lookup import run
 run(quick=True)
 PY
 
+echo "== chaos: success rate + p99 under seeded faults (quick mode) =="
+# writes the BENCH_chaos.json snapshot: the seeded fault-rate sweep
+# (transient + torn + spike on lake-table reads at 0/5/10%), asserting the
+# 100% success floor, bit-parity of results against the fault-free run,
+# and bounded p99 inflation.  The chaos test suite itself (fixed seeds)
+# runs with the tier-1 tests below.
+python - <<'PY'
+from benchmarks.bench_chaos import run
+run(quick=True)
+PY
+
 echo "== tier-1 tests (slow SPMD dry-runs deselected) =="
 # test_archs_smoke / test_train_substrate and one misc test fail in this
 # container for environment reasons (installed jax predates APIs the model
