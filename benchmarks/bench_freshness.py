@@ -1,0 +1,339 @@
+"""Streaming-ingestion freshness SLO: CDC commit -> queryable epoch
+(DESIGN.md §12).
+
+Three arms, one snapshot (``BENCH_freshness.json``):
+
+- **freshness under load** — a producer thread feeds an insert-heavy CDC
+  stream (new comments + their HasCreator edges, a slice of updates)
+  through the micro-batch pipeline while query threads hammer the same
+  engine; reports p50/p99 *commit->queryable* (lake commit landed -> epoch
+  published) and *ingest->queryable* (event admitted -> epoch published)
+  from the epoch driver's samples, and asserts the p99 stays bounded.
+- **oracle parity** — the identical event history replayed as one batch
+  ``upsert_rows`` commit per table into a fresh copy of the seed lake;
+  asserts the pipeline's micro-batched lake is row-for-row identical
+  (zero dropped, zero duplicated events) and that the ingest counters
+  surface through ``QueryServer.health()``.
+- **backpressure under stall** — fault injection fails every table write,
+  so flushes fail, the bounded queue fills, and ``submit()`` must shed a
+  typed ``IngestBackpressureError``; healing the store drains the retained
+  batch with exactly-once commits.
+
+``run(quick=True)`` is the CI-gate mode (override the snapshot path with
+``REPRO_BENCH_FRESHNESS_SNAPSHOT``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_store, make_engine, timed
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.errors import IngestBackpressureError
+from repro.ingest import ChangeEvent, ChangeLog, IngestConfig, IngestPipeline
+from repro.lakehouse.columnfile import read_columns, read_footer
+from repro.lakehouse.faults import FaultInjector, FaultRule
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.table import LakeCatalog
+
+SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_FRESHNESS_SNAPSHOT",
+                               "BENCH_freshness.json")
+
+_QUERY = ("SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+          "WHERE c.creationDate > 20120101 ACCUM p.@cnt += 1")
+
+
+def _comment_row(cid: int, length: int, date: int = 20130101) -> dict:
+    return {"id": int(cid), "creationDate": int(date), "length": int(length),
+            "browserUsed": "Chrome"}
+
+
+def _build_events(ds, n_events: int, seed: int = 23) -> list[ChangeEvent]:
+    """Insert-heavy CDC stream: ~80% new comments (+ edge), ~20% updates of
+    already-streamed comments.  Deterministic, so the identical history can
+    be replayed into the batch-committed oracle."""
+    rng = np.random.default_rng(seed)
+    events: list[ChangeEvent] = []
+    base = ds.n_comments
+    streamed: list[int] = []
+    t = 1000.0
+    i = 0
+    while len(events) < n_events:
+        t += 0.001
+        if streamed and rng.random() < 0.2:
+            cid = int(streamed[rng.integers(0, len(streamed))])
+            events.append(ChangeEvent(
+                table="Comment", op="upsert",
+                row=_comment_row(cid, length=9_000_000 + i), event_time=t))
+        else:
+            cid = (base + 1 + i) * 10 + 3
+            events.append(ChangeEvent(
+                table="Comment", op="upsert",
+                row=_comment_row(cid, length=i + 1), event_time=t))
+            t += 0.001
+            events.append(ChangeEvent(
+                table="Comment_HasCreator_Person", op="upsert",
+                row={"src": cid, "dst": 11, "creationDate": 20130101},
+                event_time=t))
+            streamed.append(cid)
+        i += 1
+    return events
+
+
+def _table_rows(store, table: str) -> dict:
+    t = LakeCatalog(store).table(table)
+    cols = [c.name for c in t.schema().columns]
+    out = {}
+    for fk in t.data_files():
+        meta = read_footer(store, fk)
+        data = read_columns(store, meta, cols)
+        for i in range(meta.n_rows):
+            row = tuple(data[c][i] for c in cols)
+            key = row[0] if table == "Comment" else (row[0], row[1])
+            assert key not in out, f"duplicate key {key} in {table}"
+            out[key] = row
+    return out
+
+
+def freshness_sweep(sf: float = 0.004, n_events: int = 400,
+                    n_query_threads: int = 2, cadence_ms: float = 20.0,
+                    max_p99_s: float = 30.0) -> dict:
+    store = fresh_store(f"freshness_{sf}")
+    ds = generate_ldbc(store, scale_factor=sf, n_files=2, row_group_rows=512)
+    eng = make_engine(store, ldbc_graph_schema(), materialize=False)
+    eng.startup()
+    t0 = time.perf_counter()
+    session = eng.session()
+    session.install("creators", _QUERY)
+    events = _build_events(ds, n_events)
+    log = ChangeLog()
+
+    pipe = IngestPipeline(eng, IngestConfig(
+        flush_interval_s=cadence_ms / 1000.0)).start()
+
+    # paced producer: append the pre-built history to the live change log
+    # in real time so the pipeline sees a stream, not one giant poll
+    def produce() -> None:
+        for e in events:
+            log.append(e)
+            time.sleep(0.002)
+
+    producer = threading.Thread(target=produce)
+
+    # concurrent query load on the same engine while the stream lands
+    stop = threading.Event()
+    query_counts = [0] * n_query_threads
+    query_errors: list = []
+
+    def query_loop(slot: int) -> None:
+        while not stop.is_set():
+            try:
+                session.query("creators")
+                query_counts[slot] += 1
+            except Exception as ex:     # noqa: BLE001 — benchmark guardrail
+                query_errors.append(repr(ex))
+                return
+
+    workers = [threading.Thread(target=query_loop, args=(i,))
+               for i in range(n_query_threads)]
+    for w in workers:
+        w.start()
+
+    pipe.attach_source(log)
+    producer.start()
+    producer.join()
+    drained = pipe.drain(timeout=120.0)
+    stop.set()
+    for w in workers:
+        w.join()
+
+    stats = pipe.stats()
+    pipe.close()
+    assert drained, f"pipeline failed to drain: {stats}"
+    assert not query_errors, query_errors
+    assert stats["flush_errors"] == 0 and stats["rejected"] == 0, stats
+    f = stats["freshness"]
+    assert f["samples"] >= 5, f
+    assert 0.0 < f["commit_to_queryable_p99_s"] <= max_p99_s, f
+    assert f["ingest_to_queryable_p99_s"] >= f["commit_to_queryable_p99_s"], f
+    # every admitted event became visible through an epoch
+    assert (stats["driver"]["events_visible"]
+            == stats["committer"]["events_committed"]), stats
+
+    row = {
+        "sf": sf,
+        "n_events": n_events,
+        "cadence_ms": cadence_ms,
+        "n_query_threads": n_query_threads,
+        "queries_served": int(sum(query_counts)),
+        "events_submitted": stats["submitted"],
+        "events_coalesced": stats["committer"]["events_coalesced"],
+        "rows_inserted": stats["committer"]["rows_inserted"],
+        "rows_updated": stats["committer"]["rows_updated"],
+        "flushes": stats["flushes"],
+        "advances": stats["driver"]["advances"],
+        "commit_to_queryable_p50_s": f["commit_to_queryable_p50_s"],
+        "commit_to_queryable_p99_s": f["commit_to_queryable_p99_s"],
+        "ingest_to_queryable_p50_s": f["ingest_to_queryable_p50_s"],
+        "ingest_to_queryable_p99_s": f["ingest_to_queryable_p99_s"],
+        "final_epoch": eng.current_epoch().epoch_id,
+    }
+    emit("freshness_commit_to_queryable_p99_ms",
+         f["commit_to_queryable_p99_s"] * 1e3,
+         f"p50={f['commit_to_queryable_p50_s']*1e3:.1f}ms;"
+         f"e2e_p99={f['ingest_to_queryable_p99_s']*1e3:.1f}ms;"
+         f"events={stats['submitted']};advances={row['advances']};"
+         f"queries={row['queries_served']}")
+    return {"store": store, "ds": ds, "eng": eng, "log": log, "row": row,
+            "wall_s": time.perf_counter() - t0}
+
+
+def oracle_parity(sweep: dict) -> dict:
+    """Replay the sweep's identical history into a batch-committed oracle
+    lake; the pipeline's lake must match row-for-row, and the ingest
+    counters must surface in QueryServer.health()."""
+    from repro.serving.server import QueryServer, ServerConfig
+
+    t0 = time.perf_counter()
+    store, ds, eng, log = (sweep["store"], sweep["ds"], sweep["eng"],
+                           sweep["log"])
+    oroot = os.path.join(os.path.dirname(store.config.root),
+                         "freshness_oracle")
+    import shutil
+    shutil.rmtree(oroot, ignore_errors=True)
+    ostore = ObjectStore(StoreConfig(root=oroot))
+    generate_ldbc(ostore, scale_factor=sweep["row"]["sf"], n_files=2,
+                  row_group_rows=512)
+
+    # one LWW-coalesced batch per table (history is event_time ordered)
+    by_table: dict = {}
+    for e in log.history():
+        key = ((e.row["id"],) if e.table == "Comment"
+               else (e.row["src"], e.row["dst"]))
+        by_table.setdefault(e.table, {})[key] = e
+    for table, slot in by_table.items():
+        lt = LakeCatalog(ostore).table(table)
+        cols = [c.name for c in lt.schema().columns]
+        ups = list(slot.values())
+        lt.upsert_rows(
+            {c: np.array([e.row[c] for e in ups],
+                         dtype=(object if c == "browserUsed" else np.int64))
+             for c in cols},
+            key_columns=(["id"] if lt.schema().primary_key
+                         else ["src", "dst"]))
+
+    mismatches = 0
+    for table in ("Comment", "Comment_HasCreator_Person"):
+        got = _table_rows(store, table)
+        want = _table_rows(ostore, table)
+        if got != want:
+            mismatches += 1
+    assert mismatches == 0, "pipeline lake diverged from batch oracle"
+
+    # ingest counters ride the serving health surface while a pipeline runs
+    pipe = IngestPipeline(eng, IngestConfig(flush_interval_s=0.05)).start()
+    server = QueryServer(eng, {}, ServerConfig(n_workers=1))
+    health = server.health()
+    server.close()
+    pipe.close()
+    assert "ingest" in health and "freshness" in health["ingest"], health
+    eng.close()
+
+    row = {"tables_checked": 2, "mismatches": mismatches,
+           "events_replayed": len(log.history()),
+           "health_has_ingest": True}
+    emit("freshness_oracle_mismatches", float(mismatches),
+         f"events={row['events_replayed']};tables=2")
+    return {"row": row, "wall_s": time.perf_counter() - t0}
+
+
+def backpressure_under_stall(sf: float = 0.004, max_queue: int = 16) -> dict:
+    """A stalled lake must surface as typed backpressure at the producer
+    edge, and a healed lake must drain the retained batch exactly once."""
+    t0 = time.perf_counter()
+    store = fresh_store(f"freshness_stall_{sf}")
+    ds = generate_ldbc(store, scale_factor=sf, n_files=2, row_group_rows=512)
+    eng = make_engine(store, ldbc_graph_schema(), materialize=False)
+    eng.startup()
+    store.faults = FaultInjector(
+        [FaultRule(prefix="tables/", ops=("put", "put_if"),
+                   transient_rate=1.0)], seed=5)
+    pipe = IngestPipeline(eng, IngestConfig(
+        flush_interval_s=0.01, max_queue=max_queue)).start()
+
+    base = ds.n_comments
+    shed = 0
+    admitted = 0
+    t_start = time.monotonic()
+    t_shed = None
+    deadline = t_start + 60.0
+    while shed == 0 and time.monotonic() < deadline:
+        try:
+            pipe.submit(ChangeEvent(
+                table="Comment", op="upsert",
+                row=_comment_row((base + 1 + admitted) * 10 + 3,
+                                 length=admitted + 1)))
+            admitted += 1
+        except IngestBackpressureError:
+            shed += 1
+            t_shed = time.monotonic() - t_start
+        time.sleep(0.002)
+    stats_stalled = pipe.stats()
+    assert shed == 1, f"no typed shed within 60s: {stats_stalled}"
+    assert stats_stalled["flush_errors"] >= 1, stats_stalled
+    assert stats_stalled["stalled"], stats_stalled
+
+    store.faults = None                 # heal
+    drained = pipe.drain(timeout=60.0)
+    stats_healed = pipe.stats()
+    pipe.close()
+    assert drained, stats_healed
+    rows = _table_rows(store, "Comment")        # asserts no duplicate keys
+    landed = sum(1 for k in rows if k > base * 10 + 3)
+    assert landed == admitted, (landed, admitted)
+    eng.close()
+
+    row = {
+        "max_queue": max_queue,
+        "events_admitted": admitted,
+        "typed_sheds": shed,
+        "time_to_shed_s": t_shed,
+        "flush_errors_while_stalled": stats_stalled["flush_errors"],
+        "backpressure_trips": stats_healed["backpressure_trips"],
+        "rows_landed_after_heal": landed,
+    }
+    emit("freshness_backpressure_shed_s", (t_shed or 0.0) * 1e3,
+         f"admitted={admitted};flush_errors={row['flush_errors_while_stalled']};"
+         f"landed={landed}")
+    return {"row": row, "wall_s": time.perf_counter() - t0}
+
+
+def _write_snapshot(snap: dict) -> None:
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snap, f, indent=2)
+    emit("freshness_snapshot", 0.0, SNAPSHOT_PATH)
+
+
+def run(quick: bool = False) -> None:
+    sweep = freshness_sweep(
+        sf=0.004 if quick else 0.01,
+        n_events=300 if quick else 1500,
+        n_query_threads=2 if quick else 4,
+    )
+    parity = oracle_parity(sweep)
+    stall = backpressure_under_stall()
+    _write_snapshot({
+        "freshness_sweep": {"rows": [sweep["row"]], "wall_s": sweep["wall_s"]},
+        "oracle_parity": {"rows": [parity["row"]], "wall_s": parity["wall_s"]},
+        "backpressure_under_stall": {"rows": [stall["row"]],
+                                     "wall_s": stall["wall_s"]},
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,96 @@
+"""Streaming ingestion driver: tail a JSONL change log into live epochs.
+
+The file-drop CDC shape (DESIGN.md §12): an upstream producer appends
+serialized :class:`ChangeEvent` lines to a JSONL file, a
+:class:`FileTailSource` tails it, and the session's ingestion pipeline
+micro-batches the stream into CAS-fenced lake commits and publishes each
+batch through an epoch advance — so installed GSQL queries see fresh rows
+within the flush cadence, while the same session keeps serving.
+
+    PYTHONPATH=src python examples/stream_ingest.py
+"""
+
+import json
+import os
+import tempfile
+import threading
+import time
+
+import repro
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.ingest import ChangeEvent, FileTailSource, IngestConfig, append_jsonl
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="graphlake_ingest_")
+    store = ObjectStore(StoreConfig(root=root))
+    ds = generate_ldbc(store, scale_factor=0.01)
+    log_path = os.path.join(root, "changes.jsonl")
+
+    with repro.connect(store, ldbc_graph_schema()) as session:
+        engine = session.engine
+        print(f"engine up in {engine.startup_seconds:.3f}s "
+              f"(epoch {engine.current_epoch().epoch_id}, "
+              f"{engine.current_epoch().n_real_vertices('Comment')} comments)")
+        session.install(
+            "creators",
+            "SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+            "ACCUM p.@cnt += 1")
+
+        # 25ms micro-batch cadence; each committed batch is published by
+        # the next epoch advance
+        pipe = session.ingest(IngestConfig(flush_interval_s=0.025))
+        pipe.attach_source(FileTailSource(log_path))
+
+        # producer: append CDC lines — new comments with their HasCreator
+        # edge, one straggler update, one delete — while the pipeline tails
+        def produce() -> None:
+            base = ds.n_comments
+            for i in range(40):
+                cid = (base + 1 + i) * 10 + 3
+                append_jsonl(log_path, [
+                    ChangeEvent(table="Comment", op="upsert",
+                                row={"id": cid, "creationDate": 20130101,
+                                     "length": i + 1,
+                                     "browserUsed": "Chrome"}),
+                    ChangeEvent(table="Comment_HasCreator_Person",
+                                op="upsert",
+                                row={"src": cid, "dst": 11,
+                                     "creationDate": 20130101}),
+                ])
+                time.sleep(0.005)
+            append_jsonl(log_path, [
+                # straggler update of the first streamed comment...
+                ChangeEvent(table="Comment", op="upsert",
+                            row={"id": (base + 1) * 10 + 3,
+                                 "creationDate": 20130101, "length": 777,
+                                 "browserUsed": "Firefox"}),
+                # ...and a delete of a seed comment (raw id 13)
+                ChangeEvent(table="Comment", op="delete", key=(13,)),
+            ])
+
+        producer = threading.Thread(target=produce)
+        producer.start()
+        producer.join()
+        assert pipe.drain(timeout=30.0), "pipeline failed to drain"
+
+        epoch = engine.current_epoch()
+        print(f"drained at epoch {epoch.epoch_id}: "
+              f"{epoch.n_real_vertices('Comment')} comments "
+              f"(+40 streamed, -1 deleted)")
+        result = session.query("creators")
+        print(f"creators query over fresh epoch: vset={result.vset.size()}")
+
+        stats = pipe.stats()
+        f = stats["freshness"]
+        print("committer:", json.dumps(stats["committer"]))
+        print(f"freshness over {f['samples']} batches: "
+              f"commit->queryable p50={f['commit_to_queryable_p50_s']*1e3:.1f}ms "
+              f"p99={f['commit_to_queryable_p99_s']*1e3:.1f}ms | "
+              f"ingest->queryable p99="
+              f"{f['ingest_to_queryable_p99_s']*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,13 @@ _LAZY = {
     "FaultRule": ("repro.lakehouse.faults", "FaultRule"),
     "transient_chaos": ("repro.lakehouse.faults", "transient_chaos"),
     "RetryPolicy": ("repro.lakehouse.retry", "RetryPolicy"),
+    # streaming ingestion plane (DESIGN.md §12)
+    "IngestBackpressureError": ("repro.errors", "IngestBackpressureError"),
+    "ChangeEvent": ("repro.ingest", "ChangeEvent"),
+    "ChangeLog": ("repro.ingest", "ChangeLog"),
+    "FileTailSource": ("repro.ingest", "FileTailSource"),
+    "IngestConfig": ("repro.ingest", "IngestConfig"),
+    "IngestPipeline": ("repro.ingest", "IngestPipeline"),
 }
 
 

@@ -55,6 +55,7 @@ class GraphLakeEngine:
         self.prefetcher: Optional[Prefetcher] = None
         self.accums = None
         self.epochs: Optional[EpochManager] = None
+        self.ingest = None      # set by IngestPipeline.start() (repro/ingest)
         self.startup_seconds: float = 0.0
         self.startup_mode: str = "unstarted"
         self._started = False

@@ -325,8 +325,14 @@ class EpochManager:
             )
             for name, vt in topo.vertex_info.items()
         }
+        # id allocation under the publish mutex: _advance_lock already
+        # serializes advancers, but bootstrap and any future caller must
+        # never be able to mint the same epoch_id twice
+        with self._lock:
+            epoch_id = self._next_id
+            self._next_id += 1
         epoch = GraphEpoch(
-            epoch_id=self._next_id,
+            epoch_id=epoch_id,
             schema=topo.schema,
             vertex_pins=vertex_pins,
             edge_pins=edge_pins,
@@ -339,7 +345,6 @@ class EpochManager:
             topology_version=topo.version,
             idm=topo.idm,
         )
-        self._next_id += 1
         return epoch
 
     # -- advance ---------------------------------------------------------------

@@ -87,6 +87,19 @@ class TenantQuotaExceededError(ServerOverloadedError):
 
 
 # ---------------------------------------------------------------------------
+# streaming ingestion (repro/ingest, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+class IngestBackpressureError(ReproError, RuntimeError):
+    """The bounded ingest queue is full — the pipeline sheds the change
+    event back to the producer instead of buffering without bound.  The
+    ingestion analog of :class:`ServerOverloadedError`: backpressure
+    surfaces typed at the edge (where the source can pause its tail or
+    retry with backoff) rather than as silent memory growth while the
+    committer is stalled."""
+
+
+# ---------------------------------------------------------------------------
 # catalog (formerly repro/core/catalog.py)
 # ---------------------------------------------------------------------------
 
@@ -147,6 +160,7 @@ __all__ = [
     "QueryTimeoutError",
     "ServerOverloadedError",
     "TenantQuotaExceededError",
+    "IngestBackpressureError",
     "MissingTableError",
     "LakeError",
     "TransientLakeError",

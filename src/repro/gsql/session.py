@@ -80,6 +80,7 @@ class GraphSession:
         self._own_engine = own_engine
         self._installed: dict[str, InstalledQuery] = {}
         self._catalog: Optional[Catalog] = None
+        self._ingest = None
 
     # -- lifecycle --------------------------------------------------------------
 
@@ -96,6 +97,9 @@ class GraphSession:
         return session
 
     def close(self) -> None:
+        if self._ingest is not None:
+            self._ingest.close()
+            self._ingest = None
         if self._own_engine:
             self.engine.close()
 
@@ -104,6 +108,28 @@ class GraphSession:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    # -- ingestion --------------------------------------------------------------
+
+    def ingest(self, config=None):
+        """The session's streaming-ingestion pipeline (DESIGN.md §12),
+        started on first call and closed with the session::
+
+            pipe = session.ingest()
+            pipe.upsert("comments", {...row...})
+            pipe.delete("persons", 4621)
+            pipe.drain()          # force commit + epoch publish
+
+        One pipeline per session/engine (the committer is the single writer
+        per table); pass an :class:`~repro.ingest.IngestConfig` on the
+        *first* call to tune cadence/queue depth."""
+        if self._ingest is None:
+            from repro.ingest import IngestPipeline
+            self._ingest = IngestPipeline(self.engine, config).start()
+        elif config is not None:
+            raise ValueError("ingest() already started for this session — "
+                             "config only applies on the first call")
+        return self._ingest
 
     # -- catalog ----------------------------------------------------------------
 

@@ -1,0 +1,36 @@
+"""Streaming ingestion plane: CDC-to-epoch pipeline (DESIGN.md §12).
+
+Change events (upsert/delete) flow through a bounded queue with typed
+backpressure into a micro-batch committer that coalesces last-write-wins
+per (table, key) and lands CAS-fenced lake commits; an epoch driver turns
+each committed batch into a queryable epoch and measures the
+commit->queryable freshness SLO.  Entry point: ``session.ingest()``.
+"""
+
+from repro.ingest.committer import CommitRecord, IngestQueue, MicroBatchCommitter
+from repro.ingest.events import (
+    OPS,
+    ChangeEvent,
+    ChangeLog,
+    FileTailSource,
+    append_jsonl,
+    event_from_json,
+    event_to_json,
+)
+from repro.ingest.pipeline import EpochDriver, IngestConfig, IngestPipeline
+
+__all__ = [
+    "OPS",
+    "ChangeEvent",
+    "ChangeLog",
+    "CommitRecord",
+    "EpochDriver",
+    "FileTailSource",
+    "IngestConfig",
+    "IngestPipeline",
+    "IngestQueue",
+    "MicroBatchCommitter",
+    "append_jsonl",
+    "event_from_json",
+    "event_to_json",
+]

@@ -1,0 +1,286 @@
+"""Micro-batch committer: bounded queue, coalescing, upsert resolution
+(DESIGN.md §12).
+
+Two pieces, both synchronous (the pipeline owns the threads):
+
+- :class:`IngestQueue` — the bounded admission edge.  ``offer()`` on a full
+  queue raises the typed :class:`~repro.errors.IngestBackpressureError`
+  instead of blocking or buffering without bound, so a stalled committer
+  (lake outage, fault injection) surfaces to the producer as backpressure
+  it can act on — pause the tail, retry with backoff — never as silent
+  memory growth.  High/low watermarks give producers an early-warning
+  ``saturated`` signal with hysteresis: it latches on crossing the high
+  mark and clears only once the queue drains below the low mark.
+
+- :class:`MicroBatchCommitter` — per-table event coalescing plus the
+  flush that turns a coalesced batch into lake commits.  Coalescing is
+  last-write-wins per ``(table, key)`` on ``(event_time, seq)``; a flush
+  resolves each table's survivors against the table's known key set into
+  *inserts* (plain ``append_files`` — the cheap path that keeps
+  ``advance()`` incremental), *updates*/*deletes* (the copy-on-write
+  :meth:`~repro.lakehouse.table.LakeTable.upsert_rows` single-snapshot
+  commit), and *ignored deletes* (keys the lake never had).  Every commit
+  rides the existing CAS-fenced retry loop; a flush failure leaves the
+  batch coalesced in place (newer events keep winning their slots) and is
+  retried on the next cadence tick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.errors import IngestBackpressureError
+from repro.ingest.events import ChangeEvent
+from repro.lakehouse.columnfile import read_columns, read_footer
+
+
+class IngestQueue:
+    """Bounded change-event queue with typed overflow + watermark hysteresis."""
+
+    def __init__(self, max_events: int, high_watermark: float = 0.75,
+                 low_watermark: float = 0.25):
+        self.max_events = max(1, int(max_events))
+        self._high = max(1, int(self.max_events * high_watermark))
+        self._low = int(self.max_events * low_watermark)
+        self._items: list = []          # (event, t_offer) pairs, FIFO
+        self._cond = threading.Condition()
+        self._saturated = False
+        self.counters = {"offered": 0, "backpressure_trips": 0,
+                         "watermark_trips": 0}
+
+    def offer(self, event: ChangeEvent, t_offer: Optional[float] = None) -> None:
+        with self._cond:
+            if len(self._items) >= self.max_events:
+                self.counters["backpressure_trips"] += 1
+                raise IngestBackpressureError(
+                    f"ingest queue full ({self.max_events} events pending); "
+                    f"shed {event.op} on {event.table!r} key={event.key}")
+            self._items.append((event, t_offer if t_offer is not None
+                                else time.monotonic()))
+            self.counters["offered"] += 1
+            if not self._saturated and len(self._items) >= self._high:
+                self._saturated = True
+                self.counters["watermark_trips"] += 1
+            self._cond.notify()
+
+    def drain(self, max_events: int, timeout: float = 0.0) -> list:
+        """Up to ``max_events`` queued items, waiting at most ``timeout``
+        for the first one."""
+        with self._cond:
+            if not self._items and timeout > 0:
+                self._cond.wait(timeout)
+            out = self._items[:max_events]
+            del self._items[:len(out)]
+            if self._saturated and len(self._items) <= self._low:
+                self._saturated = False
+            return out
+
+    @property
+    def saturated(self) -> bool:
+        with self._cond:
+            return self._saturated
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._items)
+
+
+@dataclasses.dataclass
+class CommitRecord:
+    """One committed micro-batch on one table — the unit the epoch driver
+    tracks from commit to queryable."""
+
+    table: str
+    kind: str                   # "append" | "upsert"
+    snapshot_id: int
+    n_events: int
+    t_commit: float             # monotonic instant the commit landed
+    oldest_t_offer: float       # monotonic admission time of the oldest event
+    commit_s: float             # wall time the lake commit took
+
+
+@dataclasses.dataclass
+class _TableMeta:
+    key_columns: list
+    columns: list               # schema order
+    dtypes: dict                # column -> numpy dtype (object for str)
+
+
+class MicroBatchCommitter:
+    """Coalesces change events per table and flushes them as lake commits."""
+
+    def __init__(self, engine, row_group_rows: int = 4096):
+        self.engine = engine
+        self.row_group_rows = row_group_rows
+        self._lock = threading.Lock()
+        # table -> key -> (winning event, earliest admission time)
+        self._pending: dict[str, dict[tuple, tuple]] = {}
+        self._meta: dict[str, _TableMeta] = {}
+        self._known: dict[str, set] = {}    # table -> committed key set
+        self.counters = {
+            "events_coalesced": 0, "events_committed": 0,
+            "rows_inserted": 0, "rows_updated": 0, "rows_deleted": 0,
+            "deletes_ignored": 0, "append_commits": 0, "upsert_commits": 0,
+            "files_rewritten": 0,
+        }
+
+    # -- schema resolution ---------------------------------------------------
+
+    def table_meta(self, table: str) -> _TableMeta:
+        """Key columns + column order/dtypes for one lake table (cached —
+        table schemas are immutable in this lake)."""
+        meta = self._meta.get(table)
+        if meta is None:
+            ts = self.engine.lake.table(table).schema()
+            pk = ts.primary_key
+            key_cols = [pk] if pk else [c.name for c in ts.foreign_keys]
+            if not key_cols:
+                raise ValueError(
+                    f"table {table!r} has neither a primary key nor foreign "
+                    f"keys — no dedup identity for ingestion")
+            dtypes = {c.name: (np.dtype(object) if c.dtype == "str"
+                               else np.dtype(c.dtype)) for c in ts.columns}
+            meta = _TableMeta(key_columns=key_cols,
+                              columns=[c.name for c in ts.columns],
+                              dtypes=dtypes)
+            self._meta[table] = meta
+        return meta
+
+    def derive_key(self, table: str, row: dict) -> tuple:
+        return tuple(row[c] for c in self.table_meta(table).key_columns)
+
+    def _known_keys(self, table: str) -> set:
+        """The table's committed key set, seeded once from the lake (key
+        columns of every data file) and maintained across flushes."""
+        known = self._known.get(table)
+        if known is None:
+            known = set()
+            t = self.engine.lake.table(table)
+            key_cols = self.table_meta(table).key_columns
+            if t.exists() and t.snapshots():
+                for fkey in t.data_files():
+                    fm = read_footer(self.engine.store, fkey)
+                    cols = read_columns(self.engine.store, fm, key_cols)
+                    known.update(zip(*[cols[c].tolist() for c in key_cols]))
+            self._known[table] = known
+        return known
+
+    # -- coalescing ----------------------------------------------------------
+
+    def ingest(self, items: list) -> None:
+        """Coalesce drained ``(event, t_offer)`` items into the pending map:
+        last-write-wins per (table, key), earliest admission time kept so
+        freshness measures the longest-waiting change to a slot."""
+        with self._lock:
+            for event, t_offer in items:
+                slot = self._pending.setdefault(event.table, {})
+                cur = slot.get(event.key)
+                if cur is None:
+                    slot[event.key] = (event, t_offer)
+                else:
+                    keep = event if event.ordering() >= cur[0].ordering() \
+                        else cur[0]
+                    slot[event.key] = (keep, min(t_offer, cur[1]))
+                    self.counters["events_coalesced"] += 1
+
+    def pending_events(self) -> int:
+        with self._lock:
+            return sum(len(m) for m in self._pending.values())
+
+    # -- flush ---------------------------------------------------------------
+
+    def flush(self) -> tuple[list[CommitRecord], list[str]]:
+        """Commit every table's pending batch; returns (records, errors).
+
+        A failed table keeps its batch pending (retried next tick); a
+        succeeded table's slots are removed *only if unchanged* since the
+        snapshot, so events that arrived mid-commit are never lost."""
+        with self._lock:
+            snapshot = {t: dict(m) for t, m in self._pending.items() if m}
+        records: list[CommitRecord] = []
+        errors: list[str] = []
+        for table, slot in snapshot.items():
+            try:
+                rec = self._commit_table(table, slot)
+            except Exception as e:
+                errors.append(f"{table}: {type(e).__name__}: {e}")
+                continue
+            if rec is not None:
+                records.append(rec)
+            with self._lock:
+                pend = self._pending.get(table, {})
+                for key, item in slot.items():
+                    if pend.get(key) is item:
+                        del pend[key]
+        return records, errors
+
+    def _columns_for(self, table: str, events: list[ChangeEvent]) -> dict:
+        meta = self.table_meta(table)
+        cols = {}
+        for c in meta.columns:
+            vals = [e.row[c] for e in events]
+            cols[c] = np.array(vals, dtype=meta.dtypes[c])
+        return cols
+
+    def _commit_table(self, table: str,
+                      slot: dict) -> Optional[CommitRecord]:
+        meta = self.table_meta(table)
+        known = self._known_keys(table)
+        # deterministic commit order: admission sequence
+        items = sorted(slot.values(), key=lambda it: it[0].seq)
+        upserts = [e for e, _ in items if e.op == "upsert"]
+        delete_keys = []
+        ignored = 0
+        for e, _ in items:
+            if e.op == "delete":
+                if e.key in known:
+                    delete_keys.append(e.key)
+                else:
+                    ignored += 1
+        updates = [e for e in upserts if e.key in known]
+        t = self.engine.lake.table(table)
+        t0 = time.perf_counter()
+        if updates or delete_keys:
+            result = t.upsert_rows(
+                self._columns_for(table, upserts) if upserts else None,
+                meta.key_columns, delete_keys=delete_keys,
+                row_group_rows=self.row_group_rows)
+            snap = result.snapshot
+            kind = "upsert"
+            self.counters["upsert_commits"] += 1
+            self.counters["rows_inserted"] += result.rows_inserted
+            self.counters["rows_updated"] += result.rows_updated
+            self.counters["rows_deleted"] += result.rows_deleted
+            self.counters["files_rewritten"] += result.files_rewritten
+        elif upserts:
+            snap = t.append_files([self._columns_for(table, upserts)],
+                                  row_group_rows=self.row_group_rows)
+            kind = "append"
+            self.counters["append_commits"] += 1
+            self.counters["rows_inserted"] += len(upserts)
+        else:
+            snap = None     # every event was a delete of an unknown key
+        self.counters["deletes_ignored"] += ignored
+        self.counters["events_committed"] += len(slot)
+        known.update(e.key for e in upserts)
+        known.difference_update(delete_keys)
+        if snap is None:
+            return None
+        return CommitRecord(
+            table=table, kind=kind, snapshot_id=snap.snapshot_id,
+            n_events=len(slot), t_commit=time.monotonic(),
+            oldest_t_offer=min(t_offer for _, t_offer in items),
+            commit_s=time.perf_counter() - t0,
+        )
+
+    def snapshot_counters(self) -> dict:
+        with self._lock:
+            return dict(self.counters)
+
+
+__all__ = ["IngestQueue", "MicroBatchCommitter", "CommitRecord"]

@@ -1,0 +1,191 @@
+"""The typed change-event model of the streaming ingestion plane
+(DESIGN.md §12).
+
+A :class:`ChangeEvent` is one row-level change against a named lake table —
+an **upsert** (insert-or-replace, resolved against the table's key columns)
+or a **delete** — carrying the event-time of the upstream change and a
+dedup key.  The pipeline coalesces events per ``(table, key)`` with
+last-write-wins ordering on ``(event_time, seq)``: ``seq`` is the
+pipeline-assigned monotonic arrival number, so same-timestamp duplicates
+resolve deterministically by arrival order.
+
+Two pluggable sources ship with the model:
+
+- :class:`ChangeLog` — an in-process, replayable buffer: producers
+  ``append()`` (or use the ``upsert``/``delete`` sugar), the pipeline
+  ``poll()``s, and tests ``rewind()`` to replay the identical history into
+  a second lake (the batch-committed oracle the freshness benchmark
+  compares against);
+- :class:`FileTailSource` — tails a JSONL file of serialized events (one
+  per line, :func:`event_to_json`), the file-drop CDC shape: an upstream
+  process appends lines, the pipeline picks up complete lines on each
+  poll, and ``rewind()`` replays from the top.
+
+A *source* is anything with ``poll(max_events) -> list[ChangeEvent]``
+returning at most ``max_events`` new events per call (empty list = nothing
+new yet).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Optional
+
+OPS = ("upsert", "delete")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChangeEvent:
+    """One row-level change against a named lake table.
+
+    ``key`` is the dedup identity: the table's primary-key value for vertex
+    tables, the ``(src, dst)`` pair for edge tables — always normalized to
+    a tuple.  For upserts the pipeline re-derives the key from ``row`` at
+    admission (the row is authoritative); deletes must carry it explicitly.
+    ``seq`` is assigned by the pipeline at admission (producers leave the
+    default)."""
+
+    table: str
+    op: str                      # "upsert" | "delete"
+    key: tuple = ()
+    row: Optional[dict] = None   # column -> scalar (upsert only)
+    event_time: float = -1.0     # source timestamp; -1 = stamp at creation
+    seq: int = -1                # pipeline-assigned arrival number
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown change op {self.op!r} (one of {OPS})")
+        if self.op == "upsert" and self.row is None:
+            raise ValueError("upsert events require a row")
+        if not isinstance(self.key, tuple):
+            object.__setattr__(
+                self, "key",
+                tuple(self.key) if isinstance(self.key, (list, set))
+                else (self.key,) if self.key is not None else ())
+        if self.op == "delete" and not self.key:
+            raise ValueError("delete events require a key")
+        if self.event_time < 0:
+            object.__setattr__(self, "event_time", time.time())
+
+    def ordering(self) -> tuple:
+        """Last-write-wins ordering: greater wins a (table, key) slot."""
+        return (self.event_time, self.seq)
+
+
+def _plain(v):
+    """JSON-encodable scalar (numpy ints/floats -> python)."""
+    return v.item() if hasattr(v, "item") else v
+
+
+def event_to_json(e: ChangeEvent) -> dict:
+    d = {"table": e.table, "op": e.op, "key": [_plain(k) for k in e.key],
+         "event_time": e.event_time}
+    if e.row is not None:
+        d["row"] = {c: _plain(v) for c, v in e.row.items()}
+    return d
+
+
+def event_from_json(d: dict) -> ChangeEvent:
+    return ChangeEvent(
+        table=d["table"], op=d["op"], key=tuple(d.get("key") or ()),
+        row=d.get("row"), event_time=float(d.get("event_time", -1.0)),
+    )
+
+
+class ChangeLog:
+    """In-process replayable change buffer (source + producer sugar).
+
+    Keeps the full history: ``poll()`` advances a cursor, ``rewind()``
+    resets it, ``history()`` returns everything ever appended — which is
+    what lets a test replay the identical (duplicate-laden) stream into a
+    batch-committed oracle lake and assert the pipeline's dedup/upsert
+    resolution dropped nothing and duplicated nothing."""
+
+    def __init__(self):
+        self._events: list[ChangeEvent] = []
+        self._cursor = 0
+        self._lock = threading.Lock()
+
+    def append(self, event: ChangeEvent) -> None:
+        with self._lock:
+            self._events.append(event)
+
+    def upsert(self, table: str, row: dict,
+               event_time: float = -1.0) -> ChangeEvent:
+        e = ChangeEvent(table=table, op="upsert", key=(), row=row,
+                        event_time=event_time)
+        self.append(e)
+        return e
+
+    def delete(self, table: str, key, event_time: float = -1.0) -> ChangeEvent:
+        e = ChangeEvent(table=table, op="delete", key=key,
+                        event_time=event_time)
+        self.append(e)
+        return e
+
+    def poll(self, max_events: int = 1024) -> list[ChangeEvent]:
+        with self._lock:
+            out = self._events[self._cursor:self._cursor + max_events]
+            self._cursor += len(out)
+            return out
+
+    def rewind(self) -> None:
+        with self._lock:
+            self._cursor = 0
+
+    def history(self) -> list[ChangeEvent]:
+        with self._lock:
+            return list(self._events)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events) - self._cursor
+
+
+class FileTailSource:
+    """Tail a JSONL change-log file (one :func:`event_to_json` per line).
+
+    ``poll()`` reads complete lines appended since the last call — a
+    partial trailing line (a writer mid-append) is left for the next poll,
+    so a torn tail never yields a malformed event.  Missing file = no
+    events yet.  ``rewind()`` replays from the top."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._offset = 0
+
+    def poll(self, max_events: int = 1024) -> list[ChangeEvent]:
+        out: list[ChangeEvent] = []
+        try:
+            f = open(self.path, "r", encoding="utf-8")
+        except FileNotFoundError:
+            return out
+        with f:
+            f.seek(self._offset)
+            while len(out) < max_events:
+                line = f.readline()
+                if not line.endswith("\n"):
+                    break               # EOF or partial write: retry later
+                self._offset = f.tell()
+                line = line.strip()
+                if line:
+                    out.append(event_from_json(json.loads(line)))
+        return out
+
+    def rewind(self) -> None:
+        self._offset = 0
+
+
+def append_jsonl(path: str, events) -> None:
+    """Producer-side helper: append events to a JSONL change-log file
+    (what :class:`FileTailSource` tails)."""
+    with open(path, "a", encoding="utf-8") as f:
+        for e in events:
+            f.write(json.dumps(event_to_json(e)) + "\n")
+
+
+__all__ = ["ChangeEvent", "ChangeLog", "FileTailSource", "OPS",
+           "append_jsonl", "event_from_json", "event_to_json"]

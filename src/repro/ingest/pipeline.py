@@ -1,0 +1,449 @@
+"""The CDC-to-epoch ingestion pipeline (DESIGN.md §12).
+
+Couples the pieces into a running plane::
+
+    producers --offer()--> IngestQueue --drain--> MicroBatchCommitter
+        (typed backpressure)    (bounded)        (coalesce + lake commit)
+                                                      | CommitRecord
+                                                      v
+                                              EpochDriver.advance()
+                                         (commit -> queryable freshness)
+
+Three daemon threads, all owned by :class:`IngestPipeline`:
+
+- the **committer loop** drains the bounded queue, coalesces into the
+  micro-batch committer, and flushes on cadence (``flush_interval_s``,
+  defaulting to the ``ingest=<cadence_ms>`` perf flag) or when a batch
+  fills;
+- the **epoch driver** turns committed micro-batches into queryable data
+  by calling the engine's ``advance()`` — the same serialized entry point
+  the query server's background refresher uses (``EpochManager`` holds the
+  advance lock, so pipeline and refresher compose without coordination) —
+  and samples the two freshness latencies per batch: *commit->queryable*
+  (lake commit landed -> epoch published) and *ingest->queryable*
+  (event admitted -> epoch published, the end-to-end SLO number);
+- one **pump** per attached source polls ``source.poll()`` and submits,
+  pausing (not dropping) when admission raises
+  :class:`~repro.errors.IngestBackpressureError`.
+
+The pipeline registers itself as ``engine.ingest`` so the query server's
+``health()`` can surface ingestion counters next to serving stats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+from repro import perf_flags
+from repro.errors import IngestBackpressureError
+from repro.ingest.committer import CommitRecord, IngestQueue, MicroBatchCommitter
+from repro.ingest.events import ChangeEvent
+
+_MAX_SAMPLES = 4096      # freshness reservoir bound (recent-window percentiles)
+
+
+@dataclasses.dataclass
+class IngestConfig:
+    """Tunables of one pipeline.  ``None`` defers to the perf flags:
+    ``flush_interval_s`` to ``ingest=<cadence_ms>`` (default 50 ms),
+    ``max_queue`` to ``ingest_queue=<depth>`` (default 4096 events)."""
+
+    flush_interval_s: Optional[float] = None
+    max_queue: Optional[int] = None
+    max_batch_events: int = 2048        # flush early once a batch fills
+    high_watermark: float = 0.75        # queue fraction: saturated latches on
+    low_watermark: float = 0.25         # queue fraction: saturated clears
+    auto_advance: bool = True           # epoch driver calls engine.advance()
+    advance_interval_s: Optional[float] = None  # default: flush interval
+    row_group_rows: int = 4096          # micro-batch files are small
+    source_poll_interval_s: float = 0.01
+
+    def resolved_flush_interval(self) -> float:
+        if self.flush_interval_s is not None:
+            return self.flush_interval_s
+        return perf_flags.value("ingest", 50.0) / 1000.0
+
+    def resolved_max_queue(self) -> int:
+        if self.max_queue is not None:
+            return int(self.max_queue)
+        return int(perf_flags.value("ingest_queue", 4096))
+
+
+class EpochDriver:
+    """Turns committed micro-batches into queryable epochs and measures the
+    commit->queryable gap.
+
+    Batches drained *before* an ``advance()`` starts are guaranteed visible
+    in the epoch it publishes (their snapshots predate the diff), so the
+    sample ``t_published - t_commit`` is an honest upper bound on how long
+    a committed change stayed invisible.  A failed advance requeues its
+    batch — records are only counted visible once an advance succeeds."""
+
+    def __init__(self, engine, interval_s: float):
+        self.engine = engine
+        self.interval_s = interval_s
+        self._pending: list[CommitRecord] = []
+        self._busy = False      # an advance is in flight for a popped batch
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.counters = {"advances": 0, "advance_errors": 0,
+                         "batches_visible": 0, "events_visible": 0}
+        self._commit_to_queryable: list[float] = []
+        self._ingest_to_queryable: list[float] = []
+        self.last_error: Optional[str] = None
+
+    def submit(self, records: list[CommitRecord]) -> None:
+        if not records:
+            return
+        with self._lock:
+            self._pending.extend(records)
+        self._wake.set()
+
+    def kick(self) -> None:
+        self._wake.set()
+
+    def idle(self) -> bool:
+        with self._lock:
+            return not self._pending and not self._busy
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="ingest-epoch-driver")
+        self._thread.start()
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._wake.wait(self.interval_s)
+            self._wake.clear()
+            self._advance_once()
+        self._advance_once()        # final drain on shutdown
+
+    def _advance_once(self) -> None:
+        with self._lock:
+            batch = self._pending
+            self._pending = []
+            self._busy = bool(batch)
+        if not batch:
+            return
+        try:
+            self.engine.advance()
+        except Exception as e:
+            with self._lock:
+                self.counters["advance_errors"] += 1
+                self.last_error = f"{type(e).__name__}: {e}"
+                self._pending = batch + self._pending    # retry next wake
+                self._busy = False
+            self._wake.set()
+            return
+        t_vis = time.monotonic()
+        with self._lock:
+            self._busy = False
+            self.counters["advances"] += 1
+            self.counters["batches_visible"] += len(batch)
+            for rec in batch:
+                self.counters["events_visible"] += rec.n_events
+                self._commit_to_queryable.append(t_vis - rec.t_commit)
+                self._ingest_to_queryable.append(t_vis - rec.oldest_t_offer)
+            del self._commit_to_queryable[:-_MAX_SAMPLES]
+            del self._ingest_to_queryable[:-_MAX_SAMPLES]
+
+    def freshness(self) -> dict:
+        """Recent-window freshness percentiles, in seconds."""
+        with self._lock:
+            c2q = list(self._commit_to_queryable)
+            i2q = list(self._ingest_to_queryable)
+        return {
+            "samples": len(c2q),
+            "commit_to_queryable_p50_s": _pct(c2q, 0.50),
+            "commit_to_queryable_p99_s": _pct(c2q, 0.99),
+            "ingest_to_queryable_p50_s": _pct(i2q, 0.50),
+            "ingest_to_queryable_p99_s": _pct(i2q, 0.99),
+        }
+
+    def snapshot_counters(self) -> dict:
+        with self._lock:
+            out = dict(self.counters)
+            out["last_error"] = self.last_error
+            return out
+
+
+def _pct(samples: list, q: float) -> Optional[float]:
+    if not samples:
+        return None
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+class IngestPipeline:
+    """The running ingestion plane for one engine.
+
+    Usually obtained via ``session.ingest()`` (which starts it and ties its
+    lifetime to the session).  ``submit()`` is the producer edge — it
+    validates the event against the graph schema, derives the dedup key
+    from the row for upserts, stamps the arrival ``seq``, and offers to the
+    bounded queue (raising :class:`IngestBackpressureError` when full).
+    """
+
+    def __init__(self, engine, config: Optional[IngestConfig] = None):
+        self.engine = engine
+        self.config = config or IngestConfig()
+        self._flush_interval = self.config.resolved_flush_interval()
+        self.queue = IngestQueue(self.config.resolved_max_queue(),
+                                 high_watermark=self.config.high_watermark,
+                                 low_watermark=self.config.low_watermark)
+        self.committer = MicroBatchCommitter(
+            engine, row_group_rows=self.config.row_group_rows)
+        self.driver = EpochDriver(
+            engine, self.config.advance_interval_s
+            if self.config.advance_interval_s is not None
+            else self._flush_interval)
+        self._tables = {vt.table for vt in engine.schema.vertex_types.values()} \
+            | {et.table for et in engine.schema.edge_types.values()}
+        self._seq = 0
+        self._seq_lock = threading.Lock()
+        self._flush_lock = threading.Lock()     # serializes flush passes
+        self._stop = threading.Event()
+        self._committer_thread: Optional[threading.Thread] = None
+        self._pumps: list[threading.Thread] = []
+        self._pump_idle: list[bool] = []    # per pump: empty backlog + dry poll
+        self._pump_polls: list[int] = []    # per pump: completed poll cycles
+        self._sources: list = []
+        self._started = False
+        self._stalled = False       # last flush failed; queue must back up
+        self.counters = {"submitted": 0, "rejected": 0, "flushes": 0,
+                         "flush_errors": 0, "source_stalls": 0}
+        self._counters_lock = threading.Lock()
+        self.last_flush_error: Optional[str] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "IngestPipeline":
+        if self._started:
+            return self
+        self._started = True
+        self.engine.ingest = self
+        if self.config.auto_advance:
+            self.driver.start()
+        self._committer_thread = threading.Thread(
+            target=self._committer_loop, daemon=True, name="ingest-committer")
+        self._committer_thread.start()
+        for t in self._pumps:
+            t.start()
+        return self
+
+    def close(self, drain_timeout: float = 5.0) -> None:
+        """Stop the plane: drain what can be drained within the timeout,
+        then stop the threads.  Events stuck behind a persistently failing
+        lake are abandoned (counted in ``flush_errors``)."""
+        if not self._started:
+            return
+        self.drain(timeout=drain_timeout)
+        self._stop.set()
+        if self._committer_thread is not None:
+            self._committer_thread.join(5.0)
+        for t in self._pumps:
+            t.join(1.0)
+        self.driver.stop()
+        if getattr(self.engine, "ingest", None) is self:
+            self.engine.ingest = None
+        self._started = False
+
+    # -- producer edge -------------------------------------------------------
+
+    def submit(self, event: ChangeEvent) -> ChangeEvent:
+        """Admit one change event.  Returns the admitted event (with the
+        pipeline-assigned ``seq`` and derived key); raises
+        :class:`IngestBackpressureError` when the queue is full."""
+        if event.table not in self._tables:
+            raise ValueError(
+                f"unknown table {event.table!r} — graph tables: "
+                f"{sorted(self._tables)}")
+        if event.op == "upsert":
+            # reject malformed rows at admission: a poison event inside a
+            # micro-batch would fail every flush of its table forever
+            meta = self.committer.table_meta(event.table)
+            if sorted(event.row) != sorted(meta.columns):
+                raise ValueError(
+                    f"upsert row for {event.table!r} must carry exactly the "
+                    f"table columns {meta.columns}, got {sorted(event.row)}")
+            key = self.committer.derive_key(event.table, event.row)
+        else:
+            key = event.key
+        with self._seq_lock:
+            seq = self._seq
+            self._seq += 1
+        admitted = dataclasses.replace(event, key=key, seq=seq)
+        try:
+            self.queue.offer(admitted)
+        except IngestBackpressureError:
+            with self._counters_lock:
+                self.counters["rejected"] += 1
+            raise
+        with self._counters_lock:
+            self.counters["submitted"] += 1
+        return admitted
+
+    def upsert(self, table: str, row: dict,
+               event_time: float = -1.0) -> ChangeEvent:
+        return self.submit(ChangeEvent(table=table, op="upsert", row=row,
+                                       event_time=event_time))
+
+    def delete(self, table: str, key, event_time: float = -1.0) -> ChangeEvent:
+        return self.submit(ChangeEvent(table=table, op="delete", key=key,
+                                       event_time=event_time))
+
+    def attach_source(self, source) -> None:
+        """Pump a source (``poll(max_events) -> list[ChangeEvent]``) into
+        the pipeline on a dedicated thread.  Backpressure pauses the pump
+        (the un-admitted event is retried) — nothing is dropped."""
+        self._sources.append(source)
+        idx = len(self._pumps)
+        self._pump_idle.append(False)
+        self._pump_polls.append(0)
+        t = threading.Thread(target=self._pump, args=(source, idx),
+                             daemon=True, name=f"ingest-pump-{idx}")
+        self._pumps.append(t)
+        if self._started:
+            t.start()
+
+    # -- flush / drain -------------------------------------------------------
+
+    def flush_now(self) -> list[CommitRecord]:
+        """Synchronously drain the queue and flush pending batches (the
+        cadence loop keeps running; flush passes are serialized)."""
+        items = self.queue.drain(self.queue.max_events, timeout=0.0)
+        if items:
+            self.committer.ingest(items)
+        return self._do_flush()
+
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Push everything produced so far through commit *and* epoch
+        publish.  True if fully drained within the timeout."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self._quiet():
+                # a pump's idle flag may predate the producer's last append:
+                # require every pump to complete two fresh poll cycles (the
+                # second necessarily *starts* after quiet was observed, so
+                # it sees everything on disk at drain time) and quiet to
+                # still hold before declaring the stream drained
+                marks = list(self._pump_polls)
+                settled = False
+                while time.monotonic() < deadline:
+                    if all(p >= m + 2
+                           for p, m in zip(self._pump_polls, marks)):
+                        settled = True
+                        break
+                    time.sleep(0.002)
+                if settled and self._quiet():
+                    return True
+                continue
+            self.flush_now()
+            if self.config.auto_advance:
+                self.driver.kick()
+            time.sleep(0.005)
+        return False
+
+    def _quiet(self) -> bool:
+        return (all(self._pump_idle) and len(self.queue) == 0
+                and self.committer.pending_events() == 0
+                and (not self.config.auto_advance or self.driver.idle()))
+
+    def _do_flush(self) -> list[CommitRecord]:
+        with self._flush_lock:
+            if self.committer.pending_events() == 0:
+                self._stalled = False
+                return []
+            records, errors = self.committer.flush()
+            self._stalled = bool(errors)
+        with self._counters_lock:
+            self.counters["flushes"] += 1
+            if errors:
+                self.counters["flush_errors"] += len(errors)
+                self.last_flush_error = errors[-1]
+        if records:
+            self.driver.submit(records)
+        return records
+
+    def _committer_loop(self) -> None:
+        next_flush = time.monotonic() + self._flush_interval
+        while not self._stop.is_set():
+            if self._stalled:
+                # a failing lake must surface as backpressure: keep the
+                # retained batch, stop draining, and let the bounded queue
+                # fill so offer() sheds typed to producers
+                self._stop.wait(min(0.05, self._flush_interval))
+                items = []
+            else:
+                items = self.queue.drain(
+                    self.config.max_batch_events,
+                    timeout=min(0.05, self._flush_interval))
+            if items:
+                self.committer.ingest(items)
+            now = time.monotonic()
+            if (now >= next_flush
+                    or self.committer.pending_events()
+                    >= self.config.max_batch_events):
+                self._do_flush()
+                next_flush = time.monotonic() + self._flush_interval
+        # shutdown: one final sweep so a clean close commits everything
+        items = self.queue.drain(self.queue.max_events, timeout=0.0)
+        if items:
+            self.committer.ingest(items)
+        if self.committer.pending_events():
+            self._do_flush()
+
+    def _pump(self, source, idx: int) -> None:
+        backlog: list[ChangeEvent] = []
+        while not self._stop.is_set():
+            if not backlog:
+                backlog = list(source.poll(256))
+                self._pump_polls[idx] += 1
+                if not backlog:
+                    # only now is this pump drained: an un-submitted backlog
+                    # must keep drain() waiting even while the source is empty
+                    self._pump_idle[idx] = True
+                    if self._stop.wait(self.config.source_poll_interval_s):
+                        return
+                    continue
+                self._pump_idle[idx] = False
+            try:
+                self.submit(backlog[0])
+            except IngestBackpressureError:
+                with self._counters_lock:
+                    self.counters["source_stalls"] += 1
+                if self._stop.wait(self.config.source_poll_interval_s):
+                    return
+            else:
+                backlog.pop(0)
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._counters_lock:
+            out = dict(self.counters)
+        out["last_flush_error"] = self.last_flush_error
+        out["stalled"] = self._stalled
+        out["queue_depth"] = len(self.queue)
+        out["queue_max"] = self.queue.max_events
+        out["queue_saturated"] = self.queue.saturated
+        out.update(self.queue.counters)
+        out["pending_events"] = self.committer.pending_events()
+        out["committer"] = self.committer.snapshot_counters()
+        out["driver"] = self.driver.snapshot_counters()
+        out["freshness"] = self.driver.freshness()
+        return out
+
+
+__all__ = ["EpochDriver", "IngestConfig", "IngestPipeline"]

@@ -29,12 +29,17 @@ import dataclasses
 import json
 import time
 import uuid
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.errors import TransientLakeError
-from repro.lakehouse.columnfile import ColumnFileMeta, read_footer, write_column_file
+from repro.lakehouse.columnfile import (
+    ColumnFileMeta,
+    read_columns,
+    read_footer,
+    write_column_file,
+)
 from repro.lakehouse.encoding import Encoding
 from repro.lakehouse.objectstore import ObjectStore
 from repro.lakehouse.retry import default_policy, lake_get_json
@@ -88,6 +93,21 @@ class Snapshot:
     manifest_key: str
     n_files: int
     n_rows: int
+
+
+@dataclasses.dataclass
+class UpsertResult:
+    """What one :meth:`LakeTable.upsert_rows` commit did.
+
+    ``snapshot`` is ``None`` when the call turned out to be a no-op (no new
+    rows and no matching delete keys) — nothing was committed."""
+
+    snapshot: Optional[Snapshot]
+    rows_inserted: int = 0      # upsert keys not present before the commit
+    rows_updated: int = 0       # distinct upsert keys whose old rows were replaced
+    rows_deleted: int = 0       # old rows removed for delete keys
+    files_rewritten: int = 0    # replaced files that kept >=1 surviving row
+    files_removed: int = 0      # data files dropped from the manifest
 
 
 class LakeTable:
@@ -322,6 +342,143 @@ class LakeTable:
             return snap
 
         return self._commit(build)
+
+    def upsert_rows(
+        self,
+        rows: Optional[dict[str, np.ndarray]],
+        key_columns: Sequence[str],
+        delete_keys: Optional[Sequence] = None,
+        row_group_rows: int = 65536,
+        encodings: Optional[dict[str, Encoding]] = None,
+    ) -> UpsertResult:
+        """Row-level upsert/delete as **one** copy-on-write snapshot commit.
+
+        ``rows`` is a dict of equal-length columns (every schema column
+        required); a row whose ``key_columns`` tuple already exists replaces
+        the old row(s), otherwise it is a plain insert.  ``delete_keys`` is
+        a sequence of key tuples (or scalars for single-column keys) whose
+        matching rows are removed.  Mechanics (the Iceberg copy-on-write
+        shape, built from the same pieces ``append_files``/``delete_file``
+        use): data files containing an affected key are rewritten without
+        those rows, the new rows land in one delta file, and a single
+        manifest swap drops the replaced files and adds the new ones — so
+        readers (and pinned epochs) never observe a delete-then-append gap,
+        and ``EpochManager.advance()`` sees exactly one snapshot step.
+
+        Single-writer contract: affected files are resolved against the
+        snapshot current at call time, so concurrent ``upsert_rows`` calls
+        on the *same table* may both rewrite the same file.  The ingest
+        committer serializes per table; concurrent *append* committers
+        remain safe (the CAS commit loop rebuilds the manifest on top of
+        theirs).
+        """
+        rows = {k: np.asarray(v) for k, v in (rows or {}).items()}
+        key_columns = list(key_columns)
+        schema_cols = [c.name for c in self.schema().columns]
+        if rows and sorted(rows) != sorted(schema_cols):
+            raise ValueError(
+                f"upsert rows must carry exactly the table columns "
+                f"{schema_cols}, got {sorted(rows)}")
+        n_new = len(rows[schema_cols[0]]) if rows else 0
+
+        def as_keys(cols: dict) -> list[tuple]:
+            arrays = [np.asarray(cols[c]).tolist() for c in key_columns]
+            return [tuple(vals) for vals in zip(*arrays)]
+
+        new_key_list = as_keys(rows) if n_new else []
+        upsert_keys = set(new_key_list)
+        if len(upsert_keys) != len(new_key_list):
+            raise ValueError("duplicate keys within one upsert batch "
+                             "(coalesce to last-write-wins first)")
+        del_keys = {k if isinstance(k, tuple) else
+                    (tuple(k) if isinstance(k, list) else (k,))
+                    for k in (delete_keys or [])}
+        del_keys -= upsert_keys     # an upsert of the same key supersedes
+        affected = upsert_keys | del_keys
+
+        current = self.data_files() if self._read_meta()["snapshots"] else []
+        token = uuid.uuid4().hex[:8]
+        next_idx = self._read_meta()["next_file_index"]
+        replaced: list[str] = []
+        removed_rows = 0
+        new_files: list[tuple[str, int]] = []     # (key, n_rows)
+        matched_upserts: set = set()
+        rows_deleted = 0
+        files_rewritten = 0
+        for fkey in current if affected else []:
+            meta = read_footer(self.store, fkey)
+            kcols = read_columns(self.store, meta, key_columns)
+            fkeys = as_keys(kcols)
+            hit = np.fromiter((k in affected for k in fkeys),
+                              dtype=bool, count=len(fkeys))
+            if not hit.any():
+                continue
+            for k, h in zip(fkeys, hit):
+                if h:
+                    if k in upsert_keys:
+                        matched_upserts.add(k)
+                    else:
+                        rows_deleted += 1
+            replaced.append(fkey)
+            removed_rows += meta.n_rows
+            if not hit.all():
+                full = read_columns(self.store, meta, meta.columns)
+                survivors = {c: v[~hit] for c, v in full.items()}
+                nk = self.data_key(next_idx, token)
+                next_idx += 1
+                write_column_file(self.store, nk, survivors,
+                                  row_group_rows=row_group_rows,
+                                  encodings=encodings)
+                new_files.append((nk, int((~hit).sum())))
+                files_rewritten += 1
+        if n_new:
+            nk = self.data_key(next_idx, token)
+            next_idx += 1
+            write_column_file(self.store, nk,
+                              {c: rows[c] for c in schema_cols},
+                              row_group_rows=row_group_rows,
+                              encodings=encodings)
+            new_files.append((nk, n_new))
+        if not replaced and not new_files:
+            return UpsertResult(snapshot=None)
+
+        replaced_set = set(replaced)
+        n_added = sum(n for _, n in new_files)
+        end_idx = next_idx
+
+        def build(meta: dict, tok: str) -> Snapshot:
+            if meta["snapshots"]:
+                prev = Snapshot(**meta["snapshots"][-1])
+                manifest = lake_get_json(self.store, prev.manifest_key)
+                base_files = list(manifest["files"])
+                base_rows = prev.n_rows
+            else:
+                base_files, base_rows = [], 0
+            files = [f for f in base_files if f not in replaced_set] \
+                + [k for k, _ in new_files]
+            snapshot_id = len(meta["snapshots"]) + 1
+            manifest_key = self._manifest_key(snapshot_id, tok)
+            self.store.put(manifest_key, json.dumps({"files": files}).encode())
+            snap = Snapshot(
+                snapshot_id=snapshot_id,
+                timestamp=time.time(),
+                manifest_key=manifest_key,
+                n_files=len(files),
+                n_rows=base_rows - removed_rows + n_added,
+            )
+            meta["snapshots"].append(dataclasses.asdict(snap))
+            meta["next_file_index"] = max(meta["next_file_index"], end_idx)
+            return snap
+
+        snap = self._commit(build)
+        return UpsertResult(
+            snapshot=snap,
+            rows_inserted=n_new - len(matched_upserts),
+            rows_updated=len(matched_upserts),
+            rows_deleted=rows_deleted,
+            files_rewritten=files_rewritten,
+            files_removed=len(replaced),
+        )
 
 
 class LakeCatalog:

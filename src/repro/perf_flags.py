@@ -60,6 +60,20 @@ record exact before/after deltas:
                    ``retry=<attempts>`` overrides the attempt budget
                    (default 5).  Off = fail-fast single attempt.
 
+- ``ingest``     — streaming-ingestion micro-batch cadence (DESIGN.md §12):
+                   the CDC-to-epoch pipeline flushes its coalesced change
+                   events into a lake commit every ``ingest=<cadence_ms>``
+                   milliseconds (default 50) when
+                   ``IngestConfig.flush_interval_s`` is unset.  The flag is
+                   a tunable, not an on/off path — a pipeline only exists
+                   when a caller constructs one.
+
+- ``ingest_queue`` — bounded ingest-queue depth (default 4096 events) when
+                   ``IngestConfig.max_queue`` is unset.  A full queue sheds
+                   typed ``IngestBackpressureError`` to the producer.  Not
+                   an optimization toggle, so it lives in the recognized-
+                   but-not-default-on set.
+
 - ``chaos``      — seeded fault injection on the object store (OFF by
                    default: a test/benchmark mode, not an optimization).
                    ``chaos=<rate>`` injects transient faults at the given
@@ -86,10 +100,11 @@ import os
 import warnings
 
 _ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr",
-        "pipe", "refresh", "batch", "retry")
+        "pipe", "refresh", "batch", "retry", "ingest")
 
-# recognized but not default-on (capacity trades, chaos modes) — never warned
-_KNOWN_OFF = ("kv_int8", "chaos")
+# recognized but not default-on (capacity trades, chaos modes, bare
+# tunables) — never warned
+_KNOWN_OFF = ("kv_int8", "chaos", "ingest_queue")
 
 # REPRO_OPTS strings already checked for typos (warn once per distinct value)
 _checked: set = set()

@@ -412,6 +412,9 @@ class QueryServer:
         store = getattr(self.engine, "store", None)
         if store is not None and getattr(store, "faults", None) is not None:
             out["faults"] = store.faults.snapshot()
+        ingest = getattr(self.engine, "ingest", None)
+        if ingest is not None:
+            out["ingest"] = ingest.stats()
         return out
 
     # -- scheduler ----------------------------------------------------------------

@@ -2,6 +2,7 @@
 sync (edge/vertex appends, CSR merge-extension, IDM extension), file-scoped
 cache invalidation, refcounted retirement, and the serving refresher."""
 
+import threading
 import time
 
 import numpy as np
@@ -273,6 +274,107 @@ def test_accumulators_track_grown_dense_space(store, ldbc, engine):
     assert res1.accumulators["cnt"][res1.vset.mask].sum() > 0
     # both runs counted every comment once; the append added 30 edges
     assert res1.accumulators["cnt"].sum() == sum0 + ldbc.n_comments + 30
+
+
+# ---------------------------------------------------------------------------
+# concurrent advance: serialized, monotonic, no torn publish
+# ---------------------------------------------------------------------------
+
+def test_concurrent_advance_serialized_and_monotonic(store, ldbc, engine):
+    """Racing advance() callers (the ingest epoch driver + the server's
+    refresher + manual calls all share this entry point) must serialize:
+    per commit round exactly one applies the diff, epoch ids stay strictly
+    monotonic with no gaps, and a watcher never observes a torn epoch."""
+    watch_errors = []
+    seen_ids = []
+    stop = threading.Event()
+
+    def watch():
+        last = 0
+        while not stop.is_set():
+            e = engine.current_epoch()
+            if e.epoch_id < last:
+                watch_errors.append(f"epoch went backwards: {e.epoch_id} < {last}")
+                return
+            if not (e.vertex_pins and e.edge_pins and e.idm is not None):
+                watch_errors.append(f"torn epoch {e.epoch_id}: missing pins/idm")
+                return
+            last = e.epoch_id
+            seen_ids.append(last)
+
+    watcher = threading.Thread(target=watch)
+    watcher.start()
+    try:
+        e_start = engine.current_epoch().epoch_id
+        lake = LakeCatalog(store)
+        raw_c = engine.topology.idm.raw_ids("Comment")
+        raw_p = engine.topology.idm.raw_ids("Person")
+        for rnd in range(3):
+            lake.table("Comment_HasCreator_Person").append_files([{
+                "src": raw_c[rnd * 10:(rnd + 1) * 10],
+                "dst": raw_p[np.arange(10) % len(raw_p)],
+                "creationDate": np.full(10, 20230101 + rnd, dtype=np.int64),
+            }])
+            barrier = threading.Barrier(4)
+            reports, errors = [], []
+
+            def advance_racing():
+                barrier.wait()
+                try:
+                    reports.append(engine.advance())
+                except Exception as ex:      # noqa: BLE001 — collected
+                    errors.append(ex)
+
+            threads = [threading.Thread(target=advance_racing)
+                       for _ in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errors, errors
+            # exactly one racer applied the diff; the rest no-op'd
+            assert sum(1 for r in reports if r.changed) == 1
+            assert engine.current_epoch().epoch_id == e_start + rnd + 1
+    finally:
+        stop.set()
+        watcher.join()
+    assert not watch_errors, watch_errors
+    # the watcher saw a monotone id sequence ending at the final epoch
+    assert seen_ids == sorted(seen_ids)
+
+
+# ---------------------------------------------------------------------------
+# delete_file -> advance: evicted data matches a cold start bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_edge_file_delete_advance_matches_cold_start(store, ldbc, engine):
+    t = LakeCatalog(store).table("Comment_HasCreator_Person")
+    victim = t.data_files()[1]
+    victim_rows = None
+    from repro.lakehouse.columnfile import read_footer
+    victim_rows = read_footer(store, victim).n_rows
+    n_before = engine.current_epoch().n_edges("HasCreator")
+
+    t.delete_file(victim)
+    report = engine.advance()
+    assert report.changed and report.edge_files_removed == 1
+
+    e1 = engine.current_epoch()
+    assert e1.n_edges("HasCreator") == n_before - victim_rows
+    res = Query(engine).vertices("Comment").hop(
+        "HasCreator", edge_where=gt("creationDate", 0)).run()
+    assert res.epoch_id == e1.epoch_id
+
+    # the surviving epoch is bit-identical to an engine that never saw the
+    # deleted file at all
+    cold = GraphLakeEngine(store, ldbc_graph_schema(), materialize_topology=False)
+    cold.startup()
+    try:
+        res_cold = Query(cold).vertices("Comment").hop(
+            "HasCreator", edge_where=gt("creationDate", 0)).run()
+        _assert_parity(res, res_cold)
+    finally:
+        cold.close()
 
 
 # ---------------------------------------------------------------------------

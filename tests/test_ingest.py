@@ -1,0 +1,512 @@
+"""Tests: streaming ingestion plane (DESIGN.md §12) — change-event model and
+sources, bounded queue with typed backpressure, last-write-wins coalescing,
+copy-on-write upserts, CDC-to-epoch freshness, oracle parity, and the
+stalled-committer fault-injection path."""
+
+import json
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.engine import GraphLakeEngine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.errors import IngestBackpressureError, ReproError
+from repro.ingest import (
+    ChangeEvent,
+    ChangeLog,
+    FileTailSource,
+    IngestConfig,
+    IngestPipeline,
+    IngestQueue,
+    MicroBatchCommitter,
+    append_jsonl,
+    event_from_json,
+    event_to_json,
+)
+from repro.lakehouse.columnfile import read_columns, read_footer
+from repro.lakehouse.faults import FaultInjector, FaultRule
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.table import ColumnSpec, LakeCatalog, TableSchema
+
+
+@pytest.fixture
+def store(tmp_path):
+    return ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+
+
+@pytest.fixture
+def ldbc(store):
+    return generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=256)
+
+
+@pytest.fixture
+def engine(store, ldbc):
+    eng = GraphLakeEngine(store, ldbc.schema, materialize_topology=False)
+    eng.startup()
+    yield eng
+    eng.close()
+
+
+def _comment_row(cid, length=1, date=20130101, browser="Chrome"):
+    return {"id": cid, "creationDate": date, "length": length,
+            "browserUsed": browser}
+
+
+def _table_rows(store, table, key_col="id"):
+    """All rows of a lake table as {key: row_dict} (layout-independent)."""
+    t = LakeCatalog(store).table(table)
+    cols = [c.name for c in t.schema().columns]
+    out = {}
+    for fk in t.data_files():
+        meta = read_footer(store, fk)
+        data = read_columns(store, meta, cols)
+        for i in range(meta.n_rows):
+            row = {c: data[c][i] for c in cols}
+            out[row[key_col]] = row
+    return out
+
+
+# ---------------------------------------------------------------------------
+# change-event model + sources
+# ---------------------------------------------------------------------------
+
+def test_change_event_validation_and_json_roundtrip():
+    with pytest.raises(ValueError):
+        ChangeEvent(table="Comment", op="mutate")
+    with pytest.raises(ValueError):
+        ChangeEvent(table="Comment", op="upsert")          # row required
+    with pytest.raises(ValueError):
+        ChangeEvent(table="Comment", op="delete")          # key required
+    e = ChangeEvent(table="Comment", op="delete", key=13)
+    assert e.key == (13,)                                  # normalized
+    assert e.event_time > 0                                # stamped
+
+    up = ChangeEvent(table="Comment", op="upsert", key=(23,),
+                     row=_comment_row(np.int64(23), length=np.int64(7)),
+                     event_time=5.0)
+    rt = event_from_json(json.loads(json.dumps(event_to_json(up))))
+    assert rt.table == up.table and rt.op == "upsert"
+    assert rt.row == {"id": 23, "creationDate": 20130101, "length": 7,
+                      "browserUsed": "Chrome"}             # numpy -> plain
+    assert rt.event_time == 5.0
+    # LWW ordering: later event_time wins; seq breaks ties
+    assert ChangeEvent(table="t", op="delete", key=1, event_time=2.0,
+                       seq=0).ordering() \
+        > ChangeEvent(table="t", op="delete", key=1, event_time=1.0,
+                      seq=9).ordering()
+
+
+def test_changelog_poll_rewind_history():
+    log = ChangeLog()
+    log.upsert("Comment", _comment_row(13), event_time=1.0)
+    log.delete("Comment", 23, event_time=2.0)
+    assert len(log) == 2
+    first = log.poll(max_events=1)
+    assert len(first) == 1 and first[0].op == "upsert"
+    assert [e.op for e in log.poll()] == ["delete"]
+    assert log.poll() == [] and len(log) == 0
+    log.rewind()
+    assert [e.op for e in log.poll()] == ["upsert", "delete"]
+    assert len(log.history()) == 2
+
+
+def test_file_tail_source_ignores_partial_trailing_line(tmp_path):
+    path = str(tmp_path / "cdc.jsonl")
+    src = FileTailSource(path)
+    assert src.poll() == []                                # missing file
+    append_jsonl(path, [ChangeEvent(table="Comment", op="delete", key=13,
+                                    event_time=1.0)])
+    with open(path, "a", encoding="utf-8") as f:           # torn tail
+        f.write('{"table": "Comment", "op": "del')
+    got = src.poll()
+    assert len(got) == 1 and got[0].key == (13,)
+    assert src.poll() == []                                # tail still torn
+    with open(path, "a", encoding="utf-8") as f:           # writer finishes
+        f.write('ete", "key": [23], "event_time": 2.0}\n')
+    got = src.poll()
+    assert len(got) == 1 and got[0].key == (23,)
+    src.rewind()
+    assert [e.key for e in src.poll()] == [(13,), (23,)]
+
+
+# ---------------------------------------------------------------------------
+# bounded queue: typed backpressure + watermark hysteresis
+# ---------------------------------------------------------------------------
+
+def test_queue_backpressure_typed_and_watermark_hysteresis():
+    q = IngestQueue(max_events=8, high_watermark=0.75, low_watermark=0.25)
+    ev = lambda i: ChangeEvent(table="t", op="delete", key=i, event_time=1.0)
+    for i in range(6):
+        q.offer(ev(i))
+        assert q.saturated == (i >= 5)              # latches at 6/8
+    for i in range(6, 8):
+        q.offer(ev(i))
+    with pytest.raises(IngestBackpressureError) as exc:
+        q.offer(ev(99))
+    # typed: catchable as the repro base AND as a stdlib RuntimeError
+    assert isinstance(exc.value, ReproError)
+    assert isinstance(exc.value, RuntimeError)
+    assert q.counters["backpressure_trips"] == 1
+    assert q.counters["watermark_trips"] == 1
+
+    assert len(q.drain(4)) == 4                     # 4 left > low mark (2)
+    assert q.saturated                              # hysteresis: still latched
+    assert len(q.drain(2)) == 2                     # at the low mark now
+    assert not q.saturated
+    q.offer(ev(100))                                # accepts again, no re-trip
+    assert q.counters["watermark_trips"] == 1
+
+
+# ---------------------------------------------------------------------------
+# coalescing: last-write-wins per (table, key)
+# ---------------------------------------------------------------------------
+
+def test_coalesce_last_write_wins(engine):
+    c = MicroBatchCommitter(engine)
+    mk = lambda length, et, seq: (ChangeEvent(
+        table="Comment", op="upsert", key=(13,),
+        row=_comment_row(13, length=length), event_time=et, seq=seq), 0.0)
+    # in-order duplicate, then an *out-of-order* straggler: both coalesce,
+    # the (event_time, seq)-greatest row survives
+    c.ingest([mk(1, 10.0, 0), mk(2, 11.0, 1), mk(99, 9.0, 2)])
+    assert c.pending_events() == 1
+    assert c.counters["events_coalesced"] == 2
+    records, errors = c.flush()
+    assert not errors and len(records) == 1
+    assert records[0].kind == "upsert" and records[0].n_events == 1
+    assert _table_rows(engine.store, "Comment")[13]["length"] == 2
+    # a delete with the greatest ordering wins the slot over the upserts
+    c.ingest([mk(5, 20.0, 3),
+              (ChangeEvent(table="Comment", op="delete", key=(13,),
+                           event_time=21.0, seq=4), 0.0)])
+    records, errors = c.flush()
+    assert not errors
+    assert c.counters["rows_deleted"] == 1
+    assert 13 not in _table_rows(engine.store, "Comment")
+
+
+# ---------------------------------------------------------------------------
+# LakeTable.upsert_rows: copy-on-write single-snapshot semantics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def kv_table(store):
+    t = LakeCatalog(store).table("kv")
+    t.create(TableSchema("kv", [
+        ColumnSpec("id", "int64", role="primary_key"),
+        ColumnSpec("val", "int64"),
+        ColumnSpec("tag", "str"),
+    ]))
+    # two files: ids 0..9 and 10..19
+    for lo in (0, 10):
+        ids = np.arange(lo, lo + 10, dtype=np.int64)
+        t.append_files([{"id": ids, "val": ids * 100,
+                         "tag": np.array(["seed"] * 10, dtype=object)}])
+    return t
+
+
+def test_upsert_rows_insert_update_delete_one_snapshot(store, kv_table):
+    t = kv_table
+    snaps_before = len(t.snapshots())
+    rows_before = t.current_snapshot().n_rows
+    res = t.upsert_rows(
+        {"id": np.array([5, 30], dtype=np.int64),       # 5 update, 30 insert
+         "val": np.array([555, 3000], dtype=np.int64),
+         "tag": np.array(["new", "new"], dtype=object)},
+        key_columns=["id"], delete_keys=[12])
+    assert res.snapshot is not None
+    assert len(t.snapshots()) == snaps_before + 1       # ONE snapshot step
+    assert (res.rows_inserted, res.rows_updated, res.rows_deleted) == (1, 1, 1)
+    assert t.current_snapshot().n_rows == rows_before + 1 - 1
+
+    rows = _table_rows(store, "kv")
+    assert rows[5]["val"] == 555 and rows[5]["tag"] == "new"
+    assert rows[30]["val"] == 3000
+    assert 12 not in rows
+    assert rows[7]["val"] == 700                        # survivors intact
+    assert len(rows) == rows_before + 1 - 1             # no dup keys anywhere
+
+
+def test_upsert_rows_rewrites_only_affected_files(store, kv_table):
+    t = kv_table
+    files_before = t.data_files()
+    res = t.upsert_rows(
+        {"id": np.array([3], dtype=np.int64),           # lives in file 1 only
+         "val": np.array([42], dtype=np.int64),
+         "tag": np.array(["x"], dtype=object)},
+        key_columns=["id"])
+    files_after = t.data_files()
+    assert res.files_rewritten == 1
+    assert files_before[1] in files_after               # untouched by identity
+    assert files_before[0] not in files_after           # rewritten + delta
+    assert _table_rows(store, "kv")[3]["val"] == 42
+
+
+def test_upsert_rows_delete_only_and_noop(store, kv_table):
+    t = kv_table
+    res = t.upsert_rows(None, key_columns=["id"], delete_keys=[0, 1, 999])
+    assert res.rows_deleted == 2 and res.rows_inserted == 0
+    assert 0 not in _table_rows(store, "kv")
+    # keys nobody has: no commit at all
+    snaps = len(t.snapshots())
+    res2 = t.upsert_rows(None, key_columns=["id"], delete_keys=[999])
+    assert res2.snapshot is None and len(t.snapshots()) == snaps
+
+
+def test_upsert_rows_rejects_in_batch_duplicates_and_bad_columns(kv_table):
+    with pytest.raises(ValueError, match="duplicate keys"):
+        kv_table.upsert_rows(
+            {"id": np.array([1, 1], dtype=np.int64),
+             "val": np.array([2, 3], dtype=np.int64),
+             "tag": np.array(["a", "b"], dtype=object)},
+            key_columns=["id"])
+    with pytest.raises(ValueError, match="exactly the table columns"):
+        kv_table.upsert_rows({"id": np.array([1], dtype=np.int64)},
+                             key_columns=["id"])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: pipeline vs batch-committed oracle (zero lost, zero duplicated)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_matches_batch_oracle(tmp_path, store, ldbc, engine):
+    """Replay a duplicate-laden CDC stream through the pipeline, then replay
+    the identical history into a fresh batch-committed lake; final table
+    contents and a GSQL aggregate must agree key-for-key."""
+    rng = np.random.default_rng(11)
+    log = ChangeLog()
+    base = ldbc.n_comments
+    existing = [int(i) * 10 + 3 for i in range(1, base + 1)]
+    t0 = 100.0
+    for i in range(40):                     # new comments (some twice)
+        cid = (base + 1 + i % 30) * 10 + 3
+        log.upsert("Comment", _comment_row(cid, length=i + 1), event_time=t0 + i)
+    for i in range(10):                     # updates of seed rows
+        log.upsert("Comment", _comment_row(existing[i], length=9000 + i),
+                   event_time=t0 + 50 + i)
+    for i in range(5):                      # deletes (2 of them just-inserted)
+        victim = existing[20 + i] if i < 3 else (base + 1 + i) * 10 + 3
+        log.delete("Comment", victim, event_time=t0 + 70 + i)
+    for i in range(15):                     # edge appends for new comments
+        cid = (base + 1 + i) * 10 + 3
+        log.upsert("Comment_HasCreator_Person",
+                   {"src": cid, "dst": 11, "creationDate": 20130101},
+                   event_time=t0 + 80 + i)
+
+    pipe = IngestPipeline(engine, IngestConfig(flush_interval_s=0.01)).start()
+    pipe.attach_source(log)
+    deadline = time.monotonic() + 30.0
+    while len(log) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert pipe.drain(timeout=30.0), pipe.stats()
+    s = pipe.stats()
+    assert s["flush_errors"] == 0 and s["rejected"] == 0
+    pipe.close()
+
+    # oracle: same history, replayed through batch upsert_rows commits on a
+    # fresh copy of the same seed lake
+    ostore = ObjectStore(StoreConfig(root=str(tmp_path / "oracle")))
+    generate_ldbc(ostore, scale_factor=0.004, n_files=2, row_group_rows=256)
+    by_table = {}
+    for e in log.history():
+        key = (e.row["id"],) if (e.table == "Comment" and e.op == "upsert") \
+            else ((e.row["src"], e.row["dst"])
+                  if e.op == "upsert" else e.key)
+        by_table.setdefault(e.table, {})[key] = e       # history is in order
+    for table, slot in by_table.items():
+        lt = LakeCatalog(ostore).table(table)
+        cols = [c.name for c in lt.schema().columns]
+        ups = [e for e in slot.values() if e.op == "upsert"]
+        dels = [e.key for e in slot.values() if e.op == "delete"]
+        keyc = ["id"] if lt.schema().primary_key else ["src", "dst"]
+        lt.upsert_rows(
+            {c: np.array([e.row[c] for e in ups],
+                         dtype=(object if c == "browserUsed" else np.int64))
+             for c in cols} if ups else None,
+            key_columns=keyc, delete_keys=dels)
+
+    for table in ("Comment", "Comment_HasCreator_Person"):
+        if table == "Comment":
+            got = _table_rows(store, table)
+            want = _table_rows(ostore, table)
+        else:
+            got = {(r["src"], r["dst"]): r
+                   for r in _table_rows(store, table, key_col="src").values()}
+            want = {(r["src"], r["dst"]): r
+                    for r in _table_rows(ostore, table, key_col="src").values()}
+        assert got == want, f"{table} diverged from oracle"
+
+    # and through the query engine: per-person counts over the ingested lake
+    # equal the oracle engine's (raw-id keyed — dense ids differ by layout)
+    def creator_counts(eng):
+        sess = eng.session()
+        res = sess.query(
+            "SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+            "WHERE c.length > 0 ACCUM p.@cnt += 1")
+        acc = res.accumulators["cnt"]
+        ep = eng.current_epoch()
+        raw = ep.idm.raw_ids("Person")
+        n = ep.n_real_vertices("Person")
+        return {int(raw[i]): float(acc[i]) for i in range(n) if acc[i] > 0}
+
+    oeng = GraphLakeEngine(ostore, ldbc_graph_schema(),
+                           materialize_topology=False)
+    oeng.startup()
+    try:
+        assert creator_counts(engine) == creator_counts(oeng)
+    finally:
+        oeng.close()
+
+
+# ---------------------------------------------------------------------------
+# freshness: commit -> queryable via the epoch driver
+# ---------------------------------------------------------------------------
+
+def test_epoch_driver_freshness_and_visibility(store, ldbc, engine):
+    e0 = engine.current_epoch().epoch_id
+    pipe = IngestPipeline(engine, IngestConfig(flush_interval_s=0.01)).start()
+    try:
+        base = ldbc.n_comments
+        for i in range(25):
+            pipe.upsert("Comment", _comment_row((base + 1 + i) * 10 + 3,
+                                                length=i + 1))
+        assert pipe.drain(timeout=30.0), pipe.stats()
+        s = pipe.stats()
+        assert engine.current_epoch().epoch_id > e0
+        assert s["driver"]["advances"] >= 1
+        assert s["driver"]["events_visible"] == 25
+        f = s["freshness"]
+        assert f["samples"] >= 1
+        assert 0 < f["commit_to_queryable_p99_s"] < 30.0
+        # end-to-end >= commit-to-queryable for the same batches
+        assert (f["ingest_to_queryable_p99_s"]
+                >= f["commit_to_queryable_p99_s"])
+        # the new rows are genuinely queryable
+        sess = engine.session()
+        res = sess.query("SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+                         "WHERE c.creationDate == 99 ACCUM p.@cnt += 1")
+        assert res.epoch_id == engine.current_epoch().epoch_id
+    finally:
+        pipe.close()
+
+
+def test_vertex_update_and_delete_visible_after_drain(store, ldbc, engine):
+    n_before = engine.current_epoch().n_real_vertices("Comment")
+    pipe = IngestPipeline(engine, IngestConfig(flush_interval_s=0.01)).start()
+    try:
+        pipe.upsert("Comment", _comment_row(13, length=777777))
+        pipe.delete("Comment", 23)
+        assert pipe.drain(timeout=30.0), pipe.stats()
+        e1 = engine.current_epoch()
+        assert e1.n_real_vertices("Comment") == n_before - 1
+        sess = engine.session()
+        res = sess.query(
+            "SELECT p FROM Comment:c -(HasCreator:e)- Person:p "
+            "WHERE c.length == 777777 ACCUM p.@cnt += 1")
+        assert res.accumulators["cnt"].sum() == 1.0
+    finally:
+        pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# stalled committer: typed backpressure under fault injection, then heal
+# ---------------------------------------------------------------------------
+
+def test_stalled_committer_sheds_typed_then_heals(store, ldbc, engine):
+    # every table write fails -> flushes fail -> the queue fills -> offer()
+    # sheds typed; healing the store lets the retained batch drain with
+    # exactly-once commits
+    store.faults = FaultInjector(
+        [FaultRule(prefix="tables/", ops=("put", "put_if"),
+                   transient_rate=1.0)], seed=3)
+    pipe = IngestPipeline(engine, IngestConfig(
+        flush_interval_s=0.01, max_queue=8)).start()
+    try:
+        base = ldbc.n_comments
+        shed = 0
+        deadline = time.monotonic() + 30.0
+        i = 0
+        while shed == 0 and time.monotonic() < deadline:
+            try:
+                pipe.upsert("Comment",
+                            _comment_row((base + 1 + i % 40) * 10 + 3,
+                                         length=i + 1))
+                i += 1
+            except IngestBackpressureError:
+                shed += 1
+            time.sleep(0.001)
+        s = pipe.stats()
+        assert shed == 1, s
+        assert s["rejected"] == 1 and s["flush_errors"] >= 1, s
+        assert s["backpressure_trips"] >= 1
+        assert s["last_flush_error"] is not None
+
+        store.faults = None                 # heal the lake
+        assert pipe.drain(timeout=30.0), pipe.stats()
+        rows = _table_rows(store, "Comment")
+        ingested = {k: r for k, r in rows.items() if k > base * 10 + 3}
+        # exactly-once: every admitted key present once, at its last value
+        assert len(ingested) == min(i, 40)
+        for k, r in ingested.items():
+            assert rows[k]["length"] == r["length"]     # single row per key
+    finally:
+        pipe.close()
+
+
+# ---------------------------------------------------------------------------
+# wiring: perf flags, server health, session handle
+# ---------------------------------------------------------------------------
+
+def test_ingest_flag_hygiene(monkeypatch):
+    from repro import perf_flags
+    # defaults with no REPRO_OPTS
+    monkeypatch.delenv("REPRO_OPTS", raising=False)
+    assert perf_flags.enabled("ingest")
+    assert IngestConfig().resolved_flush_interval() == pytest.approx(0.05)
+    assert IngestConfig().resolved_max_queue() == 4096
+    # flag tunables flow into the resolved config
+    monkeypatch.setenv("REPRO_OPTS", "ingest=5,ingest_queue=16")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # recognized flags never warn
+        assert IngestConfig().resolved_flush_interval() == pytest.approx(0.005)
+        assert IngestConfig().resolved_max_queue() == 16
+    # explicit config wins over the flag
+    cfg = IngestConfig(flush_interval_s=0.2, max_queue=7)
+    assert cfg.resolved_flush_interval() == 0.2
+    assert cfg.resolved_max_queue() == 7
+    # a typo still warns once
+    monkeypatch.setenv("REPRO_OPTS", "ingset=5")
+    perf_flags._checked.discard("ingset=5")
+    with pytest.warns(UserWarning, match="ingset"):
+        perf_flags.enabled("ingest")
+
+
+def test_server_health_exposes_ingest_counters(store, ldbc, engine):
+    from repro.serving.server import QueryServer, ServerConfig
+    pipe = IngestPipeline(engine, IngestConfig(flush_interval_s=0.01)).start()
+    server = QueryServer(engine, {}, ServerConfig(n_workers=1))
+    try:
+        pipe.upsert("Comment", _comment_row((ldbc.n_comments + 1) * 10 + 3))
+        assert pipe.drain(timeout=30.0)
+        h = server.health()
+        assert h["ingest"]["submitted"] == 1
+        assert h["ingest"]["committer"]["events_committed"] == 1
+        assert h["ingest"]["freshness"]["samples"] >= 1
+    finally:
+        server.close()
+        pipe.close()
+    assert server.health().get("ingest") is None        # deregistered
+
+
+def test_session_ingest_handle_lifecycle(engine):
+    sess = engine.session()
+    pipe = sess.ingest(IngestConfig(flush_interval_s=0.01))
+    assert sess.ingest() is pipe                        # cached
+    assert engine.ingest is pipe                        # registered
+    with pytest.raises(ValueError, match="first call"):
+        sess.ingest(IngestConfig())
+    sess.close()
+    assert engine.ingest is None                        # closed with session

@@ -64,6 +64,17 @@ from benchmarks.bench_chaos import run
 run(quick=True)
 PY
 
+echo "== streaming ingestion: freshness SLO + oracle parity (quick mode) =="
+# writes the BENCH_freshness.json snapshot: p50/p99 commit->queryable and
+# ingest->queryable latency for a paced CDC stream under concurrent query
+# load (bounded-p99 floor), row-for-row parity of the micro-batched lake
+# against a batch-committed oracle (zero dropped/duplicated events), and
+# the typed-backpressure-under-stall / heal-and-drain-exactly-once arc.
+python - <<'PY'
+from benchmarks.bench_freshness import run
+run(quick=True)
+PY
+
 echo "== tier-1 tests (slow SPMD dry-runs deselected) =="
 # test_archs_smoke / test_train_substrate and one misc test fail in this
 # container for environment reasons (installed jax predates APIs the model
