@@ -1,0 +1,171 @@
+"""Shard fabric throughput: scatter-gather BI suite across 1/2/4 shards
+(DESIGN.md §13).
+
+Each arm connects to the *same* LDBC lake — the 1-shard arm is the plain
+single engine, the 2/4-shard arms attach a :class:`ShardFabric` — and runs
+the whole BI suite with **cold caches per pass** under the modeled
+object-store latency.  What scales is per-worker I/O capacity: every shard
+worker owns its vertex-slice cache and I/O pool (block-hash ownership
+matches the lake's row-group granularity, so frontier-side reads are
+chunk-disjoint across workers), edge chunks and far-side boundary columns
+dedup through the coordinator's shared single-flight cache, and worker
+legs overlap their chunk fetches where the single engine is bounded by one
+pool.
+
+Asserts, per the ISSUE 10 acceptance bar:
+
+- every sharded result is **bit-identical** to the 1-shard arm (vset,
+  accumulators, frame rows in global edge order);
+- 4-shard suite throughput >= ``min_speedup`` (1.5x) over the single
+  engine.
+
+Snapshot written to ``BENCH_shard.json`` (override with
+``REPRO_BENCH_SHARD_SNAPSHOT``); ``run(quick=True)`` is the CI-gate mode.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, fresh_store
+from repro.core.bi_queries import BI_GSQL, install_bi_queries
+from repro.core.cache.manager import CacheManager
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.gsql.session import connect
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+
+SNAPSHOT_PATH = os.environ.get("REPRO_BENCH_SHARD_SNAPSHOT", "BENCH_shard.json")
+
+BI_PARAMS = {
+    "bi1": {"tag": "Music", "date": 20100101},
+    "bi2": {"lo": 20120101, "hi": 20151231},
+    "bi3": {"min_len": 50},
+    "bi4": {"city": "city_1"},
+    "bi5": {"min_degree": 3, "date": 20100101},
+}
+
+# the lake below commits 512-row groups; 2**9-row ownership blocks keep a
+# shard's vertex reads chunk-local (one block == one row group)
+ROW_GROUP_ROWS = 512
+BLOCK_BITS = 9
+
+
+def _assert_parity(a, b, label) -> None:
+    assert a.n_edges_scanned == b.n_edges_scanned, label
+    assert np.array_equal(a.vset.ids(), b.vset.ids()), label
+    for k in a.accumulators:
+        assert np.array_equal(a.accumulators[k], b.accumulators[k]), (label, k)
+    for fa, fb in zip(a.frames, b.frames):
+        assert np.array_equal(fa.u, fb.u) and np.array_equal(fa.v, fb.v), label
+        if fa.eid is not None and fb.eid is not None:
+            assert np.array_equal(fa.eid, fb.eid), label
+        for k in fa.columns:
+            assert np.array_equal(fa.columns[k], fb.columns[k]), (label, k)
+
+
+def _chill(session) -> None:
+    """Cold caches for the next pass: the coordinator's manager and every
+    shard worker's (each worker owns its own, DESIGN.md §13)."""
+    eng = session.engine
+    eng.cache = CacheManager(eng.store, None)
+    fabric = eng._shard_fabric
+    if fabric is not None:
+        for worker in fabric.workers.values():
+            worker.reset_cache()
+
+
+def _suite(session) -> dict:
+    return {name: session.query(name, **BI_PARAMS[name]) for name in BI_GSQL}
+
+
+def shard_sweep(
+    sf: float = 0.02,
+    latency_scale: float = 1.0,
+    passes: int = 3,
+    min_speedup: float = 1.5,
+    arms: tuple = (1, 2, 4),
+) -> dict:
+    # generate with the latency model off; only measured passes pay it
+    store = fresh_store("shard", latency_scale=0.0)
+    generate_ldbc(store, scale_factor=sf, n_files=4,
+                  row_group_rows=ROW_GROUP_ROWS)
+    root = store.config.root
+
+    results = {}
+    out = {"sf": sf, "latency_scale": latency_scale, "passes": passes,
+           "n_queries": len(BI_GSQL), "arms": {}}
+    for n in arms:
+        handle = ObjectStore(StoreConfig(root=root))
+        session = connect(handle, ldbc_graph_schema(),
+                          shards=n if n >= 2 else None,
+                          shard_block_bits=BLOCK_BITS,
+                          enable_prefetch=False)
+        install_bi_queries(session)
+        try:
+            results[n] = _suite(session)      # warm correctness pass
+            handle.config.latency_scale = latency_scale
+            walls = []
+            for _ in range(passes):
+                _chill(session)
+                t0 = time.perf_counter()
+                _suite(session)
+                walls.append(time.perf_counter() - t0)
+            handle.config.latency_scale = 0.0
+            fabric = session.engine._shard_fabric
+            arm = {
+                "wall_s": min(walls),
+                "queries_per_s": len(BI_GSQL) / min(walls),
+                "get_requests": handle.counters["get_requests"],
+            }
+            if fabric is not None:
+                snap = fabric.stats_snapshot()
+                arm["scatter_gathers"] = snap["scatter_gathers"]
+                arm["worker_scans"] = snap["worker_scans"]
+                arm["shard_csr_blobs"] = snap["shard_csr_blobs"]
+            out["arms"][str(n)] = arm
+        finally:
+            session.close()
+
+    # bit-parity: every sharded arm reproduces the single engine exactly
+    for n in arms:
+        if n == 1:
+            continue
+        for name in BI_GSQL:
+            _assert_parity(results[1][name], results[n][name],
+                           (n, name))
+    out["parity"] = "bit-identical"
+
+    base = out["arms"]["1"]["queries_per_s"]
+    for n in arms:
+        out["arms"][str(n)]["speedup"] = out["arms"][str(n)][
+            "queries_per_s"] / base
+    top = max(n for n in arms if n >= 2)
+    speedup = out["arms"][str(top)]["speedup"]
+    emit(f"shard_suite_x{top}",
+         out["arms"][str(top)]["wall_s"] * 1e6 / len(BI_GSQL),
+         {"speedup_vs_single": round(speedup, 3),
+          "single_qps": round(base, 3),
+          "sharded_qps": round(out["arms"][str(top)]["queries_per_s"], 3)})
+    assert speedup >= min_speedup, (
+        f"{top}-shard fabric {speedup:.2f}x < required {min_speedup}x "
+        f"suite throughput over the single engine")
+    out["min_speedup"] = min_speedup
+    return out
+
+
+def run(quick: bool = False) -> None:
+    if quick:
+        snap = shard_sweep(sf=0.012, latency_scale=1.0, passes=2)
+    else:
+        snap = shard_sweep()
+    with open(SNAPSHOT_PATH, "w") as f:
+        json.dump(snap, f, indent=2, sort_keys=True)
+    print(f"wrote {SNAPSHOT_PATH}")
+
+
+if __name__ == "__main__":
+    run()

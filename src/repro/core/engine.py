@@ -60,6 +60,9 @@ class GraphLakeEngine:
         self.startup_mode: str = "unstarted"
         self._started = False
         self._file_filter = None
+        # set by ShardFabric.attach (repro/shard, DESIGN.md §13): the seam
+        # GraphSession/serving route through for scatter-gather execution
+        self._shard_fabric = None
 
     # ------------------------------------------------------------------ startup
 
@@ -122,6 +125,8 @@ class GraphLakeEngine:
         return epoch if epoch is not None else self.topology
 
     def close(self) -> None:
+        if self._shard_fabric is not None:
+            self._shard_fabric.close()
         self.pool.close()
 
     def __enter__(self):

@@ -261,6 +261,15 @@ class EpochManager:
         epoch.plane.invalidate()
         with epoch.lookup_lock:
             epoch.lookup_plans.clear()
+        # shard fabric (DESIGN.md §13): a retiring epoch also drops its
+        # per-shard views — their planes hold sliced CSRs, and a worker that
+        # disconnected mid-advance must not keep them (or its routed delta
+        # buffers) alive through a dead epoch
+        views = getattr(epoch, "shard_views", None)
+        if views:
+            for view in views.values():
+                view.plane.invalidate()
+            epoch.shard_views = {}
         self.stats["retired"] += 1
 
     # -- bootstrap ---------------------------------------------------------------
@@ -361,8 +370,11 @@ class EpochManager:
         eng = self.engine
         if getattr(eng, "_file_filter", None) is not None:
             raise RuntimeError(
-                "advance() is unsupported on a file-filtered (sharded) engine; "
-                "re-shard and restart instead")
+                "advance() is unsupported on a file-filtered engine (a static "
+                "slice of the lake cannot diff against the whole); for "
+                "multi-worker freshness use the shard fabric "
+                "(repro.shard.ShardFabric / connect(..., shards=n)), whose "
+                "workers share the coordinator's epochs")
         with self._advance_lock:
             t0 = time.perf_counter()
             cur = self.current()
@@ -454,6 +466,13 @@ class EpochManager:
             if not rebuild:
                 self._carry_plane(cur, new_epoch, ediffs, report)
             self._publish(new_epoch)
+            # shard fabric (DESIGN.md §13): route the delta to owning
+            # shards, re-arm per-worker views/sliced CSRs (delta re-shard on
+            # rebuild) — after publish, so fabric epochs only ever wrap a
+            # published coordinator epoch
+            fabric = getattr(eng, "_shard_fabric", None)
+            if fabric is not None:
+                fabric.sync_to(new_epoch, report)
             # keep the persisted topology in lockstep with the published
             # epoch: a second connection must never pay a first-connection
             # build (or load a stale blob) just because this engine advanced
@@ -462,8 +481,12 @@ class EpochManager:
                     topo.materialize(store, pool=pool)
                     report.rematerialized = "full"
                 else:
+                    # csr_source: the new epoch's carried/extended CSRs are
+                    # the fresh ones — persisting them under this version's
+                    # keys keeps the CSR fast path for shard workers and
+                    # second connections instead of dropping the refs stale
                     report.rematerialized = topo.rematerialize_delta(
-                        store, pool=pool)["mode"]
+                        store, pool=pool, csr_source=new_epoch.plane)["mode"]
             report.to_epoch = new_epoch.epoch_id
             report.wall_s = time.perf_counter() - t0
             return report

@@ -227,6 +227,7 @@ class EdgeFrame:
     u_type: str
     v_type: str
     columns: dict[str, np.ndarray]  # "e.X" / "u.X" / "v.X"
+    eid: Optional[np.ndarray] = None  # global edge ids, aligned with u/v
 
     def __len__(self) -> int:
         return len(self.u)
@@ -338,10 +339,11 @@ def edge_scan(
     frame["v"] = v
     if edge_filter is not None and len(u):
         keep = np.asarray(edge_filter(frame), dtype=bool)
-        u, v = u[keep], v[keep]
+        u, v, eid = u[keep], v[keep], eid[keep]
         columns = {k: vals[keep] for k, vals in columns.items()}
 
-    return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns)
+    return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns,
+                     eid=eid)
 
 
 # ---------------------------------------------------------------------------
@@ -368,6 +370,7 @@ class BatchedScan:
     v_type: str
     columns: dict[str, np.ndarray]
     alive: np.ndarray               # (R, E) per-rider keep masks
+    eid: Optional[np.ndarray] = None  # global edge ids, aligned with u/v
 
     @property
     def n_riders(self) -> int:
@@ -377,7 +380,8 @@ class BatchedScan:
         m = self.alive[r]
         return EdgeFrame(
             u=self.u[m], v=self.v[m], u_type=self.u_type, v_type=self.v_type,
-            columns={k: vals[m] for k, vals in self.columns.items()})
+            columns={k: vals[m] for k, vals in self.columns.items()},
+            eid=self.eid[m] if self.eid is not None else None)
 
 
 def _union_frontier(frontiers: Sequence[VSet]) -> VSet:
@@ -533,7 +537,7 @@ def edge_scan_batched(
         columns.update({f"v.{c}": a for c, a in cols.items()})
 
     return BatchedScan(u=u, v=v, u_type=u_type, v_type=v_type,
-                       columns=columns, alive=alive)
+                       columns=columns, alive=alive, eid=eid)
 
 
 def _edge_scan_staged(
@@ -641,4 +645,5 @@ def _edge_scan_staged(
             )
             columns.update({f"v.{c}": a for c, a in v_cols.items()})
 
-    return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns)
+    return EdgeFrame(u=u, v=v, u_type=u_type, v_type=v_type, columns=columns,
+                     eid=eid)

@@ -362,7 +362,8 @@ class GraphTopology:
         self.timings["materialize_s"] = time.perf_counter() - t0 - csr_s
 
     def rematerialize_delta(self, store: ObjectStore,
-                            pool: Optional[IOPool] = None) -> dict:
+                            pool: Optional[IOPool] = None,
+                            csr_source=None) -> dict:
         """Refresh the persisted topology after an incremental epoch advance
         (ROADMAP: stale-manifest gap) — so a second connection pays the fast
         ``load_materialized`` path against the *current* lake state instead
@@ -375,11 +376,17 @@ class GraphTopology:
         fresh version-suffixed keys (never overwriting blobs the published
         manifest references — a concurrently-loading second connection
         reads either the old consistent set or, after the final manifest
-        swap, the new one).  The manifest is always rewritten — it is tiny
-        — and its CSR references are dropped: persisted CSR blobs serialize
-        a superseded topology, and re-serializing one per advance would
-        dwarf the delta itself, so a post-advance second connection
-        rebuilds CSR lazily.
+        swap, the new one).  The manifest is always rewritten — it is tiny.
+
+        ``csr_source`` is the per-epoch CSR blob scheme (DESIGN.md §13): a
+        plane whose built CSRs are *current* for this version — the
+        advance's new epoch plane, holding the carried/extended indexes
+        (this builder's own plane was invalidated by ``refresh_edges``, so
+        it cannot serve).  Its CSRs upload under this version's
+        version-suffixed keys and the manifest references them, keeping the
+        CSR fast path for shard workers and second connections.  Without a
+        source the CSR refs are dropped (stale for this version; a second
+        connection rebuilds lazily).
 
         Returns upload stats.  Falls back to a full :meth:`materialize` when
         no (new-format) manifest exists yet.
@@ -421,7 +428,21 @@ class GraphTopology:
                 f.result()
             uploaded = len(futs)
             new_man = self._manifest(edge_list_keys=keys_by_type)
-            new_man["csr"] = {}   # stale for this version; rebuilt lazily
+            if csr_source is not None and perf_enabled("csr"):
+                csr_refs = {}
+                csr_futs = []
+                for ename, csr in csr_source.built_csrs().items():
+                    key = self._csr_key(ename)
+                    if not store.exists(key):
+                        csr_futs.append(
+                            pool.submit(store.put, key, csr.to_bytes()))
+                    csr_refs[ename] = key
+                for f in csr_futs:
+                    f.result()
+                uploaded += len(csr_futs)
+                new_man["csr"] = csr_refs
+            else:
+                new_man["csr"] = {}   # stale for this version; rebuilt lazily
             store.put("topology/MANIFEST.json", json.dumps(new_man).encode())
         finally:
             if own:

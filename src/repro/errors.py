@@ -99,6 +99,21 @@ class IngestBackpressureError(ReproError, RuntimeError):
     committer is stalled."""
 
 
+class DanglingEdgeError(ReproError, ValueError):
+    """An edge upsert references an endpoint vertex the graph does not have
+    (neither committed to the lake nor pending in the same micro-batch).
+    Raised typed at admission — the producer edge — instead of silently
+    accepting the row and relying on dangling-edge compaction to hide it
+    from every query forever.  Carries the offending table/column/key."""
+
+    def __init__(self, message: str, table: Optional[str] = None,
+                 column: Optional[str] = None, key=None):
+        self.table = table
+        self.column = column
+        self.key = key
+        super().__init__(message)
+
+
 # ---------------------------------------------------------------------------
 # catalog (formerly repro/core/catalog.py)
 # ---------------------------------------------------------------------------
@@ -161,6 +176,7 @@ __all__ = [
     "ServerOverloadedError",
     "TenantQuotaExceededError",
     "IngestBackpressureError",
+    "DanglingEdgeError",
     "MissingTableError",
     "LakeError",
     "TransientLakeError",

@@ -191,6 +191,14 @@ class GraphSession:
 
     # -- execution --------------------------------------------------------------
 
+    def _exec_engine(self):
+        """The execution target: the shard fabric's scatter-gather executor
+        when one is attached (DESIGN.md §13) — same engine surface, fanned
+        out — else the engine itself.  Resolved per call so attaching a
+        fabric mid-session takes effect immediately."""
+        fabric = getattr(self.engine, "_shard_fabric", None)
+        return fabric.executor if fabric is not None else self.engine
+
     def _resolve_ir(self, text_or_name: str) -> ir.LogicalQuery:
         iq = self._installed.get(text_or_name)
         if iq is not None:
@@ -214,7 +222,7 @@ class GraphSession:
         queries.  ``options`` overrides the session defaults for this call
         only."""
         compiled = self._compile(text_or_name, params)
-        res = execute_compiled(self.engine, compiled,
+        res = execute_compiled(self._exec_engine(), compiled,
                                options=options or self.options, epoch=epoch,
                                private_accums=True)
         iq = self._installed.get(text_or_name)
@@ -244,15 +252,26 @@ class GraphSession:
             raise KeyError(f"no installed query named {name!r}")
         if iq.lookup_plan is None:
             return self.query(name, options=options, epoch=epoch, **params)
-        return execute_lookup(self.engine, iq.lookup_plan, params, epoch=epoch)
+        res = execute_lookup(self.engine, iq.lookup_plan, params, epoch=epoch)
+        fabric = getattr(self.engine, "_shard_fabric", None)
+        if fabric is not None:
+            # in-process fabric: the coordinator serves the point read, the
+            # route stats attribute it to the shard that owns the seed
+            fabric.note_lookup()
+        return res
 
     def get_vertex(self, vertex_type: str, vertex_id, columns=(),
                    epoch=None) -> Optional[dict]:
         """Point-read one vertex by primary key: IDM probe + (optionally)
         single-chunk column reads.  ``None`` when the id is unknown to the
         pinned epoch."""
-        return point_get(self.engine, vertex_type, vertex_id,
-                         columns=columns, epoch=epoch)
+        out = point_get(self.engine, vertex_type, vertex_id,
+                        columns=columns, epoch=epoch)
+        fabric = getattr(self.engine, "_shard_fabric", None)
+        if fabric is not None:
+            fabric.note_lookup(vertex_type, out.get("dense_id")
+                               if out is not None else None)
+        return out
 
     def neighbors(self, edge_type: str, vertex_id, direction: str = "out",
                   ids: str = "raw", epoch=None):
@@ -301,7 +320,7 @@ class GraphSession:
         is the intended caller; it groups concurrent same-template requests
         into one ``query_batch``."""
         compiled = [self._compile(text_or_name, p) for p in params_list]
-        return execute_compiled_batch(self.engine, compiled,
+        return execute_compiled_batch(self._exec_engine(), compiled,
                                       options=options or self.options,
                                       epoch=epoch)
 
@@ -313,19 +332,35 @@ class GraphSession:
 
 
 def connect(store, schema, options: Optional[ExecOptions] = None,
+            shards: Optional[int] = None, shard_block_bits: Optional[int] = None,
             **engine_kwargs) -> GraphSession:
     """Open a :class:`GraphSession` over a lake: build the engine, run
     startup (first or second connection, paper §4.3), and hand back the
     session facade.  ``session.close()`` closes the engine it owns.
 
+    ``shards=<n>`` (n >= 2) attaches a :class:`~repro.shard.ShardFabric`
+    (DESIGN.md §13): every query the session runs executes as
+    coordinator-merged scatter-gather across ``n`` vertex-hash shard
+    workers, bit-identical to the single-engine run.  Left ``None``, the
+    width comes from the ``shards`` perf flag (``shards=<n>``, default 0 =
+    no fabric); ``shard_block_bits`` tunes the ownership block granularity.
+
     ``engine_kwargs`` pass through to
     :class:`~repro.core.engine.GraphLakeEngine` (``cache_config``,
     ``n_io_threads``, ``materialize_topology``, ...).
     """
+    from repro import perf_flags
     from repro.core.engine import GraphLakeEngine
 
     engine = GraphLakeEngine(store, schema, **engine_kwargs)
     engine.startup()
+    n = int(perf_flags.value("shards", 0)) if shards is None else int(shards)
+    if n >= 2:
+        from repro.shard import ShardFabric
+
+        kwargs = {} if shard_block_bits is None else {
+            "block_bits": shard_block_bits}
+        ShardFabric.attach(engine, n, **kwargs)
     session = GraphSession(engine, options, own_engine=True)
     engine._gsql_session = session
     return session

@@ -34,7 +34,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.errors import IngestBackpressureError
+from repro.errors import DanglingEdgeError, IngestBackpressureError
 from repro.ingest.events import ChangeEvent
 from repro.lakehouse.columnfile import read_columns, read_footer
 
@@ -122,11 +122,28 @@ class MicroBatchCommitter:
         self._pending: dict[str, dict[tuple, tuple]] = {}
         self._meta: dict[str, _TableMeta] = {}
         self._known: dict[str, set] = {}    # table -> committed key set
+        # vertex-table keys *ever admitted as upserts*, recorded the instant
+        # submit() offers the event — the admission-order truth
+        # check_edge_endpoints() consults first.  The bounded queue means an
+        # admitted vertex may not be in _pending yet (not drained), so
+        # checking _pending/_known alone would spuriously reject an edge
+        # that rides the same producer burst as its endpoint.  Deletes are
+        # deliberately NOT recorded: an edge referencing a vertex that
+        # existed and was later deleted is the stream's last-write-wins
+        # ordering (the batch oracle replays the same dangling row), not a
+        # producer error — only never-existed endpoints reject.  Entries are
+        # never evicted: the set is bounded by distinct upserted keys, and a
+        # stale entry is exactly what _known would say post-commit.
+        self._admitted: dict[str, set[tuple]] = {}
+        self._vertex_tables = {vt.table: vt.name
+                               for vt in engine.schema.vertex_types.values()}
+        self._edge_info = {et.table: et
+                          for et in engine.schema.edge_types.values()}
         self.counters = {
             "events_coalesced": 0, "events_committed": 0,
             "rows_inserted": 0, "rows_updated": 0, "rows_deleted": 0,
             "deletes_ignored": 0, "append_commits": 0, "upsert_commits": 0,
-            "files_rewritten": 0,
+            "files_rewritten": 0, "dangling_edges_rejected": 0,
         }
 
     # -- schema resolution ---------------------------------------------------
@@ -169,6 +186,57 @@ class MicroBatchCommitter:
                     known.update(zip(*[cols[c].tolist() for c in key_cols]))
             self._known[table] = known
         return known
+
+    # -- admission checks ----------------------------------------------------
+
+    def note_admitted(self, event: ChangeEvent) -> None:
+        """Record a vertex-table upsert the pipeline just admitted, so edge
+        admission sees endpoints that are still queued (not yet drained)."""
+        if event.table not in self._vertex_tables or event.op != "upsert":
+            return
+        with self._lock:
+            self._admitted.setdefault(event.table, set()).add(event.key)
+
+    def _endpoint_present(self, vtable: str, key: tuple) -> bool:
+        """Has the vertex key *ever existed* as of admission order — upserted
+        earlier in the stream, upsert-pending for the next flush, or
+        committed in the lake?  A pending/later delete does not un-exist it:
+        last-write-wins ordering is the stream's business, and the resulting
+        dangling row is exactly what a batch replay of the same history
+        produces."""
+        if key in self._admitted.get(vtable, ()):
+            return True
+        slot = self._pending.get(vtable)
+        if slot is not None and key in slot and slot[key][0].op == "upsert":
+            return True
+        return key in self._known_keys(vtable)
+
+    def check_edge_endpoints(self, event: ChangeEvent) -> None:
+        """Reject an edge upsert whose endpoint vertex does not exist
+        (committed, pending, or admitted ahead of it) with the typed
+        :class:`~repro.errors.DanglingEdgeError` — admitting it would either
+        poison the table's micro-batch or force ``advance()`` onto the
+        dangling-edge rebuild path (DESIGN.md §7)."""
+        et = self._edge_info.get(event.table)
+        if et is None or event.op != "upsert":
+            return
+        for column, vtype in ((et.src_column, et.src_type),
+                              (et.dst_column, et.dst_type)):
+            vtable = self.engine.schema.vertex_types[vtype].table
+            key = (event.row[column],)
+            # seed the committed key set outside the lock (first call reads
+            # key columns from the lake)
+            self._known_keys(vtable)
+            with self._lock:
+                present = self._endpoint_present(vtable, key)
+            if not present:
+                with self._lock:
+                    self.counters["dangling_edges_rejected"] += 1
+                raise DanglingEdgeError(
+                    f"edge upsert on {event.table!r}: endpoint "
+                    f"{column}={key[0]!r} has no {vtype!r} vertex "
+                    f"(table {vtable!r}) committed, pending, or admitted",
+                    table=event.table, column=column, key=key)
 
     # -- coalescing ----------------------------------------------------------
 

@@ -278,6 +278,10 @@ class IngestPipeline:
                     f"upsert row for {event.table!r} must carry exactly the "
                     f"table columns {meta.columns}, got {sorted(event.row)}")
             key = self.committer.derive_key(event.table, event.row)
+            # dangling-edge admission check: an edge endpoint must exist —
+            # committed, pending, or admitted earlier this burst (typed
+            # DanglingEdgeError to the producer, DESIGN.md §12)
+            self.committer.check_edge_endpoints(event)
         else:
             key = event.key
         with self._seq_lock:
@@ -290,6 +294,7 @@ class IngestPipeline:
             with self._counters_lock:
                 self.counters["rejected"] += 1
             raise
+        self.committer.note_admitted(admitted)
         with self._counters_lock:
             self.counters["submitted"] += 1
         return admitted

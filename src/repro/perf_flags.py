@@ -74,6 +74,15 @@ record exact before/after deltas:
                    an optimization toggle, so it lives in the recognized-
                    but-not-default-on set.
 
+- ``shards``     — shard-fabric width (DESIGN.md §13): ``shards=<n>``
+                   partitions the graph into *n* vertex-hash shards and
+                   runs every GSQL query as coordinator-merged
+                   scatter-gather across per-shard workers, bit-identical
+                   to the single-engine run.  A width, not an on/off path —
+                   a fabric only exists when ``connect(..., shards=n)`` or
+                   ``ShardFabric.attach`` builds one; the flag supplies the
+                   default width for ``shards`` left unset.
+
 - ``chaos``      — seeded fault injection on the object store (OFF by
                    default: a test/benchmark mode, not an optimization).
                    ``chaos=<rate>`` injects transient faults at the given
@@ -104,7 +113,7 @@ _ALL = ("tri", "chunkloss", "pushdown", "bf16gather", "gnnbf16", "moe_ep", "csr"
 
 # recognized but not default-on (capacity trades, chaos modes, bare
 # tunables) — never warned
-_KNOWN_OFF = ("kv_int8", "chaos", "ingest_queue")
+_KNOWN_OFF = ("kv_int8", "chaos", "ingest_queue", "shards")
 
 # REPRO_OPTS strings already checked for typos (warn once per distinct value)
 _checked: set = set()

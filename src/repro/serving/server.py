@@ -219,6 +219,10 @@ class QueryServer:
             "route_green": 0,        # ... of which needed no lake columns
             "route_yellow": 0,       # ... of which paid a column fetch path
         }
+        # wire-surface dispatch counters (handle()): per-route hits + errors,
+        # surfaced by health() under "routes"
+        self.route_stats = {"/vertex": 0, "/neighbors": 0, "/query": 0,
+                            "/lookup": 0, "/health": 0, "errors": 0}
         self._scheduler = threading.Thread(target=self._schedule, daemon=True)
         self._scheduler.start()
         self._workers = [
@@ -415,7 +419,97 @@ class QueryServer:
         ingest = getattr(self.engine, "ingest", None)
         if ingest is not None:
             out["ingest"] = ingest.stats()
+        fabric = getattr(self.engine, "_shard_fabric", None)
+        if fabric is not None:
+            out["fabric"] = fabric.stats_snapshot()
+        with self._lock:
+            out["routes"] = dict(self.route_stats)
         return out
+
+    # -- wire surface -------------------------------------------------------------
+
+    def handle(self, method: str, path: str,
+               params: Optional[dict] = None) -> dict:
+        """HTTP-style request dispatch, mirroring the installed-query
+        surface over a wire shape (the in-process stand-in for a listener):
+
+        - ``GET /vertex/{vtype}/{pk}`` — point-read one vertex
+          (``params["columns"]`` selects lake columns);
+        - ``GET /neighbors/{etype}/{pk}`` — one CSR adjacency slice
+          (``params``: ``direction`` =out|in, ``ids`` =raw|dense);
+        - ``GET|POST /query/{name}`` — an installed query through the full
+          scheduler (batching, lanes, budgets; params are the bindings);
+        - ``GET /lookup/{name}`` — the point-lookup tier, synchronous;
+        - ``GET /health`` — the resilience snapshot.
+
+        Returns ``{"status": <code>, "value": ...}`` or ``{"status": ...,
+        "error": "..."}`` — never raises; per-route hits and errors are
+        counted in ``route_stats`` (see ``health()["routes"]``)."""
+        params = dict(params or {})
+        parts = [p for p in path.split("/") if p]
+        route = "/" + parts[0] if parts else path
+        try:
+            status, value = self._route(method.upper(), route, parts, params)
+        except KeyError as e:
+            status, value = 404, f"{type(e).__name__}: {e}"
+        except (TypeError, ValueError) as e:
+            status, value = 400, f"{type(e).__name__}: {e}"
+        except Exception as e:
+            status, value = 500, f"{type(e).__name__}: {e}"
+        with self._lock:
+            if route in self.route_stats:
+                self.route_stats[route] += 1
+            if status >= 400:
+                self.route_stats["errors"] += 1
+        if status >= 400:
+            return {"status": status, "error": value}
+        return {"status": status, "value": value}
+
+    def _route(self, method: str, route: str, parts: list,
+               params: dict) -> tuple[int, object]:
+        if route == "/health" and len(parts) == 1:
+            if method != "GET":
+                return 405, f"{method} not allowed on {route}"
+            return 200, self.health()
+        if route == "/vertex" and len(parts) == 3:
+            if method != "GET":
+                return 405, f"{method} not allowed on {route}"
+            columns = tuple(params.pop("columns", ()))
+            out = self.session.get_vertex(parts[1], _wire_id(parts[2]),
+                                          columns=columns, **params)
+            if out is None:
+                return 404, f"no {parts[1]!r} vertex with id {parts[2]!r}"
+            return 200, out
+        if route == "/neighbors" and len(parts) == 3:
+            if method != "GET":
+                return 405, f"{method} not allowed on {route}"
+            out = self.session.neighbors(parts[1], _wire_id(parts[2]),
+                                         direction=params.pop("direction", "out"),
+                                         ids=params.pop("ids", "raw"), **params)
+            return 200, {"edge_type": parts[1], "vertex_id": _wire_id(parts[2]),
+                         "n": int(len(out)), "neighbors": out}
+        if route == "/query" and len(parts) == 2:
+            if method not in ("GET", "POST"):
+                return 405, f"{method} not allowed on {route}"
+            rid = self.submit(parts[1], **params)
+            res = self.result(rid)
+            if not res.ok:
+                return 500, res.error
+            return 200, res
+        if route == "/lookup" and len(parts) == 2:
+            if method != "GET":
+                return 405, f"{method} not allowed on {route}"
+            value = self.session.lookup(
+                parts[1], options=self._exec_options, **params)
+            deg = self._stamp_degraded(value)
+            with self._lock:
+                self.stats["lookup_requests"] += 1
+                if value is not None and value.tier in ("green", "yellow"):
+                    self.stats[f"route_{value.tier}"] += 1
+            return 200, QueryResult(request_id=-1, ok=True, value=value,
+                                    error=None, queued_s=0.0, service_s=0.0,
+                                    degraded=deg)
+        return 404, f"no route for {method} {'/' + '/'.join(parts)}"
 
     # -- scheduler ----------------------------------------------------------------
 
@@ -659,6 +753,15 @@ class QueryServer:
                 self._run_single(payload[0])
             else:
                 self._run_shared(payload)
+
+
+def _wire_id(raw: str):
+    """Path-segment vertex id -> lookup key (ids are int64 in this lake;
+    a non-numeric segment passes through for string-keyed schemas)."""
+    try:
+        return int(raw)
+    except (TypeError, ValueError):
+        return raw
 
 
 def latency_stats(results: list[QueryResult]) -> dict:

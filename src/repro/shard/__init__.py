@@ -1,0 +1,37 @@
+"""Shard fabric: epoch-consistent scatter-gather execution across graph
+shards (DESIGN.md §13).
+
+Public surface:
+
+- :class:`ShardFabric` — build with ``ShardFabric.attach(engine, n)`` or
+  via ``connect(store, schema, shards=n)``;
+- :class:`ShardedEngine` — the fabric's engine-shaped executor
+  (``fabric.executor``), consumed transparently by ``GraphSession``;
+- :class:`ShardMap` / :class:`ShardView` — ownership and per-worker views,
+  exposed for tests and tooling.
+"""
+
+from repro.shard.executor import ShardedEngine, merge_frames
+from repro.shard.fabric import FabricEpoch, ShardFabric, ShardWorker
+from repro.shard.ownership import ShardMap
+from repro.shard.views import (
+    ShardView,
+    shard_csr_from_bytes,
+    shard_csr_key,
+    shard_csr_to_bytes,
+    slice_csr,
+)
+
+__all__ = [
+    "FabricEpoch",
+    "ShardFabric",
+    "ShardWorker",
+    "ShardMap",
+    "ShardView",
+    "ShardedEngine",
+    "merge_frames",
+    "slice_csr",
+    "shard_csr_key",
+    "shard_csr_to_bytes",
+    "shard_csr_from_bytes",
+]

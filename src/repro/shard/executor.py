@@ -1,0 +1,316 @@
+"""ShardedEngine: the engine surface, fanned out over shard workers
+(DESIGN.md §13).
+
+``execute_compiled`` (and the lookup/batched paths) never learn about
+shards: this adapter duck-types exactly the engine surface they consume —
+``epochs``, ``schema``, ``all_vertices``, ``vset_from_raw_ids``,
+``vertex_map``, ``edge_scan`` — and implements the two primitives as
+scatter-gather:
+
+- **scatter**: partition the frontier/seed set by vertex ownership (every
+  frontier vertex — hence every incident edge, scanned from its frontier
+  side — goes to exactly one worker), run the unmodified single-engine
+  primitive per worker against its :class:`ShardView`, private cache and
+  IO pool, concurrently;
+- **gather**: union the filtered seed masks, or concatenate the per-worker
+  edge frames and stable-sort by *global edge id* — both the edge-list and
+  CSR views emit rows in global-eid order, and the per-worker row sets
+  partition the solo scan's rows, so the merged frame reconstructs the
+  single-engine frame bit-for-bit (u, v, eid and every pushed-down
+  column).
+
+Accumulator updates, POST-ACCUM, matched sets and SELECT then run *once*
+at the coordinator over merged frames, inside the unmodified executor —
+the per-hop re-partitioning of the merged frontier is the fabric's
+boundary-frontier exchange.
+
+Epochs acquired through the adapter are :class:`FabricEpoch`s; a plain
+``GraphEpoch`` passed explicitly (time-travel pins) falls back to the solo
+engine path unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro import perf_flags
+from repro.core import primitives
+from repro.core.plan import new_pruning_counters
+from repro.core.primitives import EdgeFrame
+from repro.core.types import VSet
+from repro.shard.fabric import FabricEpoch
+
+
+class _WorkerLegCache:
+    """Cache facade a worker leg scans through (DESIGN.md §13).
+
+    Vertex chunks are the worker's slice — block-hash ownership makes its
+    frontier-side reads disjoint from every other worker's, so they admit
+    into the worker's *private* manager and stay hot across queries.  Edge
+    chunks belong to the fabric, not a shard: the lake's edge files are
+    src-sorted, so a reverse scan's owned-dst edge ids scatter across every
+    chunk and any private admission would be re-fetched once per worker.
+    Those route to the *shared* coordinator manager, whose single-flight
+    admission lets concurrent legs pay each chunk's lake fetch exactly once.
+
+    Only the read surface the scan pipeline uses is routed; everything else
+    (stats, invalidation) resolves against the private manager.
+    """
+
+    def __init__(self, private, shared):
+        self._private = private
+        self._shared = shared
+
+    def _route(self, kind: str):
+        return self._private if kind == "vertex" else self._shared
+
+    def get_unit(self, ref, meta, kind, pin=False):
+        return self._route(kind).get_unit(ref, meta, kind, pin=pin)
+
+    def get_units_batch(self, requests, pool=None):
+        out = {}
+        for which in (self._private, self._shared):
+            batch = [r for r in requests if self._route(r[2]) is which]
+            if batch:
+                out.update(which.get_units_batch(batch, pool=pool))
+        return out
+
+    def read_unit(self, unit, rows):
+        # per-unit lock; no manager state involved
+        return self._private.read_unit(unit, rows)
+
+    def __getattr__(self, name):
+        return getattr(self._private, name)
+
+
+def _merge_counters(dst: Optional[dict], src: dict) -> None:
+    if dst is None:
+        return
+    for k, v in src.items():
+        dst[k] = dst.get(k, 0) + v
+
+
+def merge_frames(frames: list) -> EdgeFrame:
+    """Concatenate per-worker edge frames and restore global edge-id order.
+
+    Worker frames are disjoint row subsets of the solo frame, each already
+    in ascending global-eid order; a stable sort of the concatenation by
+    eid is therefore exactly the solo row order.  Zero-length frames are
+    dropped before concatenation so their placeholder column dtypes can't
+    promote the merged columns (bit-parity includes dtype)."""
+    nonempty = [f for f in frames if len(f.u)]
+    if not nonempty:
+        return frames[0]
+    if len(nonempty) == 1:
+        return nonempty[0]
+    u = np.concatenate([f.u for f in nonempty])
+    v = np.concatenate([f.v for f in nonempty])
+    eid = np.concatenate([f.eid for f in nonempty])
+    order = np.argsort(eid, kind="stable")
+    columns = {
+        k: np.concatenate([f.columns[k] for f in nonempty])[order]
+        for k in nonempty[0].columns
+    }
+    return EdgeFrame(u=u[order], v=v[order], u_type=nonempty[0].u_type,
+                     v_type=nonempty[0].v_type, columns=columns,
+                     eid=eid[order])
+
+
+class _FabricEpochs:
+    """The ``engine.epochs`` facade the executor pins through: acquire
+    returns the current :class:`FabricEpoch`; release routes fabric epochs
+    to the fabric and plain epochs to the engine manager."""
+
+    def __init__(self, fabric):
+        self._fabric = fabric
+
+    def current(self):
+        return self._fabric.current()
+
+    def acquire(self):
+        return self._fabric.acquire()
+
+    def release(self, epoch) -> None:
+        if isinstance(epoch, FabricEpoch):
+            self._fabric.release(epoch)
+        else:
+            self._fabric.engine.epochs.release(epoch)
+
+    def __getattr__(self, name):
+        # advance(), stats, ... — the coordinator manager's business
+        return getattr(self._fabric.engine.epochs, name)
+
+
+class ShardedEngine:
+    """Engine-shaped adapter whose primitives fan out across the fabric."""
+
+    def __init__(self, fabric):
+        self.fabric = fabric
+        self.engine = fabric.engine
+        self.schema = fabric.engine.schema
+        self.epochs = _FabricEpochs(fabric)
+        # workers prefetch through their own pools; the coordinator-side
+        # prefetcher would race the per-worker caches for no benefit
+        self.prefetcher = None
+
+    # engine state that advances can swap out — resolve live, don't snapshot
+    @property
+    def topology(self):
+        return self.engine.topology
+
+    @property
+    def cache(self):
+        return self.engine.cache
+
+    @property
+    def accums(self):
+        return self.engine.accums
+
+    @property
+    def pool(self):
+        return self.engine.pool
+
+    @property
+    def store(self):
+        return self.engine.store
+
+    @property
+    def ingest(self):
+        return getattr(self.engine, "ingest", None)
+
+    def _topo(self, epoch=None):
+        return epoch if epoch is not None else self.engine.topology
+
+    def _query_pool(self, pipeline):
+        return self.engine._query_pool(pipeline)
+
+    def _worker_pool(self, shard_id, pipeline):
+        use = perf_flags.enabled("pipe") if pipeline is None else bool(pipeline)
+        return self.fabric.workers[shard_id].pool if use else None
+
+    # -- seed/id surface (coordinator metadata, epoch-delegating) ---------------
+
+    def all_vertices(self, vertex_type: str, epoch=None) -> VSet:
+        return self.engine.all_vertices(vertex_type, epoch=epoch)
+
+    def empty_vset(self, vertex_type: str, epoch=None) -> VSet:
+        return self.engine.empty_vset(vertex_type, epoch=epoch)
+
+    def vset_from_raw_ids(self, vertex_type: str, raw_ids, epoch=None) -> VSet:
+        return self.engine.vset_from_raw_ids(vertex_type, raw_ids, epoch=epoch)
+
+    # -- fanned-out primitives ---------------------------------------------------
+
+    def vertex_map(self, vset: VSet, columns=(), filter_fn=None, map_fn=None,
+                   bounds=None, counters=None, pipeline=None, epoch=None,
+                   deadline=None):
+        fe = epoch if isinstance(epoch, FabricEpoch) else None
+        if fe is None or filter_fn is None or map_fn is not None:
+            # no fabric epoch pinned (explicit time-travel epoch), or a
+            # value-producing map: the solo path
+            return self.engine.vertex_map(
+                vset, columns=columns, filter_fn=filter_fn, map_fn=map_fn,
+                bounds=bounds, counters=counters, pipeline=pipeline,
+                epoch=epoch, deadline=deadline)
+        parts = [(sid, sub) for sid, sub in fe.smap.split_vset(vset)
+                 if sub.size() > 0]
+        if not parts:
+            return VSet.empty(vset.vertex_type, len(vset.mask)), None
+
+        def _leg(sid, sub):
+            self.fabric.heartbeats.tick(f"shard-{sid}")
+            wc = new_pruning_counters()
+            out_vset, _ = primitives.vertex_map(
+                fe.views[sid], self.fabric.workers[sid].cache, sub,
+                columns=columns, filter_fn=filter_fn, map_fn=None,
+                prefetcher=None, bounds=bounds, counters=wc,
+                pool=self._worker_pool(sid, pipeline), deadline=deadline)
+            return out_vset, wc
+
+        if len(parts) == 1:
+            results = [_leg(*parts[0])]
+        else:
+            futures = [self.fabric._exec.submit(_leg, sid, sub)
+                       for sid, sub in parts]
+            results = [f.result() for f in futures]
+        mask = np.zeros(len(vset.mask), dtype=bool)
+        for out_vset, wc in results:
+            mask |= out_vset.mask
+            _merge_counters(counters, wc)
+        self.fabric.stats["worker_scans"] += len(parts)
+        return VSet(vset.vertex_type, mask), None
+
+    def edge_scan(self, frontier: VSet, edge_type: str, direction: str = "out",
+                  edge_columns=(), u_columns=(), v_columns=(),
+                  edge_filter=None, strategy: str = "auto", plan=None,
+                  counters=None, pipeline=None, epoch=None,
+                  deadline=None) -> EdgeFrame:
+        fe = epoch if isinstance(epoch, FabricEpoch) else None
+        if fe is None:
+            return self.engine.edge_scan(
+                frontier, edge_type, direction, edge_columns=edge_columns,
+                u_columns=u_columns, v_columns=v_columns,
+                edge_filter=edge_filter, strategy=strategy, plan=plan,
+                counters=counters, pipeline=pipeline, epoch=epoch,
+                deadline=deadline)
+        parts = [(sid, sub) for sid, sub in fe.smap.split_vset(frontier)
+                 if sub.size() > 0]
+        if not parts:
+            # dtype-correct empty frame: one worker scans the empty frontier
+            parts = [(fe.smap.live[0], frontier)]
+
+        def _leg(sid, sub):
+            self.fabric.heartbeats.tick(f"shard-{sid}")
+            wc = new_pruning_counters()
+
+            def _boundary_v(vt, dense, column):
+                # Far-side (boundary) attributes belong to *other* shards:
+                # fetch them through the coordinator's shared single-flight
+                # cache so concurrent legs pay for each boundary chunk once,
+                # instead of every worker re-reading the same far-side rows
+                # into its private cache.  Values are the real lake values,
+                # so predicate verdicts — and thus the surviving row set —
+                # are bit-identical to the solo scan's pruned reads.
+                vals, _ = primitives.read_vertex_columns_pruned(
+                    fe.base, self.engine.cache, vt, dense, [column],
+                    counters=wc, pool=self.engine.pool)
+                return vals[column]
+
+            leg_cache = _WorkerLegCache(self.fabric.workers[sid].cache,
+                                        self.engine.cache)
+            frame = primitives.edge_scan(
+                fe.views[sid], leg_cache, sub,
+                edge_type, direction, edge_columns=edge_columns,
+                u_columns=u_columns, v_columns=v_columns,
+                edge_filter=edge_filter, prefetcher=None, strategy=strategy,
+                plan=plan, counters=wc, read_v_values=_boundary_v,
+                pool=self._worker_pool(sid, pipeline), deadline=deadline)
+            return frame, wc
+
+        if len(parts) == 1:
+            results = [_leg(*parts[0])]
+        else:
+            futures = [self.fabric._exec.submit(_leg, sid, sub)
+                       for sid, sub in parts]
+            results = [f.result() for f in futures]
+        for _, wc in results:
+            _merge_counters(counters, wc)
+        stats = self.fabric.stats
+        stats["scatter_gathers"] += 1
+        stats["worker_scans"] += len(parts)
+        stats["boundary_vertices_exchanged"] += frontier.size()
+        return merge_frames([frame for frame, _ in results])
+
+    # -- misc engine surface ------------------------------------------------------
+
+    def advance(self):
+        return self.engine.advance()
+
+    def current_epoch(self):
+        return self.engine.current_epoch()
+
+    def read_vertex_column(self, vertex_type, dense_ids, column, epoch=None):
+        return self.engine.read_vertex_column(vertex_type, dense_ids, column,
+                                              epoch=epoch)

@@ -1,0 +1,387 @@
+"""ShardFabric: epoch-consistent scatter-gather across graph shards
+(DESIGN.md §13).
+
+The fabric is an N-way partitioning of one engine's graph into vertex-hash
+shards, each served by an in-process :class:`ShardWorker` with its *own*
+cache manager and chunk-fetch IOPool (the paper's per-worker memory/IO
+budget), all pinned to slices of the *same* epoch:
+
+- a :class:`FabricEpoch` is the fabric-level unit of consistency — one
+  refcounted coordinator epoch plus one :class:`~repro.shard.views.ShardView`
+  per live worker, published atomically; in-flight scatter-gather queries
+  drain on the fabric epoch they pinned while the next query picks up the
+  new one (exactly the single-engine epoch contract, one level up);
+- ``sync_to`` is the sharded half of ``advance()``: called after the epoch
+  manager publishes, it routes each new table/file delta to the shards that
+  own its rows (per-worker delta buffers), re-arms every worker's sliced
+  CSR from the new epoch's carried/extended indexes, and — when the advance
+  was a *rebuild* (dense renumbering: vertex removal or a copy-on-write
+  upsert rewrite) — performs a **delta re-shard**: new map version, every
+  worker re-derives its slice;
+- ``disconnect_worker`` is the mid-advance failure path: the dead worker's
+  delta buffers clear, armed lookup plans drop (they were planned against
+  the old shard layout), ownership remaps modulo the survivors, and a new
+  fabric epoch publishes over the remaining live views — no leaked refs.
+
+Execution never forks the query planner: :class:`ShardedEngine`
+(``fabric.executor``) duck-types the engine surface ``execute_compiled``
+consumes, fanning ``vertex_map``/``edge_scan`` out across workers and
+merging per-worker frames back into global edge-id order, so the
+coordinator runs the *unmodified* single-engine executor over merged
+frames — accumulators, POST-ACCUM, matched sets and SELECT all happen
+once, at the coordinator, bit-identical to the solo run by construction.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro import perf_flags
+from repro.core.cache.manager import CacheManager
+from repro.distributed.fault import HeartbeatRegistry
+from repro.lakehouse.io_pool import IOPool
+from repro.shard.ownership import DEFAULT_BLOCK_BITS, ShardMap
+from repro.shard.views import ShardView, shard_csr_key, shard_csr_to_bytes
+
+
+class ShardWorker:
+    """One shard's executor-side state: private cache + IO pool (the
+    per-worker resource budget), liveness, and the per-epoch delta buffers
+    ``sync_to`` routes to it."""
+
+    def __init__(self, shard_id: int, engine, cache_config=None,
+                 n_io_threads: int = 16):
+        self.shard_id = shard_id
+        self.engine = engine
+        self.cache = CacheManager(engine.store, cache_config)
+        self.pool = IOPool(n_threads=n_io_threads)
+        self.alive = True
+        # epoch_id -> [file keys] whose rows this shard owns (routed deltas)
+        self.delta_buffers: dict[int, list] = {}
+
+    def reset_cache(self, cache_config=None) -> None:
+        """Cold-cache reset (benchmark arms)."""
+        self.cache = CacheManager(self.engine.store, cache_config)
+
+    def close(self) -> None:
+        self.alive = False
+        self.delta_buffers.clear()
+        self.pool.close()
+
+
+class FabricEpoch:
+    """One fabric-wide consistent snapshot: a monotonic fabric id, one ref
+    on the coordinator epoch, and the per-shard views carved from it.
+
+    Everything the executor asks of an epoch (``epoch_id``,
+    ``staleness_s``, ``n_vertices``, ``idm``, ``lookup_plans`` ...)
+    delegates to the base epoch, so result stamping, accumulator sizing and
+    raw-id translation are exactly the single-engine code paths.
+    """
+
+    def __init__(self, fabric_id: int, base, views: dict, smap: ShardMap):
+        self.fabric_id = fabric_id
+        self.base = base
+        self.views = views
+        self.smap = smap
+        self._refs = 0
+        self.retired_fabric = False
+
+    def __getattr__(self, name):
+        return getattr(object.__getattribute__(self, "base"), name)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"FabricEpoch(fabric_id={self.fabric_id}, "
+                f"epoch={self.base.epoch_id}, shards={sorted(self.views)})")
+
+
+class ShardFabric:
+    """Coordinator-side fabric state machine (attach → serve → sync →
+    disconnect/close).  All publishes happen under one fabric lock; queries
+    pin fabric epochs through ``acquire``/``release`` just like engine
+    epochs."""
+
+    def __init__(self, engine, n_shards: int,
+                 block_bits: Optional[int] = None, cache_config=None,
+                 n_io_threads: int = 16, heartbeat_timeout_s: float = 30.0):
+        if n_shards < 2:
+            raise ValueError(f"a shard fabric needs >= 2 shards, got {n_shards}")
+        self.engine = engine
+        self.n_shards = n_shards
+        self.smap = ShardMap.fresh(n_shards, block_bits or DEFAULT_BLOCK_BITS)
+        self.workers = {
+            sid: ShardWorker(sid, engine, cache_config, n_io_threads)
+            for sid in range(n_shards)
+        }
+        # in-process workers tick the same failure-detection registry a
+        # multi-host deployment would bind to the coordination service
+        # (distributed/fault.py): every scan leg is a heartbeat, and
+        # reap_dead_workers() turns a lapsed one into disconnect_worker()
+        self.heartbeats = HeartbeatRegistry(timeout_s=heartbeat_timeout_s)
+        for sid in range(n_shards):
+            self.heartbeats.tick(f"shard-{sid}")
+        self._lock = threading.Lock()
+        self._exec = ThreadPoolExecutor(max_workers=n_shards,
+                                        thread_name_prefix="shard")
+        self._next_fabric_id = 1
+        self._current: Optional[FabricEpoch] = None
+        self.stats = {
+            "fabric_epochs": 0,        # FabricEpochs published
+            "syncs": 0,                # advance() syncs observed
+            "delta_reshards": 0,       # ownership remaps (rebuild/disconnect)
+            "incremental_rearms": 0,   # append-only syncs (ownership stable)
+            "delta_files_routed": 0,   # file deltas routed to owning shards
+            "scatter_gathers": 0,      # fanned-out edge scans
+            "worker_scans": 0,         # per-worker scan legs
+            "boundary_vertices_exchanged": 0,  # frontier ids re-partitioned
+            "shard_csr_blobs": 0,      # per-shard CSR blobs uploaded
+            "lookups_routed": 0,       # point reads attributed to an owner
+            "lookup_route_by_shard": {},
+            "disconnects": 0,
+            "retired_fabric_epochs": 0,
+        }
+        # persisted per-shard CSR blobs ride the same flag + engine setting
+        # as the coordinator's CSR materialization
+        self._persist = bool(getattr(engine, "materialize_topology", False)
+                             and perf_flags.enabled("csr"))
+        from repro.shard.executor import ShardedEngine
+        self.executor = ShardedEngine(self)
+
+    # -- lifecycle ---------------------------------------------------------------
+
+    @classmethod
+    def attach(cls, engine, n_shards: int, **kwargs) -> "ShardFabric":
+        """Build a fabric over a started engine and register it as
+        ``engine._shard_fabric`` (the seam ``GraphSession`` and the server
+        route through)."""
+        if getattr(engine, "_shard_fabric", None) is not None:
+            raise RuntimeError("engine already has a shard fabric attached")
+        if getattr(engine, "epochs", None) is None:
+            raise RuntimeError("engine.startup() must run before ShardFabric.attach")
+        fabric = cls(engine, n_shards, **kwargs)
+        base = engine.epochs.acquire()
+        with fabric._lock:
+            fabric._publish_locked(base)
+        engine._shard_fabric = fabric
+        return fabric
+
+    def close(self) -> None:
+        with self._lock:
+            cur, self._current = self._current, None
+            if cur is not None:
+                self._retire_locked(cur)
+        self._exec.shutdown(wait=False)
+        for w in self.workers.values():
+            w.close()
+        if getattr(self.engine, "_shard_fabric", None) is self:
+            self.engine._shard_fabric = None
+
+    # -- fabric epochs -----------------------------------------------------------
+
+    def current(self) -> FabricEpoch:
+        with self._lock:
+            return self._current
+
+    def acquire(self) -> FabricEpoch:
+        with self._lock:
+            fe = self._current
+            fe._refs += 1
+            return fe
+
+    def release(self, fe: FabricEpoch) -> None:
+        with self._lock:
+            fe._refs = max(0, fe._refs - 1)
+            if fe._refs == 0 and fe is not self._current:
+                self._retire_locked(fe)
+
+    def _retire_locked(self, fe: FabricEpoch) -> None:
+        fe.retired_fabric = True
+        for v in fe.views.values():
+            v.plane.invalidate()
+        fe.views = {}
+        for w in self.workers.values():
+            w.delta_buffers.pop(fe.base.epoch_id, None)
+        self.stats["retired_fabric_epochs"] += 1
+        self.engine.epochs.release(fe.base)
+
+    def _publish_locked(self, base) -> FabricEpoch:
+        """Publish a new fabric epoch over ``base`` (caller holds the fabric
+        lock and has already acquired one ref on ``base`` for the fabric)."""
+        store = self.engine.store if self._persist else None
+        views = {}
+        for sid in self.smap.live:
+            view = ShardView(base, sid, self.smap)
+            view.attach_sliced_csrs(base.plane, store)
+            views[sid] = view
+        if store is not None:
+            self._persist_shard_csrs(base, views, store)
+        # registry for EpochManager._retire: a retiring base epoch drops its
+        # shard views (and their sliced CSRs) along with its own plane
+        base.shard_views = views
+        fe = FabricEpoch(self._next_fabric_id, base, views, self.smap)
+        self._next_fabric_id += 1
+        old, self._current = self._current, fe
+        self.stats["fabric_epochs"] += 1
+        if old is not None and old._refs == 0:
+            self._retire_locked(old)
+        return fe
+
+    def _persist_shard_csrs(self, base, views: dict, store) -> None:
+        version = getattr(base, "topology_version", 0)
+        for sid, view in views.items():
+            for ename, csr in view.plane.built_csrs().items():
+                key = shard_csr_key(ename, version, sid, self.smap.n_shards)
+                if not store.exists(key):
+                    store.put(key, shard_csr_to_bytes(csr))
+                    self.stats["shard_csr_blobs"] += 1
+
+    # -- advance integration -----------------------------------------------------
+
+    def sync_to(self, new_epoch, report=None) -> None:
+        """The sharded half of ``advance()``: called by the epoch manager
+        right after it publishes ``new_epoch``.  Routes file deltas to the
+        owning shards, re-shards on dense renumbering, republishes the
+        fabric epoch over the fresh base."""
+        base = self.engine.epochs.acquire()
+        with self._lock:
+            prev = self._current
+            if prev is not None and prev.base is base:
+                self.engine.epochs.release(base)   # nothing new to sync
+                return
+            rebuild = bool(report is not None
+                           and getattr(report, "mode", "") == "rebuild")
+            if rebuild:
+                # dense ids renumbered: every block's owner derivation is
+                # void — bump the map version, workers re-derive their slice
+                self.smap = self.smap.resharded()
+                self.stats["delta_reshards"] += 1
+            else:
+                self.stats["incremental_rearms"] += 1
+            if prev is not None:
+                self._route_delta(prev.base, base)
+            self._publish_locked(base)
+            self.stats["syncs"] += 1
+
+    def _route_delta(self, prev_base, new_base) -> None:
+        """Shard-aware epoch diffing: attribute each file-level delta to the
+        shards that own its rows, into those workers' per-epoch delta
+        buffers (cleared when the fabric epoch retires or the worker
+        disconnects)."""
+        eid = new_base.epoch_id
+        routed = {sid: [] for sid in self.smap.live}
+        for vt, info in new_base.vertex_info.items():
+            prev_info = prev_base.vertex_info.get(vt)
+            old_keys = ({f.key for f in prev_info.files}
+                        if prev_info is not None else set())
+            for f in info.files:
+                if f.key in old_keys:
+                    continue
+                for sid in self.smap.owners_of_range(
+                        vt, f.dense_offset, f.dense_offset + f.n_rows):
+                    if sid in routed:
+                        routed[sid].append(f.key)
+        for ename, et in new_base.schema.edge_types.items():
+            old_keys = {el.file_key for el in prev_base.all_edge_lists(ename)}
+            for el in new_base.all_edge_lists(ename):
+                if el.file_key in old_keys:
+                    continue
+                owners = set()
+                if len(el.src_dense):
+                    owners.update(int(s) for s in np.unique(
+                        self.smap.owner_of(et.src_type, el.src_dense)))
+                if len(el.dst_dense):
+                    owners.update(int(s) for s in np.unique(
+                        self.smap.owner_of(et.dst_type, el.dst_dense)))
+                for sid in owners:
+                    if sid in routed:
+                        routed[sid].append(el.file_key)
+        n = 0
+        for sid, keys in routed.items():
+            if keys:
+                self.workers[sid].delta_buffers[eid] = keys
+                n += len(keys)
+        self.stats["delta_files_routed"] += n
+
+    # -- worker failure ----------------------------------------------------------
+
+    def disconnect_worker(self, shard_id: int) -> None:
+        """A shard worker drops out (possibly mid-advance): clear its delta
+        buffers, drop armed lookup plans (planned against the old layout),
+        remap ownership modulo the survivors (a delta re-shard) and publish
+        a new fabric epoch over the remaining live views.  In-flight queries
+        drain on the fabric epoch they pinned."""
+        with self._lock:
+            w = self.workers.get(shard_id)
+            if w is None or not w.alive:
+                return
+            live = tuple(s for s in self.smap.live if s != shard_id)
+            if not live:
+                raise RuntimeError("cannot disconnect the last live shard")
+            w.alive = False
+            w.delta_buffers.clear()
+            self.smap = self.smap.resharded(live)
+            self.stats["disconnects"] += 1
+            self.stats["delta_reshards"] += 1
+            base = self._current.base
+            with base.lookup_lock:
+                base.lookup_plans.clear()
+            self.engine.epochs.acquire()   # the new fabric epoch's base ref
+            self._publish_locked(base)
+
+    def reap_dead_workers(self) -> list[int]:
+        """Failure detection → membership change: disconnect every live
+        worker whose heartbeat (ticked by its scan legs) has lapsed past
+        the registry timeout.  Returns the shard ids reaped.  The in-process
+        analog of the coordination-service monitor in a multi-host
+        deployment (distributed/fault.py)."""
+        reaped = []
+        for name in self.heartbeats.dead_workers():
+            sid = int(name.rsplit("-", 1)[1])
+            w = self.workers.get(sid)
+            if w is not None and w.alive and len(self.smap.live) > 1:
+                self.disconnect_worker(sid)
+                reaped.append(sid)
+        return reaped
+
+    # -- observability -----------------------------------------------------------
+
+    def note_lookup(self, vertex_type: Optional[str] = None,
+                    dense_id: Optional[int] = None) -> None:
+        """Route-stats hook for point reads: attribute the read to the
+        owning shard (in-process here; the dispatch seam in a real
+        cluster)."""
+        with self._lock:
+            self.stats["lookups_routed"] += 1
+            if vertex_type is not None and dense_id is not None:
+                sid = int(self.smap.owner_of(
+                    vertex_type, np.asarray([dense_id], dtype=np.int64))[0])
+                by = self.stats["lookup_route_by_shard"]
+                by[sid] = by.get(sid, 0) + 1
+
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            out = dict(self.stats)
+            out["lookup_route_by_shard"] = dict(
+                self.stats["lookup_route_by_shard"])
+            out["n_shards"] = self.n_shards
+            out["live_shards"] = list(self.smap.live)
+            out["map_version"] = self.smap.version
+            out["block_bits"] = self.smap.block_bits
+            out["heartbeats_healthy"] = self.heartbeats.healthy()
+            cur = self._current
+            out["fabric_epoch"] = None if cur is None else {
+                "fabric_id": cur.fabric_id,
+                "epoch_id": cur.base.epoch_id,
+                "refs": cur._refs,
+            }
+            out["workers"] = {
+                sid: {"alive": w.alive,
+                      "delta_buffered_files": sum(
+                          len(v) for v in w.delta_buffers.values())}
+                for sid, w in self.workers.items()
+            }
+        return out

@@ -1,0 +1,126 @@
+"""Vertex ownership for the shard fabric (DESIGN.md §13).
+
+Ownership is a *pure function* of ``(vertex_type, dense index)`` — no
+materialized owner arrays, nothing to replicate, nothing that can drift
+between the coordinator and a worker:
+
+    owner(dense) = live[ splitmix64((dense >> block_bits) ^ type_salt)
+                         % len(live) ]
+
+Two deliberate choices:
+
+- **Block granularity, not per-vertex.**  Hashing the *block index* (a
+  contiguous run of ``2**block_bits`` dense ids, sized to the lake's row
+  groups) keeps a shard's vertex reads chunk-local: a worker's owned seed
+  rows land in whole row groups, and — with generator-ordered edge files —
+  its gathered edge ids land in a narrow band of edge chunks.  Per-vertex
+  hashing would scatter every shard across every chunk of every file, so
+  all N workers would fetch ~all chunks and the fan-out would buy nothing.
+- **Stability under append.**  Dense offsets of existing vertices never
+  move on an incremental (append-only) advance, so block owners are stable
+  and no data re-shards; freshly appended blocks hash to owners by the same
+  function.  A topology *rebuild* (vertex removal, or an upsert's
+  copy-on-write file rewrite) renumbers the dense space — that is the
+  *delta re-shard* case: the fabric bumps the map version and every worker
+  re-derives its slice from the new epoch.
+
+``live`` is the tuple of live shard ids: when a worker disconnects, the
+map shrinks to the survivors and ownership re-derives modulo the remaining
+workers (another delta re-shard), with no rendezvous state to migrate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+from repro.core.types import VSet
+
+# one lake row group (the committer default) per ownership block
+DEFAULT_BLOCK_BITS = 12
+
+_U = np.uint64
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer, vectorized (uint64 wraparound is the point)."""
+    x = x.astype(np.uint64)
+    x = x + _U(0x9E3779B97F4A7C15)
+    x ^= x >> _U(30)
+    x *= _U(0xBF58476D1CE4E5B9)
+    x ^= x >> _U(27)
+    x *= _U(0x94D049BB133111EB)
+    x ^= x >> _U(31)
+    return x
+
+
+def type_salt(vertex_type: str) -> int:
+    """Stable per-type salt so block 0 of every type doesn't pile onto the
+    same shard."""
+    return zlib.crc32(vertex_type.encode("utf-8")) & 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMap:
+    """The fabric's entire partitioning state: a handful of integers.
+
+    ``version`` increments on every delta re-shard (rebuild advance or
+    worker disconnect); workers compare versions instead of diffing owner
+    arrays that don't exist.
+    """
+
+    n_shards: int
+    live: tuple
+    block_bits: int = DEFAULT_BLOCK_BITS
+    version: int = 1
+
+    @staticmethod
+    def fresh(n_shards: int, block_bits: int = DEFAULT_BLOCK_BITS) -> "ShardMap":
+        return ShardMap(n_shards=n_shards, live=tuple(range(n_shards)),
+                        block_bits=block_bits, version=1)
+
+    def resharded(self, live=None) -> "ShardMap":
+        """Next map version: same hash, possibly fewer live shards."""
+        return ShardMap(n_shards=self.n_shards,
+                        live=tuple(live if live is not None else self.live),
+                        block_bits=self.block_bits, version=self.version + 1)
+
+    def owner_of(self, vertex_type: str, dense_ids: np.ndarray) -> np.ndarray:
+        """Owning shard id per dense id (vectorized)."""
+        blocks = np.asarray(dense_ids, dtype=np.int64) >> self.block_bits
+        h = _splitmix64(blocks.astype(np.uint64) ^ _U(type_salt(vertex_type)))
+        live = np.asarray(self.live, dtype=np.int64)
+        return live[(h % _U(len(live))).astype(np.int64)]
+
+    def owned_mask(self, vertex_type: str, n: int, shard_id: int) -> np.ndarray:
+        """Boolean mask over the dense space: which of the first ``n``
+        vertices ``shard_id`` owns."""
+        if n == 0:
+            return np.zeros(0, dtype=bool)
+        return self.owner_of(vertex_type, np.arange(n, dtype=np.int64)) == shard_id
+
+    def owners_of_range(self, vertex_type: str, lo: int, hi: int) -> set:
+        """Shards owning any block intersecting dense range [lo, hi)."""
+        if hi <= lo:
+            return set()
+        first, last = lo >> self.block_bits, (hi - 1) >> self.block_bits
+        blocks = np.arange(first, last + 1, dtype=np.int64) << self.block_bits
+        return set(int(s) for s in np.unique(self.owner_of(vertex_type, blocks)))
+
+    def split_vset(self, vset: VSet) -> list:
+        """Partition a frontier by ownership: ``[(shard_id, sub_vset), ...]``
+        over live shards.  The sub-frontiers are disjoint and their union is
+        ``vset`` — each frontier vertex (hence each incident edge, scanned
+        from its frontier side) goes to exactly one worker."""
+        n = len(vset.mask)
+        ids = vset.ids()
+        out = []
+        if len(ids) == 0:
+            return [(sid, VSet.empty(vset.vertex_type, n)) for sid in self.live]
+        owners = self.owner_of(vset.vertex_type, ids)
+        for sid in self.live:
+            out.append((sid, VSet.from_dense_ids(
+                vset.vertex_type, n, ids[owners == sid])))
+        return out

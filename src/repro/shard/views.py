@@ -1,0 +1,158 @@
+"""Per-worker shard views over one pinned epoch (DESIGN.md §13).
+
+A :class:`ShardView` is what a shard worker sees instead of the epoch: it
+delegates *all* graph metadata (schema, IDM, edge lists, file registries,
+vertex counts) to the coordinator's :class:`~repro.core.epochs.GraphEpoch`
+unchanged — global dense ids, global edge ids, global attribute addressing
+— and carries only what is genuinely per-worker:
+
+- its **own** :class:`~repro.core.topology_plane.TopologyPlane` with
+  ``auto_build_csr = False`` (a worker must never quietly materialize the
+  *full* CSR from the shared edge lists), optionally armed with a
+  **sliced CSR**: the coordinator's CSR with the adjacency of non-owned
+  frontier-side vertices zeroed out, global edge ids preserved;
+- the identity of the shard it serves.
+
+Because the fabric's scatter step already partitions every frontier by
+ownership, a worker only ever expands vertices it owns — so the sliced
+CSR answers exactly like the full one on every gather the worker will be
+asked, at ~1/N of the memory.  Slices serialize to their own blob format
+(fwd/rev kept-edge counts differ, so the symmetric ``CSRIndex.to_bytes``
+layout cannot carry them) under version-suffixed per-shard keys:
+``topology/csr/{edge_type}-v{version}.s{shard}of{n}.csr``.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.core.csr import CSRIndex
+from repro.core.topology_plane import TopologyPlane
+
+_SHARD_CSR_MAGIC = b"RSCS"
+
+
+def slice_csr(csr: CSRIndex, src_owned: np.ndarray,
+              dst_owned: np.ndarray) -> CSRIndex:
+    """The worker's slice of one CSR: forward adjacency kept only for owned
+    source vertices, reverse adjacency only for owned destinations, edge ids
+    (and neighbor ids) global and untouched.  For any frontier containing
+    only owned vertices, ``expand`` over the slice is bit-identical to the
+    full index."""
+
+    def _side(indptr, far, eid, owned):
+        deg = np.diff(indptr)
+        own = np.zeros(len(deg), dtype=bool)
+        k = min(len(deg), len(owned))
+        own[:k] = owned[:k]
+        keep = np.repeat(own, deg)
+        new_indptr = np.zeros(len(indptr), dtype=np.int64)
+        np.cumsum(np.where(own, deg, 0), out=new_indptr[1:])
+        return new_indptr, far[keep], eid[keep]
+
+    fi, fd, fe = _side(csr.fwd_indptr, csr.fwd_dst, csr.fwd_eid, src_owned)
+    ri, rs, re = _side(csr.rev_indptr, csr.rev_src, csr.rev_eid, dst_owned)
+    return CSRIndex(csr.edge_type, csr.n_src, csr.n_dst, fi, fd, fe, ri, rs, re)
+
+
+def shard_csr_to_bytes(csr: CSRIndex) -> bytes:
+    """Serialize a sliced CSR (asymmetric fwd/rev edge counts)."""
+    name = csr.edge_type.encode("utf-8")
+    parts = [_SHARD_CSR_MAGIC,
+             struct.pack("<qqqqq", csr.n_src, csr.n_dst,
+                         len(csr.fwd_dst), len(csr.rev_src), len(name)),
+             name]
+    for arr in (csr.fwd_indptr, csr.fwd_dst, csr.fwd_eid,
+                csr.rev_indptr, csr.rev_src, csr.rev_eid):
+        parts.append(np.asarray(arr, dtype=np.int64).tobytes())
+    return b"".join(parts)
+
+
+def shard_csr_from_bytes(blob: bytes) -> CSRIndex:
+    if blob[:4] != _SHARD_CSR_MAGIC:
+        raise ValueError("not a shard CSR blob")
+    n_src, n_dst, n_fwd, n_rev, n_name = struct.unpack_from("<qqqqq", blob, 4)
+    off = 4 + 5 * 8
+    name = blob[off:off + n_name].decode("utf-8")
+    off += n_name
+
+    def take(n):
+        nonlocal off
+        out = np.frombuffer(blob, dtype=np.int64, count=n, offset=off).copy()
+        off += n * 8
+        return out
+
+    fwd_indptr = take(n_src + 1)
+    fwd_dst = take(n_fwd)
+    fwd_eid = take(n_fwd)
+    rev_indptr = take(n_dst + 1)
+    rev_src = take(n_rev)
+    rev_eid = take(n_rev)
+    return CSRIndex(name, n_src, n_dst, fwd_indptr, fwd_dst, fwd_eid,
+                    rev_indptr, rev_src, rev_eid)
+
+
+def shard_csr_key(edge_type: str, version: int, shard_id: int,
+                  n_shards: int) -> str:
+    """Version-suffixed per-shard CSR blob key — the sharded leg of the
+    per-epoch CSR blob scheme (coordinator CSRs live at
+    ``topology/csr/{edge_type}-v{version}.csr``)."""
+    return f"topology/csr/{edge_type}-v{version}.s{shard_id}of{n_shards}.csr"
+
+
+class ShardView:
+    """One shard worker's view of one pinned epoch.
+
+    Everything the read path asks of a "topology" — ``schema``, ``idm``,
+    ``all_edge_lists``, ``n_vertices``, ``dense_to_file_row``, vertex/edge
+    file registries — delegates to the base epoch, so global addressing
+    (dense ids, edge ids, attribute (file, row) pointers) is identical on
+    every worker.  Only the plane is private: per-worker strategy choice and
+    the sliced CSR, never an auto-built full one.
+    """
+
+    def __init__(self, base_epoch, shard_id: int, smap):
+        self._base = base_epoch
+        self.shard_id = shard_id
+        self.smap = smap
+        self.plane = TopologyPlane(self)
+        self.plane.auto_build_csr = False
+
+    def __getattr__(self, name):
+        return getattr(object.__getattribute__(self, "_base"), name)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"ShardView(shard={self.shard_id}, "
+                f"epoch={self._base.epoch_id}, map_v{self.smap.version})")
+
+    @property
+    def base_epoch(self):
+        return self._base
+
+    def attach_sliced_csrs(self, source_plane, store=None) -> int:
+        """Arm this view's plane with its slice of every CSR the coordinator
+        has built, preferring a persisted per-shard blob (second connections
+        / post-advance re-arms) over slicing in memory.  Returns the number
+        of edge types armed."""
+        armed = 0
+        schema = self._base.schema
+        version = getattr(self._base, "topology_version", 0)
+        for ename, csr in source_plane.built_csrs().items():
+            sliced = None
+            if store is not None:
+                key = shard_csr_key(ename, version, self.shard_id,
+                                    self.smap.n_shards)
+                if store.exists(key):
+                    sliced = shard_csr_from_bytes(store.get(key))
+            if sliced is None:
+                et = schema.edge_types[ename]
+                src_owned = self.smap.owned_mask(
+                    et.src_type, csr.n_src, self.shard_id)
+                dst_owned = self.smap.owned_mask(
+                    et.dst_type, csr.n_dst, self.shard_id)
+                sliced = slice_csr(csr, src_owned, dst_owned)
+            self.plane.attach_csr(ename, sliced)
+            armed += 1
+        return armed

@@ -1,0 +1,584 @@
+"""Shard fabric: epoch-consistent scatter-gather across graph shards
+(DESIGN.md §13).
+
+Pins the subsystem's contract:
+
+- ownership is a pure block-hash partition (every dense id owned by exactly
+  one live shard; append-stable; re-sharded on rebuild/disconnect);
+- a sharded GSQL run is **bit-identical** to the single-engine run — vset,
+  accumulators, every frame row (u, v, eid, columns) in the same order;
+- ``advance()`` works on sharded engines: deltas route to owning shards,
+  upsert rewrites trigger a delta re-shard, and the version-suffixed CSR
+  blobs give second connections the fast path after advances;
+- a concurrent ``advance()`` never tears an in-flight scatter-gather:
+  every result is bit-consistent with exactly one published epoch;
+- retirement/disconnect clears per-shard delta buffers, armed lookup plans
+  and shard views (no leaked refs);
+- the ingest committer rejects dangling edge upserts with the typed
+  :class:`~repro.errors.DanglingEdgeError`;
+- the server's wire surface (``handle()``) serves vertices/neighbors/
+  queries with per-route stats and a fabric health section.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.bi_queries import BI_GSQL, install_bi_queries
+from repro.core.engine import GraphLakeEngine
+from repro.data.ldbc import generate_ldbc, ldbc_graph_schema
+from repro.errors import DanglingEdgeError
+from repro.gsql.session import connect
+from repro.lakehouse.objectstore import ObjectStore, StoreConfig
+from repro.lakehouse.table import LakeCatalog
+from repro.shard import (
+    ShardFabric,
+    ShardMap,
+    merge_frames,
+    shard_csr_from_bytes,
+    shard_csr_key,
+    shard_csr_to_bytes,
+    slice_csr,
+)
+
+BI_PARAMS = {
+    "bi1": {"tag": "Music", "date": 20100101},
+    "bi2": {"lo": 20120101, "hi": 20151231},
+    "bi3": {"min_len": 50},
+    "bi4": {"city": "city_1"},
+    "bi5": {"min_degree": 3, "date": 20100101},
+}
+
+# small lake -> small dense spaces: shrink ownership blocks so every type
+# actually spans several blocks and shards see non-trivial slices
+BLOCK_BITS = 4
+
+
+@pytest.fixture(scope="module")
+def lake(tmp_path_factory):
+    store = ObjectStore(StoreConfig(root=str(tmp_path_factory.mktemp("lake"))))
+    generate_ldbc(store, scale_factor=0.004, n_files=3, row_group_rows=512)
+    return store
+
+
+def _connect(lake, **kw):
+    # each session gets its own store handle over the same lake root
+    return connect(ObjectStore(StoreConfig(root=lake.config.root)),
+                   ldbc_graph_schema(), **kw)
+
+
+@pytest.fixture(scope="module")
+def solo(lake):
+    s = _connect(lake)
+    install_bi_queries(s)
+    yield s
+    s.close()
+
+
+@pytest.fixture(scope="module")
+def sharded(lake):
+    s = _connect(lake, shards=4, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    yield s
+    s.close()
+
+
+def assert_parity(a, b, label=""):
+    """Full bit-parity of two QueryResults: work accounting, vset,
+    accumulators, and every frame row in the same order."""
+    assert a.n_edges_scanned == b.n_edges_scanned, label
+    assert np.array_equal(a.vset.ids(), b.vset.ids()), label
+    for k in a.accumulators:
+        assert np.array_equal(a.accumulators[k], b.accumulators[k]), (label, k)
+    assert len(a.frames) == len(b.frames), label
+    for fa, fb in zip(a.frames, b.frames):
+        assert np.array_equal(fa.u, fb.u), label
+        assert np.array_equal(fa.v, fb.v), label
+        if fa.eid is not None and fb.eid is not None:
+            assert np.array_equal(fa.eid, fb.eid), label
+        assert set(fa.columns) == set(fb.columns), label
+        for k in fa.columns:
+            assert fa.columns[k].dtype == fb.columns[k].dtype, (label, k)
+            assert np.array_equal(fa.columns[k], fb.columns[k]), (label, k)
+
+
+# ---------------------------------------------------------------- ownership
+
+
+def test_ownership_is_a_partition():
+    smap = ShardMap.fresh(4, block_bits=3)
+    ids = np.arange(10_000, dtype=np.int64)
+    owners = smap.owner_of("Person", ids)
+    assert set(np.unique(owners)) <= set(smap.live)
+    # every id owned by exactly one shard: masks partition the space
+    masks = [smap.owned_mask("Person", len(ids), sid) for sid in smap.live]
+    assert np.array_equal(np.sum(masks, axis=0), np.ones(len(ids)))
+    # block granularity: ids in one block share an owner
+    assert len(np.unique(owners[: 1 << 3])) == 1
+    # append-stability: extending the space never moves existing owners
+    again = smap.owner_of("Person", np.arange(20_000, dtype=np.int64))
+    assert np.array_equal(again[:10_000], owners)
+    # different vertex types salt differently (not all identical layouts)
+    other = smap.owner_of("Comment", ids)
+    assert not np.array_equal(owners, other)
+
+
+def test_owners_of_range_covers_every_owner():
+    smap = ShardMap.fresh(4, block_bits=3)
+    lo, hi = 37, 4_221
+    owners = set(smap.owners_of_range("Tag", lo, hi))
+    exact = set(np.unique(smap.owner_of("Tag", np.arange(lo, hi))).tolist())
+    assert exact <= owners
+
+
+def test_resharded_bumps_version_and_drops_dead():
+    smap = ShardMap.fresh(4)
+    survivor = smap.resharded(live=(0, 2, 3))
+    assert survivor.version == smap.version + 1
+    assert survivor.live == (0, 2, 3)
+    owners = survivor.owner_of("Person", np.arange(5_000, dtype=np.int64))
+    assert 1 not in set(np.unique(owners).tolist())
+
+
+# ---------------------------------------------------------------- sliced CSR
+
+
+def test_slice_csr_partitions_edges_and_roundtrips(solo):
+    csr = solo.engine.current_epoch().plane.csr("Knows")
+    smap = ShardMap.fresh(3, block_bits=BLOCK_BITS)
+    total_fwd = 0
+    for sid in smap.live:
+        src_owned = smap.owned_mask("Person", csr.n_src, sid)
+        dst_owned = smap.owned_mask("Person", csr.n_dst, sid)
+        part = slice_csr(csr, src_owned, dst_owned)
+        total_fwd += len(part.fwd_dst)
+        # global eids survive slicing untouched
+        assert set(part.fwd_eid.tolist()) <= set(csr.fwd_eid.tolist())
+        blob = shard_csr_to_bytes(part)
+        back = shard_csr_from_bytes(blob)
+        assert back.edge_type == part.edge_type
+        for attr in ("fwd_indptr", "fwd_dst", "fwd_eid",
+                     "rev_indptr", "rev_src", "rev_eid"):
+            assert np.array_equal(getattr(back, attr), getattr(part, attr))
+    # fwd adjacency partitioned by src ownership: no edge lost or doubled
+    assert total_fwd == len(csr.fwd_dst)
+    key = shard_csr_key("Knows", 3, 1, 4)
+    assert key == "topology/csr/Knows-v3.s1of4.csr"
+
+
+def test_merge_frames_reconstructs_global_order():
+    from repro.core.primitives import EdgeFrame
+
+    eid = np.array([4, 0, 2, 1, 3], dtype=np.int64)
+    u = np.array([40, 0, 20, 10, 30], dtype=np.int64)
+    # partition rows arbitrarily, including an empty part
+    parts = []
+    for rows in ([1, 3], [0, 2, 4], []):
+        idx = np.array(rows, dtype=np.int64)
+        parts.append(EdgeFrame(u=u[idx], v=u[idx] + 1,
+                               u_type="Person", v_type="Person",
+                               columns={"w": (u * 2)[idx]}, eid=eid[idx]))
+    merged = merge_frames(parts)
+    order = np.argsort(eid, kind="stable")
+    assert np.array_equal(merged.eid, eid[order])
+    assert np.array_equal(merged.u, u[order])
+    assert merged.columns["w"].dtype == np.int64
+    assert np.array_equal(merged.columns["w"], (u * 2)[order])
+
+
+# ---------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_bi_suite_bit_parity(lake, solo, n_shards):
+    s = _connect(lake, shards=n_shards, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    try:
+        fab = s.engine._shard_fabric
+        for name in BI_GSQL:
+            a = solo.query(name, **BI_PARAMS[name])
+            b = s.query(name, **BI_PARAMS[name])
+            assert_parity(a, b, name)
+        assert fab.stats["scatter_gathers"] > 0
+        assert fab.stats["worker_scans"] > fab.stats["scatter_gathers"]
+    finally:
+        s.close()
+
+
+def test_batched_path_parity(solo, sharded):
+    plist = [{"tag": "Music", "date": 20100101},
+             {"tag": "Sports", "date": 20090101}]
+    for qa, qb in zip(solo.query_batch("bi1", plist),
+                      sharded.query_batch("bi1", plist)):
+        assert_parity(qa, qb, "batch")
+
+
+def test_connect_shards_flag(lake):
+    s = _connect(lake)
+    assert s.engine._shard_fabric is None
+    s.close()
+    s = _connect(lake, shards=2, shard_block_bits=BLOCK_BITS)
+    fab = s.engine._shard_fabric
+    assert fab is not None and fab.smap.n_shards == 2
+    snap = fab.stats_snapshot()
+    assert snap["live_shards"] == [0, 1]
+    s.close()
+    assert s.engine._shard_fabric is None   # close() tears the fabric down
+
+
+def test_fabric_requires_two_shards(lake):
+    s = _connect(lake)
+    try:
+        with pytest.raises(ValueError):
+            ShardFabric.attach(s.engine, 1)
+    finally:
+        s.close()
+
+
+# ---------------------------------------------------------------- advance
+
+
+def _stage_append(store, engine, n_new, seed=11):
+    """bench_refresh-style incremental append: new Comments + HasCreator."""
+    rng = np.random.default_rng(seed)
+    raw = engine.topology.idm.raw_ids("Comment")
+    new_cids = raw.max() + 10 * (1 + np.arange(n_new, dtype=np.int64))
+    lake = LakeCatalog(store)
+    lake.table("Comment").append_files([{
+        "id": new_cids,
+        "creationDate": rng.integers(20230101, 20231231, n_new).astype(np.int64),
+        "length": rng.integers(1, 2000, n_new).astype(np.int64),
+        "browserUsed": np.array(["Chrome"] * n_new, dtype=object),
+    }])
+    person_raw = engine.topology.idm.raw_ids("Person")
+    lake.table("Comment_HasCreator_Person").append_files([{
+        "src": new_cids,
+        "dst": person_raw[rng.integers(0, len(person_raw), n_new)],
+        "creationDate": rng.integers(20230101, 20231231, n_new).astype(np.int64),
+    }])
+    return new_cids
+
+
+def test_sharded_advance_append_then_upsert(tmp_path):
+    """The acceptance scenario: a 4-shard fabric applies an incremental
+    append + a row-level upsert delta; every subsequent GSQL / lookup /
+    batched result is bit-identical to the single-engine run on the same
+    epoch, and the per-epoch CSR blobs give a second connection the fast
+    path."""
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=3, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=4, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    fab = s.engine._shard_fabric
+    s.query("bi3", min_len=50)      # warm a fabric epoch pre-advance
+
+    # -- incremental append delta
+    _stage_append(store, s.engine, n_new=48)
+    rep = s.engine.advance()
+    assert rep.changed and rep.mode == "incremental"
+    assert fab.stats["syncs"] == 1
+    assert fab.stats["incremental_rearms"] == 1
+    assert fab.stats["delta_files_routed"] > 0
+    assert fab.current().base.epoch_id == rep.to_epoch
+
+    # -- row-level upsert delta (copy-on-write rewrite -> delta re-shard)
+    cid = int(s.engine.topology.idm.raw_ids("Comment")[0])
+    LakeCatalog(store).table("Comment").upsert_rows(
+        {"id": np.array([cid], dtype=np.int64),
+         "creationDate": np.array([20230505], dtype=np.int64),
+         "length": np.array([31337], dtype=np.int64),
+         "browserUsed": np.array(["Edge"], dtype=object)},
+        key_columns=["id"])
+    ver_before = fab.smap.version
+    rep2 = s.engine.advance()
+    assert rep2.changed and rep2.mode == "rebuild"
+    assert fab.stats["delta_reshards"] >= 1
+    assert fab.smap.version == ver_before + 1
+
+    # -- a cold single engine on the advanced lake takes the CSR fast path
+    solo = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                   ldbc_graph_schema())
+    install_bi_queries(solo)
+    assert solo.engine.startup_mode == "second_connection"
+    try:
+        for name in BI_GSQL:
+            assert_parity(solo.query(name, **BI_PARAMS[name]),
+                          s.query(name, **BI_PARAMS[name]), name)
+        plist = [{"min_len": 50}, {"min_len": 100}]
+        for qa, qb in zip(solo.query_batch("bi3", plist),
+                          s.query_batch("bi3", plist)):
+            assert_parity(qa, qb, "batch-post-advance")
+        ga = solo.get_vertex("Comment", cid, columns=("length",))
+        gb = s.get_vertex("Comment", cid, columns=("length",))
+        assert ga == gb and int(ga["length"]) == 31337
+        na = solo.neighbors("HasCreator", cid)
+        nb = s.neighbors("HasCreator", cid)
+        assert np.array_equal(np.sort(np.asarray(na)), np.sort(np.asarray(nb)))
+    finally:
+        solo.close()
+        s.close()
+
+
+def test_concurrent_advance_during_scatter_gather(tmp_path):
+    """advance() racing in-flight scatter-gathers: epoch ids are monotonic,
+    no result is torn across epochs (each matches the single-engine run of
+    exactly one published epoch), and the drained state is bit-identical."""
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=3, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=2, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    solo = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                   ldbc_graph_schema())
+    install_bi_queries(solo)
+    try:
+        e1 = s.engine.current_epoch().epoch_id
+        expected = {e1: solo.query("bi3", min_len=50)}
+
+        results, errors = [], []
+
+        def pound():
+            try:
+                for _ in range(12):
+                    results.append(s.query("bi3", min_len=50))
+            except Exception as e:      # pragma: no cover - diagnostics
+                errors.append(e)
+
+        threads = [threading.Thread(target=pound) for _ in range(3)]
+        for t in threads:
+            t.start()
+        _stage_append(store, s.engine, n_new=48, seed=5)
+        rep = s.engine.advance()
+        assert rep.to_epoch > e1
+        for t in threads:
+            t.join()
+        assert not errors, errors
+
+        solo.engine.advance()
+        expected[rep.to_epoch] = solo.query("bi3", min_len=50)
+
+        seen = sorted({r.epoch_id for r in results})
+        assert seen and set(seen) <= set(expected)
+        for r in results:
+            # bit-consistent with exactly the epoch it pinned: a torn shard
+            # view (one worker pre-, one post-advance) could match neither
+            assert_parity(r, expected[r.epoch_id], f"epoch={r.epoch_id}")
+        # drained: both engines fresh again, still bit-identical
+        assert_parity(solo.query("bi3", min_len=50),
+                      s.query("bi3", min_len=50), "drained")
+    finally:
+        solo.close()
+        s.close()
+
+
+# ---------------------------------------------------------------- retirement
+
+
+def test_retirement_clears_shard_state(tmp_path):
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=2, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    fab = s.engine._shard_fabric
+    try:
+        fe1 = fab.current()
+        old_epoch_id = fe1.base.epoch_id
+        s.query("bi4", city="city_1")
+        _stage_append(store, s.engine, n_new=16, seed=7)
+        s.engine.advance()
+        # the un-referenced old fabric epoch is retired on publish
+        assert fe1.retired_fabric
+        assert fe1.views == {}
+        for w in fab.workers.values():
+            assert old_epoch_id not in w.delta_buffers
+        assert fab.stats["retired_fabric_epochs"] >= 1
+        # the new fabric epoch serves queries
+        assert fab.current().base.epoch_id > old_epoch_id
+        s.query("bi4", city="city_1")
+    finally:
+        s.close()
+
+
+def test_disconnect_mid_advance_clears_and_reshards(tmp_path):
+    """Satellite 3: a shard worker disconnect clears its delta buffers and
+    the epoch's armed lookup plans, re-shards ownership over the survivors,
+    and the fabric keeps serving bit-identical results."""
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=3, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    s.install("person_by_id", "SELECT p FROM Person:p WHERE p.id == $id")
+    solo = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                   ldbc_graph_schema())
+    install_bi_queries(solo)
+    fab = s.engine._shard_fabric
+    try:
+        pid = int(s.engine.topology.idm.raw_ids("Person")[0])
+        s.lookup("person_by_id", id=pid)    # arm a lookup plan on the epoch
+        base = fab.current().base
+        # park some routed delta state on the doomed worker
+        fab.workers[1].delta_buffers[base.epoch_id] = ["vertex/x.col"]
+        ver = fab.smap.version
+        fab.disconnect_worker(1)
+        assert fab.smap.live == (0, 2)
+        assert fab.smap.version == ver + 1
+        assert not fab.workers[1].alive
+        assert fab.workers[1].delta_buffers == {}
+        assert base.lookup_plans == {}      # armed plans dropped (no leaks)
+        assert fab.stats["disconnects"] == 1
+        # survivors still produce bit-identical results
+        for name in ("bi3", "bi5"):
+            assert_parity(solo.query(name, **BI_PARAMS[name]),
+                          s.query(name, **BI_PARAMS[name]), name)
+        # the last live worker cannot disconnect
+        fab.disconnect_worker(0)
+        with pytest.raises(RuntimeError):
+            fab.disconnect_worker(2)
+    finally:
+        solo.close()
+        s.close()
+
+
+def test_heartbeat_lapse_reaps_worker(tmp_path):
+    """Failure detection drives membership: a worker whose heartbeat lapses
+    past the registry timeout is disconnected by reap_dead_workers(), and
+    the survivors keep serving bit-identical results."""
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=3, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    solo = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                   ldbc_graph_schema())
+    install_bi_queries(solo)
+    fab = s.engine._shard_fabric
+    try:
+        expected = solo.query("bi3", **BI_PARAMS["bi3"])
+        assert_parity(expected, s.query("bi3", **BI_PARAMS["bi3"]), "warm")
+        assert fab.stats_snapshot()["heartbeats_healthy"]
+        # age shard-1's heartbeat past the timeout; fresh ticks from the
+        # query above keep the others alive
+        fab.heartbeats.timeout_s = 60.0
+        with fab.heartbeats._lock:
+            fab.heartbeats._last["shard-1"] -= 120.0
+        assert fab.reap_dead_workers() == [1]
+        assert fab.smap.live == (0, 2)
+        assert not fab.workers[1].alive
+        assert not fab.stats_snapshot()["heartbeats_healthy"]
+        assert_parity(expected, s.query("bi3", **BI_PARAMS["bi3"]), "reaped")
+        assert fab.reap_dead_workers() == []   # idempotent: already dead
+    finally:
+        solo.close()
+        s.close()
+
+
+# ---------------------------------------------------------------- ingest
+
+
+def test_dangling_edge_admission(tmp_path):
+    """Satellite 1: an edge upsert whose endpoint vertex is absent is shed
+    with the typed DanglingEdgeError; endpoints that are committed, pending,
+    or admitted earlier in the same burst are accepted."""
+    from repro.ingest.pipeline import IngestConfig, IngestPipeline
+
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema())
+    pipe = IngestPipeline(s.engine, IngestConfig(auto_advance=False)).start()
+    try:
+        person = int(s.engine.topology.idm.raw_ids("Person")[0])
+        known_cid = int(s.engine.topology.idm.raw_ids("Comment")[0])
+        new_cid = int(s.engine.topology.idm.raw_ids("Comment").max()) + 12345
+
+        # absent endpoint -> typed reject with table/column/key attached
+        with pytest.raises(DanglingEdgeError) as ei:
+            pipe.upsert("Comment_HasCreator_Person",
+                        {"src": 10 ** 15, "dst": person,
+                         "creationDate": 20230101})
+        assert ei.value.table == "Comment_HasCreator_Person"
+        assert ei.value.column == "src"
+        assert ei.value.key == (10 ** 15,)
+
+        # committed endpoint -> admitted
+        pipe.upsert("Comment_HasCreator_Person",
+                    {"src": known_cid, "dst": person,
+                     "creationDate": 20230101})
+
+        # vertex-then-edge in one burst: the vertex may still sit in the
+        # bounded queue (not drained), yet the edge must be admitted
+        pipe.upsert("Comment", {"id": new_cid, "creationDate": 20230101,
+                                "length": 7, "browserUsed": "Chrome"})
+        pipe.upsert("Comment_HasCreator_Person",
+                    {"src": new_cid, "dst": person,
+                     "creationDate": 20230101})
+
+        # delete-then-edge: the endpoint *has existed* (committed in the
+        # lake), so the edge is admitted — last-write-wins ordering is the
+        # stream's business, and a batch replay of the same history produces
+        # the same dangling row.  Only never-existed endpoints reject.
+        pipe.delete("Comment", (known_cid,))
+        pipe.upsert("Comment_HasCreator_Person",
+                    {"src": known_cid, "dst": person,
+                     "creationDate": 20230102})
+
+        # a second never-existed endpoint still sheds
+        with pytest.raises(DanglingEdgeError):
+            pipe.upsert("Comment_HasCreator_Person",
+                        {"src": 10 ** 15 + 1, "dst": person,
+                         "creationDate": 20230103})
+        assert pipe.committer.snapshot_counters()[
+            "dangling_edges_rejected"] == 2
+    finally:
+        pipe.close()
+        s.close()
+
+
+# ---------------------------------------------------------------- serving
+
+
+def test_server_wire_surface(lake, sharded):
+    from repro.serving.server import QueryServer, ServerConfig
+
+    srv = QueryServer(sharded, config=ServerConfig(refresh_interval_s=0))
+    try:
+        sharded.install("person_by_id",
+                        "SELECT p FROM Person:p WHERE p.id == $id") \
+            if not sharded.is_installed("person_by_id") else None
+        pid = 11    # the generator's raw-id scheme: person k -> k*10 + 1
+
+        r = srv.handle("GET", f"/vertex/Person/{pid}",
+                       {"columns": ["gender"]})
+        assert r["status"] == 200 and "gender" in r["value"]
+        assert srv.handle("GET", "/vertex/Person/987654321")["status"] == 404
+
+        r = srv.handle("GET", f"/neighbors/Knows/{pid}")
+        assert r["status"] == 200 and r["value"]["n"] == len(
+            r["value"]["neighbors"])
+
+        r = srv.handle("POST", "/query/bi1",
+                       {"tag": "Music", "date": 20100101})
+        assert r["status"] == 200 and r["value"].ok
+
+        r = srv.handle("GET", "/lookup/person_by_id", {"id": pid})
+        assert r["status"] == 200 and r["value"].value.tier == "green"
+
+        assert srv.handle("GET", "/no/such/route")["status"] == 404
+        assert srv.handle("DELETE", "/health")["status"] == 405
+
+        h = srv.handle("GET", "/health")
+        assert h["status"] == 200
+        health = h["value"]
+        assert health["routes"]["/vertex"] == 2
+        assert health["routes"]["/query"] == 1
+        assert health["routes"]["errors"] == 3
+        # fabric section: shard health rides the same snapshot
+        assert health["fabric"]["n_shards"] == 4
+        assert health["fabric"]["live_shards"] == [0, 1, 2, 3]
+        assert health["stats"]["lookup_requests"] >= 1
+    finally:
+        srv.close()

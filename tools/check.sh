@@ -75,6 +75,17 @@ from benchmarks.bench_freshness import run
 run(quick=True)
 PY
 
+echo "== shard fabric: scatter-gather throughput + bit-parity (quick mode) =="
+# writes the BENCH_shard.json snapshot: the 1/2/4-shard BI-suite sweep with
+# cold caches under modeled lake latency, asserting every sharded result is
+# bit-identical to the single engine (vset, accumulators, frames in global
+# edge-id order) and the 4-shard fabric clears the >=1.5x suite-throughput
+# floor.  The shard test suite itself runs with the tier-1 tests below.
+python - <<'PY'
+from benchmarks.bench_shard import run
+run(quick=True)
+PY
+
 echo "== tier-1 tests (slow SPMD dry-runs deselected) =="
 # test_archs_smoke / test_train_substrate and one misc test fail in this
 # container for environment reasons (installed jax predates APIs the model
