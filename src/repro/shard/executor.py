@@ -239,7 +239,8 @@ class ShardedEngine:
         for out_vset, wc in results:
             mask |= out_vset.mask
             _merge_counters(counters, wc)
-        self.fabric.stats["worker_scans"] += len(parts)
+        with self.fabric._lock:   # concurrent queries share these counters
+            self.fabric.stats["worker_scans"] += len(parts)
         return VSet(vset.vertex_type, mask), None
 
     def edge_scan(self, frontier: VSet, edge_type: str, direction: str = "out",
@@ -297,10 +298,11 @@ class ShardedEngine:
             results = [f.result() for f in futures]
         for _, wc in results:
             _merge_counters(counters, wc)
-        stats = self.fabric.stats
-        stats["scatter_gathers"] += 1
-        stats["worker_scans"] += len(parts)
-        stats["boundary_vertices_exchanged"] += frontier.size()
+        with self.fabric._lock:   # concurrent queries share these counters
+            stats = self.fabric.stats
+            stats["scatter_gathers"] += 1
+            stats["worker_scans"] += len(parts)
+            stats["boundary_vertices_exchanged"] += frontier.size()
         return merge_frames([frame for frame, _ in results])
 
     # -- misc engine surface ------------------------------------------------------

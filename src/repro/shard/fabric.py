@@ -125,6 +125,9 @@ class ShardFabric:
         for sid in range(n_shards):
             self.heartbeats.tick(f"shard-{sid}")
         self._lock = threading.Lock()
+        # worker_scans watermark at the last reap check: lapsed heartbeats
+        # with no scan legs in between mean an idle fabric, not dead workers
+        self._scans_at_reap = 0
         self._exec = ThreadPoolExecutor(max_workers=n_shards,
                                         thread_name_prefix="shard")
         self._next_fabric_id = 1
@@ -172,7 +175,10 @@ class ShardFabric:
     def close(self) -> None:
         with self._lock:
             cur, self._current = self._current, None
-            if cur is not None:
+            # a pinned in-flight query still reads cur (and its base epoch
+            # ref): defer retirement to its release(), which retires any
+            # non-current fabric epoch whose refs drain to zero
+            if cur is not None and cur._refs == 0:
                 self._retire_locked(cur)
         self._exec.shutdown(wait=False)
         for w in self.workers.values():
@@ -199,12 +205,22 @@ class ShardFabric:
                 self._retire_locked(fe)
 
     def _retire_locked(self, fe: FabricEpoch) -> None:
+        if fe.retired_fabric:
+            # idempotent: close() may race a pinned query's final release()
+            # to the same fabric epoch — the base ref must drop exactly once
+            return
         fe.retired_fabric = True
         for v in fe.views.values():
             v.plane.invalidate()
         fe.views = {}
-        for w in self.workers.values():
-            w.delta_buffers.pop(fe.base.epoch_id, None)
+        cur = self._current
+        if cur is None or cur.base is not fe.base:
+            # a disconnect republishes a new fabric epoch over the SAME
+            # base: its routed delta state is keyed by the still-current
+            # epoch id, so only clear buffers when no live fabric epoch
+            # wraps this base anymore
+            for w in self.workers.values():
+                w.delta_buffers.pop(fe.base.epoch_id, None)
         self.stats["retired_fabric_epochs"] += 1
         self.engine.epochs.release(fe.base)
 
@@ -234,7 +250,7 @@ class ShardFabric:
         version = getattr(base, "topology_version", 0)
         for sid, view in views.items():
             for ename, csr in view.plane.built_csrs().items():
-                key = shard_csr_key(ename, version, sid, self.smap.n_shards)
+                key = shard_csr_key(ename, version, sid, view.smap)
                 if not store.exists(key):
                     store.put(key, shard_csr_to_bytes(csr))
                     self.stats["shard_csr_blobs"] += 1
@@ -337,7 +353,27 @@ class ShardFabric:
         worker whose heartbeat (ticked by its scan legs) has lapsed past
         the registry timeout.  Returns the shard ids reaped.  The in-process
         analog of the coordination-service monitor in a multi-host
-        deployment (distributed/fault.py)."""
+        deployment (distributed/fault.py).
+
+        Heartbeats are ticked by query scan legs, so on a fabric that is
+        merely *idle* every worker's heartbeat lapses together — that is
+        not failure, and reaping on it would irreversibly disconnect every
+        healthy worker but one.  A reap therefore requires evidence of
+        activity: scan legs since the last reap check AND at least one
+        live worker still fresh (a genuine failure is a lapse *while peers
+        stay fresh*; everyone lapsing at once is an idle gap).  Otherwise
+        the live heartbeats refresh instead."""
+        with self._lock:
+            scans = self.stats["worker_scans"]
+            idle = scans == self._scans_at_reap
+            self._scans_at_reap = scans
+            live_names = [f"shard-{sid}" for sid in self.smap.live
+                          if self.workers[sid].alive]
+        dead = set(self.heartbeats.dead_workers())
+        if idle or all(n in dead for n in live_names):
+            for n in live_names:
+                self.heartbeats.tick(n)
+            return []
         reaped = []
         for name in self.heartbeats.dead_workers():
             sid = int(name.rsplit("-", 1)[1])

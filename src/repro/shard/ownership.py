@@ -87,6 +87,18 @@ class ShardMap:
                         live=tuple(live if live is not None else self.live),
                         block_bits=self.block_bits, version=self.version + 1)
 
+    def slice_token(self) -> str:
+        """Content token for everything a per-shard CSR slice depends on
+        besides the topology itself: the live tuple and the block
+        granularity.  Persisted slice blobs carry this token in their key,
+        so a blob can never serve a map it wasn't sliced under — a
+        disconnect changes ``live``, hence the token, hence the key.
+        (``version`` would not do: two connections can reach the same
+        version through different disconnect histories, and the full-live
+        map is version 1 on every fresh fabric.)"""
+        ident = f"{self.block_bits}:{','.join(str(s) for s in self.live)}"
+        return f"{zlib.crc32(ident.encode('utf-8')) & 0xFFFFFFFF:08x}"
+
     def owner_of(self, vertex_type: str, dense_ids: np.ndarray) -> np.ndarray:
         """Owning shard id per dense id (vectorized)."""
         blocks = np.asarray(dense_ids, dtype=np.int64) >> self.block_bits

@@ -18,8 +18,11 @@ ownership, a worker only ever expands vertices it owns — so the sliced
 CSR answers exactly like the full one on every gather the worker will be
 asked, at ~1/N of the memory.  Slices serialize to their own blob format
 (fwd/rev kept-edge counts differ, so the symmetric ``CSRIndex.to_bytes``
-layout cannot carry them) under version-suffixed per-shard keys:
-``topology/csr/{edge_type}-v{version}.s{shard}of{n}.csr``.
+layout cannot carry them) under keys suffixed with the topology version
+AND the shard map's slice token (live tuple + block bits):
+``topology/csr/{edge_type}-v{version}.s{shard}of{n}.m{token}.csr`` —
+so a blob sliced under a pre-disconnect ownership map can never be
+mistaken for the post-reshard slice at the same topology version.
 """
 
 from __future__ import annotations
@@ -94,12 +97,15 @@ def shard_csr_from_bytes(blob: bytes) -> CSRIndex:
                     rev_indptr, rev_src, rev_eid)
 
 
-def shard_csr_key(edge_type: str, version: int, shard_id: int,
-                  n_shards: int) -> str:
-    """Version-suffixed per-shard CSR blob key — the sharded leg of the
-    per-epoch CSR blob scheme (coordinator CSRs live at
-    ``topology/csr/{edge_type}-v{version}.csr``)."""
-    return f"topology/csr/{edge_type}-v{version}.s{shard_id}of{n_shards}.csr"
+def shard_csr_key(edge_type: str, version: int, shard_id: int, smap) -> str:
+    """Per-shard CSR blob key — the sharded leg of the per-epoch CSR blob
+    scheme (coordinator CSRs live at
+    ``topology/csr/{edge_type}-v{version}.csr``).  Suffixed with the map's
+    slice token so a re-shard (disconnect) at the same topology version
+    addresses different blobs than the map the old ones were sliced
+    under."""
+    return (f"topology/csr/{edge_type}-v{version}"
+            f".s{shard_id}of{smap.n_shards}.m{smap.slice_token()}.csr")
 
 
 class ShardView:
@@ -142,8 +148,7 @@ class ShardView:
         for ename, csr in source_plane.built_csrs().items():
             sliced = None
             if store is not None:
-                key = shard_csr_key(ename, version, self.shard_id,
-                                    self.smap.n_shards)
+                key = shard_csr_key(ename, version, self.shard_id, self.smap)
                 if store.exists(key):
                     sliced = shard_csr_from_bytes(store.get(key))
             if sliced is None:

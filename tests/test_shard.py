@@ -163,8 +163,15 @@ def test_slice_csr_partitions_edges_and_roundtrips(solo):
             assert np.array_equal(getattr(back, attr), getattr(part, attr))
     # fwd adjacency partitioned by src ownership: no edge lost or doubled
     assert total_fwd == len(csr.fwd_dst)
-    key = shard_csr_key("Knows", 3, 1, 4)
-    assert key == "topology/csr/Knows-v3.s1of4.csr"
+    smap4 = ShardMap.fresh(4)
+    key = shard_csr_key("Knows", 3, 1, smap4)
+    assert key == f"topology/csr/Knows-v3.s1of4.m{smap4.slice_token()}.csr"
+    # the key is content-addressed by the slice-defining map state: a
+    # disconnect (new live tuple) at the SAME topology version must address
+    # different blobs, while an independent fresh fabric with the same live
+    # set gets the same key (the second-connection fast path)
+    assert shard_csr_key("Knows", 3, 1, smap4.resharded(live=(0, 1, 3))) != key
+    assert shard_csr_key("Knows", 3, 1, ShardMap.fresh(4)) == key
 
 
 def test_merge_frames_reconstructs_global_order():
@@ -420,14 +427,19 @@ def test_disconnect_mid_advance_clears_and_reshards(tmp_path):
         pid = int(s.engine.topology.idm.raw_ids("Person")[0])
         s.lookup("person_by_id", id=pid)    # arm a lookup plan on the epoch
         base = fab.current().base
-        # park some routed delta state on the doomed worker
+        # park some routed delta state on the doomed worker — and on a
+        # survivor: the disconnect republishes a new fabric epoch over the
+        # SAME base, so retiring the superseded one must not clear delta
+        # state keyed by the still-current epoch id
         fab.workers[1].delta_buffers[base.epoch_id] = ["vertex/x.col"]
+        fab.workers[0].delta_buffers[base.epoch_id] = ["vertex/y.col"]
         ver = fab.smap.version
         fab.disconnect_worker(1)
         assert fab.smap.live == (0, 2)
         assert fab.smap.version == ver + 1
         assert not fab.workers[1].alive
         assert fab.workers[1].delta_buffers == {}
+        assert fab.workers[0].delta_buffers[base.epoch_id] == ["vertex/y.col"]
         assert base.lookup_plans == {}      # armed plans dropped (no leaks)
         assert fab.stats["disconnects"] == 1
         # survivors still produce bit-identical results
@@ -473,6 +485,105 @@ def test_heartbeat_lapse_reaps_worker(tmp_path):
         assert fab.reap_dead_workers() == []   # idempotent: already dead
     finally:
         solo.close()
+        s.close()
+
+
+def test_reap_skips_idle_fabric(tmp_path):
+    """Regression: heartbeats are ticked only by scan legs, so on an idle
+    fabric every heartbeat lapses together — that is idleness, not failure,
+    and reap must refresh instead of permanently disconnecting every
+    healthy worker but one."""
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=3, shard_block_bits=BLOCK_BITS)
+    fab = s.engine._shard_fabric
+    try:
+        fab.heartbeats.timeout_s = 60.0
+        with fab.heartbeats._lock:
+            for k in fab.heartbeats._last:
+                fab.heartbeats._last[k] -= 120.0   # everyone looks lapsed
+        assert fab.reap_dead_workers() == []       # no scans since: idle
+        assert fab.smap.live == (0, 1, 2)
+        assert all(w.alive for w in fab.workers.values())
+        assert fab.stats_snapshot()["heartbeats_healthy"]   # refreshed
+        assert fab.stats["disconnects"] == 0
+        # burst-then-gap: scans DID run since the last check, but every
+        # live heartbeat lapsed together afterwards — still an idle gap
+        # (no fresh peer attests a failure), still no reap
+        install_bi_queries(s)
+        s.query("bi3", min_len=50)
+        with fab.heartbeats._lock:
+            for k in fab.heartbeats._last:
+                fab.heartbeats._last[k] -= 120.0
+        assert fab.reap_dead_workers() == []
+        assert fab.smap.live == (0, 1, 2)
+        assert fab.stats["disconnects"] == 0
+    finally:
+        s.close()
+
+
+def test_disconnect_reslices_persisted_csr_blobs(tmp_path):
+    """Regression (high): per-shard CSR blob keys are content-addressed by
+    the ownership map's slice token, so the republish after a disconnect
+    re-slices for the survivor map instead of reusing pre-disconnect blobs
+    whose adjacency is zeroed for the blocks reassigned from the dead
+    shard (silently dropped edges)."""
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=3, shard_block_bits=BLOCK_BITS)
+    install_bi_queries(s)
+    solo = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                   ldbc_graph_schema())
+    install_bi_queries(solo)
+    fab = s.engine._shard_fabric
+    try:
+        # the trigger arm: blobs persisted under the pre-disconnect map
+        assert fab._persist
+        assert fab.stats["shard_csr_blobs"] > 0
+        expected = solo.query("bi5", **BI_PARAMS["bi5"])
+        assert_parity(expected, s.query("bi5", **BI_PARAMS["bi5"]), "pre")
+        fab.disconnect_worker(1)
+        # survivor slices partition the full adjacency: every forward edge
+        # of every built CSR belongs to exactly one live shard's slice
+        fe = fab.current()
+        for ename, full in fe.base.plane.built_csrs().items():
+            total = sum(
+                len(fe.views[sid].plane.built_csrs()[ename].fwd_dst)
+                for sid in fab.smap.live)
+            assert total == len(full.fwd_dst), ename
+        assert_parity(expected, s.query("bi5", **BI_PARAMS["bi5"]), "post")
+    finally:
+        solo.close()
+        s.close()
+
+
+def test_close_defers_retirement_until_refs_drain(tmp_path):
+    """Regression: close() with a pinned in-flight fabric epoch must not
+    retire it out from under the reader (dropping the fabric's base-epoch
+    ref); the reader's release() retires it exactly once, and a stray
+    double release never double-drops the base ref."""
+    store = ObjectStore(StoreConfig(root=str(tmp_path / "lake")))
+    generate_ldbc(store, scale_factor=0.004, n_files=2, row_group_rows=512)
+    s = connect(ObjectStore(StoreConfig(root=store.config.root)),
+                ldbc_graph_schema(), shards=2, shard_block_bits=BLOCK_BITS)
+    fab = s.engine._shard_fabric
+    try:
+        fe = fab.acquire()                    # an in-flight query's pin
+        base_refs = fe.base.refs()
+        fab.close()
+        assert not fe.retired_fabric          # deferred: reader still pinned
+        assert fe.base.refs() == base_refs    # fabric's base ref still held
+        retired_n = fab.stats["retired_fabric_epochs"]
+        fab.release(fe)                       # reader drains -> retires once
+        assert fe.retired_fabric
+        assert fe.base.refs() == base_refs - 1
+        assert fab.stats["retired_fabric_epochs"] == retired_n + 1
+        fab.release(fe)                       # stray release: no double drop
+        assert fe.base.refs() == base_refs - 1
+        assert fab.stats["retired_fabric_epochs"] == retired_n + 1
+    finally:
         s.close()
 
 
